@@ -1,0 +1,73 @@
+//! Quickstart: build a small synthetic corpus on simulated S3, construct
+//! the ConcurrentDataloader with the threaded fetcher, and iterate two
+//! epochs — the 60-second tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use cdl::data::synth::{generate_corpus, CorpusSpec};
+use cdl::data::AugmentConfig;
+use cdl::dataloader::{Dataloader, DataloaderConfig, FetchImpl};
+use cdl::dataset::{Dataset, ImageFolderDataset};
+use cdl::storage::{MemStore, ObjectStore, RemoteProfile, SimRemoteStore};
+use cdl::telemetry::Recorder;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a synthetic ImageNet-like corpus (seeded, ~48 kB objects)
+    let backing: Arc<dyn ObjectStore> = Arc::new(MemStore::new("corpus"));
+    let (keys, bytes) = generate_corpus(
+        &backing,
+        &CorpusSpec { items: 256, mean_bytes: 48 * 1024, ..Default::default() },
+    )?;
+    println!("corpus: {} objects, {}", keys.len(), cdl::util::fmt_bytes(bytes));
+
+    // 2. put it behind S3-like latency (scaled 4× down for the demo)
+    let store: Arc<dyn ObjectStore> =
+        SimRemoteStore::new(backing, RemoteProfile::s3().scaled(0.25), 42);
+
+    // 3. Dataset with the paper's augmentation (crop to 64, flip;
+    //    normalize runs on-device in the real pipeline)
+    let dataset: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
+        store,
+        AugmentConfig { crop: 64, ..Default::default() },
+    ));
+
+    // 4. the ConcurrentDataloader: threaded fetcher, 4 workers × 16
+    //    in-batch fetch threads — the paper's headline configuration
+    let recorder = Recorder::new();
+    let loader = Dataloader::new(
+        dataset,
+        DataloaderConfig {
+            batch_size: 32,
+            num_workers: 4,
+            fetch_impl: FetchImpl::Threaded,
+            num_fetch_workers: 16,
+            ..Default::default()
+        },
+        recorder.clone(),
+    );
+
+    // 5. iterate
+    for epoch in 0..2 {
+        let t0 = std::time::Instant::now();
+        let mut images = 0usize;
+        let mut bytes = 0u64;
+        for batch in loader.epoch(epoch) {
+            images += batch.len();
+            bytes += batch.raw_bytes;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "epoch {epoch}: {images} images in {dt:.2}s — {:.1} img/s, {}",
+            images as f64 / dt,
+            cdl::util::fmt_mbit_s(bytes, dt),
+        );
+    }
+
+    // 6. what did the time go into?
+    println!("\n{}", recorder.summary_table("span medians").render());
+    Ok(())
+}

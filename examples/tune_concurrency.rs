@@ -1,0 +1,58 @@
+//! Concurrency-parameter tuning (the paper's §3): sweep workers ×
+//! fetchers on your storage profile and print the throughput heatmap so
+//! you can pick the ridge — exactly what Fig 10/11 do.
+//!
+//! ```bash
+//! cargo run --release --offline --example tune_concurrency -- --storage s3
+//! ```
+
+use cdl::bench::rig::{self, RigSpec};
+use cdl::dataloader::FetchImpl;
+use cdl::util::cli::Args;
+use cdl::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let p = Args::new("tune_concurrency", "workers × fetchers throughput sweep")
+        .opt("storage", "s3", "s3|scratch|ceph_os|ceph_fs|gluster_fs")
+        .opt("workers", "1,2,4,8", "worker counts")
+        .opt("fetchers", "1,4,16", "fetcher counts")
+        .opt("items", "96", "items per point")
+        .parse(&argv)?;
+    let workers = p.usize_list("workers")?;
+    let fetchers = p.usize_list("fetchers")?;
+    let storage: &'static str = Box::leak(p.get("storage").to_string().into_boxed_str());
+
+    let header: Vec<String> = std::iter::once("workers\\fetchers".to_string())
+        .chain(fetchers.iter().map(|f| f.to_string()))
+        .collect();
+    let mut t = Table::new_dyn(
+        format!("{storage}: loader-only throughput (Mbit/s), threaded fetcher"),
+        header,
+    );
+    let mut best = (0.0f64, 0usize, 0usize);
+    for &w in &workers {
+        let mut row = vec![w.to_string()];
+        for &f in &fetchers {
+            let mut spec = RigSpec::quick(storage, 0.2).with_impl(FetchImpl::Threaded);
+            spec.items = p.usize("items")?;
+            spec.batch_size = 16;
+            spec.num_workers = w;
+            spec.num_fetch_workers = f;
+            let rig = rig::build(&spec)?;
+            let (secs, bytes, _) = rig::drain_epoch(&rig);
+            let mbit = cdl::util::fmt::mbit_s(bytes, secs);
+            if mbit > best.0 {
+                best = (mbit, w, f);
+            }
+            row.push(format!("{mbit:.0}"));
+        }
+        t.row(&row);
+    }
+    println!("{}", t.render());
+    println!(
+        "best: {:.0} Mbit/s at workers={}, fetchers={}",
+        best.0, best.1, best.2
+    );
+    Ok(())
+}

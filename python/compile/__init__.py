@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Never imported at runtime — the rust binary only consumes the HLO-text
+artifacts this package emits (see aot.py).
+"""

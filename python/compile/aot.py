@@ -1,0 +1,186 @@
+"""AOT lowering: JAX/Pallas → HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted into ``artifacts/``:
+
+* ``init.hlo.txt``                 — () → (params...,)
+* ``train_step_b{B}_i{I}.hlo.txt`` — (params..., u8 images, i32 labels)
+                                      → (params..., loss)
+* ``forward_b{B}_i{I}.hlo.txt``    — (params..., u8 images) → (logits,)
+* ``normalize_b{B}_i{I}.hlo.txt``  — kernel-only artifact for rust-side
+                                      numeric cross-checks
+* ``matmul_{N}.hlo.txt``           — ditto for the tiled matmul kernel
+* ``manifest.json``                — param order/shapes, variant arg specs,
+                                      and smoke numbers (expected losses on a
+                                      deterministic batch) the rust tests
+                                      assert against.
+
+Run via ``make artifacts`` (build-time only; python never runs on the
+request path).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import matmul as kmatmul
+from .kernels import normalize as knorm
+
+# (batch, image_side) variants compiled for the rust runtime.
+TRAIN_VARIANTS = [(8, 32), (16, 64), (32, 64)]
+FORWARD_VARIANTS = [(16, 64)]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_arg_specs():
+    return [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape in model.param_specs()
+    ]
+
+
+def _write(out_dir: str, name: str, text: str) -> str:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name} ({len(text) / 1024:.0f} KiB)")
+    return name
+
+
+def lower_train(batch: int, img: int) -> str:
+    specs = (
+        _param_arg_specs(),
+        jax.ShapeDtypeStruct((batch, img, img, 3), jnp.uint8),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+    return to_hlo_text(jax.jit(model.train_step).lower(*specs))
+
+
+def lower_forward(batch: int, img: int) -> str:
+    specs = (
+        _param_arg_specs(),
+        jax.ShapeDtypeStruct((batch, img, img, 3), jnp.uint8),
+    )
+    return to_hlo_text(jax.jit(model.eval_step).lower(*specs))
+
+
+def lower_init() -> str:
+    return to_hlo_text(jax.jit(lambda: tuple(model.init_params(0))).lower())
+
+
+def lower_normalize(batch: int, img: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch, img, img, 3), jnp.uint8)
+    return to_hlo_text(
+        jax.jit(lambda x: (knorm.normalize(x),)).lower(spec)
+    )
+
+
+def lower_matmul(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    return to_hlo_text(
+        jax.jit(lambda a, b: (kmatmul.matmul(a, b),)).lower(spec, spec)
+    )
+
+
+def smoke_numbers(batch: int, img: int, steps: int = 2):
+    """Expected losses for a deterministic batch — asserted by rust tests."""
+    params = model.init_params(0)
+    images, labels = model.make_example_batch(batch, img)
+    losses = []
+    for _ in range(steps):
+        out = model.train_step(params, images, labels)
+        params, loss = list(out[:-1]), out[-1]
+        losses.append(float(loss))
+    return losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-smoke", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "model": {
+            "widths": list(model.WIDTHS),
+            "num_classes": model.NUM_CLASSES,
+            "lr": model.LR,
+            "weight_decay": model.WEIGHT_DECAY,
+            "num_params": model.num_params(),
+            "params": [
+                {"name": n, "shape": list(s)} for n, s in model.param_specs()
+            ],
+        },
+        "artifacts": {},
+    }
+
+    print("AOT lowering (HLO text):")
+    manifest["artifacts"]["init"] = {
+        "file": _write(args.out, "init.hlo.txt", lower_init()),
+        "inputs": [],
+        "outputs": "params",
+    }
+    for b, i in TRAIN_VARIANTS:
+        name = f"train_step_b{b}_i{i}"
+        manifest["artifacts"][name] = {
+            "file": _write(args.out, name + ".hlo.txt", lower_train(b, i)),
+            "batch": b,
+            "image": i,
+            "inputs": "params + images(u8 NHWC) + labels(i32)",
+            "outputs": "params + loss",
+        }
+    for b, i in FORWARD_VARIANTS:
+        name = f"forward_b{b}_i{i}"
+        manifest["artifacts"][name] = {
+            "file": _write(args.out, name + ".hlo.txt", lower_forward(b, i)),
+            "batch": b,
+            "image": i,
+        }
+    manifest["artifacts"]["normalize_b4_i32"] = {
+        "file": _write(args.out, "normalize_b4_i32.hlo.txt", lower_normalize(4, 32)),
+        "batch": 4,
+        "image": 32,
+    }
+    manifest["artifacts"]["matmul_128"] = {
+        "file": _write(args.out, "matmul_128.hlo.txt", lower_matmul(128)),
+        "n": 128,
+    }
+
+    if not args.skip_smoke:
+        b, i = TRAIN_VARIANTS[0]
+        losses = smoke_numbers(b, i)
+        manifest["smoke"] = {
+            "variant": f"train_step_b{b}_i{i}",
+            "batch": b,
+            "image": i,
+            "losses": losses,
+            "rtol": 2e-4,
+        }
+        print(f"  smoke losses ({b}x{i}): {losses}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json (num_params={model.num_params()})")
+
+
+if __name__ == "__main__":
+    main()

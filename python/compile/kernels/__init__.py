@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (build-time only; lowered with interpret=True).
+
+The data pipeline's on-device compute hot-spots:
+
+* :mod:`.normalize` — fused ``to_tensor + normalize`` stage of the paper's
+  augmentation pipeline (the only augmentation step that is pure per-pixel
+  math and therefore belongs on the device, fused into the train step).
+* :mod:`.matmul` — MXU-style tiled matmul used for the classifier head.
+
+Pure-jnp oracles live in :mod:`.ref`; pytest/hypothesis checks every kernel
+against its oracle across shapes and dtypes.
+"""
+
+from . import matmul, normalize, ref  # noqa: F401

@@ -1,0 +1,79 @@
+"""MXU-style tiled matmul Pallas kernel (classifier head of the L2 model).
+
+The paper's model is ResNet-18; its dense head (and, after im2col, any conv)
+bottoms out in matmul. We implement the canonical Pallas tiled matmul:
+grid ``(M/bm, N/bn, K/bk)`` with an output-tile accumulator that is zeroed
+at ``k == 0`` and accumulated across the K axis — the HBM→VMEM schedule a
+CUDA kernel would express with threadblocks is expressed with BlockSpecs.
+
+Default tile 128×128×128 matches the MXU systolic array; on CPU we lower
+with ``interpret=True``. Shapes that are not tile multiples are padded by
+the :func:`matmul` wrapper and sliced back (zero padding is exact for
+matmul).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, k_steps):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+def matmul(a, b, *, bm=128, bn=128, bk=128):
+    """``a @ b`` via the tiled Pallas kernel, f32 accumulate.
+
+    ``a``: (M, K), ``b``: (K, N); any float dtype, output f32. Shapes are
+    padded up to tile multiples and the result sliced back.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad matmul shapes {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    # Tiles must still be hardware-friendly when inputs are tiny: round the
+    # effective tile up to at least 8 in the sublane dim.
+    ap = _pad_to(a.astype(jnp.float32), bm_, bk_)
+    bp = _pad_to(b.astype(jnp.float32), bk_, bn_)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+
+    kernel = functools.partial(_matmul_kernel, k_steps=grid[2])
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm=128, bn=128, bk=128, dtype_bytes=4):
+    """VMEM footprint estimate for one grid step (DESIGN.md §Perf)."""
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes

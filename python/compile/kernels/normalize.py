@@ -1,0 +1,63 @@
+"""Fused ``to_tensor + normalize`` as a Pallas kernel.
+
+The paper's Dataset transform ends with ``ToTensor() ∘ Normalize(mean,std)``
+— pure per-pixel math. In our three-layer port this is the stage that moves
+*onto the device*: the rust loader ships raw u8 crops, and the train step's
+first op is this kernel, fused into the same HLO module as the model.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the batch is tiled over
+(image-rows × lane) blocks so each grid step streams one ``(block_h, W*C)``
+tile HBM→VMEM, normalizes in-register, and writes back — a pure
+VPU-elementwise kernel with an (8,128)-friendly trailing layout. On CPU we
+lower with ``interpret=True`` (Mosaic custom-calls cannot run on the CPU
+PJRT plugin).
+
+Pallas kernels may not capture array constants, so the channel mean/std
+enter as tiny broadcast operands (every grid step maps to the same
+(1,1,1,3) block).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import IMAGENET_MEAN, IMAGENET_STD
+
+
+def _normalize_kernel(x_ref, m_ref, s_ref, o_ref, *, scale):
+    """One (1, block_h, W, C) tile: o = (x*scale - mean) / std."""
+    x = x_ref[...].astype(jnp.float32) * scale
+    o_ref[...] = (x - m_ref[...]) * s_ref[...]
+
+
+def normalize(x, mean=IMAGENET_MEAN, std=IMAGENET_STD, block_h=8):
+    """Pallas fused normalize over an NHWC batch (u8 or float).
+
+    Grid: ``(B, ceil(H / block_h))``; each step handles one ``block_h``-row
+    slab of one image. W and C ride along whole (C=3, W is the lane dim).
+    """
+    if x.ndim != 4 or x.shape[-1] != 3:
+        raise ValueError(f"expected NHWC with C=3, got {x.shape}")
+    b, h, w, c = x.shape
+    scale = 1.0 / 255.0 if x.dtype == jnp.uint8 else 1.0
+    block_h = min(block_h, h)
+    grid = (b, pl.cdiv(h, block_h))
+
+    m = jnp.asarray(mean, jnp.float32).reshape((1, 1, 1, 3))
+    inv_s = (1.0 / jnp.asarray(std, jnp.float32)).reshape((1, 1, 1, 3))
+
+    kernel = functools.partial(_normalize_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_h, w, c), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, c), lambda i, j: (0, 0, 0, 0)),
+            pl.BlockSpec((1, 1, 1, c), lambda i, j: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_h, w, c), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w, c), jnp.float32),
+        interpret=True,
+    )(x, m, inv_s)

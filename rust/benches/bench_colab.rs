@@ -1,0 +1,8 @@
+//! `cargo bench --bench bench_colab` — regenerates paper experiment(s) t10.
+//! Scale via CDL_SCALE=quick|paper|<items multiplier> (default quick).
+
+fn main() -> anyhow::Result<()> {
+    let scale = cdl::bench::Scale::from_env();
+    cdl::bench::run_experiment("t10", scale)?;
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! `cargo bench --bench bench_endtoend` — regenerates paper experiment(s) f13,f14.
+//! Scale via CDL_SCALE=quick|paper|<items multiplier> (default quick).
+
+fn main() -> anyhow::Result<()> {
+    let scale = cdl::bench::Scale::from_env();
+    cdl::bench::run_experiment("f13", scale)?;
+    cdl::bench::run_experiment("f14", scale)?;
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! `cargo bench --bench bench_fetchers` — regenerates paper experiment(s) f5,f6.
+//! Scale via CDL_SCALE=quick|paper|<items multiplier> (default quick).
+
+fn main() -> anyhow::Result<()> {
+    let scale = cdl::bench::Scale::from_env();
+    cdl::bench::run_experiment("f5", scale)?;
+    cdl::bench::run_experiment("f6", scale)?;
+    Ok(())
+}

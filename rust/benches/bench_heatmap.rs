@@ -1,0 +1,9 @@
+//! `cargo bench --bench bench_heatmap` — regenerates paper experiment(s) f10,f11.
+//! Scale via CDL_SCALE=quick|paper|<items multiplier> (default quick).
+
+fn main() -> anyhow::Result<()> {
+    let scale = cdl::bench::Scale::from_env();
+    cdl::bench::run_experiment("f10", scale)?;
+    cdl::bench::run_experiment("f11", scale)?;
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf targets): SIMG
+//! decode, augmentation crop, collate, span recording, RNG, LRU cache
+//! hit path, tar streaming. In-tree harness (criterion is not in the
+//! offline vendor set): warmup + N timed iterations, median & mean.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use cdl::data::augment::{Augment, AugmentConfig};
+use cdl::data::simg::SimgImage;
+use cdl::data::synth::{generate_image, CorpusSpec};
+use cdl::dataloader::collate::collate;
+use cdl::dataset::Sample;
+use cdl::storage::{MemStore, ObjectStore, VarnishCache};
+use cdl::telemetry::Recorder;
+use cdl::util::rng::Rng;
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
+    // warmup
+    for _ in 0..iters.div_ceil(10) {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let med = cdl::util::stats::median(&times);
+    let mean = cdl::util::stats::mean(&times);
+    println!(
+        "{name:<42} median {:>10}  mean {:>10}  ({iters} iters)",
+        cdl::util::fmt_duration(med),
+        cdl::util::fmt_duration(mean)
+    );
+}
+
+fn main() {
+    println!("## micro-benchmarks (L3 hot paths)");
+    let spec = CorpusSpec { mean_bytes: 115 * 1024, ..Default::default() };
+    let img = generate_image(&spec, 3);
+    let encoded = img.encode();
+    println!(
+        "reference image: {}x{} ({} encoded)",
+        img.height,
+        img.width,
+        cdl::util::fmt_bytes(encoded.len() as u64)
+    );
+
+    bench("simg_decode (crc + copy)", 300, || {
+        std::hint::black_box(SimgImage::decode(&encoded).unwrap());
+    });
+
+    let aug = Augment::new(AugmentConfig { crop: 64, ..Default::default() });
+    let mut epoch = 0;
+    bench("random_resized_crop 64x64 (bilinear)", 300, || {
+        epoch += 1;
+        std::hint::black_box(aug.apply_u8(&img, epoch, 0));
+    });
+
+    let aug224 = Augment::new(AugmentConfig { crop: 224, ..Default::default() });
+    bench("random_resized_crop 224x224 (paper size)", 100, || {
+        epoch += 1;
+        std::hint::black_box(aug224.apply_u8(&img, epoch, 0));
+    });
+
+    let crop = aug.apply_u8(&img, 0, 0);
+    bench("to_f32_normalized 64x64 (CPU ref path)", 300, || {
+        std::hint::black_box(aug.to_f32_normalized(&crop));
+    });
+
+    let samples: Vec<Sample> = (0..64)
+        .map(|i| Sample {
+            index: i,
+            label: 0,
+            crop: crop.clone(),
+            raw_bytes: encoded.len(),
+            fetch_time: 0.0,
+            decode_time: 0.0,
+        })
+        .collect();
+    bench("collate batch=64 of 64x64 crops", 200, || {
+        std::hint::black_box(collate(0, samples.clone()));
+    });
+
+    let rec = Recorder::new();
+    bench("span record x1000", 200, || {
+        for i in 0..1000 {
+            rec.record("bench", 0, i, 0.0, 1.0);
+        }
+        rec.clear();
+    });
+
+    let mut rng = Rng::new(1);
+    bench("rng permutation n=15000 (epoch plan)", 200, || {
+        std::hint::black_box(rng.permutation(15000));
+    });
+
+    let mem = Arc::new(MemStore::new("m"));
+    for i in 0..64 {
+        mem.put(&format!("k{i}"), vec![0u8; 64 * 1024]).unwrap();
+    }
+    let cache = VarnishCache::new(mem, 64 * 64 * 1024);
+    for i in 0..64 {
+        cache.get(&format!("k{i}")).unwrap();
+    }
+    let mut i = 0;
+    bench("varnish cache hit", 500, || {
+        i = (i + 1) % 64;
+        std::hint::black_box(cache.get(&format!("k{i}")).unwrap());
+    });
+
+    let entries: Vec<cdl::shards::TarEntry> = (0..32)
+        .map(|i| cdl::shards::TarEntry {
+            name: format!("e{i}"),
+            data: vec![0u8; 32 * 1024],
+        })
+        .collect();
+    let tar = cdl::shards::write_tar(&entries).unwrap();
+    bench("tar stream 32x32KiB entries", 200, || {
+        let n = cdl::shards::TarStream::new(&tar).count();
+        assert_eq!(n, 32);
+    });
+}

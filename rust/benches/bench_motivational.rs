@@ -1,0 +1,9 @@
+//! `cargo bench --bench bench_motivational` — regenerates paper experiment(s) t3,f2.
+//! Scale via CDL_SCALE=quick|paper|<items multiplier> (default quick).
+
+fn main() -> anyhow::Result<()> {
+    let scale = cdl::bench::Scale::from_env();
+    cdl::bench::run_experiment("t3", scale)?;
+    cdl::bench::run_experiment("f2", scale)?;
+    Ok(())
+}

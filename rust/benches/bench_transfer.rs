@@ -1,0 +1,8 @@
+//! `cargo bench --bench bench_transfer` — regenerates paper experiment(s) f7.
+//! Scale via CDL_SCALE=quick|paper|<items multiplier> (default quick).
+
+fn main() -> anyhow::Result<()> {
+    let scale = cdl::bench::Scale::from_env();
+    cdl::bench::run_experiment("f7", scale)?;
+    Ok(())
+}

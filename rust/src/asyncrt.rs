@@ -1,0 +1,742 @@
+//! `asyncrt` — a small, std-only async runtime.
+//!
+//! Tokio is not in the offline vendor set, and this reproduction *needs*
+//! an asyncio analogue: the paper's `_AsyncMapDatasetFetcher` runs an
+//! asyncio event loop inside each worker process, overlapping the I/O
+//! latencies of all items of a batch within one thread. `asyncrt` is the
+//! same shape: an executor with N worker threads (N=1 reproduces the
+//! single-threaded asyncio loop), a timer driver for simulated I/O
+//! waits, an async semaphore (`num_fetch_workers` concurrency control),
+//! and an async mpsc channel.
+//!
+//! Components:
+//! * [`Runtime`] — executor with `spawn`, `block_on`.
+//! * [`sleep`] — timer future driven by a shared timer thread.
+//! * [`Semaphore`] — async counting semaphore.
+//! * [`channel`] — bounded async mpsc.
+//! * [`yield_now`] — cooperative reschedule point.
+
+use std::collections::{BinaryHeap, VecDeque};
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::task::{Context, Poll, Wake, Waker};
+use std::time::{Duration, Instant};
+
+type BoxFuture = Pin<Box<dyn Future<Output = ()> + Send + 'static>>;
+
+// ---------------------------------------------------------------------------
+// Executor
+// ---------------------------------------------------------------------------
+
+struct Injector {
+    queue: Mutex<VecDeque<Arc<Task>>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    /// tasks spawned and not yet finished (for graceful drop)
+    live: AtomicUsize,
+}
+
+struct Task {
+    future: Mutex<Option<BoxFuture>>,
+    injector: Arc<Injector>,
+    /// prevents double-scheduling between wake() and poll completion
+    scheduled: AtomicBool,
+}
+
+impl Wake for Task {
+    fn wake(self: Arc<Self>) {
+        self.wake_by_ref();
+    }
+
+    fn wake_by_ref(self: &Arc<Self>) {
+        if self
+            .scheduled
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            let mut q = self.injector.queue.lock().unwrap();
+            q.push_back(self.clone());
+            self.injector.cv.notify_one();
+        }
+    }
+}
+
+/// Multi-threaded (or single-threaded) async executor.
+pub struct Runtime {
+    injector: Arc<Injector>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Runtime {
+    /// `n_threads = 1` gives asyncio semantics (one event loop thread:
+    /// CPU sections serialize, I/O waits overlap).
+    pub fn new(n_threads: usize) -> Arc<Runtime> {
+        let injector = Arc::new(Injector {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            live: AtomicUsize::new(0),
+        });
+        let threads = (0..n_threads.max(1))
+            .map(|i| {
+                let inj = injector.clone();
+                std::thread::Builder::new()
+                    .name(format!("asyncrt-{i}"))
+                    .spawn(move || worker_loop(inj))
+                    .expect("spawn asyncrt worker")
+            })
+            .collect();
+        Arc::new(Runtime { injector, threads })
+    }
+
+    /// Spawn a future onto the runtime; returns a handle to await/join
+    /// its output from sync or async code.
+    pub fn spawn<F, T>(&self, fut: F) -> JoinHandle<T>
+    where
+        F: Future<Output = T> + Send + 'static,
+        T: Send + 'static,
+    {
+        let state = Arc::new(JoinState::<T>::default());
+        let st = state.clone();
+        self.injector.live.fetch_add(1, Ordering::AcqRel);
+        let inj = self.injector.clone();
+        let wrapped: BoxFuture = Box::pin(async move {
+            let out = fut.await;
+            st.complete(out);
+            inj.live.fetch_sub(1, Ordering::AcqRel);
+        });
+        let task = Arc::new(Task {
+            future: Mutex::new(Some(wrapped)),
+            injector: self.injector.clone(),
+            scheduled: AtomicBool::new(false),
+        });
+        // initial schedule
+        task.clone().wake();
+        JoinHandle { state }
+    }
+
+    /// Drive a future to completion on the *current* thread (parking).
+    pub fn block_on<F: Future>(&self, fut: F) -> F::Output {
+        block_on(fut)
+    }
+
+    /// Number of spawned-but-unfinished tasks.
+    pub fn live_tasks(&self) -> usize {
+        self.injector.live.load(Ordering::Acquire)
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        self.injector.shutdown.store(true, Ordering::Release);
+        self.injector.cv.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn worker_loop(inj: Arc<Injector>) {
+    loop {
+        let task = {
+            let mut q = inj.queue.lock().unwrap();
+            loop {
+                if inj.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = inj.cv.wait(q).unwrap();
+            }
+        };
+        task.scheduled.store(false, Ordering::Release);
+        let waker = Waker::from(task.clone());
+        let mut cx = Context::from_waker(&waker);
+        let mut slot = task.future.lock().unwrap();
+        if let Some(mut fut) = slot.take() {
+            match fut.as_mut().poll(&mut cx) {
+                Poll::Pending => *slot = Some(fut),
+                Poll::Ready(()) => {}
+            }
+        }
+    }
+}
+
+/// Block the current thread on a future (thread-parking waker).
+pub fn block_on<F: Future>(mut fut: F) -> F::Output {
+    struct ThreadWaker(std::thread::Thread);
+    impl Wake for ThreadWaker {
+        fn wake(self: Arc<Self>) {
+            self.0.unpark();
+        }
+        fn wake_by_ref(self: &Arc<Self>) {
+            self.0.unpark();
+        }
+    }
+    // SAFETY: fut is shadowed and never moved after pinning.
+    let mut fut = unsafe { Pin::new_unchecked(&mut fut) };
+    let waker = Waker::from(Arc::new(ThreadWaker(std::thread::current())));
+    let mut cx = Context::from_waker(&waker);
+    loop {
+        match fut.as_mut().poll(&mut cx) {
+            Poll::Ready(v) => return v,
+            Poll::Pending => std::thread::park(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JoinHandle
+// ---------------------------------------------------------------------------
+
+struct JoinState<T> {
+    slot: Mutex<(Option<T>, Option<Waker>, bool)>,
+    cv: Condvar,
+}
+
+impl<T> Default for JoinState<T> {
+    fn default() -> Self {
+        Self { slot: Mutex::new((None, None, false)), cv: Condvar::new() }
+    }
+}
+
+impl<T> JoinState<T> {
+    fn complete(&self, v: T) {
+        let mut s = self.slot.lock().unwrap();
+        s.0 = Some(v);
+        s.2 = true;
+        if let Some(w) = s.1.take() {
+            w.wake();
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// Handle to a spawned task's output. Await it (async) or `join` it
+/// (blocking).
+pub struct JoinHandle<T> {
+    state: Arc<JoinState<T>>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Blocking join (for sync callers).
+    pub fn join(self) -> T {
+        let mut s = self.state.slot.lock().unwrap();
+        loop {
+            if let Some(v) = s.0.take() {
+                return v;
+            }
+            s = self.state.cv.wait(s).unwrap();
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.state.slot.lock().unwrap().2
+    }
+}
+
+impl<T> Future for JoinHandle<T> {
+    type Output = T;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<T> {
+        let mut s = self.state.slot.lock().unwrap();
+        if let Some(v) = s.0.take() {
+            Poll::Ready(v)
+        } else {
+            s.1 = Some(cx.waker().clone());
+            Poll::Pending
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Timer driver
+// ---------------------------------------------------------------------------
+
+struct TimerEntry {
+    deadline: Instant,
+    seq: u64,
+    waker: Waker,
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.deadline == other.deadline && self.seq == other.seq
+    }
+}
+impl Eq for TimerEntry {}
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TimerEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap via reversal
+        other
+            .deadline
+            .cmp(&self.deadline)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct TimerDriver {
+    heap: Mutex<BinaryHeap<TimerEntry>>,
+    cv: Condvar,
+    seq: AtomicU64,
+}
+
+static TIMER: once_cell::sync::Lazy<Arc<TimerDriver>> =
+    once_cell::sync::Lazy::new(|| {
+        let d = Arc::new(TimerDriver {
+            heap: Mutex::new(BinaryHeap::new()),
+            cv: Condvar::new(),
+            seq: AtomicU64::new(0),
+        });
+        let dd = d.clone();
+        std::thread::Builder::new()
+            .name("asyncrt-timer".into())
+            .spawn(move || timer_loop(dd))
+            .expect("spawn timer thread");
+        d
+    });
+
+fn timer_loop(d: Arc<TimerDriver>) {
+    let mut heap = d.heap.lock().unwrap();
+    loop {
+        let now = Instant::now();
+        while heap.peek().map_or(false, |e| e.deadline <= now) {
+            let e = heap.pop().unwrap();
+            e.waker.wake();
+        }
+        match heap.peek().map(|e| e.deadline) {
+            Some(dl) => {
+                let wait = dl.saturating_duration_since(Instant::now());
+                let (h, _) = d.cv.wait_timeout(heap, wait).unwrap();
+                heap = h;
+            }
+            None => {
+                heap = d.cv.wait(heap).unwrap();
+            }
+        }
+    }
+}
+
+/// Future that resolves after `dur` (simulated I/O latency lives here).
+pub fn sleep(dur: Duration) -> Sleep {
+    Sleep { deadline: Instant::now() + dur, registered: false }
+}
+
+/// Future that resolves at `deadline`.
+pub fn sleep_until(deadline: Instant) -> Sleep {
+    Sleep { deadline, registered: false }
+}
+
+pub struct Sleep {
+    deadline: Instant,
+    registered: bool,
+}
+
+impl Future for Sleep {
+    type Output = ();
+
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if Instant::now() >= self.deadline {
+            return Poll::Ready(());
+        }
+        // (Re-)register; registering on every poll is correct (the stale
+        // entry just fires a spurious wake) and keeps the code simple.
+        let d = &*TIMER;
+        let entry = TimerEntry {
+            deadline: self.deadline,
+            seq: d.seq.fetch_add(1, Ordering::Relaxed),
+            waker: cx.waker().clone(),
+        };
+        d.heap.lock().unwrap().push(entry);
+        d.cv.notify_one();
+        self.registered = true;
+        Poll::Pending
+    }
+}
+
+/// Yield back to the executor once (lets same-thread siblings run).
+pub fn yield_now() -> YieldNow {
+    YieldNow { polled: false }
+}
+
+pub struct YieldNow {
+    polled: bool,
+}
+
+impl Future for YieldNow {
+    type Output = ();
+
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if self.polled {
+            Poll::Ready(())
+        } else {
+            self.polled = true;
+            cx.waker().wake_by_ref();
+            Poll::Pending
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Semaphore
+// ---------------------------------------------------------------------------
+
+struct SemState {
+    permits: usize,
+    waiters: VecDeque<Waker>,
+}
+
+/// Async counting semaphore — the `num_fetch_workers` /
+/// max-connections concurrency limiter.
+pub struct Semaphore {
+    state: Mutex<SemState>,
+}
+
+impl Semaphore {
+    pub fn new(permits: usize) -> Arc<Semaphore> {
+        Arc::new(Semaphore {
+            state: Mutex::new(SemState { permits, waiters: VecDeque::new() }),
+        })
+    }
+
+    pub fn available(&self) -> usize {
+        self.state.lock().unwrap().permits
+    }
+
+    /// Acquire one permit; the returned guard releases on drop.
+    pub fn acquire(self: &Arc<Self>) -> Acquire {
+        Acquire { sem: self.clone() }
+    }
+
+    fn release(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.permits += 1;
+        if let Some(w) = s.waiters.pop_front() {
+            w.wake();
+        }
+    }
+}
+
+pub struct Acquire {
+    sem: Arc<Semaphore>,
+}
+
+impl Future for Acquire {
+    type Output = Permit;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Permit> {
+        let mut s = self.sem.state.lock().unwrap();
+        if s.permits > 0 {
+            s.permits -= 1;
+            drop(s);
+            Poll::Ready(Permit { sem: self.sem.clone() })
+        } else {
+            s.waiters.push_back(cx.waker().clone());
+            Poll::Pending
+        }
+    }
+}
+
+/// RAII permit.
+pub struct Permit {
+    sem: Arc<Semaphore>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.sem.release();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bounded async mpsc channel
+// ---------------------------------------------------------------------------
+
+struct ChanState<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    senders: usize,
+    recv_wakers: VecDeque<Waker>,
+    send_wakers: VecDeque<Waker>,
+}
+
+struct Chan<T> {
+    state: Mutex<ChanState<T>>,
+}
+
+/// Create a bounded async channel (the data_queue between fetch tasks
+/// and the worker).
+pub fn channel<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let chan = Arc::new(Chan {
+        state: Mutex::new(ChanState {
+            buf: VecDeque::new(),
+            cap: cap.max(1),
+            senders: 1,
+            recv_wakers: VecDeque::new(),
+            send_wakers: VecDeque::new(),
+        }),
+    });
+    (Sender { chan: chan.clone() }, Receiver { chan })
+}
+
+pub struct Sender<T> {
+    chan: Arc<Chan<T>>,
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.chan.state.lock().unwrap().senders += 1;
+        Sender { chan: self.chan.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut s = self.chan.state.lock().unwrap();
+        s.senders -= 1;
+        if s.senders == 0 {
+            for w in s.recv_wakers.drain(..) {
+                w.wake();
+            }
+        }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Async send with backpressure (waits while the buffer is full).
+    pub fn send(&self, value: T) -> SendFut<'_, T> {
+        SendFut { sender: self, value: Some(value) }
+    }
+
+    /// Non-blocking send attempt.
+    pub fn try_send(&self, value: T) -> Result<(), T> {
+        let mut s = self.chan.state.lock().unwrap();
+        if s.buf.len() >= s.cap {
+            return Err(value);
+        }
+        s.buf.push_back(value);
+        if let Some(w) = s.recv_wakers.pop_front() {
+            w.wake();
+        }
+        Ok(())
+    }
+}
+
+pub struct SendFut<'a, T> {
+    sender: &'a Sender<T>,
+    value: Option<T>,
+}
+
+impl<T> Future for SendFut<'_, T> {
+    type Output = ();
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        // SAFETY: we never move out of self except through the Option.
+        let this = unsafe { self.get_unchecked_mut() };
+        let mut s = this.sender.chan.state.lock().unwrap();
+        if s.buf.len() < s.cap {
+            s.buf.push_back(this.value.take().expect("polled after ready"));
+            if let Some(w) = s.recv_wakers.pop_front() {
+                w.wake();
+            }
+            Poll::Ready(())
+        } else {
+            s.send_wakers.push_back(cx.waker().clone());
+            Poll::Pending
+        }
+    }
+}
+
+pub struct Receiver<T> {
+    chan: Arc<Chan<T>>,
+}
+
+impl<T> Receiver<T> {
+    /// Async receive; resolves to `None` when all senders are dropped
+    /// and the buffer is drained.
+    pub fn recv(&self) -> RecvFut<'_, T> {
+        RecvFut { recv: self }
+    }
+
+    /// Blocking receive for sync consumers.
+    pub fn recv_blocking(&self) -> Option<T> {
+        block_on(self.recv())
+    }
+
+    pub fn len(&self) -> usize {
+        self.chan.state.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+pub struct RecvFut<'a, T> {
+    recv: &'a Receiver<T>,
+}
+
+impl<T> Future for RecvFut<'_, T> {
+    type Output = Option<T>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Option<T>> {
+        let mut s = self.recv.chan.state.lock().unwrap();
+        if let Some(v) = s.buf.pop_front() {
+            if let Some(w) = s.send_wakers.pop_front() {
+                w.wake();
+            }
+            return Poll::Ready(Some(v));
+        }
+        if s.senders == 0 {
+            return Poll::Ready(None);
+        }
+        s.recv_wakers.push_back(cx.waker().clone());
+        Poll::Pending
+    }
+}
+
+/// Await all handles, returning outputs in order.
+pub async fn join_all<T>(handles: Vec<JoinHandle<T>>) -> Vec<T> {
+    let mut out = Vec::with_capacity(handles.len());
+    for h in handles {
+        out.push(h.await);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn block_on_ready() {
+        assert_eq!(block_on(async { 41 + 1 }), 42);
+    }
+
+    #[test]
+    fn spawn_and_join() {
+        let rt = Runtime::new(2);
+        let h = rt.spawn(async { 7 * 6 });
+        assert_eq!(h.join(), 42);
+    }
+
+    #[test]
+    fn sleep_resolves_and_orders() {
+        let rt = Runtime::new(1);
+        let t0 = Instant::now();
+        let h = rt.spawn(async {
+            sleep(Duration::from_millis(30)).await;
+            Instant::now()
+        });
+        let end = h.join();
+        assert!(end - t0 >= Duration::from_millis(28), "{:?}", end - t0);
+    }
+
+    #[test]
+    fn single_thread_overlaps_sleeps() {
+        // the asyncio property: N concurrent sleeps on ONE thread take
+        // ~max, not ~sum.
+        let rt = Runtime::new(1);
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..8)
+            .map(|_| rt.spawn(async { sleep(Duration::from_millis(40)).await }))
+            .collect();
+        for h in handles {
+            h.join();
+        }
+        let dt = t0.elapsed();
+        assert!(dt < Duration::from_millis(200), "not overlapped: {dt:?}");
+    }
+
+    #[test]
+    fn semaphore_limits_concurrency() {
+        let rt = Runtime::new(4);
+        let sem = Semaphore::new(2);
+        let peak = Arc::new(AtomicUsize::new(0));
+        let cur = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..12)
+            .map(|_| {
+                let sem = sem.clone();
+                let peak = peak.clone();
+                let cur = cur.clone();
+                rt.spawn(async move {
+                    let _p = sem.acquire().await;
+                    let c = cur.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(c, Ordering::SeqCst);
+                    sleep(Duration::from_millis(10)).await;
+                    cur.fetch_sub(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2);
+    }
+
+    #[test]
+    fn channel_backpressure_and_close() {
+        let rt = Runtime::new(2);
+        let (tx, rx) = channel::<usize>(2);
+        let h = rt.spawn(async move {
+            for i in 0..10 {
+                tx.send(i).await;
+            }
+        });
+        let mut got = Vec::new();
+        while let Some(v) = rx.recv_blocking() {
+            got.push(v);
+        }
+        h.join();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn try_send_full() {
+        let (tx, rx) = channel::<u8>(1);
+        assert!(tx.try_send(1).is_ok());
+        assert!(tx.try_send(2).is_err());
+        assert_eq!(rx.recv_blocking(), Some(1));
+    }
+
+    #[test]
+    fn join_all_preserves_order() {
+        let rt = Runtime::new(4);
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                rt.spawn(async move {
+                    sleep(Duration::from_millis((6 - i) * 5)).await;
+                    i
+                })
+            })
+            .collect();
+        let out = rt.block_on(join_all(handles));
+        assert_eq!(out, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn yield_now_completes() {
+        block_on(async {
+            for _ in 0..100 {
+                yield_now().await;
+            }
+        });
+    }
+
+    #[test]
+    fn runtime_drop_joins_threads() {
+        let rt = Runtime::new(3);
+        let h = rt.spawn(async { 1 });
+        assert_eq!(h.join(), 1);
+        drop(rt); // must not hang
+    }
+}

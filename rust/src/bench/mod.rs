@@ -1,0 +1,161 @@
+//! Benchmark harness: one runner per table/figure of the paper's
+//! evaluation (see DESIGN.md §3 for the full index). Each experiment
+//! builds its rig from [`rig`], runs it, prints the paper-shaped table,
+//! and saves CSV + JSON under `results/`.
+//!
+//! All experiments honor the [`Scale`] knob (`CDL_SCALE` env var or
+//! `--scale`): latencies, dataset sizes and epoch counts shrink together
+//! so the *shape* of every result survives at CI speed. `Scale::paper()`
+//! approaches the paper's actual parameters (Table 2/5) — slow.
+
+pub mod exp_appendix;
+pub mod exp_core;
+pub mod exp_params;
+pub mod rig;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::util::table::Table;
+
+/// Global experiment scaling.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    /// multiplies all storage latencies
+    pub latency: f64,
+    /// multiplies dataset sizes
+    pub items: f64,
+    /// multiplies epoch counts (min 1)
+    pub epochs: f64,
+}
+
+impl Scale {
+    /// CI-speed default: every experiment finishes in seconds.
+    pub fn quick() -> Scale {
+        Scale { latency: 0.20, items: 1.0, epochs: 1.0 }
+    }
+
+    /// Closer to the paper's parameters (minutes per experiment).
+    pub fn paper() -> Scale {
+        Scale { latency: 1.0, items: 8.0, epochs: 2.0 }
+    }
+
+    /// From the environment (`CDL_SCALE=quick|paper|<float>`), default
+    /// quick. A float multiplies the quick item count.
+    pub fn from_env() -> Scale {
+        match std::env::var("CDL_SCALE").ok().as_deref() {
+            Some("paper") => Scale::paper(),
+            Some("quick") | None => Scale::quick(),
+            Some(s) => match s.parse::<f64>() {
+                Ok(f) => Scale { items: f, ..Scale::quick() },
+                Err(_) => Scale::quick(),
+            },
+        }
+    }
+
+    pub fn items(&self, base: usize) -> usize {
+        ((base as f64 * self.items) as usize).max(8)
+    }
+
+    pub fn epochs(&self, base: usize) -> usize {
+        ((base as f64 * self.epochs) as usize).max(1)
+    }
+}
+
+/// Where experiment outputs land.
+pub fn results_dir(exp: &str) -> PathBuf {
+    let dir = PathBuf::from("results").join(exp);
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Print a table and persist it as CSV under `results/<exp>/`.
+pub fn emit(exp: &str, table: &Table) -> Result<()> {
+    println!("{}", table.render());
+    let file = results_dir(exp).join(format!(
+        "{}.csv",
+        table
+            .title
+            .to_lowercase()
+            .replace([' ', '/', ':', ','], "_")
+            .chars()
+            .take(60)
+            .collect::<String>()
+    ));
+    std::fs::write(&file, table.to_csv())?;
+    Ok(())
+}
+
+/// Persist raw text (timeline CSVs etc.).
+pub fn emit_raw(exp: &str, name: &str, content: &str) -> Result<()> {
+    std::fs::write(results_dir(exp).join(name), content)?;
+    Ok(())
+}
+
+/// All experiment ids, in paper order.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "t3", "f2", "f5", "f6", "f7", "f8", "f9", "f10", "f11", "f12", "f13",
+    "f14", "f15", "f16", "t10", "f17", "f20", "f21", "f22", "f23",
+];
+
+/// Dispatch one experiment by id.
+pub fn run_experiment(id: &str, scale: Scale) -> Result<()> {
+    match id {
+        "t3" => exp_core::t3_motivational(scale),
+        "f2" => exp_core::f2_timeline(scale),
+        "f5" => exp_core::f5_fetcher_comparison(scale),
+        "f6" => exp_core::f6_batch_disassembly(scale),
+        "f7" => exp_params::f7_transfer_times(scale),
+        "f8" => exp_params::f8_lazy_init(scale),
+        "f9" => exp_params::f9_caching(scale),
+        "f10" => exp_params::f10_heatmap_s3(scale),
+        "f11" => exp_params::f11_heatmap_scratch(scale),
+        "f12" => exp_params::f12_dataset_pool(scale),
+        "f13" => exp_core::f13_endtoend(scale),
+        "f14" => exp_core::f14_function_medians(scale),
+        "f15" => exp_core::f15_layer_throughput(scale),
+        "f16" => exp_appendix::f16_storage_types(scale),
+        "t10" => exp_appendix::t10_colab(scale),
+        "f17" => exp_appendix::f17_lightning_lanes(scale),
+        "f20" => exp_appendix::f20_train_phase(scale),
+        "f21" => exp_appendix::f21_gil(scale),
+        "f22" => exp_appendix::f22_shard_loaders(scale),
+        "f23" => exp_appendix::f23_fade(scale),
+        "all" => {
+            for id in ALL_EXPERIMENTS {
+                println!("\n━━━ experiment {id} ━━━");
+                run_experiment(id, scale)?;
+            }
+            Ok(())
+        }
+        _ => anyhow::bail!(
+            "unknown experiment {id}; known: {ALL_EXPERIMENTS:?} or 'all'"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_from_env_default_quick() {
+        let s = Scale::quick();
+        assert!(s.latency < 1.0);
+        assert_eq!(s.items(100), 100);
+        assert_eq!(s.epochs(1), 1);
+    }
+
+    #[test]
+    fn scale_floors() {
+        let s = Scale { latency: 1.0, items: 0.001, epochs: 0.1 };
+        assert_eq!(s.items(100), 8);
+        assert_eq!(s.epochs(5), 1);
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run_experiment("zzz", Scale::quick()).is_err());
+    }
+}

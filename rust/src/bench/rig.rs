@@ -1,0 +1,250 @@
+//! Rig builder: assemble corpus → storage stack → dataset → dataloader →
+//! device → trainer for one experiment configuration.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::data::synth::{generate_corpus, CorpusSpec};
+use crate::data::AugmentConfig;
+use crate::dataloader::{Dataloader, DataloaderConfig, FetchImpl};
+use crate::dataset::{Dataset, ImageFolderDataset};
+use crate::device::Device;
+use crate::gil;
+use crate::storage::{
+    MemStore, ObjectStore, RemoteProfile, SimRemoteStore, VarnishCache,
+};
+use crate::telemetry::Recorder;
+use crate::trainer::{self, TrainReport, TrainerConfig, TrainerKind};
+
+/// Everything one experiment run needs.
+#[derive(Debug, Clone)]
+pub struct RigSpec {
+    pub storage: &'static str,
+    pub latency_scale: f64,
+    pub cache_bytes: u64,
+    pub items: usize,
+    pub mean_kb: usize,
+    pub crop: usize,
+    pub batch_size: usize,
+    pub num_workers: usize,
+    pub prefetch_factor: usize,
+    pub fetch_impl: FetchImpl,
+    pub num_fetch_workers: usize,
+    pub batch_pool: usize,
+    pub lazy_init: bool,
+    pub runtime: gil::Runtime,
+    pub trainer: TrainerKind,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl RigSpec {
+    /// Paper Table 2/5 shape, scaled to CI size.
+    pub fn quick(storage: &'static str, latency_scale: f64) -> RigSpec {
+        RigSpec {
+            storage,
+            latency_scale,
+            cache_bytes: 0,
+            items: 192,
+            mean_kb: 48,
+            crop: 32,
+            batch_size: 32,
+            num_workers: 4,
+            prefetch_factor: 2,
+            fetch_impl: FetchImpl::Vanilla,
+            num_fetch_workers: 16,
+            batch_pool: 0,
+            lazy_init: true,
+            runtime: gil::Runtime::Python,
+            trainer: TrainerKind::Torch,
+            epochs: 1,
+            seed: 7,
+        }
+    }
+
+    pub fn with_impl(mut self, f: FetchImpl) -> RigSpec {
+        self.fetch_impl = f;
+        self
+    }
+
+    pub fn with_trainer(mut self, t: TrainerKind) -> RigSpec {
+        self.trainer = t;
+        self
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{}-{}",
+            self.storage,
+            self.trainer.label(),
+            self.fetch_impl.label()
+        )
+    }
+}
+
+/// Built rig, ready to train.
+pub struct Rig {
+    pub dataloader: Dataloader,
+    pub device: Device,
+    pub trainer_cfg: TrainerConfig,
+    pub recorder: Arc<Recorder>,
+    pub store: Arc<dyn ObjectStore>,
+    pub remote: Option<Arc<SimRemoteStore>>,
+    pub cache: Option<Arc<VarnishCache>>,
+    pub corpus_bytes: u64,
+}
+
+/// Build the storage stack for a spec. Returns (top-of-stack store,
+/// remote layer handle, cache handle, corpus bytes).
+pub fn build_store(
+    spec: &RigSpec,
+) -> Result<(
+    Arc<dyn ObjectStore>,
+    Option<Arc<SimRemoteStore>>,
+    Option<Arc<VarnishCache>>,
+    u64,
+)> {
+    let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("corpus"));
+    let (_, total) = generate_corpus(
+        &mem,
+        &CorpusSpec {
+            items: spec.items,
+            classes: 512,
+            mean_bytes: spec.mean_kb * 1024,
+            sigma: 0.35,
+            seed: spec.seed,
+        },
+    )?;
+    let (store, remote): (Arc<dyn ObjectStore>, Option<Arc<SimRemoteStore>>) =
+        if spec.storage == "mem" {
+            (mem, None)
+        } else {
+            let Some(profile) = RemoteProfile::by_name(spec.storage) else {
+                bail!("unknown storage profile {}", spec.storage)
+            };
+            let r = SimRemoteStore::new(
+                mem,
+                profile.scaled(spec.latency_scale),
+                spec.seed ^ 0x5EED,
+            );
+            (r.clone() as Arc<dyn ObjectStore>, Some(r))
+        };
+    let (store, cache): (Arc<dyn ObjectStore>, Option<Arc<VarnishCache>>) =
+        if spec.cache_bytes > 0 {
+            let c = VarnishCache::new(store, spec.cache_bytes);
+            (c.clone() as Arc<dyn ObjectStore>, Some(c))
+        } else {
+            (store, None)
+        };
+    Ok((store, remote, cache, total))
+}
+
+/// Build the full rig.
+pub fn build(spec: &RigSpec) -> Result<Rig> {
+    let recorder = Recorder::new();
+    let (store, remote, cache, corpus_bytes) = build_store(spec)?;
+    let dataset: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
+        store.clone(),
+        AugmentConfig { crop: spec.crop, seed: spec.seed, ..Default::default() },
+    ));
+    let loader_cfg = DataloaderConfig {
+        batch_size: spec.batch_size,
+        num_workers: spec.num_workers,
+        prefetch_factor: spec.prefetch_factor,
+        fetch_impl: spec.fetch_impl,
+        num_fetch_workers: spec.num_fetch_workers,
+        batch_pool: spec.batch_pool,
+        lazy_init: spec.lazy_init,
+        runtime: spec.runtime,
+        seed: spec.seed,
+        spawn_cost_override: Some(Duration::from_millis(4)),
+        ..Default::default()
+    };
+    let dataloader = Dataloader::new(dataset, loader_cfg, recorder.clone());
+    let device = Device::sim_v100(spec.batch_size, 512, recorder.clone());
+    let trainer_cfg = match spec.trainer {
+        TrainerKind::Torch => TrainerConfig::torch(spec.epochs),
+        TrainerKind::Lightning => TrainerConfig::lightning(spec.epochs),
+    };
+    Ok(Rig {
+        dataloader,
+        device,
+        trainer_cfg,
+        recorder,
+        store,
+        remote,
+        cache,
+        corpus_bytes,
+    })
+}
+
+/// Build + train + report.
+pub fn run(spec: &RigSpec) -> Result<(TrainReport, Rig)> {
+    let rig = build(spec)?;
+    let report = trainer::train(
+        &rig.dataloader,
+        &rig.device,
+        &rig.trainer_cfg,
+        rig.recorder.clone(),
+    )?;
+    Ok((report, rig))
+}
+
+/// Loader-only epoch (no device): drain all batches, return
+/// (wall seconds, bytes, batches).
+pub fn drain_epoch(rig: &Rig) -> (f64, u64, usize) {
+    let t0 = std::time::Instant::now();
+    let mut bytes = 0u64;
+    let mut n = 0usize;
+    for b in rig.dataloader.epoch(0) {
+        bytes += b.raw_bytes;
+        n += 1;
+    }
+    (t0.elapsed().as_secs_f64(), bytes, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_rig_builds_and_drains() {
+        let mut spec = RigSpec::quick("mem", 0.1);
+        spec.items = 32;
+        spec.batch_size = 8;
+        let rig = build(&spec).unwrap();
+        let (secs, bytes, n) = drain_epoch(&rig);
+        assert_eq!(n, 4);
+        assert!(bytes > 0);
+        assert!(secs > 0.0);
+    }
+
+    #[test]
+    fn unknown_storage_errors() {
+        let spec = RigSpec::quick("marsfs", 1.0);
+        assert!(build(&spec).is_err());
+    }
+
+    #[test]
+    fn cache_layer_attaches() {
+        let mut spec = RigSpec::quick("s3", 0.02);
+        spec.items = 16;
+        spec.cache_bytes = 10 << 20;
+        let rig = build(&spec).unwrap();
+        assert!(rig.cache.is_some());
+        assert!(rig.remote.is_some());
+        assert!(rig.store.label().starts_with("varnish"));
+    }
+
+    #[test]
+    fn run_produces_report() {
+        let mut spec = RigSpec::quick("scratch", 0.2);
+        spec.items = 32;
+        spec.batch_size = 16;
+        let (report, _rig) = run(&spec).unwrap();
+        assert_eq!(report.images, 32);
+        assert!(report.img_per_s > 0.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Experiment configuration: a key=value config file format plus CLI
+//! overrides, mapping onto the loader/trainer/storage/device knobs.
+//!
+//! Example (`configs/s3_threaded.cfg`):
+//! ```text
+//! storage = s3
+//! items = 512
+//! batch_size = 64
+//! num_workers = 4
+//! fetch_impl = threaded
+//! num_fetch_workers = 16
+//! trainer = torch
+//! epochs = 2
+//! latency_scale = 0.25
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dataloader::{DataloaderConfig, FetchImpl, StartMethod};
+use crate::gil;
+use crate::trainer::{TrainerConfig, TrainerKind};
+
+/// Parsed experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// storage profile name (s3, scratch, ceph_os, ceph_fs, gluster_fs,
+    /// colab_s3, mem)
+    pub storage: String,
+    /// Varnish cache capacity in bytes (0 = no cache)
+    pub cache_bytes: u64,
+    pub items: usize,
+    pub classes: usize,
+    pub mean_kb: usize,
+    pub crop: usize,
+    pub latency_scale: f64,
+    pub seed: u64,
+    pub loader: DataloaderConfig,
+    pub trainer: TrainerConfig,
+    /// "sim" or "xla"
+    pub device: String,
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            storage: "s3".into(),
+            cache_bytes: 0,
+            items: 256,
+            classes: 512,
+            mean_kb: 115,
+            crop: 64,
+            latency_scale: 0.25,
+            seed: 7,
+            loader: DataloaderConfig::default(),
+            trainer: TrainerConfig::torch(1),
+            device: "sim".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse a `key = value` config file (# comments allowed).
+    pub fn from_file(path: &str) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {path}"))?;
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_text(&text)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_text(&mut self, text: &str) -> Result<()> {
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("config line {} has no '=': {line:?}", lineno + 1);
+            };
+            self.set(k.trim(), v.trim())
+                .with_context(|| format!("line {}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Apply a map of overrides (CLI `--set k=v`).
+    pub fn apply_overrides(&mut self, kv: &BTreeMap<String, String>) -> Result<()> {
+        for (k, v) in kv {
+            self.set(k, v)?;
+        }
+        Ok(())
+    }
+
+    /// Set one knob by name.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "storage" => self.storage = value.to_string(),
+            "cache_bytes" => self.cache_bytes = value.parse()?,
+            "items" => self.items = value.parse()?,
+            "classes" => self.classes = value.parse()?,
+            "mean_kb" => self.mean_kb = value.parse()?,
+            "crop" => self.crop = value.parse()?,
+            "latency_scale" => self.latency_scale = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "batch_size" => self.loader.batch_size = value.parse()?,
+            "num_workers" => self.loader.num_workers = value.parse()?,
+            "prefetch_factor" => self.loader.prefetch_factor = value.parse()?,
+            "fetch_impl" => {
+                self.loader.fetch_impl = match value {
+                    "vanilla" => FetchImpl::Vanilla,
+                    "threaded" => FetchImpl::Threaded,
+                    "asyncio" => FetchImpl::Asyncio,
+                    _ => bail!("unknown fetch_impl {value}"),
+                }
+            }
+            "num_fetch_workers" => self.loader.num_fetch_workers = value.parse()?,
+            "batch_pool" => self.loader.batch_pool = value.parse()?,
+            "pin_memory" => self.loader.pin_memory = value.parse()?,
+            "start_method" => {
+                self.loader.start_method = match value {
+                    "fork" => StartMethod::Fork,
+                    "spawn" => StartMethod::Spawn,
+                    _ => bail!("unknown start_method {value}"),
+                }
+            }
+            "lazy_init" => self.loader.lazy_init = value.parse()?,
+            "worker_runtime" => {
+                self.loader.runtime = match value {
+                    "python" => gil::Runtime::Python,
+                    "native" => gil::Runtime::Native,
+                    _ => bail!("unknown worker_runtime {value}"),
+                }
+            }
+            "python_tax" => self.loader.python_tax = value.parse()?,
+            "shuffle" => self.loader.shuffle = value.parse()?,
+            "drop_last" => self.loader.drop_last = value.parse()?,
+            "spawn_cost_ms" => {
+                self.loader.spawn_cost_override =
+                    Some(Duration::from_millis(value.parse()?))
+            }
+            "trainer" => {
+                self.trainer.kind = match value {
+                    "torch" => TrainerKind::Torch,
+                    "lightning" => TrainerKind::Lightning,
+                    _ => bail!("unknown trainer {value}"),
+                }
+            }
+            "epochs" => self.trainer.epochs = value.parse()?,
+            "log_every_n_steps" => self.trainer.log_every_n_steps = value.parse()?,
+            "gpu_stats_monitor" => self.trainer.gpu_stats_monitor = value.parse()?,
+            "device" => self.device = value.to_string(),
+            "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            _ => bail!("unknown config key {key}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_file() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_text(
+            "storage = scratch\n\
+             # comment\n\
+             items = 99\n\
+             fetch_impl = asyncio\n\
+             trainer = lightning\n\
+             epochs = 3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.storage, "scratch");
+        assert_eq!(cfg.items, 99);
+        assert_eq!(cfg.loader.fetch_impl, FetchImpl::Asyncio);
+        assert_eq!(cfg.trainer.kind, TrainerKind::Lightning);
+        assert_eq!(cfg.trainer.epochs, 3);
+    }
+
+    #[test]
+    fn rejects_unknown_key_and_bad_value() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.set("nope", "1").is_err());
+        assert!(cfg.set("items", "abc").is_err());
+        assert!(cfg.set("fetch_impl", "warp").is_err());
+    }
+
+    #[test]
+    fn overrides_apply_in_order() {
+        let mut cfg = ExperimentConfig::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("batch_size".to_string(), "16".to_string());
+        kv.insert("num_workers".to_string(), "8".to_string());
+        cfg.apply_overrides(&kv).unwrap();
+        assert_eq!(cfg.loader.batch_size, 16);
+        assert_eq!(cfg.loader.num_workers, 8);
+    }
+
+    #[test]
+    fn spawn_cost_override() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("spawn_cost_ms", "250").unwrap();
+        assert_eq!(cfg.loader.spawn_cost(), Duration::from_millis(250));
+    }
+}

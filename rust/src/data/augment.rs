@@ -1,0 +1,279 @@
+//! CPU-side augmentation pipeline (the paper's Dataset transform):
+//!
+//! 1. RandomResizedCrop(crop×crop) — random area/aspect crop, bilinear
+//!    resize (real per-pixel arithmetic, the CPU hot-spot);
+//! 2. RandomHorizontalFlip(p=0.5);
+//! 3. ToTensor + Normalize — **not here**: in the three-layer port this
+//!    final per-pixel math runs on-device as the L1 Pallas kernel, so
+//!    the loader ships u8 crops. A [`Augment::to_f32_normalized`] path
+//!    is kept for the CPU-only comparisons and cross-checks.
+//!
+//! Deterministic: each item's randomness derives from (seed, epoch,
+//! index).
+
+use super::simg::SimgImage;
+use super::{Tensor, U8Tensor};
+use crate::util::rng::Rng;
+
+/// ImageNet channel statistics (same constants as the python side).
+pub const MEAN: [f32; 3] = [0.485, 0.456, 0.406];
+pub const STD: [f32; 3] = [0.229, 0.224, 0.225];
+
+/// Augmentation parameters.
+#[derive(Debug, Clone)]
+pub struct AugmentConfig {
+    /// output side (paper: 224; scaled default: 64 to match artifacts)
+    pub crop: usize,
+    /// RandomResizedCrop area range (torchvision default 0.08..1.0)
+    pub area_range: (f64, f64),
+    /// aspect-ratio range (torchvision default 3/4..4/3)
+    pub ratio_range: (f64, f64),
+    pub flip_p: f64,
+    pub seed: u64,
+}
+
+impl Default for AugmentConfig {
+    fn default() -> Self {
+        AugmentConfig {
+            crop: 64,
+            area_range: (0.3, 1.0),
+            ratio_range: (0.75, 4.0 / 3.0),
+            flip_p: 0.5,
+            seed: 11,
+        }
+    }
+}
+
+/// The transform pipeline.
+#[derive(Debug, Clone)]
+pub struct Augment {
+    pub cfg: AugmentConfig,
+}
+
+impl Augment {
+    pub fn new(cfg: AugmentConfig) -> Augment {
+        Augment { cfg }
+    }
+
+    fn item_rng(&self, epoch: usize, index: usize) -> Rng {
+        Rng::new(
+            self.cfg
+                .seed
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add((epoch as u64) << 32)
+                .wrapping_add(index as u64),
+        )
+    }
+
+    /// Apply crop+flip, returning a u8 HWC tensor (crop, crop, 3).
+    pub fn apply_u8(&self, img: &SimgImage, epoch: usize, index: usize) -> U8Tensor {
+        let mut rng = self.item_rng(epoch, index);
+        let (y0, x0, ch, cw) = sample_crop(
+            &mut rng,
+            img.height,
+            img.width,
+            self.cfg.area_range,
+            self.cfg.ratio_range,
+        );
+        let flip = rng.chance(self.cfg.flip_p);
+        let c = self.cfg.crop;
+        let mut out = U8Tensor::zeros(&[c, c, 3]);
+        bilinear_resize_region(img, y0, x0, ch, cw, c, c, flip, &mut out.data);
+        out
+    }
+
+    /// CPU ToTensor+Normalize (reference / CPU-only comparisons); CHW f32.
+    pub fn to_f32_normalized(&self, crop: &U8Tensor) -> Tensor {
+        let (h, w) = (crop.shape[0], crop.shape[1]);
+        let mut t = Tensor::zeros(&[3, h, w]);
+        for c in 0..3 {
+            let (m, s) = (MEAN[c], STD[c]);
+            for y in 0..h {
+                for x in 0..w {
+                    let v = crop.data[(y * w + x) * 3 + c] as f32 / 255.0;
+                    t.data[c * h * w + y * w + x] = (v - m) / s;
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Sample a RandomResizedCrop region (torchvision algorithm: try 10
+/// area/ratio draws, fall back to center crop).
+fn sample_crop(
+    rng: &mut Rng,
+    height: usize,
+    width: usize,
+    area_range: (f64, f64),
+    ratio_range: (f64, f64),
+) -> (usize, usize, usize, usize) {
+    let area = (height * width) as f64;
+    for _ in 0..10 {
+        let target = area * rng.uniform(area_range.0, area_range.1);
+        let log_r = rng.uniform(ratio_range.0.ln(), ratio_range.1.ln());
+        let ratio = log_r.exp();
+        let cw = (target * ratio).sqrt().round() as usize;
+        let ch = (target / ratio).sqrt().round() as usize;
+        if cw > 0 && ch > 0 && cw <= width && ch <= height {
+            let y0 = rng.below(height - ch + 1);
+            let x0 = rng.below(width - cw + 1);
+            return (y0, x0, ch, cw);
+        }
+    }
+    // fallback: biggest centered square
+    let side = height.min(width);
+    ((height - side) / 2, (width - side) / 2, side, side)
+}
+
+/// Bilinear-resize a source region (y0,x0,ch,cw) to (oh,ow), optional
+/// horizontal flip, writing u8 HWC into `out`.
+#[allow(clippy::too_many_arguments)]
+fn bilinear_resize_region(
+    img: &SimgImage,
+    y0: usize,
+    x0: usize,
+    ch: usize,
+    cw: usize,
+    oh: usize,
+    ow: usize,
+    flip: bool,
+    out: &mut [u8],
+) {
+    debug_assert_eq!(out.len(), oh * ow * 3);
+    let sy = ch as f32 / oh as f32;
+    let sx = cw as f32 / ow as f32;
+    let stride = img.width * 3;
+    let px = &img.pixels;
+    // column LUT: the x-interpolation pattern is identical for every
+    // output row — precompute (byte offsets, weight) once (§Perf:
+    // ~2× on the crop hot path vs recomputing per pixel).
+    let cols: Vec<(usize, usize, f32)> = (0..ow)
+        .map(|ox| {
+            let fx = ((ox as f32 + 0.5) * sx - 0.5).max(0.0);
+            let ix = (fx as usize).min(cw - 1);
+            let ix1 = (ix + 1).min(cw - 1);
+            ((x0 + ix) * 3, (x0 + ix1) * 3, fx - ix as f32)
+        })
+        .collect();
+    for oy in 0..oh {
+        let fy = ((oy as f32 + 0.5) * sy - 0.5).max(0.0);
+        let iy = (fy as usize).min(ch - 1);
+        let iy1 = (iy + 1).min(ch - 1);
+        let wy = fy - iy as f32;
+        let row0 = &px[(y0 + iy) * stride..];
+        let row1 = &px[(y0 + iy1) * stride..];
+        let out_row = &mut out[oy * ow * 3..(oy + 1) * ow * 3];
+        for (ox, &(c0, c1, wx)) in cols.iter().enumerate() {
+            let out_x = if flip { ow - 1 - ox } else { ox };
+            let o = out_x * 3;
+            for c in 0..3 {
+                let v00 = row0[c0 + c] as f32;
+                let v01 = row0[c1 + c] as f32;
+                let v10 = row1[c0 + c] as f32;
+                let v11 = row1[c1 + c] as f32;
+                let top = v00 + (v01 - v00) * wx;
+                let bot = v10 + (v11 - v10) * wx;
+                let v = top + (bot - top) * wy;
+                out_row[o + c] = (v + 0.5) as u8;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_image(h: usize, w: usize, val: u8) -> SimgImage {
+        SimgImage::new(h, w, 0, vec![val; h * w * 3])
+    }
+
+    fn gradient_image(h: usize, w: usize) -> SimgImage {
+        let mut px = vec![0u8; h * w * 3];
+        for y in 0..h {
+            for x in 0..w {
+                let o = (y * w + x) * 3;
+                px[o] = (x * 255 / w.max(1)) as u8; // R encodes x
+                px[o + 1] = (y * 255 / h.max(1)) as u8; // G encodes y
+                px[o + 2] = 128;
+            }
+        }
+        SimgImage::new(h, w, 0, px)
+    }
+
+    #[test]
+    fn output_shape_and_determinism() {
+        let aug = Augment::new(AugmentConfig { crop: 32, ..Default::default() });
+        let img = gradient_image(100, 80);
+        let a = aug.apply_u8(&img, 0, 5);
+        let b = aug.apply_u8(&img, 0, 5);
+        assert_eq!(a.shape, vec![32, 32, 3]);
+        assert_eq!(a, b);
+        // different epoch -> different crop
+        let c = aug.apply_u8(&img, 1, 5);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn flat_image_stays_flat() {
+        let aug = Augment::new(AugmentConfig { crop: 16, ..Default::default() });
+        let img = flat_image(50, 70, 93);
+        let out = aug.apply_u8(&img, 0, 0);
+        assert!(out.data.iter().all(|&v| v == 93));
+    }
+
+    #[test]
+    fn flip_mirrors_r_channel_gradient() {
+        // with flip_p = 1.0, the x-gradient in R must be descending
+        let aug = Augment::new(AugmentConfig {
+            crop: 16,
+            flip_p: 1.0,
+            area_range: (1.0, 1.0),
+            ratio_range: (1.0, 1.0),
+            seed: 3,
+        });
+        let img = gradient_image(64, 64);
+        let out = aug.apply_u8(&img, 0, 0);
+        let first_r = out.data[0] as i32;
+        let last_r = out.data[(15) * 3] as i32;
+        assert!(first_r > last_r, "not flipped: {first_r} vs {last_r}");
+    }
+
+    #[test]
+    fn crop_region_within_bounds_many_seeds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let h = rng.range(16, 300);
+            let w = rng.range(16, 300);
+            let (y0, x0, ch, cw) =
+                sample_crop(&mut rng, h, w, (0.08, 1.0), (0.75, 4.0 / 3.0));
+            assert!(y0 + ch <= h);
+            assert!(x0 + cw <= w);
+            assert!(ch > 0 && cw > 0);
+        }
+    }
+
+    #[test]
+    fn normalize_matches_formula() {
+        let aug = Augment::new(AugmentConfig { crop: 4, ..Default::default() });
+        let crop = U8Tensor {
+            shape: vec![2, 2, 3],
+            data: vec![128; 12],
+        };
+        let t = aug.to_f32_normalized(&crop);
+        assert_eq!(t.shape, vec![3, 2, 2]);
+        for c in 0..3 {
+            let want = (128.0 / 255.0 - MEAN[c]) / STD[c];
+            assert!((t.data[c * 4] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn tiny_source_image_upscales() {
+        let aug = Augment::new(AugmentConfig { crop: 64, ..Default::default() });
+        let img = gradient_image(16, 16);
+        let out = aug.apply_u8(&img, 0, 0);
+        assert_eq!(out.numel(), 64 * 64 * 3);
+    }
+}

@@ -1,0 +1,78 @@
+//! Data substrate: the SIMG image codec, the synthetic ImageNet-like
+//! corpus generator, pixel-level augmentation ops, and a tiny tensor
+//! type for collated batches.
+//!
+//! The paper uses ImageNet JPEGs (avg ~115 kB, ~469×387). Offline we
+//! generate a seeded corpus of SIMG images whose byte-size distribution
+//! matches, and whose decode+augment CPU cost stands in for JPEG decode
+//! (DESIGN.md substitution table).
+
+pub mod augment;
+pub mod simg;
+pub mod synth;
+
+pub use augment::{Augment, AugmentConfig};
+pub use simg::SimgImage;
+pub use synth::{generate_corpus, CorpusSpec};
+
+/// A dense f32 tensor (row-major) — the collated batch payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// A u8 tensor (raw image crops shipped to the device — the L1
+/// normalize kernel converts on-device).
+#[derive(Debug, Clone, PartialEq)]
+pub struct U8Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl U8Tensor {
+    pub fn zeros(shape: &[usize]) -> U8Tensor {
+        U8Tensor { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shapes() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.bytes(), 96);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_len() {
+        Tensor::from_vec(&[2, 2], vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,198 @@
+//! SIMG — the repo's raw image format.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic    [4]  = b"SIMG"
+//! version  u8   = 1
+//! channels u8   = 3
+//! height   u16
+//! width    u16
+//! label    u16            (class id baked into the object, like an
+//!                          ImageNet folder name)
+//! crc32    u32            (over the pixel payload)
+//! pixels   h*w*c u8       (HWC, RGB)
+//! ```
+//!
+//! Decode validates the CRC — a real pass over every payload byte, which
+//! stands in for JPEG entropy-decode cost at the same order of
+//! magnitude per byte (the augment stage dominates CPU anyway).
+
+use anyhow::{bail, Result};
+
+pub const MAGIC: &[u8; 4] = b"SIMG";
+pub const HEADER_LEN: usize = 4 + 1 + 1 + 2 + 2 + 2 + 4;
+
+/// A decoded image: HWC u8 pixels plus its label.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimgImage {
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub label: u16,
+    pub pixels: Vec<u8>,
+}
+
+impl SimgImage {
+    pub fn new(height: usize, width: usize, label: u16, pixels: Vec<u8>) -> SimgImage {
+        assert_eq!(pixels.len(), height * width * 3);
+        SimgImage { height, width, channels: 3, label, pixels }
+    }
+
+    /// Pixel at (y, x, c).
+    #[inline]
+    pub fn at(&self, y: usize, x: usize, c: usize) -> u8 {
+        self.pixels[(y * self.width + x) * self.channels + c]
+    }
+
+    /// Encode to the SIMG byte format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + self.pixels.len());
+        out.extend_from_slice(MAGIC);
+        out.push(1u8);
+        out.push(self.channels as u8);
+        out.extend_from_slice(&(self.height as u16).to_le_bytes());
+        out.extend_from_slice(&(self.width as u16).to_le_bytes());
+        out.extend_from_slice(&self.label.to_le_bytes());
+        out.extend_from_slice(&crc32(&self.pixels).to_le_bytes());
+        out.extend_from_slice(&self.pixels);
+        out
+    }
+
+    /// Decode and CRC-validate a SIMG buffer.
+    pub fn decode(buf: &[u8]) -> Result<SimgImage> {
+        if buf.len() < HEADER_LEN {
+            bail!("SIMG too short: {} bytes", buf.len());
+        }
+        if &buf[0..4] != MAGIC {
+            bail!("bad SIMG magic");
+        }
+        let version = buf[4];
+        if version != 1 {
+            bail!("unsupported SIMG version {version}");
+        }
+        let channels = buf[5] as usize;
+        if channels != 3 {
+            bail!("unsupported channel count {channels}");
+        }
+        let height = u16::from_le_bytes([buf[6], buf[7]]) as usize;
+        let width = u16::from_le_bytes([buf[8], buf[9]]) as usize;
+        let label = u16::from_le_bytes([buf[10], buf[11]]);
+        let crc = u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]);
+        let want = height * width * channels;
+        let pixels = &buf[HEADER_LEN..];
+        if pixels.len() != want {
+            bail!("SIMG payload {} != {}", pixels.len(), want);
+        }
+        if crc32(pixels) != crc {
+            bail!("SIMG CRC mismatch");
+        }
+        Ok(SimgImage {
+            height,
+            width,
+            channels,
+            label,
+            pixels: pixels.to_vec(),
+        })
+    }
+
+    pub fn encoded_len(&self) -> usize {
+        HEADER_LEN + self.pixels.len()
+    }
+}
+
+/// CRC-32 (IEEE), slicing-by-8 (≈6× over the classic byte-at-a-time
+/// loop — decode is the loader's per-item CPU hot path, see
+/// EXPERIMENTS.md §Perf).
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLES: once_cell::sync::Lazy<[[u32; 256]; 8]> =
+        once_cell::sync::Lazy::new(|| {
+            let mut t = [[0u32; 256]; 8];
+            for i in 0..256usize {
+                let mut c = i as u32;
+                for _ in 0..8 {
+                    c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+                }
+                t[0][i] = c;
+            }
+            for i in 0..256usize {
+                let mut c = t[0][i];
+                for k in 1..8 {
+                    c = t[0][(c & 0xFF) as usize] ^ (c >> 8);
+                    t[k][i] = c;
+                }
+            }
+            t
+        });
+    let t = &*TABLES;
+    let mut crc = !0u32;
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        let lo = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) ^ crc;
+        let hi = u32::from_le_bytes([c[4], c[5], c[6], c[7]]);
+        crc = t[7][(lo & 0xFF) as usize]
+            ^ t[6][((lo >> 8) & 0xFF) as usize]
+            ^ t[5][((lo >> 16) & 0xFF) as usize]
+            ^ t[4][(lo >> 24) as usize]
+            ^ t[3][(hi & 0xFF) as usize]
+            ^ t[2][((hi >> 8) & 0xFF) as usize]
+            ^ t[1][((hi >> 16) & 0xFF) as usize]
+            ^ t[0][(hi >> 24) as usize];
+    }
+    for &b in chunks.remainder() {
+        crc = t[0][((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(h: usize, w: usize) -> SimgImage {
+        let pixels: Vec<u8> =
+            (0..h * w * 3).map(|i| (i * 31 % 256) as u8).collect();
+        SimgImage::new(h, w, 7, pixels)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let img = sample(13, 9);
+        let buf = img.encode();
+        assert_eq!(buf.len(), img.encoded_len());
+        let back = SimgImage::decode(&buf).unwrap();
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let img = sample(8, 8);
+        let mut buf = img.encode();
+        let last = buf.len() - 1;
+        buf[last] ^= 0xFF;
+        assert!(SimgImage::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let img = sample(4, 4);
+        let mut buf = img.encode();
+        buf[0] = b'X';
+        assert!(SimgImage::decode(&buf).is_err());
+        let buf = img.encode();
+        assert!(SimgImage::decode(&buf[..10]).is_err());
+        assert!(SimgImage::decode(&buf[..buf.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn crc32_known_value() {
+        // "123456789" -> 0xCBF43926 (standard check value)
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+
+    #[test]
+    fn at_indexes_hwc() {
+        let img = sample(2, 3);
+        assert_eq!(img.at(0, 0, 0), img.pixels[0]);
+        assert_eq!(img.at(1, 2, 1), img.pixels[(1 * 3 + 2) * 3 + 1]);
+    }
+}

@@ -1,0 +1,159 @@
+//! Synthetic ImageNet-like corpus generator.
+//!
+//! Produces a seeded set of SIMG images whose *byte-size distribution*
+//! matches the paper's ImageNet working set (average ~115 kB per object,
+//! lognormal spread, mild aspect-ratio variation) and whose pixel
+//! content is structured (gradients + class-dependent texture + noise)
+//! so that bilinear crops do real arithmetic.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::simg::SimgImage;
+use crate::storage::ObjectStore;
+use crate::util::rng::Rng;
+
+/// Corpus parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub items: usize,
+    pub classes: usize,
+    /// mean object size in bytes (ImageNet JPEG avg ≈ 115 kB)
+    pub mean_bytes: usize,
+    /// lognormal sigma of the size distribution
+    pub sigma: f64,
+    pub seed: u64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec {
+            items: 2048,
+            classes: 512,
+            mean_bytes: 115 * 1024,
+            sigma: 0.35,
+            seed: 7,
+        }
+    }
+}
+
+impl CorpusSpec {
+    /// Small preset for unit tests / CI-speed runs.
+    pub fn tiny(items: usize) -> CorpusSpec {
+        CorpusSpec { items, mean_bytes: 12 * 1024, ..Default::default() }
+    }
+
+    /// Key of item `i` (classful layout, like ImageNet folders).
+    pub fn key(&self, i: usize) -> String {
+        format!("cls{:03}/img_{:06}.simg", i % self.classes, i)
+    }
+}
+
+/// Generate one image deterministically from (spec.seed, index).
+pub fn generate_image(spec: &CorpusSpec, index: usize) -> SimgImage {
+    let mut rng = Rng::new(spec.seed ^ (index as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let label = (index % spec.classes) as u16;
+
+    // lognormal byte size -> pixel dims with random aspect ratio
+    // mean of lognormal = median * exp(sigma^2/2); invert for the median.
+    let median = spec.mean_bytes as f64 / (spec.sigma * spec.sigma / 2.0).exp();
+    let bytes = rng.lognormal(median, spec.sigma).max(3.0 * 16.0 * 16.0);
+    let pixels_n = bytes / 3.0;
+    let ar = rng.uniform(0.75, 1.35); // height/width
+    let width = (pixels_n / ar).sqrt().round().max(16.0) as usize;
+    let height = (pixels_n / width as f64).round().max(16.0) as usize;
+    let (width, height) = (width.min(2048), height.min(2048));
+
+    // structured content: per-class palette + gradients + noise
+    let base = [
+        (label as u32 * 37 % 256) as u8,
+        (label as u32 * 101 % 256) as u8,
+        (label as u32 * 197 % 256) as u8,
+    ];
+    let fx = rng.uniform(0.5, 4.0);
+    let fy = rng.uniform(0.5, 4.0);
+    let mut pixels = vec![0u8; height * width * 3];
+    for y in 0..height {
+        let wy = (y as f64 / height as f64 * fy * std::f64::consts::TAU).sin();
+        for x in 0..width {
+            let wx = (x as f64 / width as f64 * fx * std::f64::consts::TAU).cos();
+            let wave = (wx * wy * 60.0) as i32;
+            let noise = (rng.next_u32() & 0x1F) as i32 - 16;
+            let off = (y * width + x) * 3;
+            for c in 0..3 {
+                let v = base[c] as i32 + wave + noise + (c as i32 * 9);
+                pixels[off + c] = v.clamp(0, 255) as u8;
+            }
+        }
+    }
+    SimgImage::new(height, width, label, pixels)
+}
+
+/// Generate the full corpus into a store. Returns (keys, total_bytes).
+pub fn generate_corpus(
+    store: &Arc<dyn ObjectStore>,
+    spec: &CorpusSpec,
+) -> Result<(Vec<String>, u64)> {
+    let mut keys = Vec::with_capacity(spec.items);
+    let mut total = 0u64;
+    for i in 0..spec.items {
+        let img = generate_image(spec, i);
+        let buf = img.encode();
+        total += buf.len() as u64;
+        let key = spec.key(i);
+        store.put(&key, buf)?;
+        keys.push(key);
+    }
+    Ok((keys, total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+
+    #[test]
+    fn deterministic_generation() {
+        let spec = CorpusSpec::tiny(4);
+        let a = generate_image(&spec, 2);
+        let b = generate_image(&spec, 2);
+        assert_eq!(a, b);
+        let c = generate_image(&spec, 3);
+        assert_ne!(a.pixels, c.pixels);
+    }
+
+    #[test]
+    fn size_distribution_centered_on_mean() {
+        let spec = CorpusSpec { items: 200, mean_bytes: 30_000, ..Default::default() };
+        let sizes: Vec<f64> = (0..spec.items)
+            .map(|i| generate_image(&spec, i).encoded_len() as f64)
+            .collect();
+        let mean = crate::util::stats::mean(&sizes);
+        assert!(
+            (mean - 30_000.0).abs() < 6_000.0,
+            "mean size {mean} far from 30000"
+        );
+    }
+
+    #[test]
+    fn labels_cycle_classes() {
+        let spec = CorpusSpec { classes: 10, ..CorpusSpec::tiny(25) };
+        for i in 0..25 {
+            assert_eq!(generate_image(&spec, i).label as usize, i % 10);
+        }
+    }
+
+    #[test]
+    fn corpus_lands_in_store_decodable() {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+        let spec = CorpusSpec::tiny(6);
+        let (keys, total) = generate_corpus(&store, &spec).unwrap();
+        assert_eq!(keys.len(), 6);
+        assert!(total > 0);
+        for k in &keys {
+            let buf = store.get(k).unwrap();
+            SimgImage::decode(&buf).unwrap();
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Batch collation: assemble fetched samples (in request order) into one
+//! contiguous u8 image tensor + label vector — torch's default
+//! `collate_fn`, which runs inside the worker process (under its GIL).
+
+use crate::data::U8Tensor;
+use crate::dataset::Sample;
+
+/// A collated training batch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub id: usize,
+    /// [B, crop, crop, 3] u8 (normalize runs on-device — L1 kernel)
+    pub images: U8Tensor,
+    pub labels: Vec<i32>,
+    /// dataset indices in request order
+    pub indices: Vec<usize>,
+    /// total stored object bytes (throughput accounting)
+    pub raw_bytes: u64,
+    pub pinned: bool,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Host memory footprint of the collated tensor.
+    pub fn tensor_bytes(&self) -> usize {
+        self.images.data.len()
+    }
+}
+
+/// Collate samples (already sorted to request order) into a [`Batch`].
+/// Panics if crops disagree in shape — samples of one dataset always
+/// share the transform output shape.
+pub fn collate(id: usize, samples: Vec<Sample>) -> Batch {
+    assert!(!samples.is_empty(), "collate of empty batch");
+    let crop_shape = samples[0].crop.shape.clone();
+    let per = samples[0].crop.data.len();
+    let b = samples.len();
+    let mut images = U8Tensor::zeros(&[b, crop_shape[0], crop_shape[1], crop_shape[2]]);
+    let mut labels = Vec::with_capacity(b);
+    let mut indices = Vec::with_capacity(b);
+    let mut raw_bytes = 0u64;
+    for (i, s) in samples.into_iter().enumerate() {
+        assert_eq!(s.crop.shape, crop_shape, "ragged crop shapes");
+        images.data[i * per..(i + 1) * per].copy_from_slice(&s.crop.data);
+        labels.push(s.label as i32);
+        indices.push(s.index);
+        raw_bytes += s.raw_bytes as u64;
+    }
+    Batch { id, images, labels, indices, raw_bytes, pinned: false }
+}
+
+/// Restore request order after parallel fetch: place each sample at its
+/// position, panicking on duplicates/holes (the reassembly invariant the
+/// property tests check).
+pub fn restore_order(n: usize, fetched: Vec<(usize, Sample)>) -> Vec<Sample> {
+    assert_eq!(fetched.len(), n, "wrong sample count");
+    let mut slots: Vec<Option<Sample>> = (0..n).map(|_| None).collect();
+    for (pos, s) in fetched {
+        assert!(pos < n, "position out of range");
+        assert!(slots[pos].is_none(), "duplicate position {pos}");
+        slots[pos] = Some(s);
+    }
+    slots.into_iter().map(|s| s.expect("hole in batch")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::U8Tensor;
+
+    pub(crate) fn fake_sample(index: usize, label: u16, fill: u8, crop: usize) -> Sample {
+        Sample {
+            index,
+            label,
+            crop: U8Tensor {
+                shape: vec![crop, crop, 3],
+                data: vec![fill; crop * crop * 3],
+            },
+            raw_bytes: 100 + index,
+            fetch_time: 0.0,
+            decode_time: 0.0,
+        }
+    }
+
+    #[test]
+    fn collate_concatenates_in_order() {
+        let samples = vec![
+            fake_sample(5, 1, 10, 2),
+            fake_sample(9, 2, 20, 2),
+        ];
+        let b = collate(3, samples);
+        assert_eq!(b.id, 3);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.images.shape, vec![2, 2, 2, 3]);
+        assert!(b.images.data[..12].iter().all(|&v| v == 10));
+        assert!(b.images.data[12..].iter().all(|&v| v == 20));
+        assert_eq!(b.labels, vec![1, 2]);
+        assert_eq!(b.indices, vec![5, 9]);
+        assert_eq!(b.raw_bytes, 105 + 109);
+    }
+
+    #[test]
+    fn restore_order_sorts_arrivals() {
+        let fetched = vec![
+            (2, fake_sample(30, 0, 3, 1)),
+            (0, fake_sample(10, 0, 1, 1)),
+            (1, fake_sample(20, 0, 2, 1)),
+        ];
+        let sorted = restore_order(3, fetched);
+        assert_eq!(
+            sorted.iter().map(|s| s.index).collect::<Vec<_>>(),
+            vec![10, 20, 30]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn restore_order_rejects_duplicates() {
+        restore_order(
+            2,
+            vec![(0, fake_sample(0, 0, 0, 1)), (0, fake_sample(1, 0, 0, 1))],
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong sample count")]
+    fn restore_order_rejects_short() {
+        restore_order(3, vec![(0, fake_sample(0, 0, 0, 1))]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn collate_rejects_ragged() {
+        collate(0, vec![fake_sample(0, 0, 0, 2), fake_sample(1, 0, 0, 3)]);
+    }
+}

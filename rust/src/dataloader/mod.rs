@@ -1,0 +1,647 @@
+//! The ConcurrentDataloader — the paper's contribution as a production
+//! Rust component.
+//!
+//! Drop-in semantics follow `torch.utils.data.DataLoader` plus the two
+//! extensions of the paper (§2.2):
+//!
+//! * `fetch_impl` ∈ {Vanilla, Threaded, Asyncio} selects the in-batch
+//!   fetch strategy (`num_fetch_workers` bounds in-batch parallelism);
+//! * `batch_pool` enables *batch disassembly* (Threaded only): a worker
+//!   pulls several batches, fetches all their items in one parallel
+//!   wave, reassembles, and emits them in order.
+//!
+//! Also modeled from the paper:
+//! * `num_workers` worker processes (threads with per-worker GILs),
+//!   round-robin batch assignment, bounded data queue of
+//!   `num_workers × prefetch_factor` (backpressure);
+//! * `start_method` fork/spawn start-up cost, and **lazy initialization**
+//!   (§2.4 / Fig 8): workers are yielded as they are created instead of
+//!   a blocking creation loop;
+//! * `pin_memory` staging (disabled under `fork`, as in torch);
+//! * in-order batch delivery (out-of-order arrivals are buffered).
+
+pub mod collate;
+pub mod fetch;
+pub mod sampler;
+pub mod worker;
+
+pub use collate::Batch;
+pub use sampler::Sampler;
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::dataset::Dataset;
+use crate::gil;
+use crate::telemetry::{names, Recorder};
+
+/// In-batch fetch strategy (§2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FetchImpl {
+    Vanilla,
+    Threaded,
+    Asyncio,
+}
+
+impl FetchImpl {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FetchImpl::Vanilla => "vanilla",
+            FetchImpl::Threaded => "threaded",
+            FetchImpl::Asyncio => "asyncio",
+        }
+    }
+
+    pub fn all() -> [FetchImpl; 3] {
+        [FetchImpl::Vanilla, FetchImpl::Asyncio, FetchImpl::Threaded]
+    }
+}
+
+/// Worker process start method (§2.4 "Process creation").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StartMethod {
+    /// child inherits the parent — cheap, but GPU calls (pin_memory)
+    /// cannot be mixed in
+    Fork,
+    /// fresh interpreter — expensive start-up
+    Spawn,
+}
+
+impl StartMethod {
+    /// Simulated per-process creation cost.
+    pub fn cost(&self) -> Duration {
+        match self {
+            StartMethod::Fork => Duration::from_millis(4),
+            StartMethod::Spawn => Duration::from_millis(120),
+        }
+    }
+}
+
+/// Full loader configuration (torch parameters + the paper's additions).
+#[derive(Debug, Clone)]
+pub struct DataloaderConfig {
+    pub batch_size: usize,
+    pub num_workers: usize,
+    pub prefetch_factor: usize,
+    pub fetch_impl: FetchImpl,
+    /// max parallel in-batch fetch tasks (threads or async tasks)
+    pub num_fetch_workers: usize,
+    /// batch disassembly pool in *items*; 0 disables (§2.2, Fig 4 right)
+    pub batch_pool: usize,
+    pub pin_memory: bool,
+    pub start_method: StartMethod,
+    /// lazy, non-blocking worker creation (§2.4, Fig 8 right)
+    pub lazy_init: bool,
+    /// CPython vs native concurrency semantics for the workers
+    pub runtime: gil::Runtime,
+    pub python_tax: f64,
+    pub shuffle: bool,
+    pub seed: u64,
+    pub drop_last: bool,
+    /// override the start-method cost (tests / sweeps)
+    pub spawn_cost_override: Option<Duration>,
+}
+
+impl Default for DataloaderConfig {
+    fn default() -> Self {
+        DataloaderConfig {
+            batch_size: 64,
+            num_workers: 4,
+            prefetch_factor: 2,
+            fetch_impl: FetchImpl::Vanilla,
+            num_fetch_workers: 16,
+            batch_pool: 0,
+            pin_memory: false,
+            start_method: StartMethod::Fork,
+            lazy_init: true,
+            runtime: gil::Runtime::Python,
+            python_tax: 4.0,
+            shuffle: true,
+            seed: 1234,
+            drop_last: false,
+            spawn_cost_override: None,
+        }
+    }
+}
+
+impl DataloaderConfig {
+    pub fn spawn_cost(&self) -> Duration {
+        self.spawn_cost_override.unwrap_or_else(|| self.start_method.cost())
+    }
+
+    /// torch rule: pin_memory needs CUDA init which `fork` forbids.
+    pub fn effective_pin_memory(&self) -> bool {
+        self.pin_memory && self.start_method == StartMethod::Spawn
+    }
+
+    /// Data-queue capacity (backpressure bound, Table 4 row 2).
+    pub fn queue_capacity(&self) -> usize {
+        (self.num_workers.max(1)) * self.prefetch_factor.max(1)
+    }
+}
+
+/// The dataloader: construct once, iterate per epoch.
+pub struct Dataloader {
+    dataset: Arc<dyn Dataset>,
+    cfg: Arc<DataloaderConfig>,
+    recorder: Arc<Recorder>,
+}
+
+impl Dataloader {
+    pub fn new(
+        dataset: Arc<dyn Dataset>,
+        cfg: DataloaderConfig,
+        recorder: Arc<Recorder>,
+    ) -> Dataloader {
+        if cfg.pin_memory && cfg.start_method == StartMethod::Fork {
+            log::warn!(
+                "pin_memory=true with start_method=fork: pinning disabled \
+                 (CUDA init cannot follow fork)"
+            );
+        }
+        Dataloader { dataset, cfg: Arc::new(cfg), recorder }
+    }
+
+    pub fn config(&self) -> &DataloaderConfig {
+        &self.cfg
+    }
+
+    pub fn recorder(&self) -> &Arc<Recorder> {
+        &self.recorder
+    }
+
+    pub fn dataset(&self) -> &Arc<dyn Dataset> {
+        &self.dataset
+    }
+
+    /// Number of batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        let n = self.dataset.len();
+        let b = self.cfg.batch_size;
+        if self.cfg.drop_last {
+            n / b
+        } else {
+            n.div_ceil(b)
+        }
+    }
+
+    /// Begin an epoch: builds the batch plan, (lazily or eagerly) starts
+    /// workers, and returns the batch iterator.
+    pub fn epoch(&self, epoch: usize) -> EpochIter {
+        self.dataset.set_epoch(epoch);
+        let sampler = if self.cfg.shuffle {
+            Sampler::Random { seed: self.cfg.seed }
+        } else {
+            Sampler::Sequential
+        };
+        let order = sampler.order(self.dataset.len(), epoch);
+        let plan = sampler::batches(&order, self.cfg.batch_size, self.cfg.drop_last);
+        let n_batches = plan.len();
+
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Batch>(self.cfg.queue_capacity());
+
+        let mut iter = EpochIter {
+            dataset: self.dataset.clone(),
+            cfg: self.cfg.clone(),
+            recorder: self.recorder.clone(),
+            rx: Some(rx),
+            tx: Some(tx),
+            pending: HashMap::new(),
+            next_id: 0,
+            n_batches,
+            plan: Some(sampler::assign_round_robin(plan, self.cfg.num_workers)),
+            inline_plan: None,
+            workers: Vec::new(),
+            spawner: None,
+            started: false,
+        };
+
+        if self.cfg.num_workers == 0 {
+            // torch num_workers=0: load inline in the consumer
+            let flat: Vec<(usize, Vec<usize>)> =
+                iter.plan.take().unwrap().into_iter().flatten().collect();
+            let mut flat = flat;
+            flat.sort_by_key(|(id, _)| *id);
+            iter.inline_plan = Some(flat.into_iter().collect());
+            iter.started = true;
+        } else if !self.cfg.lazy_init {
+            // blocking creation loop (vanilla torch, Fig 8 left): pay all
+            // start-up costs before the constructor returns
+            iter.start_workers_blocking();
+        }
+        iter
+    }
+}
+
+/// Iterator over one epoch's batches (in order).
+pub struct EpochIter {
+    dataset: Arc<dyn Dataset>,
+    cfg: Arc<DataloaderConfig>,
+    recorder: Arc<Recorder>,
+    rx: Option<Receiver<Batch>>,
+    tx: Option<SyncSender<Batch>>,
+    pending: HashMap<usize, Batch>,
+    next_id: usize,
+    n_batches: usize,
+    plan: Option<Vec<Vec<(usize, Vec<usize>)>>>,
+    inline_plan: Option<std::collections::VecDeque<(usize, Vec<usize>)>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    spawner: Option<std::thread::JoinHandle<Vec<std::thread::JoinHandle<()>>>>,
+    started: bool,
+}
+
+impl EpochIter {
+    pub fn n_batches(&self) -> usize {
+        self.n_batches
+    }
+
+    fn start_workers_blocking(&mut self) {
+        let plan = self.plan.take().expect("already started");
+        let tx = self.tx.take().expect("tx taken");
+        let cost = self.cfg.spawn_cost();
+        for (w, assignments) in plan.into_iter().enumerate() {
+            // the creation loop itself blocks per process (Fig 8 left)
+            std::thread::sleep(cost);
+            self.workers.push(worker::spawn_worker(
+                w as u32,
+                self.dataset.clone(),
+                self.recorder.clone(),
+                self.cfg.clone(),
+                assignments,
+                tx.clone(),
+                Duration::ZERO, // cost already paid in the loop
+            ));
+        }
+        self.started = true;
+    }
+
+    fn start_workers_lazy(&mut self) {
+        let plan = self.plan.take().expect("already started");
+        let tx = self.tx.take().expect("tx taken");
+        let cost = self.cfg.spawn_cost();
+        let dataset = self.dataset.clone();
+        let recorder = self.recorder.clone();
+        let cfg = self.cfg.clone();
+        // start_download(): yield each worker as it is created (Fig 8
+        // right) — creation runs off the consumer's critical path
+        self.spawner = Some(
+            std::thread::Builder::new()
+                .name("dl-spawner".into())
+                .spawn(move || {
+                    let mut handles = Vec::new();
+                    for (w, assignments) in plan.into_iter().enumerate() {
+                        std::thread::sleep(cost);
+                        handles.push(worker::spawn_worker(
+                            w as u32,
+                            dataset.clone(),
+                            recorder.clone(),
+                            cfg.clone(),
+                            assignments,
+                            tx.clone(),
+                            Duration::ZERO,
+                        ));
+                    }
+                    handles
+                })
+                .expect("spawn dl-spawner"),
+        );
+        self.started = true;
+    }
+
+    fn next_inline(&mut self) -> Option<Batch> {
+        let (batch_id, indices) = self.inline_plan.as_mut()?.pop_front()?;
+        let gil = gil::Gil::new(self.cfg.runtime, self.cfg.python_tax);
+        let ctx = fetch::FetchCtx {
+            worker_id: 0,
+            dataset: self.dataset.clone(),
+            gil: gil.clone(),
+            recorder: self.recorder.clone(),
+        };
+        let t0 = self.recorder.now();
+        let samples = fetch::fetch_vanilla(&ctx, batch_id, &indices).ok()?;
+        let batch = gil.cpu(|| collate::collate(batch_id, samples));
+        self.recorder.record(
+            names::BATCH_INFLIGHT,
+            0,
+            batch_id as i64,
+            t0,
+            self.recorder.now(),
+        );
+        Some(batch)
+    }
+
+    /// Apply the pin-memory staging cost and flag.
+    fn pin(&self, mut batch: Batch) -> Batch {
+        if self.cfg.effective_pin_memory() {
+            let t0 = self.recorder.now();
+            // page-locked copy at ~12 GB/s
+            let secs = batch.tensor_bytes() as f64 / 12.0e9 + 50e-6;
+            std::thread::sleep(Duration::from_secs_f64(secs));
+            batch.pinned = true;
+            self.recorder.record(
+                names::PIN_MEMORY,
+                0,
+                batch.id as i64,
+                t0,
+                self.recorder.now(),
+            );
+        }
+        batch
+    }
+}
+
+impl Iterator for EpochIter {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.next_id >= self.n_batches {
+            return None;
+        }
+        let t0 = self.recorder.now();
+
+        if self.inline_plan.is_some() {
+            let b = self.next_inline()?;
+            self.recorder.record(names::GET_BATCH, 0, b.id as i64, t0, self.recorder.now());
+            self.next_id += 1;
+            return Some(self.pin(b));
+        }
+
+        if !self.started {
+            // lazy init: first __next__ triggers start_download()
+            self.start_workers_lazy();
+        }
+        // in-order delivery: drain until the expected id arrives
+        loop {
+            if let Some(b) = self.pending.remove(&self.next_id) {
+                self.next_id += 1;
+                self.recorder.record(
+                    names::GET_BATCH,
+                    0,
+                    b.id as i64,
+                    t0,
+                    self.recorder.now(),
+                );
+                return Some(self.pin(b));
+            }
+            match self.rx.as_ref().expect("rx gone").recv() {
+                Ok(b) => {
+                    self.pending.insert(b.id, b);
+                }
+                Err(_) => return None, // all workers done & channel drained
+            }
+        }
+    }
+}
+
+impl Drop for EpochIter {
+    fn drop(&mut self) {
+        // unblock any worker stuck on send: drop our receiver first
+        self.pending.clear();
+        drop(self.rx.take());
+        drop(self.tx.take());
+        if let Some(sp) = self.spawner.take() {
+            if let Ok(handles) = sp.join() {
+                for h in handles {
+                    let _ = h.join();
+                }
+            }
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_corpus, CorpusSpec};
+    use crate::data::AugmentConfig;
+    use crate::dataset::ImageFolderDataset;
+    use crate::storage::{MemStore, ObjectStore, RemoteProfile, SimRemoteStore};
+    use std::time::Instant;
+
+    fn dataset(items: usize, remote: bool) -> Arc<dyn Dataset> {
+        let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+        generate_corpus(&mem, &CorpusSpec::tiny(items)).unwrap();
+        let store: Arc<dyn ObjectStore> = if remote {
+            SimRemoteStore::new(mem, RemoteProfile::s3().scaled(0.15), 5)
+        } else {
+            mem
+        };
+        Arc::new(ImageFolderDataset::new(
+            store,
+            AugmentConfig { crop: 16, ..Default::default() },
+        ))
+    }
+
+    fn collect_epoch(dl: &Dataloader, epoch: usize) -> Vec<Batch> {
+        dl.epoch(epoch).collect()
+    }
+
+    fn check_full_coverage(batches: &[Batch], n_items: usize) {
+        let mut seen: Vec<usize> =
+            batches.iter().flat_map(|b| b.indices.iter().copied()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n_items).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn epoch_covers_dataset_exactly_once_all_impls() {
+        for impl_ in FetchImpl::all() {
+            let dl = Dataloader::new(
+                dataset(22, false),
+                DataloaderConfig {
+                    batch_size: 5,
+                    num_workers: 3,
+                    fetch_impl: impl_,
+                    num_fetch_workers: 4,
+                    spawn_cost_override: Some(Duration::ZERO),
+                    ..Default::default()
+                },
+                Recorder::new(),
+            );
+            let batches = collect_epoch(&dl, 0);
+            assert_eq!(batches.len(), 5, "{impl_:?}");
+            check_full_coverage(&batches, 22);
+            // in-order ids
+            let ids: Vec<usize> = batches.iter().map(|b| b.id).collect();
+            assert_eq!(ids, vec![0, 1, 2, 3, 4], "{impl_:?}");
+        }
+    }
+
+    #[test]
+    fn num_workers_zero_inline() {
+        let dl = Dataloader::new(
+            dataset(10, false),
+            DataloaderConfig {
+                batch_size: 4,
+                num_workers: 0,
+                ..Default::default()
+            },
+            Recorder::new(),
+        );
+        let batches = collect_epoch(&dl, 0);
+        assert_eq!(batches.len(), 3);
+        check_full_coverage(&batches, 10);
+    }
+
+    #[test]
+    fn drop_last_drops_partial() {
+        let dl = Dataloader::new(
+            dataset(10, false),
+            DataloaderConfig {
+                batch_size: 4,
+                drop_last: true,
+                num_workers: 2,
+                spawn_cost_override: Some(Duration::ZERO),
+                ..Default::default()
+            },
+            Recorder::new(),
+        );
+        assert_eq!(dl.batches_per_epoch(), 2);
+        let batches = collect_epoch(&dl, 0);
+        assert_eq!(batches.len(), 2);
+        assert!(batches.iter().all(|b| b.len() == 4));
+    }
+
+    #[test]
+    fn shuffle_changes_across_epochs_deterministically() {
+        let dl = Dataloader::new(
+            dataset(16, false),
+            DataloaderConfig {
+                batch_size: 4,
+                num_workers: 2,
+                spawn_cost_override: Some(Duration::ZERO),
+                ..Default::default()
+            },
+            Recorder::new(),
+        );
+        let e0: Vec<usize> = collect_epoch(&dl, 0).iter().flat_map(|b| b.indices.clone()).collect();
+        let e0b: Vec<usize> = collect_epoch(&dl, 0).iter().flat_map(|b| b.indices.clone()).collect();
+        let e1: Vec<usize> = collect_epoch(&dl, 1).iter().flat_map(|b| b.indices.clone()).collect();
+        assert_eq!(e0, e0b);
+        assert_ne!(e0, e1);
+    }
+
+    #[test]
+    fn lazy_init_returns_first_batch_sooner() {
+        let slow_spawn = Duration::from_millis(60);
+        let mk = |lazy| {
+            Dataloader::new(
+                dataset(8, false),
+                DataloaderConfig {
+                    batch_size: 2,
+                    num_workers: 4,
+                    lazy_init: lazy,
+                    spawn_cost_override: Some(slow_spawn),
+                    ..Default::default()
+                },
+                Recorder::new(),
+            )
+        };
+        let dl = mk(false);
+        let t0 = Instant::now();
+        let mut it = dl.epoch(0);
+        let _b = it.next().unwrap();
+        let blocking_first = t0.elapsed();
+        drop(it);
+
+        let dl = mk(true);
+        let t0 = Instant::now();
+        let mut it = dl.epoch(0);
+        let _b = it.next().unwrap();
+        let lazy_first = t0.elapsed();
+        drop(it);
+
+        // blocking pays 4×60ms before the first fetch; lazy pays ~1×60ms
+        assert!(
+            lazy_first < blocking_first,
+            "lazy {lazy_first:?} !< blocking {blocking_first:?}"
+        );
+    }
+
+    #[test]
+    fn pin_memory_requires_spawn() {
+        let cfg = DataloaderConfig {
+            pin_memory: true,
+            start_method: StartMethod::Fork,
+            ..Default::default()
+        };
+        assert!(!cfg.effective_pin_memory());
+        let cfg = DataloaderConfig {
+            pin_memory: true,
+            start_method: StartMethod::Spawn,
+            ..Default::default()
+        };
+        assert!(cfg.effective_pin_memory());
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let dl = Dataloader::new(
+            dataset(32, false),
+            DataloaderConfig {
+                batch_size: 2,
+                num_workers: 4,
+                prefetch_factor: 1,
+                spawn_cost_override: Some(Duration::ZERO),
+                ..Default::default()
+            },
+            Recorder::new(),
+        );
+        let mut it = dl.epoch(0);
+        let _ = it.next().unwrap();
+        drop(it); // workers blocked on a full queue must unblock and exit
+    }
+
+    #[test]
+    fn threaded_epoch_faster_than_vanilla_on_remote() {
+        let mk = |impl_| {
+            Dataloader::new(
+                dataset(24, true),
+                DataloaderConfig {
+                    batch_size: 8,
+                    num_workers: 2,
+                    fetch_impl: impl_,
+                    num_fetch_workers: 8,
+                    spawn_cost_override: Some(Duration::ZERO),
+                    ..Default::default()
+                },
+                Recorder::new(),
+            )
+        };
+        let t0 = Instant::now();
+        let v = collect_epoch(&mk(FetchImpl::Vanilla), 0);
+        let vanilla = t0.elapsed();
+        let t0 = Instant::now();
+        let t = collect_epoch(&mk(FetchImpl::Threaded), 0);
+        let threaded = t0.elapsed();
+        assert_eq!(v.len(), t.len());
+        assert!(
+            threaded.as_secs_f64() < 0.55 * vanilla.as_secs_f64(),
+            "threaded {threaded:?} not ≪ vanilla {vanilla:?}"
+        );
+    }
+
+    #[test]
+    fn spans_recorded() {
+        let rec = Recorder::new();
+        let dl = Dataloader::new(
+            dataset(8, false),
+            DataloaderConfig {
+                batch_size: 4,
+                num_workers: 1,
+                spawn_cost_override: Some(Duration::ZERO),
+                ..Default::default()
+            },
+            rec.clone(),
+        );
+        let _ = collect_epoch(&dl, 0);
+        assert_eq!(rec.durations(names::GET_ITEM).len(), 8);
+        assert_eq!(rec.durations(names::GET_BATCH).len(), 2);
+        assert_eq!(rec.durations(names::BATCH_INFLIGHT).len(), 2);
+    }
+}

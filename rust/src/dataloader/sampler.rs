@@ -1,0 +1,111 @@
+//! Samplers and batch samplers (torch `RandomSampler` /
+//! `SequentialSampler` / `BatchSampler` semantics): produce the epoch's
+//! batch index lists that get distributed over worker index queues.
+
+use crate::util::rng::Rng;
+
+/// Item-order sampler for one epoch.
+#[derive(Debug, Clone)]
+pub enum Sampler {
+    Sequential,
+    /// seeded random permutation; reseeded per epoch like
+    /// `DistributedSampler.set_epoch`
+    Random { seed: u64 },
+}
+
+impl Sampler {
+    pub fn order(&self, len: usize, epoch: usize) -> Vec<usize> {
+        match self {
+            Sampler::Sequential => (0..len).collect(),
+            Sampler::Random { seed } => {
+                let mut rng = Rng::new(seed ^ ((epoch as u64) << 20).wrapping_add(epoch as u64));
+                rng.permutation(len)
+            }
+        }
+    }
+}
+
+/// Chunk an item order into batch index lists.
+pub fn batches(order: &[usize], batch_size: usize, drop_last: bool) -> Vec<Vec<usize>> {
+    assert!(batch_size > 0);
+    let mut out: Vec<Vec<usize>> = order
+        .chunks(batch_size)
+        .map(|c| c.to_vec())
+        .collect();
+    if drop_last {
+        if let Some(last) = out.last() {
+            if last.len() < batch_size {
+                out.pop();
+            }
+        }
+    }
+    out
+}
+
+/// Round-robin assignment of (batch_id, indices) to workers — torch
+/// hands batch k to worker `k % num_workers`.
+pub fn assign_round_robin(
+    batches: Vec<Vec<usize>>,
+    num_workers: usize,
+) -> Vec<Vec<(usize, Vec<usize>)>> {
+    let w = num_workers.max(1);
+    let mut per_worker: Vec<Vec<(usize, Vec<usize>)>> = vec![Vec::new(); w];
+    for (id, idxs) in batches.into_iter().enumerate() {
+        per_worker[id % w].push((id, idxs));
+    }
+    per_worker
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_order() {
+        assert_eq!(Sampler::Sequential.order(5, 0), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn random_is_permutation_and_epoch_dependent() {
+        let s = Sampler::Random { seed: 1 };
+        let a = s.order(100, 0);
+        let b = s.order(100, 0);
+        let c = s.order(100, 1);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batching_with_remainder() {
+        let order: Vec<usize> = (0..10).collect();
+        let b = batches(&order, 4, false);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[2], vec![8, 9]);
+        let b = batches(&order, 4, true);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn exact_multiple_keeps_all() {
+        let order: Vec<usize> = (0..8).collect();
+        assert_eq!(batches(&order, 4, true).len(), 2);
+    }
+
+    #[test]
+    fn round_robin_covers_all_batches() {
+        let b = batches(&(0..20).collect::<Vec<_>>(), 4, false);
+        let assigned = assign_round_robin(b, 3);
+        assert_eq!(assigned.len(), 3);
+        let mut ids: Vec<usize> = assigned
+            .iter()
+            .flat_map(|v| v.iter().map(|(id, _)| *id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        // worker 0 gets 0, 3; worker 1 gets 1, 4; worker 2 gets 2
+        assert_eq!(assigned[0].iter().map(|(i, _)| *i).collect::<Vec<_>>(), vec![0, 3]);
+    }
+}

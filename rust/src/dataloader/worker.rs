@@ -1,0 +1,246 @@
+//! Worker "processes" (Fig 3/4 of the paper): each worker owns an index
+//! queue slice, fetches batches via the configured fetcher strategy,
+//! collates, and pushes finished batches into the bounded data queue.
+//!
+//! A worker is an OS thread standing in for a CPython worker process:
+//! it owns its own [`Gil`] (decode/augment serialize within the worker,
+//! never across workers) and pays the configured process start-up cost
+//! (`fork` vs `spawn`) before doing any work.
+
+use std::sync::mpsc::SyncSender;
+use std::sync::Arc;
+
+use crate::asyncrt;
+use crate::dataloader::collate::{collate, Batch};
+use crate::dataloader::fetch::{
+    fetch_async, fetch_threaded, fetch_vanilla, FetchCtx, ThreadPool,
+};
+use crate::dataloader::{DataloaderConfig, FetchImpl};
+use crate::dataset::Dataset;
+use crate::gil::Gil;
+use crate::telemetry::{names, Recorder};
+
+/// Spawn one worker thread over its assigned (batch_id, indices) list.
+/// `spawn_delay` is paid *inside* the thread before any fetching (the
+/// interpreter start-up of a `spawn`-method process, or ~0 for `fork`).
+pub fn spawn_worker(
+    worker_id: u32,
+    dataset: Arc<dyn Dataset>,
+    recorder: Arc<Recorder>,
+    cfg: Arc<DataloaderConfig>,
+    assignments: Vec<(usize, Vec<usize>)>,
+    out: SyncSender<Batch>,
+    spawn_delay: std::time::Duration,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("dl-worker{worker_id}"))
+        .spawn(move || {
+            let t0 = recorder.now();
+            if !spawn_delay.is_zero() {
+                std::thread::sleep(spawn_delay);
+            }
+            recorder.record(names::WORKER_SPAWN, worker_id, -1, t0, recorder.now());
+            run_worker(worker_id, dataset, recorder, cfg, assignments, out);
+        })
+        .expect("spawn dataloader worker")
+}
+
+fn run_worker(
+    worker_id: u32,
+    dataset: Arc<dyn Dataset>,
+    recorder: Arc<Recorder>,
+    cfg: Arc<DataloaderConfig>,
+    assignments: Vec<(usize, Vec<usize>)>,
+    out: SyncSender<Batch>,
+) {
+    let gil = Gil::new(cfg.runtime, cfg.python_tax);
+    let ctx = Arc::new(FetchCtx {
+        worker_id,
+        dataset,
+        gil: gil.clone(),
+        recorder: recorder.clone(),
+    });
+
+    match cfg.fetch_impl {
+        FetchImpl::Vanilla => {
+            for (batch_id, indices) in assignments {
+                let t0 = recorder.now();
+                let samples = match fetch_vanilla(&ctx, batch_id, &indices) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        log::error!("worker {worker_id} batch {batch_id}: {e}");
+                        continue;
+                    }
+                };
+                let batch = gil.cpu(|| collate(batch_id, samples));
+                recorder.record(
+                    names::BATCH_INFLIGHT,
+                    worker_id,
+                    batch_id as i64,
+                    t0,
+                    recorder.now(),
+                );
+                if out.send(batch).is_err() {
+                    return; // consumer gone
+                }
+            }
+        }
+        FetchImpl::Threaded => {
+            let pool = ThreadPool::new(
+                cfg.num_fetch_workers,
+                &format!("w{worker_id}"),
+            );
+            // batch disassembly: number of batches pulled per wave
+            let group = if cfg.batch_pool > 0 {
+                (cfg.batch_pool / cfg.batch_size.max(1)).max(1)
+            } else {
+                1
+            };
+            for chunk in assignments.chunks(group) {
+                let t0 = recorder.now();
+                let fetched = match fetch_threaded(&ctx, &pool, chunk) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        log::error!("worker {worker_id}: {e}");
+                        continue;
+                    }
+                };
+                for (batch_id, samples) in fetched {
+                    let batch = gil.cpu(|| collate(batch_id, samples));
+                    recorder.record(
+                        names::BATCH_INFLIGHT,
+                        worker_id,
+                        batch_id as i64,
+                        t0,
+                        recorder.now(),
+                    );
+                    if out.send(batch).is_err() {
+                        return;
+                    }
+                }
+            }
+        }
+        FetchImpl::Asyncio => {
+            // single-threaded event loop: the asyncio worker model
+            let rt = asyncrt::Runtime::new(1);
+            let sem = asyncrt::Semaphore::new(cfg.num_fetch_workers.max(1));
+            for (batch_id, indices) in assignments {
+                let t0 = recorder.now();
+                let samples = match fetch_async(&ctx, &rt, &sem, batch_id, &indices) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        log::error!("worker {worker_id} batch {batch_id}: {e}");
+                        continue;
+                    }
+                };
+                let batch = gil.cpu(|| collate(batch_id, samples));
+                recorder.record(
+                    names::BATCH_INFLIGHT,
+                    worker_id,
+                    batch_id as i64,
+                    t0,
+                    recorder.now(),
+                );
+                if out.send(batch).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_corpus, CorpusSpec};
+    use crate::data::AugmentConfig;
+    use crate::dataset::ImageFolderDataset;
+    use crate::storage::{MemStore, ObjectStore};
+    use std::sync::mpsc;
+
+    fn ds(items: usize) -> Arc<dyn Dataset> {
+        let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+        generate_corpus(&mem, &CorpusSpec::tiny(items)).unwrap();
+        Arc::new(ImageFolderDataset::new(
+            mem,
+            AugmentConfig { crop: 16, ..Default::default() },
+        ))
+    }
+
+    fn run(cfg: DataloaderConfig, assignments: Vec<(usize, Vec<usize>)>) -> Vec<Batch> {
+        let (tx, rx) = mpsc::sync_channel(64);
+        let h = spawn_worker(
+            0,
+            ds(16),
+            Recorder::new(),
+            Arc::new(cfg),
+            assignments,
+            tx,
+            std::time::Duration::ZERO,
+        );
+        let got: Vec<Batch> = rx.iter().collect();
+        h.join().unwrap();
+        got
+    }
+
+    #[test]
+    fn vanilla_worker_produces_batches() {
+        let cfg = DataloaderConfig { batch_size: 4, ..Default::default() };
+        let got = run(cfg, vec![(0, vec![0, 1, 2, 3]), (1, vec![4, 5, 6, 7])]);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].indices, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn threaded_worker_with_batch_pool() {
+        let cfg = DataloaderConfig {
+            batch_size: 4,
+            fetch_impl: FetchImpl::Threaded,
+            num_fetch_workers: 4,
+            batch_pool: 8, // 2 batches per wave
+            ..Default::default()
+        };
+        let got = run(
+            cfg,
+            vec![
+                (0, vec![0, 1, 2, 3]),
+                (1, vec![4, 5, 6, 7]),
+                (2, vec![8, 9, 10, 11]),
+            ],
+        );
+        assert_eq!(got.len(), 3);
+        for (i, b) in got.iter().enumerate() {
+            assert_eq!(b.id, i);
+            assert_eq!(b.len(), 4);
+        }
+    }
+
+    #[test]
+    fn asyncio_worker_produces_ordered_batches() {
+        let cfg = DataloaderConfig {
+            batch_size: 4,
+            fetch_impl: FetchImpl::Asyncio,
+            num_fetch_workers: 8,
+            ..Default::default()
+        };
+        let got = run(cfg, vec![(0, vec![3, 1, 2, 0])]);
+        assert_eq!(got[0].indices, vec![3, 1, 2, 0]);
+    }
+
+    #[test]
+    fn worker_exits_when_consumer_drops() {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let h = spawn_worker(
+            0,
+            ds(16),
+            Recorder::new(),
+            Arc::new(DataloaderConfig { batch_size: 2, ..Default::default() }),
+            (0..8).map(|i| (i, vec![i, i + 1])).collect(),
+            tx,
+            std::time::Duration::ZERO,
+        );
+        let _first = rx.recv().unwrap();
+        drop(rx);
+        h.join().unwrap(); // must not hang
+    }
+}

@@ -1,0 +1,228 @@
+//! Map-style `Dataset` — the bottom layer of the paper's pipeline
+//! (Fig 1): `__getitem__(index)` loads one object from storage, decodes
+//! it, and applies the augmentation transform.
+//!
+//! The GIL of the *calling worker process* is passed into `get_item`
+//! because in CPython the decode/augment CPU work executes under the
+//! worker's interpreter lock while storage I/O releases it — that split
+//! is exactly what the fetcher-parallelism results hinge on.
+
+pub mod pool;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::{Augment, AugmentConfig, SimgImage, U8Tensor};
+use crate::gil::Gil;
+use crate::storage::{BoxFut, ObjectStore};
+use crate::util::rng::Rng;
+
+/// One loaded training item.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub index: usize,
+    pub label: u16,
+    /// augmented u8 HWC crop (normalize happens on-device, L1 kernel)
+    pub crop: U8Tensor,
+    /// size of the stored object (throughput accounting uses this)
+    pub raw_bytes: usize,
+    /// storage fetch time (s)
+    pub fetch_time: f64,
+    /// decode+augment CPU time (s), including GIL wait
+    pub decode_time: f64,
+}
+
+/// Map-style dataset interface.
+pub trait Dataset: Send + Sync {
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `__getitem__`: blocking fetch + decode + augment.
+    fn get_item(&self, index: usize, gil: &Gil) -> Result<Sample>;
+
+    /// Async variant used by the asyncio fetcher (storage wait is
+    /// non-blocking; CPU work still blocks the loop, as in CPython).
+    fn get_item_async<'a>(&'a self, index: usize, gil: &'a Gil) -> BoxFut<'a, Result<Sample>>;
+
+    /// Set the augmentation epoch (torch reseeds per epoch).
+    fn set_epoch(&self, epoch: usize);
+
+    /// Output crop side (informs collate shapes).
+    fn crop(&self) -> usize;
+}
+
+/// Dataset over SIMG objects in any [`ObjectStore`] (the ImageNet-folder
+/// analogue).
+pub struct ImageFolderDataset {
+    store: Arc<dyn ObjectStore>,
+    keys: Vec<String>,
+    augment: Augment,
+    epoch: AtomicUsize,
+}
+
+impl ImageFolderDataset {
+    pub fn new(store: Arc<dyn ObjectStore>, augment_cfg: AugmentConfig) -> Self {
+        let keys = store.keys();
+        ImageFolderDataset {
+            store,
+            keys,
+            augment: Augment::new(augment_cfg),
+            epoch: AtomicUsize::new(0),
+        }
+    }
+
+    /// Restrict to the first `n` keys (the paper's `dataset_limit`).
+    pub fn with_limit(mut self, n: usize) -> Self {
+        self.keys.truncate(n);
+        self
+    }
+
+    pub fn store(&self) -> &Arc<dyn ObjectStore> {
+        &self.store
+    }
+
+    pub fn keys(&self) -> &[String] {
+        &self.keys
+    }
+
+    /// decode + augment under the caller's GIL (CPU-bound section).
+    fn process(&self, index: usize, raw: &[u8], gil: &Gil) -> Result<(U8Tensor, u16)> {
+        let epoch = self.epoch.load(Ordering::Relaxed);
+        gil.cpu(|| {
+            let img = SimgImage::decode(raw)?;
+            let crop = self.augment.apply_u8(&img, epoch, index);
+            Ok((crop, img.label))
+        })
+    }
+}
+
+impl Dataset for ImageFolderDataset {
+    fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    fn get_item(&self, index: usize, gil: &Gil) -> Result<Sample> {
+        let key = &self.keys[index];
+        let t0 = Instant::now();
+        let raw = gil.io(|| self.store.get(key))?;
+        let fetch_time = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let (crop, label) = self.process(index, &raw, gil)?;
+        Ok(Sample {
+            index,
+            label,
+            crop,
+            raw_bytes: raw.len(),
+            fetch_time,
+            decode_time: t1.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn get_item_async<'a>(&'a self, index: usize, gil: &'a Gil) -> BoxFut<'a, Result<Sample>> {
+        Box::pin(async move {
+            let key = &self.keys[index];
+            let t0 = Instant::now();
+            let raw = self.store.get_async(key).await?;
+            let fetch_time = t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            let (crop, label) = self.process(index, &raw, gil)?;
+            Ok(Sample {
+                index,
+                label,
+                crop,
+                raw_bytes: raw.len(),
+                fetch_time,
+                decode_time: t1.elapsed().as_secs_f64(),
+            })
+        })
+    }
+
+    fn set_epoch(&self, epoch: usize) {
+        self.epoch.store(epoch, Ordering::Relaxed);
+    }
+
+    fn crop(&self) -> usize {
+        self.augment.cfg.crop
+    }
+}
+
+/// `get_random_item` from the paper's §3.2: draw a random index and load
+/// it (used by the Dataset-pool experiment).
+pub fn get_random_item(
+    ds: &dyn Dataset,
+    rng: &mut Rng,
+    gil: &Gil,
+) -> Result<Sample> {
+    let idx = rng.below(ds.len());
+    ds.get_item(idx, gil)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_corpus, CorpusSpec};
+    use crate::storage::MemStore;
+
+    pub(crate) fn tiny_dataset(items: usize, crop: usize) -> ImageFolderDataset {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+        generate_corpus(&store, &CorpusSpec::tiny(items)).unwrap();
+        ImageFolderDataset::new(
+            store,
+            AugmentConfig { crop, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn get_item_shapes_and_metadata() {
+        let ds = tiny_dataset(8, 32);
+        let gil = Gil::native();
+        let s = ds.get_item(3, &gil).unwrap();
+        assert_eq!(s.index, 3);
+        assert_eq!(s.crop.shape, vec![32, 32, 3]);
+        assert!(s.raw_bytes > 0);
+        assert!(s.fetch_time >= 0.0 && s.decode_time > 0.0);
+    }
+
+    #[test]
+    fn async_and_sync_agree() {
+        let ds = tiny_dataset(4, 16);
+        let gil = Gil::native();
+        let a = ds.get_item(1, &gil).unwrap();
+        let b = crate::asyncrt::block_on(ds.get_item_async(1, &gil)).unwrap();
+        assert_eq!(a.crop, b.crop);
+        assert_eq!(a.label, b.label);
+    }
+
+    #[test]
+    fn epoch_changes_augmentation() {
+        let ds = tiny_dataset(4, 16);
+        let gil = Gil::native();
+        let a = ds.get_item(0, &gil).unwrap();
+        ds.set_epoch(1);
+        let b = ds.get_item(0, &gil).unwrap();
+        assert_ne!(a.crop.data, b.crop.data);
+    }
+
+    #[test]
+    fn limit_truncates() {
+        let ds = tiny_dataset(10, 16).with_limit(4);
+        assert_eq!(ds.len(), 4);
+    }
+
+    #[test]
+    fn random_item_in_range() {
+        let ds = tiny_dataset(5, 16);
+        let gil = Gil::native();
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            let s = get_random_item(&ds, &mut rng, &gil).unwrap();
+            assert!(s.index < 5);
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! The paper's §3.2 Dataset-level concurrency experiment (Fig 12):
+//! bypass the Dataloader entirely, instantiate the bare Dataset, and
+//! load random items through a `multiprocessing.Pool` of increasing
+//! size. Each pool member is a separate *process* (own GIL).
+//!
+//! Reports end-to-end throughput (Mbit/s over the whole experiment) and
+//! the median per-item request time — the two curves of Fig 12.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::dataset::Dataset;
+use crate::gil::{Gil, Runtime};
+use crate::util::rng::Rng;
+
+/// Result of one pool-size point.
+#[derive(Debug, Clone)]
+pub struct PoolResult {
+    pub pool_size: usize,
+    pub items: usize,
+    pub bytes: u64,
+    pub wall_secs: f64,
+    pub throughput_mbit_s: f64,
+    pub median_request_s: f64,
+    pub request_times: Vec<f64>,
+}
+
+/// Load `total_items` random items through a pool of `pool_size`
+/// simulated processes (threads with independent GILs).
+pub fn run_pool(
+    ds: Arc<dyn Dataset>,
+    pool_size: usize,
+    total_items: usize,
+    runtime: Runtime,
+    python_tax: f64,
+    seed: u64,
+) -> PoolResult {
+    let remaining = AtomicUsize::new(total_items);
+    let bytes = AtomicUsize::new(0);
+    let times: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(total_items));
+    let t0 = Instant::now();
+
+    std::thread::scope(|s| {
+        for p in 0..pool_size {
+            let ds = ds.clone();
+            let remaining = &remaining;
+            let bytes = &bytes;
+            let times = &times;
+            // one GIL per pool member: multiprocessing semantics
+            let gil = Gil::new(runtime, python_tax);
+            let mut rng = Rng::new(seed ^ (p as u64) << 17);
+            s.spawn(move || loop {
+                if remaining
+                    .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                        v.checked_sub(1)
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+                let t = Instant::now();
+                let idx = rng.below(ds.len());
+                match ds.get_item(idx, &gil) {
+                    Ok(sample) => {
+                        bytes.fetch_add(sample.raw_bytes, Ordering::Relaxed);
+                        times.lock().unwrap().push(t.elapsed().as_secs_f64());
+                    }
+                    Err(e) => {
+                        log::warn!("pool get_item failed: {e}");
+                    }
+                }
+            });
+        }
+    });
+
+    let wall = t0.elapsed().as_secs_f64();
+    let bytes = bytes.load(Ordering::Relaxed) as u64;
+    let request_times = times.into_inner().unwrap();
+    PoolResult {
+        pool_size,
+        items: request_times.len(),
+        bytes,
+        wall_secs: wall,
+        throughput_mbit_s: crate::util::fmt::mbit_s(bytes, wall),
+        median_request_s: crate::util::stats::median(&request_times),
+        request_times,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_corpus, CorpusSpec};
+    use crate::dataset::ImageFolderDataset;
+    use crate::data::AugmentConfig;
+    use crate::storage::{MemStore, ObjectStore, RemoteProfile, SimRemoteStore};
+
+    fn dataset_on(profile: Option<RemoteProfile>) -> Arc<dyn Dataset> {
+        let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+        generate_corpus(&mem, &CorpusSpec::tiny(16)).unwrap();
+        let store: Arc<dyn ObjectStore> = match profile {
+            Some(p) => SimRemoteStore::new(mem, p, 3),
+            None => mem,
+        };
+        Arc::new(ImageFolderDataset::new(
+            store,
+            AugmentConfig { crop: 16, ..Default::default() },
+        ))
+    }
+
+    #[test]
+    fn pool_loads_exact_count() {
+        let ds = dataset_on(None);
+        let r = run_pool(ds, 4, 40, Runtime::Native, 1.0, 1);
+        assert_eq!(r.items, 40);
+        assert!(r.bytes > 0);
+        assert!(r.throughput_mbit_s > 0.0);
+    }
+
+    #[test]
+    fn concurrency_beats_serial_on_latency() {
+        // with 30ms-median latency, pool of 8 must beat pool of 1 clearly
+        let profile = RemoteProfile::s3().scaled(0.25);
+        let ds = dataset_on(Some(profile.clone()));
+        let r1 = run_pool(ds.clone(), 1, 12, Runtime::Native, 1.0, 2);
+        let ds2 = dataset_on(Some(profile));
+        let r8 = run_pool(ds2, 8, 12, Runtime::Native, 1.0, 2);
+        assert!(
+            r8.wall_secs < r1.wall_secs * 0.6,
+            "pool8 {} vs pool1 {}",
+            r8.wall_secs,
+            r1.wall_secs
+        );
+    }
+}

@@ -1,0 +1,206 @@
+//! CPython GIL simulation.
+//!
+//! The paper's §A.4 ("The dreaded GIL") shows that Python's global
+//! interpreter lock is the final ceiling on loader throughput: a Java
+//! client reaches ~700 Mbit/s from S3 where Python's
+//! threading+multiprocessing mix peaks at ~250 Mbit/s.
+//!
+//! We model the interpreter faithfully at the granularity that matters:
+//!
+//! * each simulated worker *process* owns one [`Gil`];
+//! * CPU-bound sections (image decode, augmentation) run while holding
+//!   the lock — threads within one process serialize exactly like
+//!   CPython bytecode;
+//! * I/O sections (socket reads, disk reads, simulated latency sleeps)
+//!   run with the lock released, exactly like CPython's blocking I/O;
+//! * a configurable `python_tax` multiplies CPU section duration to
+//!   account for interpreter overhead vs native code (§A.4's Java gap);
+//! * [`Runtime::Native`] is the no-GIL comparator (rust/Java semantics).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which concurrency semantics a simulated component runs under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Runtime {
+    /// CPython: CPU sections hold the owning process's GIL and pay
+    /// `python_tax`.
+    Python,
+    /// Native (rust/Java/C++): free threading, no tax.
+    Native,
+}
+
+impl Runtime {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Runtime::Python => "python",
+            Runtime::Native => "native",
+        }
+    }
+}
+
+#[derive(Default)]
+struct GilStats {
+    wait_ns: AtomicU64,
+    hold_ns: AtomicU64,
+    acquisitions: AtomicU64,
+}
+
+/// One interpreter lock (one per simulated worker process).
+pub struct Gil {
+    runtime: Runtime,
+    lock: Mutex<()>,
+    /// CPU-section duration multiplier under Python semantics.
+    python_tax: f64,
+    stats: GilStats,
+}
+
+impl Gil {
+    pub fn new(runtime: Runtime, python_tax: f64) -> Arc<Gil> {
+        Arc::new(Gil {
+            runtime,
+            lock: Mutex::new(()),
+            python_tax: python_tax.max(1.0),
+            stats: GilStats::default(),
+        })
+    }
+
+    /// Native GIL-less runtime (rust semantics).
+    pub fn native() -> Arc<Gil> {
+        Gil::new(Runtime::Native, 1.0)
+    }
+
+    /// Default CPython model (tax from DESIGN.md §4).
+    pub fn python() -> Arc<Gil> {
+        Gil::new(Runtime::Python, 4.0)
+    }
+
+    pub fn runtime(&self) -> Runtime {
+        self.runtime
+    }
+
+    /// Run a CPU-bound section. Under [`Runtime::Python`] this holds the
+    /// GIL for the (taxed) duration of `f`; under native it just runs.
+    pub fn cpu<T>(&self, f: impl FnOnce() -> T) -> T {
+        match self.runtime {
+            Runtime::Native => f(),
+            Runtime::Python => {
+                let wait_start = Instant::now();
+                let guard = self.lock.lock().unwrap();
+                let waited = wait_start.elapsed();
+                let hold_start = Instant::now();
+                let out = f();
+                let work = hold_start.elapsed();
+                // interpreter overhead: stretch the section to tax × work
+                let extra = work.mul_f64(self.python_tax - 1.0);
+                spin_for(extra);
+                drop(guard);
+                self.stats
+                    .wait_ns
+                    .fetch_add(waited.as_nanos() as u64, Ordering::Relaxed);
+                self.stats.hold_ns.fetch_add(
+                    (work + extra).as_nanos() as u64,
+                    Ordering::Relaxed,
+                );
+                self.stats.acquisitions.fetch_add(1, Ordering::Relaxed);
+                out
+            }
+        }
+    }
+
+    /// Run an I/O-bound (lock-released) section — CPython releases the
+    /// GIL around blocking syscalls.
+    pub fn io<T>(&self, f: impl FnOnce() -> T) -> T {
+        f()
+    }
+
+    /// (total wait, total hold, acquisitions) since creation.
+    pub fn stats(&self) -> (Duration, Duration, u64) {
+        (
+            Duration::from_nanos(self.stats.wait_ns.load(Ordering::Relaxed)),
+            Duration::from_nanos(self.stats.hold_ns.load(Ordering::Relaxed)),
+            self.stats.acquisitions.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Busy-wait (the GIL holder burns the core, it does not sleep).
+fn spin_for(d: Duration) {
+    if d.is_zero() {
+        return;
+    }
+    let end = Instant::now() + d;
+    while Instant::now() < end {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy(ms: u64) {
+        spin_for(Duration::from_millis(ms));
+    }
+
+    #[test]
+    fn native_runs_in_parallel() {
+        let gil = Gil::native();
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let g = gil.clone();
+                s.spawn(move || g.cpu(|| busy(30)));
+            }
+        });
+        // 4×30 ms of CPU work across ≥2 cores must beat full serialization
+        assert!(t0.elapsed() < Duration::from_millis(110), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn python_serializes_cpu_sections() {
+        let gil = Gil::new(Runtime::Python, 1.0);
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let g = gil.clone();
+                s.spawn(move || g.cpu(|| busy(20)));
+            }
+        });
+        // 4×20 ms serialized ⇒ ≥ ~80 ms
+        assert!(t0.elapsed() >= Duration::from_millis(75), "{:?}", t0.elapsed());
+        let (_, hold, acq) = gil.stats();
+        assert_eq!(acq, 4);
+        assert!(hold >= Duration::from_millis(75));
+    }
+
+    #[test]
+    fn python_tax_stretches_sections() {
+        let gil = Gil::new(Runtime::Python, 3.0);
+        let t0 = Instant::now();
+        gil.cpu(|| busy(10));
+        assert!(t0.elapsed() >= Duration::from_millis(28), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn io_sections_do_not_serialize() {
+        let gil = Gil::new(Runtime::Python, 1.0);
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let g = gil.clone();
+                s.spawn(move || {
+                    g.io(|| std::thread::sleep(Duration::from_millis(40)))
+                });
+            }
+        });
+        assert!(t0.elapsed() < Duration::from_millis(120), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn cpu_returns_value() {
+        assert_eq!(Gil::python().cpu(|| 5), 5);
+        assert_eq!(Gil::native().cpu(|| 5), 5);
+    }
+}

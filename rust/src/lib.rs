@@ -1,0 +1,46 @@
+//! `cdl` — ConcurrentDataloader: a Rust + JAX + Pallas reproduction of
+//! *"Profiling and Improving the PyTorch Dataloader for high-latency
+//! Storage: A Technical Report"* (Svogor et al., IARAI 2022).
+//!
+//! The crate re-implements the paper's full data-loading stack as a
+//! production Rust library (Layer 3), drives an AOT-compiled JAX/Pallas
+//! model through PJRT (Layers 2/1), and ships the complete benchmark
+//! harness that regenerates every table and figure of the paper's
+//! evaluation on simulated storage substrates.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — RNG, stats, JSON, tables, CLI, property-test harness.
+//! * [`asyncrt`] — in-tree mini async runtime (the "asyncio" analogue).
+//! * [`simnet`] — latency models, bandwidth token buckets, conn pools.
+//! * [`gil`] — CPython GIL simulation (per-worker-process lock).
+//! * [`storage`] — object stores: mem/dir/simulated-remote/Varnish cache.
+//! * [`data`] — SIMG codec, synthetic ImageNet generator, pixel ops.
+//! * [`dataset`] — map-style `Dataset`, transforms, pool experiment.
+//! * [`dataloader`] — the paper's contribution: vanilla / threaded /
+//!   asyncio fetchers, lazy init, batch disassembly, backpressure.
+//! * [`device`] — simulated training device (XLA-backed or cost model).
+//! * [`runtime`] — PJRT artifact loading and execution.
+//! * [`trainer`] — Torch-like and Lightning-like training harnesses.
+//! * [`shards`] — tar shards: WebDataset / FastAI analogues.
+//! * [`telemetry`] — span recorder, GPU-util aggregation, exports.
+//! * [`bench`] — experiment harness for every paper table/figure.
+
+pub mod asyncrt;
+pub mod bench;
+pub mod config;
+pub mod data;
+pub mod dataloader;
+pub mod dataset;
+pub mod device;
+pub mod gil;
+pub mod runtime;
+pub mod shards;
+pub mod simnet;
+pub mod storage;
+pub mod telemetry;
+pub mod trainer;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

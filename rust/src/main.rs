@@ -1,0 +1,260 @@
+//! `cdl` — ConcurrentDataloader CLI.
+//!
+//! ```text
+//! cdl gen-data   --root data/imagenet-syn --items 4096 [--mean-kb 115]
+//! cdl run        [--config file.cfg] [--set k=v,k=v]
+//! cdl reproduce  <t3|f2|f5|...|all> [--scale quick|paper|<f>]
+//! cdl train      --artifacts artifacts [--steps 300] [--batch 16]
+//! cdl list
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use cdl::bench::{self, Scale};
+use cdl::config::ExperimentConfig;
+use cdl::data::synth::{generate_corpus, CorpusSpec};
+use cdl::data::AugmentConfig;
+use cdl::dataloader::{Dataloader, DataloaderConfig, FetchImpl};
+use cdl::dataset::{Dataset, ImageFolderDataset};
+use cdl::device::Device;
+use cdl::runtime::XlaEngine;
+use cdl::storage::{DirStore, ObjectStore};
+use cdl::telemetry::Recorder;
+use cdl::trainer;
+use cdl::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "gen-data" => cmd_gen_data(rest),
+        "run" => cmd_run(rest),
+        "reproduce" => cmd_reproduce(rest),
+        "train" => cmd_train(rest),
+        "list" => {
+            println!("experiments: {:?}", bench::ALL_EXPERIMENTS);
+            Ok(())
+        }
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other}\n\n{}", usage()),
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: cdl <gen-data|run|reproduce|train|list> [options]\n\
+     run `cdl <cmd> --help` for per-command options"
+}
+
+fn print_usage() {
+    println!("{}", usage());
+}
+
+fn cmd_gen_data(argv: &[String]) -> Result<()> {
+    let p = Args::new("cdl gen-data", "generate a synthetic ImageNet-like corpus")
+        .opt("root", "data/imagenet-syn", "output directory")
+        .opt("items", "4096", "number of images")
+        .opt("classes", "512", "number of classes")
+        .opt("mean-kb", "115", "mean object size (kB)")
+        .opt("seed", "7", "corpus seed")
+        .parse(argv)?;
+    let store: Arc<dyn ObjectStore> = Arc::new(DirStore::open(p.get("root"))?);
+    let spec = CorpusSpec {
+        items: p.usize("items")?,
+        classes: p.usize("classes")?,
+        mean_bytes: p.usize("mean-kb")? * 1024,
+        sigma: 0.35,
+        seed: p.u64("seed")?,
+    };
+    let t0 = std::time::Instant::now();
+    let (keys, bytes) = generate_corpus(&store, &spec)?;
+    println!(
+        "wrote {} objects, {} to {} in {:.1}s",
+        keys.len(),
+        cdl::util::fmt_bytes(bytes),
+        p.get("root"),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_run(argv: &[String]) -> Result<()> {
+    let p = Args::new("cdl run", "run one training experiment from a config")
+        .opt("config", "", "config file (key = value)")
+        .opt("set", "", "comma-separated overrides k=v,k=v")
+        .parse(argv)?;
+    let mut cfg = if p.get("config").is_empty() {
+        ExperimentConfig::default()
+    } else {
+        ExperimentConfig::from_file(p.get("config"))?
+    };
+    if !p.get("set").is_empty() {
+        let mut kv = BTreeMap::new();
+        for pair in p.get("set").split(',') {
+            let Some((k, v)) = pair.split_once('=') else {
+                bail!("bad --set entry {pair}");
+            };
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        cfg.apply_overrides(&kv)?;
+    }
+
+    let spec = cdl::bench::rig::RigSpec {
+        storage: Box::leak(cfg.storage.clone().into_boxed_str()),
+        latency_scale: cfg.latency_scale,
+        cache_bytes: cfg.cache_bytes,
+        items: cfg.items,
+        mean_kb: cfg.mean_kb,
+        crop: cfg.crop,
+        batch_size: cfg.loader.batch_size,
+        num_workers: cfg.loader.num_workers,
+        prefetch_factor: cfg.loader.prefetch_factor,
+        fetch_impl: cfg.loader.fetch_impl,
+        num_fetch_workers: cfg.loader.num_fetch_workers,
+        batch_pool: cfg.loader.batch_pool,
+        lazy_init: cfg.loader.lazy_init,
+        runtime: cfg.loader.runtime,
+        trainer: cfg.trainer.kind,
+        epochs: cfg.trainer.epochs,
+        seed: cfg.seed,
+    };
+    let (report, _rig) = cdl::bench::rig::run(&spec)?;
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_reproduce(argv: &[String]) -> Result<()> {
+    let p = Args::new("cdl reproduce", "regenerate a paper table/figure")
+        .opt("scale", "quick", "quick | paper | <items multiplier>")
+        .parse(argv)?;
+    let Some(exp) = p.positional.first() else {
+        bail!("which experiment? one of {:?} or 'all'", bench::ALL_EXPERIMENTS);
+    };
+    let scale = match p.get("scale") {
+        "quick" => Scale::quick(),
+        "paper" => Scale::paper(),
+        s => Scale { items: s.parse()?, ..Scale::quick() },
+    };
+    bench::run_experiment(exp, scale)
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let p = Args::new(
+        "cdl train",
+        "end-to-end training of the AOT-compiled model via PJRT",
+    )
+    .opt("artifacts", "artifacts", "artifacts directory")
+    .opt("steps", "100", "training steps")
+    .opt("batch", "16", "batch size (must match an artifact variant)")
+    .opt("image", "64", "image side (must match an artifact variant)")
+    .opt("items", "256", "synthetic corpus size")
+    .opt("storage", "scratch", "storage profile")
+    .opt("workers", "4", "loader workers")
+    .opt("fetch", "threaded", "vanilla|threaded|asyncio")
+    .parse(argv)?;
+
+    let batch = p.usize("batch")?;
+    let image = p.usize("image")?;
+    let engine = Arc::new(XlaEngine::start(p.get("artifacts"))?);
+    let variant = engine.manifest().train_variant(batch, image)?;
+    println!(
+        "model: {} params, artifact {variant}",
+        engine.manifest().num_params()
+    );
+    engine.init_params()?;
+
+    let recorder = Recorder::new();
+    let spec = cdl::bench::rig::RigSpec {
+        storage: Box::leak(p.get("storage").to_string().into_boxed_str()),
+        latency_scale: 0.25,
+        cache_bytes: 0,
+        items: p.usize("items")?,
+        mean_kb: 48,
+        crop: image,
+        batch_size: batch,
+        num_workers: p.usize("workers")?,
+        prefetch_factor: 2,
+        fetch_impl: match p.get("fetch") {
+            "vanilla" => FetchImpl::Vanilla,
+            "asyncio" => FetchImpl::Asyncio,
+            _ => FetchImpl::Threaded,
+        },
+        num_fetch_workers: 16,
+        batch_pool: 0,
+        lazy_init: true,
+        runtime: cdl::gil::Runtime::Native,
+        trainer: trainer::TrainerKind::Torch,
+        epochs: 1,
+        seed: 7,
+    };
+    let (store, _, _, _) = cdl::bench::rig::build_store(&spec)?;
+    let ds: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
+        store,
+        AugmentConfig { crop: image, ..Default::default() },
+    ));
+    let dl = Dataloader::new(
+        ds,
+        DataloaderConfig {
+            batch_size: batch,
+            num_workers: spec.num_workers,
+            fetch_impl: spec.fetch_impl,
+            drop_last: true,
+            runtime: cdl::gil::Runtime::Native,
+            spawn_cost_override: Some(std::time::Duration::from_millis(2)),
+            ..Default::default()
+        },
+        recorder.clone(),
+    );
+    let device = Device::xla(engine, &variant, recorder.clone());
+
+    let steps = p.usize("steps")?;
+    let t0 = std::time::Instant::now();
+    let mut done = 0usize;
+    let mut epoch = 0usize;
+    let mut losses: Vec<f32> = Vec::new();
+    'outer: loop {
+        for b in dl.epoch(epoch) {
+            let db = device.to_device(b);
+            let loss = device.train_batch(&db)?;
+            losses.push(loss);
+            done += 1;
+            if done % 10 == 0 {
+                println!("step {done:>5}  loss {loss:.4}");
+            }
+            if done >= steps {
+                break 'outer;
+            }
+        }
+        epoch += 1;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "trained {done} steps ({} images) in {secs:.1}s — {:.1} img/s; \
+         loss {:.3} → {:.3}",
+        done * batch,
+        (done * batch) as f64 / secs,
+        losses.first().copied().unwrap_or(f32::NAN),
+        losses.last().copied().unwrap_or(f32::NAN),
+    );
+    Ok(())
+}

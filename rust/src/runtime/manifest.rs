@@ -1,0 +1,184 @@
+//! `artifacts/manifest.json` parsing — the contract between `aot.py`
+//! (which writes it) and the rust runtime (which loads artifacts and
+//! asserts smoke numbers from it).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    doc: Json,
+}
+
+/// One model parameter (name + shape, in flattening order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Train-step smoke numbers (expected losses on the example batch).
+#[derive(Debug, Clone)]
+pub struct Smoke {
+    pub variant: String,
+    pub batch: usize,
+    pub image: usize,
+    pub losses: Vec<f64>,
+    pub rtol: f64,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {path:?}"))?;
+        Ok(Manifest { doc: json::parse(&text)? })
+    }
+
+    pub fn from_str(text: &str) -> Result<Manifest> {
+        Ok(Manifest { doc: json::parse(text)? })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.doc
+            .at(&["model", "num_params"])
+            .and_then(Json::as_usize)
+            .unwrap_or(0)
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.doc
+            .at(&["model", "num_classes"])
+            .and_then(Json::as_usize)
+            .unwrap_or(0)
+    }
+
+    /// Number of parameter tensors.
+    pub fn param_count(&self) -> usize {
+        self.param_specs().map(|v| v.len()).unwrap_or(0)
+    }
+
+    pub fn param_specs(&self) -> Option<Vec<ParamSpec>> {
+        let arr = self.doc.at(&["model", "params"])?.as_arr()?;
+        let mut out = Vec::with_capacity(arr.len());
+        for p in arr {
+            out.push(ParamSpec {
+                name: p.get("name")?.as_str()?.to_string(),
+                shape: p
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+            });
+        }
+        Some(out)
+    }
+
+    /// File name of an artifact by logical name.
+    pub fn artifact_file(&self, name: &str) -> Option<String> {
+        self.doc
+            .at(&["artifacts", name, "file"])
+            .and_then(Json::as_str)
+            .map(str::to_string)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.doc
+            .at(&["artifacts"])
+            .and_then(Json::as_obj)
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// (batch, image) of a train/forward variant.
+    pub fn variant_shape(&self, name: &str) -> Option<(usize, usize)> {
+        let b = self.doc.at(&["artifacts", name, "batch"])?.as_usize()?;
+        let i = self.doc.at(&["artifacts", name, "image"])?.as_usize()?;
+        Some((b, i))
+    }
+
+    /// Pick the train_step variant matching (batch, image).
+    pub fn train_variant(&self, batch: usize, image: usize) -> Result<String> {
+        let name = format!("train_step_b{batch}_i{image}");
+        self.artifact_file(&name)
+            .map(|_| name.clone())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact {name}; available: {:?}",
+                    self.artifact_names()
+                )
+            })
+    }
+
+    pub fn smoke(&self) -> Option<Smoke> {
+        let s = self.doc.get("smoke")?;
+        Some(Smoke {
+            variant: s.get("variant")?.as_str()?.to_string(),
+            batch: s.get("batch")?.as_usize()?,
+            image: s.get("image")?.as_usize()?,
+            losses: s
+                .get("losses")?
+                .as_arr()?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect(),
+            rtol: s.get("rtol").and_then(Json::as_f64).unwrap_or(1e-4),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "model": {
+            "num_params": 100,
+            "num_classes": 512,
+            "params": [
+                {"name": "stem/w", "shape": [3, 3, 3, 32]},
+                {"name": "stem/b", "shape": [32]}
+            ]
+        },
+        "artifacts": {
+            "init": {"file": "init.hlo.txt"},
+            "train_step_b8_i32": {"file": "train_step_b8_i32.hlo.txt", "batch": 8, "image": 32}
+        },
+        "smoke": {"variant": "train_step_b8_i32", "batch": 8, "image": 32,
+                  "losses": [6.2, 5.9], "rtol": 0.001}
+    }"#;
+
+    #[test]
+    fn parses_model_block() {
+        let m = Manifest::from_str(SAMPLE).unwrap();
+        assert_eq!(m.num_params(), 100);
+        assert_eq!(m.num_classes(), 512);
+        let specs = m.param_specs().unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "stem/w");
+        assert_eq!(specs[0].shape, vec![3, 3, 3, 32]);
+        assert_eq!(m.param_count(), 2);
+    }
+
+    #[test]
+    fn artifact_lookup() {
+        let m = Manifest::from_str(SAMPLE).unwrap();
+        assert_eq!(m.artifact_file("init").unwrap(), "init.hlo.txt");
+        assert!(m.artifact_file("nope").is_none());
+        assert_eq!(m.variant_shape("train_step_b8_i32").unwrap(), (8, 32));
+        assert_eq!(m.train_variant(8, 32).unwrap(), "train_step_b8_i32");
+        assert!(m.train_variant(99, 99).is_err());
+    }
+
+    #[test]
+    fn smoke_block() {
+        let m = Manifest::from_str(SAMPLE).unwrap();
+        let s = m.smoke().unwrap();
+        assert_eq!(s.losses, vec![6.2, 5.9]);
+        assert_eq!(s.rtol, 0.001);
+    }
+}

@@ -1,0 +1,466 @@
+//! PJRT runtime: load AOT HLO-text artifacts (produced by
+//! `python/compile/aot.py`) and execute them from the rust hot path.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so all XLA
+//! state lives on one dedicated **engine thread**; callers talk to it
+//! through a channel with plain byte payloads ([`XlaEngine`]). Parameters
+//! stay resident on the engine thread between steps — only the batch
+//! crosses the channel.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`), never
+//! serialized protos — see DESIGN.md and aot.py for the version gotcha.
+
+pub mod manifest;
+
+pub use manifest::Manifest;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element types crossing the engine channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    U8,
+    I32,
+    F32,
+}
+
+impl Dtype {
+    fn element_type(&self) -> xla::ElementType {
+        match self {
+            Dtype::U8 => xla::ElementType::U8,
+            Dtype::I32 => xla::ElementType::S32,
+            Dtype::F32 => xla::ElementType::F32,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::U8 => 1,
+            Dtype::I32 | Dtype::F32 => 4,
+        }
+    }
+}
+
+/// A host-side tensor argument (raw little-endian bytes).
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+    pub bytes: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn from_u8(dims: &[usize], data: Vec<u8>) -> HostTensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { dtype: Dtype::U8, dims: dims.to_vec(), bytes: data }
+    }
+
+    pub fn from_i32(dims: &[usize], data: &[i32]) -> HostTensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { dtype: Dtype::I32, dims: dims.to_vec(), bytes }
+    }
+
+    pub fn from_f32(dims: &[usize], data: &[f32]) -> HostTensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { dtype: Dtype::F32, dims: dims.to_vec(), bytes }
+    }
+
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, Dtype::F32);
+        self.bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+enum Request {
+    /// Compile an artifact (idempotent).
+    Load { name: String },
+    /// Run init.hlo.txt and hold the resulting params on-thread.
+    InitParams,
+    /// Load explicit params (testing / checkpoint restore).
+    SetParams { tensors: Vec<HostTensor> },
+    /// Get a copy of the resident params.
+    GetParams,
+    /// One train step on the resident params; returns the loss.
+    TrainStep { variant: String, images: HostTensor, labels: HostTensor },
+    /// Forward pass with resident params; returns logits.
+    Forward { variant: String, images: HostTensor },
+    /// Raw artifact execution (kernel cross-checks): returns all outputs.
+    Run { name: String, inputs: Vec<HostTensor> },
+    Shutdown,
+}
+
+enum Response {
+    Unit,
+    Loss(f32),
+    Tensors(Vec<HostTensor>),
+}
+
+struct Envelope {
+    req: Request,
+    reply: mpsc::Sender<Result<Response>>,
+}
+
+/// Handle to the engine thread.
+pub struct XlaEngine {
+    tx: Mutex<mpsc::Sender<Envelope>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    manifest: Manifest,
+}
+
+impl XlaEngine {
+    /// Start the engine over an artifacts directory (with manifest.json).
+    pub fn start(artifacts_dir: impl Into<PathBuf>) -> Result<XlaEngine> {
+        let dir: PathBuf = artifacts_dir.into();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let man = manifest.clone();
+        let handle = std::thread::Builder::new()
+            .name("xla-engine".into())
+            .spawn(move || engine_thread(dir, man, rx))
+            .expect("spawn xla engine");
+        Ok(XlaEngine { tx: Mutex::new(tx), handle: Some(handle), manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn call(&self, req: Request) -> Result<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Envelope { req, reply: rtx })
+            .map_err(|_| anyhow!("xla engine thread gone"))?;
+        rrx.recv().map_err(|_| anyhow!("xla engine dropped reply"))?
+    }
+
+    /// Pre-compile an artifact.
+    pub fn load(&self, name: &str) -> Result<()> {
+        self.call(Request::Load { name: name.to_string() }).map(|_| ())
+    }
+
+    /// Initialize resident params via init.hlo.txt.
+    pub fn init_params(&self) -> Result<()> {
+        self.call(Request::InitParams).map(|_| ())
+    }
+
+    pub fn set_params(&self, tensors: Vec<HostTensor>) -> Result<()> {
+        self.call(Request::SetParams { tensors }).map(|_| ())
+    }
+
+    pub fn get_params(&self) -> Result<Vec<HostTensor>> {
+        match self.call(Request::GetParams)? {
+            Response::Tensors(t) => Ok(t),
+            _ => bail!("unexpected response"),
+        }
+    }
+
+    /// Run one fused train step (params update in place); returns loss.
+    pub fn train_step(
+        &self,
+        variant: &str,
+        images: HostTensor,
+        labels: HostTensor,
+    ) -> Result<f32> {
+        match self.call(Request::TrainStep {
+            variant: variant.to_string(),
+            images,
+            labels,
+        })? {
+            Response::Loss(l) => Ok(l),
+            _ => bail!("unexpected response"),
+        }
+    }
+
+    /// Forward pass; returns logits as a flat f32 tensor.
+    pub fn forward(&self, variant: &str, images: HostTensor) -> Result<HostTensor> {
+        match self.call(Request::Forward { variant: variant.to_string(), images })? {
+            Response::Tensors(mut t) => {
+                t.pop().ok_or_else(|| anyhow!("no logits output"))
+            }
+            _ => bail!("unexpected response"),
+        }
+    }
+
+    /// Execute any artifact on explicit inputs (kernel cross-checks).
+    pub fn run(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        match self.call(Request::Run { name: name.to_string(), inputs })? {
+            Response::Tensors(t) => Ok(t),
+            _ => bail!("unexpected response"),
+        }
+    }
+}
+
+impl Drop for XlaEngine {
+    fn drop(&mut self) {
+        let _ = self.call(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine thread
+// ---------------------------------------------------------------------------
+
+struct Engine {
+    dir: PathBuf,
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// resident model params (as literals, fed back each step)
+    params: Vec<xla::Literal>,
+}
+
+fn engine_thread(dir: PathBuf, manifest: Manifest, rx: mpsc::Receiver<Envelope>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // fail every request with the construction error
+            while let Ok(env) = rx.recv() {
+                let _ = env.reply.send(Err(anyhow!("PJRT client failed: {e}")));
+            }
+            return;
+        }
+    };
+    let mut eng = Engine {
+        dir,
+        manifest,
+        client,
+        exes: HashMap::new(),
+        params: Vec::new(),
+    };
+    while let Ok(env) = rx.recv() {
+        if matches!(env.req, Request::Shutdown) {
+            let _ = env.reply.send(Ok(Response::Unit));
+            break;
+        }
+        let out = eng.handle(env.req);
+        let _ = env.reply.send(out);
+    }
+}
+
+impl Engine {
+    fn exe(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let file = self
+                .manifest
+                .artifact_file(name)
+                .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e}"))?;
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(&self.exes[name])
+    }
+
+    fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+        xla::Literal::create_from_shape_and_untyped_data(
+            t.dtype.element_type(),
+            &t.dims,
+            &t.bytes,
+        )
+        .map_err(|e| anyhow!("literal: {e}"))
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+        let (dtype, len) = match shape.ty() {
+            xla::ElementType::U8 => (Dtype::U8, lit.element_count()),
+            xla::ElementType::S32 => (Dtype::I32, lit.element_count() * 4),
+            xla::ElementType::F32 => (Dtype::F32, lit.element_count() * 4),
+            other => bail!("unsupported output type {other:?}"),
+        };
+        let mut bytes = vec![0u8; len];
+        match dtype {
+            Dtype::U8 => lit
+                .copy_raw_to::<u8>(&mut bytes)
+                .map_err(|e| anyhow!("copy u8: {e}"))?,
+            Dtype::I32 => {
+                let mut tmp = vec![0i32; lit.element_count()];
+                lit.copy_raw_to::<i32>(&mut tmp)
+                    .map_err(|e| anyhow!("copy i32: {e}"))?;
+                for (i, v) in tmp.iter().enumerate() {
+                    bytes[i * 4..(i + 1) * 4].copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            Dtype::F32 => {
+                let mut tmp = vec![0f32; lit.element_count()];
+                lit.copy_raw_to::<f32>(&mut tmp)
+                    .map_err(|e| anyhow!("copy f32: {e}"))?;
+                for (i, v) in tmp.iter().enumerate() {
+                    bytes[i * 4..(i + 1) * 4].copy_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        Ok(HostTensor { dtype, dims, bytes })
+    }
+
+    /// Execute `name` with literals; returns the decomposed output tuple.
+    fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe(name)?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        // aot.py lowers with return_tuple=True
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))
+    }
+
+    fn handle(&mut self, req: Request) -> Result<Response> {
+        match req {
+            Request::Load { name } => {
+                self.exe(&name)?;
+                Ok(Response::Unit)
+            }
+            Request::InitParams => {
+                let outs = self.execute("init", &[])?;
+                if outs.len() != self.manifest.param_count() {
+                    bail!(
+                        "init produced {} params, manifest says {}",
+                        outs.len(),
+                        self.manifest.param_count()
+                    );
+                }
+                self.params = outs;
+                Ok(Response::Unit)
+            }
+            Request::SetParams { tensors } => {
+                self.params = tensors
+                    .iter()
+                    .map(Self::to_literal)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Response::Unit)
+            }
+            Request::GetParams => {
+                let out = self
+                    .params
+                    .iter()
+                    .map(Self::from_literal)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Response::Tensors(out))
+            }
+            Request::TrainStep { variant, images, labels } => {
+                if self.params.is_empty() {
+                    bail!("params not initialized (call init_params)");
+                }
+                let mut args: Vec<xla::Literal> =
+                    self.params.iter().map(|l| l.clone()).collect();
+                args.push(Self::to_literal(&images)?);
+                args.push(Self::to_literal(&labels)?);
+                let mut outs = self.execute(&variant, &args)?;
+                let loss_lit = outs.pop().ok_or_else(|| anyhow!("empty outputs"))?;
+                if outs.len() != self.params.len() {
+                    bail!(
+                        "train step returned {} params, expected {}",
+                        outs.len(),
+                        self.params.len()
+                    );
+                }
+                self.params = outs;
+                let loss = loss_lit
+                    .get_first_element::<f32>()
+                    .map_err(|e| anyhow!("loss: {e}"))?;
+                Ok(Response::Loss(loss))
+            }
+            Request::Forward { variant, images } => {
+                if self.params.is_empty() {
+                    bail!("params not initialized");
+                }
+                let mut args: Vec<xla::Literal> =
+                    self.params.iter().map(|l| l.clone()).collect();
+                args.push(Self::to_literal(&images)?);
+                let outs = self.execute(&variant, &args)?;
+                Ok(Response::Tensors(
+                    outs.iter().map(Self::from_literal).collect::<Result<_>>()?,
+                ))
+            }
+            Request::Run { name, inputs } => {
+                let args: Vec<xla::Literal> = inputs
+                    .iter()
+                    .map(Self::to_literal)
+                    .collect::<Result<Vec<_>>>()?;
+                let outs = self.execute(&name, &args)?;
+                Ok(Response::Tensors(
+                    outs.iter().map(Self::from_literal).collect::<Result<_>>()?,
+                ))
+            }
+            Request::Shutdown => Ok(Response::Unit),
+        }
+    }
+}
+
+/// The deterministic example batch of `model.make_example_batch` —
+/// bit-identical to the python side (Knuth-hash pattern).
+pub fn example_batch(batch: usize, img: usize, num_classes: usize) -> (HostTensor, HostTensor) {
+    let n = batch * img * img * 3;
+    let data: Vec<u8> = (0..n)
+        .map(|i| ((i as u32).wrapping_mul(2654435761) % 256) as u8)
+        .collect();
+    let labels: Vec<i32> = (0..batch).map(|i| ((i * 7) % num_classes) as i32).collect();
+    (
+        HostTensor::from_u8(&[batch, img, img, 3], data),
+        HostTensor::from_i32(&[batch], &labels),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_roundtrips() {
+        let t = HostTensor::from_f32(&[2, 2], &[1.0, -2.5, 3.25, 0.0]);
+        assert_eq!(t.to_f32_vec(), vec![1.0, -2.5, 3.25, 0.0]);
+        let t = HostTensor::from_i32(&[3], &[1, -7, 42]);
+        assert_eq!(t.bytes.len(), 12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_checks_dims() {
+        HostTensor::from_f32(&[2, 3], &[0.0; 5]);
+    }
+
+    #[test]
+    fn example_batch_matches_python_pattern() {
+        let (imgs, labels) = example_batch(2, 8, 512);
+        assert_eq!(imgs.dims, vec![2, 8, 8, 3]);
+        for i in [0usize, 1, 17, 100] {
+            let want = ((i as u64 * 2654435761) % (1 << 32) % 256) as u8;
+            assert_eq!(imgs.bytes[i], want);
+        }
+        assert_eq!(labels.dims, vec![2]);
+    }
+
+    // engine-level tests live in rust/tests/test_runtime.rs (they need
+    // built artifacts)
+}

@@ -1,0 +1,291 @@
+//! Shard-based loading — the §A.5 comparison systems.
+//!
+//! * [`WebDatasetLoader`]: data lives in tar *shards*; an epoch streams
+//!   each shard (one remote request per shard, sequential bandwidth) and
+//!   unpacks items on the fly. No per-item RTT — the decisive advantage
+//!   over per-item object GETs.
+//! * [`FastAiLoader`]: `untar_data` downloads the full tar once to local
+//!   scratch, unpacks, and all epochs read locally.
+//!
+//! Both yield the same decoded/augmented samples as the map-style
+//! dataset, so epoch runtimes are directly comparable (Fig 22).
+
+pub mod tar;
+
+pub use tar::{read_tar, write_tar, TarEntry, TarStream};
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::data::{Augment, AugmentConfig, SimgImage};
+use crate::dataset::Sample;
+use crate::gil::Gil;
+use crate::storage::ObjectStore;
+
+/// Pack corpus objects into `n_shards` tar shards on `dst`.
+/// Returns the shard keys.
+pub fn build_shards(
+    src: &Arc<dyn ObjectStore>,
+    dst: &Arc<dyn ObjectStore>,
+    n_shards: usize,
+) -> Result<Vec<String>> {
+    let keys = src.keys();
+    let n_shards = n_shards.max(1);
+    let per = keys.len().div_ceil(n_shards);
+    let mut shard_keys = Vec::new();
+    for (si, chunk) in keys.chunks(per.max(1)).enumerate() {
+        let entries: Vec<TarEntry> = chunk
+            .iter()
+            .map(|k| {
+                Ok(TarEntry {
+                    name: k.replace('/', "_"),
+                    data: src.get(k)?.to_vec(),
+                })
+            })
+            .collect::<Result<_>>()?;
+        let shard = write_tar(&entries)?;
+        let key = format!("shards/shard_{si:05}.tar");
+        dst.put(&key, shard)?;
+        shard_keys.push(key);
+    }
+    Ok(shard_keys)
+}
+
+/// Common result of one shard-loader epoch.
+#[derive(Debug, Clone)]
+pub struct ShardEpoch {
+    pub samples: usize,
+    pub bytes: u64,
+    pub wall_secs: f64,
+}
+
+/// WebDataset-style streaming shard loader.
+pub struct WebDatasetLoader {
+    store: Arc<dyn ObjectStore>,
+    shard_keys: Vec<String>,
+    augment: Augment,
+}
+
+impl WebDatasetLoader {
+    pub fn new(
+        store: Arc<dyn ObjectStore>,
+        shard_keys: Vec<String>,
+        augment_cfg: AugmentConfig,
+    ) -> WebDatasetLoader {
+        WebDatasetLoader { store, shard_keys, augment: Augment::new(augment_cfg) }
+    }
+
+    /// Stream one epoch: fetch each shard (sequential bandwidth, one
+    /// request), unpack on the fly, decode+augment each item under the
+    /// GIL. Calls `sink` for every sample.
+    pub fn epoch(
+        &self,
+        epoch: usize,
+        gil: &Gil,
+        mut sink: impl FnMut(Sample),
+    ) -> Result<ShardEpoch> {
+        let t0 = std::time::Instant::now();
+        let mut samples = 0usize;
+        let mut bytes = 0u64;
+        let mut index = 0usize;
+        for key in &self.shard_keys {
+            let shard = gil.io(|| self.store.get(key))?;
+            bytes += shard.len() as u64;
+            for entry in TarStream::new(&shard) {
+                let entry = entry?;
+                let sample = gil.cpu(|| -> Result<Sample> {
+                    let img = SimgImage::decode(&entry.data)?;
+                    let crop = self.augment.apply_u8(&img, epoch, index);
+                    Ok(Sample {
+                        index,
+                        label: img.label,
+                        crop,
+                        raw_bytes: entry.data.len(),
+                        fetch_time: 0.0,
+                        decode_time: 0.0,
+                    })
+                })?;
+                sink(sample);
+                samples += 1;
+                index += 1;
+            }
+        }
+        Ok(ShardEpoch { samples, bytes, wall_secs: t0.elapsed().as_secs_f64() })
+    }
+}
+
+/// FastAI-style loader: download+unpack the archive once, then all
+/// epochs read the unpacked local copy.
+pub struct FastAiLoader {
+    local: Arc<dyn ObjectStore>,
+    augment: Augment,
+    keys: Vec<String>,
+    /// wall time of the one-off untar_data
+    pub untar_secs: f64,
+    pub downloaded_bytes: u64,
+}
+
+impl FastAiLoader {
+    /// `untar_data`: pull every shard from `remote`, unpack into `local`.
+    pub fn untar_data(
+        remote: &Arc<dyn ObjectStore>,
+        shard_keys: &[String],
+        local: Arc<dyn ObjectStore>,
+        augment_cfg: AugmentConfig,
+    ) -> Result<FastAiLoader> {
+        let t0 = std::time::Instant::now();
+        let mut downloaded = 0u64;
+        for key in shard_keys {
+            let shard = remote.get(key).with_context(|| key.clone())?;
+            downloaded += shard.len() as u64;
+            for entry in read_tar(&shard)? {
+                local.put(&entry.name, entry.data)?;
+            }
+        }
+        let keys = local.keys();
+        Ok(FastAiLoader {
+            local,
+            augment: Augment::new(augment_cfg),
+            keys,
+            untar_secs: t0.elapsed().as_secs_f64(),
+            downloaded_bytes: downloaded,
+        })
+    }
+
+    /// One local epoch over the unpacked data.
+    pub fn epoch(
+        &self,
+        epoch: usize,
+        gil: &Gil,
+        mut sink: impl FnMut(Sample),
+    ) -> Result<ShardEpoch> {
+        let t0 = std::time::Instant::now();
+        let mut samples = 0usize;
+        let mut bytes = 0u64;
+        for (index, key) in self.keys.iter().enumerate() {
+            let raw = gil.io(|| self.local.get(key))?;
+            bytes += raw.len() as u64;
+            let sample = gil.cpu(|| -> Result<Sample> {
+                let img = SimgImage::decode(&raw)?;
+                let crop = self.augment.apply_u8(&img, epoch, index);
+                Ok(Sample {
+                    index,
+                    label: img.label,
+                    crop,
+                    raw_bytes: raw.len(),
+                    fetch_time: 0.0,
+                    decode_time: 0.0,
+                })
+            })?;
+            sink(sample);
+            samples += 1;
+        }
+        Ok(ShardEpoch { samples, bytes, wall_secs: t0.elapsed().as_secs_f64() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_corpus, CorpusSpec};
+    use crate::storage::{MemStore, RemoteProfile, SimRemoteStore};
+
+    fn corpus(items: usize) -> Arc<dyn ObjectStore> {
+        let m: Arc<dyn ObjectStore> = Arc::new(MemStore::new("src"));
+        generate_corpus(&m, &CorpusSpec::tiny(items)).unwrap();
+        m
+    }
+
+    #[test]
+    fn build_shards_covers_all_items() {
+        let src = corpus(10);
+        let dst: Arc<dyn ObjectStore> = Arc::new(MemStore::new("dst"));
+        let keys = build_shards(&src, &dst, 3).unwrap();
+        assert_eq!(keys.len(), 3);
+        let total: usize = keys
+            .iter()
+            .map(|k| read_tar(&dst.get(k).unwrap()).unwrap().len())
+            .sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn webdataset_epoch_yields_all_samples() {
+        let src = corpus(8);
+        let dst: Arc<dyn ObjectStore> = Arc::new(MemStore::new("dst"));
+        let keys = build_shards(&src, &dst, 2).unwrap();
+        let wds = WebDatasetLoader::new(
+            dst,
+            keys,
+            AugmentConfig { crop: 16, ..Default::default() },
+        );
+        let gil = Gil::native();
+        let mut seen = 0;
+        let ep = wds
+            .epoch(0, &gil, |s| {
+                assert_eq!(s.crop.shape, vec![16, 16, 3]);
+                seen += 1;
+            })
+            .unwrap();
+        assert_eq!(seen, 8);
+        assert_eq!(ep.samples, 8);
+        assert!(ep.bytes > 0);
+    }
+
+    #[test]
+    fn fastai_untar_then_local_epochs() {
+        let src = corpus(6);
+        let remote_mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("r"));
+        let keys = build_shards(&src, &remote_mem, 1).unwrap();
+        let remote: Arc<dyn ObjectStore> =
+            SimRemoteStore::new(remote_mem, RemoteProfile::s3().scaled(0.1), 1);
+        let local: Arc<dyn ObjectStore> = Arc::new(MemStore::new("l"));
+        let fa = FastAiLoader::untar_data(
+            &remote,
+            &keys,
+            local,
+            AugmentConfig { crop: 16, ..Default::default() },
+        )
+        .unwrap();
+        assert!(fa.untar_secs > 0.0);
+        assert!(fa.downloaded_bytes > 0);
+        let gil = Gil::native();
+        let ep = fa.epoch(0, &gil, |_| {}).unwrap();
+        assert_eq!(ep.samples, 6);
+        // local epochs don't pay the remote latency
+        assert!(ep.wall_secs < fa.untar_secs + 1.0);
+    }
+
+    #[test]
+    fn webdataset_beats_per_item_on_s3() {
+        // 12 items in 1 shard: one shard RTT vs 12 per-item RTTs
+        let src = corpus(12);
+        let dst_mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("d"));
+        let keys = build_shards(&src, &dst_mem, 1).unwrap();
+        let profile = RemoteProfile::s3().scaled(0.2);
+        let remote_shards: Arc<dyn ObjectStore> =
+            SimRemoteStore::new(dst_mem, profile.clone(), 1);
+        let wds = WebDatasetLoader::new(
+            remote_shards,
+            keys,
+            AugmentConfig { crop: 16, ..Default::default() },
+        );
+        let gil = Gil::native();
+        let ep = wds.epoch(0, &gil, |_| {}).unwrap();
+
+        // per-item path on the same latency profile
+        let remote_items: Arc<dyn ObjectStore> =
+            SimRemoteStore::new(corpus(12), profile, 2);
+        let t0 = std::time::Instant::now();
+        for k in remote_items.keys() {
+            remote_items.get(&k).unwrap();
+        }
+        let per_item = t0.elapsed().as_secs_f64();
+        assert!(
+            ep.wall_secs < per_item,
+            "wds {} !< per-item {per_item}",
+            ep.wall_secs
+        );
+    }
+}

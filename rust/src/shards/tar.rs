@@ -1,0 +1,216 @@
+//! Minimal POSIX-ustar tar writer/reader — the container format of
+//! WebDataset shards (§A.5). Only regular files, only the fields the
+//! loaders need; round-trips anything this repo writes and validates
+//! header checksums on read.
+
+use anyhow::{bail, Result};
+
+const BLOCK: usize = 512;
+
+/// One archive member.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TarEntry {
+    pub name: String,
+    pub data: Vec<u8>,
+}
+
+fn octal_field(buf: &mut [u8], value: u64) {
+    // NUL-terminated octal, width-1 digits
+    let s = format!("{:0width$o}\0", value, width = buf.len() - 1);
+    buf.copy_from_slice(s.as_bytes());
+}
+
+fn parse_octal(field: &[u8]) -> Result<u64> {
+    let s: String = field
+        .iter()
+        .take_while(|&&b| b != 0 && b != b' ')
+        .map(|&b| b as char)
+        .collect();
+    if s.is_empty() {
+        return Ok(0);
+    }
+    u64::from_str_radix(&s, 8).map_err(|e| anyhow::anyhow!("bad octal {s:?}: {e}"))
+}
+
+fn header_for(name: &str, size: usize) -> Result<[u8; BLOCK]> {
+    if name.len() > 100 {
+        bail!("tar name too long: {name}");
+    }
+    let mut h = [0u8; BLOCK];
+    h[..name.len()].copy_from_slice(name.as_bytes()); // name
+    octal_field(&mut h[100..108], 0o644); // mode
+    octal_field(&mut h[108..116], 0); // uid
+    octal_field(&mut h[116..124], 0); // gid
+    octal_field(&mut h[124..136], size as u64); // size
+    octal_field(&mut h[136..148], 0); // mtime
+    h[156] = b'0'; // typeflag: regular file
+    h[257..262].copy_from_slice(b"ustar"); // magic
+    h[263..265].copy_from_slice(b"00"); // version
+    // checksum: spaces while computing
+    for b in &mut h[148..156] {
+        *b = b' ';
+    }
+    let sum: u64 = h.iter().map(|&b| b as u64).sum();
+    let s = format!("{sum:06o}\0 ");
+    h[148..156].copy_from_slice(s.as_bytes());
+    Ok(h)
+}
+
+/// Serialize entries into a tar archive (with the closing zero blocks).
+pub fn write_tar(entries: &[TarEntry]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    for e in entries {
+        out.extend_from_slice(&header_for(&e.name, e.data.len())?);
+        out.extend_from_slice(&e.data);
+        let pad = (BLOCK - e.data.len() % BLOCK) % BLOCK;
+        out.extend(std::iter::repeat(0u8).take(pad));
+    }
+    out.extend(std::iter::repeat(0u8).take(2 * BLOCK));
+    Ok(out)
+}
+
+/// Parse a tar archive, validating checksums.
+pub fn read_tar(buf: &[u8]) -> Result<Vec<TarEntry>> {
+    let mut entries = Vec::new();
+    let mut off = 0usize;
+    while off + BLOCK <= buf.len() {
+        let h = &buf[off..off + BLOCK];
+        if h.iter().all(|&b| b == 0) {
+            break; // end-of-archive
+        }
+        // checksum check
+        let stored = parse_octal(&h[148..156])?;
+        let computed: u64 = h
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| if (148..156).contains(&i) { b' ' as u64 } else { b as u64 })
+            .sum();
+        if stored != computed {
+            bail!("tar checksum mismatch at offset {off}");
+        }
+        let name: String = h[..100]
+            .iter()
+            .take_while(|&&b| b != 0)
+            .map(|&b| b as char)
+            .collect();
+        let size = parse_octal(&h[124..136])? as usize;
+        let data_start = off + BLOCK;
+        if data_start + size > buf.len() {
+            bail!("tar truncated: {name} wants {size} bytes");
+        }
+        if h[156] == b'0' || h[156] == 0 {
+            entries.push(TarEntry {
+                name,
+                data: buf[data_start..data_start + size].to_vec(),
+            });
+        }
+        off = data_start + size.div_ceil(BLOCK) * BLOCK;
+    }
+    Ok(entries)
+}
+
+/// Iterate entries *incrementally* from a byte stream — WebDataset-style
+/// unpack-on-the-fly (the consumer can process entry k while the rest of
+/// the shard is still in flight in a real network setting).
+pub struct TarStream<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> TarStream<'a> {
+    pub fn new(buf: &'a [u8]) -> TarStream<'a> {
+        TarStream { buf, off: 0 }
+    }
+}
+
+impl<'a> Iterator for TarStream<'a> {
+    type Item = Result<TarEntry>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.off + BLOCK > self.buf.len() {
+            return None;
+        }
+        let h = &self.buf[self.off..self.off + BLOCK];
+        if h.iter().all(|&b| b == 0) {
+            return None;
+        }
+        let name: String = h[..100]
+            .iter()
+            .take_while(|&&b| b != 0)
+            .map(|&b| b as char)
+            .collect();
+        let size = match parse_octal(&h[124..136]) {
+            Ok(s) => s as usize,
+            Err(e) => return Some(Err(e)),
+        };
+        let start = self.off + BLOCK;
+        if start + size > self.buf.len() {
+            return Some(Err(anyhow::anyhow!("truncated entry {name}")));
+        }
+        self.off = start + size.div_ceil(BLOCK) * BLOCK;
+        Some(Ok(TarEntry { name, data: self.buf[start..start + size].to_vec() }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_entries() -> Vec<TarEntry> {
+        vec![
+            TarEntry { name: "a.simg".into(), data: vec![1; 700] },
+            TarEntry { name: "dir/b.simg".into(), data: vec![2; 512] },
+            TarEntry { name: "c.simg".into(), data: vec![] },
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let tar = write_tar(&sample_entries()).unwrap();
+        assert_eq!(tar.len() % BLOCK, 0);
+        let back = read_tar(&tar).unwrap();
+        assert_eq!(back, sample_entries());
+    }
+
+    #[test]
+    fn stream_iterates_same() {
+        let tar = write_tar(&sample_entries()).unwrap();
+        let streamed: Vec<TarEntry> =
+            TarStream::new(&tar).map(|e| e.unwrap()).collect();
+        assert_eq!(streamed, sample_entries());
+    }
+
+    #[test]
+    fn checksum_detects_corruption() {
+        let mut tar = write_tar(&sample_entries()).unwrap();
+        tar[0] ^= 0x7F;
+        assert!(read_tar(&tar).is_err());
+    }
+
+    #[test]
+    fn system_tar_can_be_parsed_back() {
+        // cross-check against GNU/busybox tar if available
+        let dir = std::env::temp_dir().join(format!("cdl-tar-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let tar_path = dir.join("x.tar");
+        std::fs::write(&tar_path, write_tar(&sample_entries()).unwrap()).unwrap();
+        let out = std::process::Command::new("tar")
+            .args(["-tf", tar_path.to_str().unwrap()])
+            .output();
+        if let Ok(out) = out {
+            if out.status.success() {
+                let listing = String::from_utf8_lossy(&out.stdout);
+                assert!(listing.contains("a.simg"), "{listing}");
+                assert!(listing.contains("dir/b.simg"));
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let tar = write_tar(&sample_entries()).unwrap();
+        assert!(read_tar(&tar[..600]).is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! Network/storage timing substrate: latency distributions, a shared-link
+//! bandwidth model, and a deterministic virtual-time FIFO queue.
+//!
+//! The paper's experiments are entirely driven by the latency/bandwidth
+//! structure of the storage backend (S3 ≈ 100ms first-byte RTTs, NVMe ≈
+//! sub-ms). We reproduce that structure with seeded distributions so the
+//! who-wins shape of every figure replays deterministically.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::rng::Rng;
+
+/// First-byte latency model for one request.
+#[derive(Debug, Clone)]
+pub enum LatencyModel {
+    Zero,
+    /// Fixed latency (seconds).
+    Const(f64),
+    /// Lognormal with given median (seconds) and shape sigma — the classic
+    /// long-tail model for object-storage request latency.
+    LogNormal { median: f64, sigma: f64 },
+    /// Mixture: base lognormal plus occasional slow outliers
+    /// (p_slow probability of multiplying by slow_factor) — matches the
+    /// paper's observation of 0.01–0.43 s request times on S3.
+    Mixture { median: f64, sigma: f64, p_slow: f64, slow_factor: f64 },
+}
+
+impl LatencyModel {
+    pub fn sample(&self, rng: &mut Rng) -> Duration {
+        let secs = match *self {
+            LatencyModel::Zero => 0.0,
+            LatencyModel::Const(s) => s,
+            LatencyModel::LogNormal { median, sigma } => rng.lognormal(median, sigma),
+            LatencyModel::Mixture { median, sigma, p_slow, slow_factor } => {
+                let base = rng.lognormal(median, sigma);
+                if rng.chance(p_slow) {
+                    base * slow_factor
+                } else {
+                    base
+                }
+            }
+        };
+        Duration::from_secs_f64(secs.max(0.0))
+    }
+
+    /// Scale all latencies (the benchmark `Scale` knob).
+    pub fn scaled(&self, f: f64) -> LatencyModel {
+        match *self {
+            LatencyModel::Zero => LatencyModel::Zero,
+            LatencyModel::Const(s) => LatencyModel::Const(s * f),
+            LatencyModel::LogNormal { median, sigma } => {
+                LatencyModel::LogNormal { median: median * f, sigma }
+            }
+            LatencyModel::Mixture { median, sigma, p_slow, slow_factor } => {
+                LatencyModel::Mixture { median: median * f, p_slow, sigma, slow_factor }
+            }
+        }
+    }
+
+    /// The distribution median in seconds (for reports).
+    pub fn median_secs(&self) -> f64 {
+        match *self {
+            LatencyModel::Zero => 0.0,
+            LatencyModel::Const(s) => s,
+            LatencyModel::LogNormal { median, .. } => median,
+            LatencyModel::Mixture { median, .. } => median,
+        }
+    }
+}
+
+/// A shared transmission link modeled as a virtual-time FIFO: each
+/// reservation occupies `bytes / rate` of link time, reservations queue
+/// behind each other. `reserve` returns how long the caller must wait
+/// until its transfer completes — concurrency-safe and deterministic
+/// given arrival order.
+#[derive(Debug)]
+pub struct Link {
+    /// bytes per second
+    rate: f64,
+    next_free: Mutex<Option<Instant>>,
+}
+
+impl Link {
+    pub fn new_mbit_s(mbit_s: f64) -> Link {
+        Link {
+            rate: mbit_s * 1024.0 * 1024.0 / 8.0,
+            next_free: Mutex::new(None),
+        }
+    }
+
+    pub fn rate_mbit_s(&self) -> f64 {
+        self.rate * 8.0 / (1024.0 * 1024.0)
+    }
+
+    /// Reserve link time for `bytes`; returns the wait until completion.
+    pub fn reserve(&self, bytes: u64) -> Duration {
+        let now = Instant::now();
+        let busy = Duration::from_secs_f64(bytes as f64 / self.rate);
+        let mut nf = self.next_free.lock().unwrap();
+        let start = match *nf {
+            Some(t) if t > now => t,
+            _ => now,
+        };
+        let done = start + busy;
+        *nf = Some(done);
+        done.saturating_duration_since(now)
+    }
+
+    /// Pure transfer time for `bytes` with no queueing.
+    pub fn nominal(&self, bytes: u64) -> Duration {
+        Duration::from_secs_f64(bytes as f64 / self.rate)
+    }
+}
+
+/// Per-request total service time for a simulated remote store:
+/// `first_byte + max(per_connection_stream_time, shared_link_time)`.
+pub fn service_time(
+    first_byte: Duration,
+    per_conn: &Link,
+    nic: &Link,
+    bytes: u64,
+) -> Duration {
+    let stream = per_conn.nominal(bytes);
+    let shared = nic.reserve(bytes);
+    first_byte + stream.max(shared)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_latency() {
+        let mut rng = Rng::new(1);
+        let m = LatencyModel::Const(0.05);
+        assert_eq!(m.sample(&mut rng), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn lognormal_median_close() {
+        let mut rng = Rng::new(2);
+        let m = LatencyModel::LogNormal { median: 0.120, sigma: 0.6 };
+        let mut xs: Vec<f64> =
+            (0..20001).map(|_| m.sample(&mut rng).as_secs_f64()).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[xs.len() / 2];
+        assert!((med - 0.120).abs() < 0.015, "median {med}");
+    }
+
+    #[test]
+    fn mixture_has_tail() {
+        let mut rng = Rng::new(3);
+        let m = LatencyModel::Mixture {
+            median: 0.1,
+            sigma: 0.3,
+            p_slow: 0.05,
+            slow_factor: 4.0,
+        };
+        let xs: Vec<f64> = (0..5000).map(|_| m.sample(&mut rng).as_secs_f64()).collect();
+        let slow = xs.iter().filter(|x| **x > 0.3).count();
+        assert!(slow > 50, "tail too small: {slow}");
+    }
+
+    #[test]
+    fn scaling_scales_median() {
+        let m = LatencyModel::LogNormal { median: 0.2, sigma: 0.5 }.scaled(0.25);
+        assert!((m.median_secs() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_serializes_transfers() {
+        // 8 Mbit/s = 1 MiB/s; two back-to-back 1 MiB reservations finish at
+        // ~1 s and ~2 s.
+        let link = Link::new_mbit_s(8.0);
+        let w1 = link.reserve(1024 * 1024);
+        let w2 = link.reserve(1024 * 1024);
+        assert!((w1.as_secs_f64() - 1.0).abs() < 0.05, "{w1:?}");
+        assert!((w2.as_secs_f64() - 2.0).abs() < 0.05, "{w2:?}");
+    }
+
+    #[test]
+    fn link_idle_resets() {
+        let link = Link::new_mbit_s(8000.0);
+        let w1 = link.reserve(1024);
+        std::thread::sleep(Duration::from_millis(5));
+        let w2 = link.reserve(1024);
+        assert!(w2 <= w1 + Duration::from_micros(100));
+    }
+
+    #[test]
+    fn service_time_takes_max() {
+        let per_conn = Link::new_mbit_s(8.0); // 1 MiB/s -> 1 s for 1 MiB
+        let nic = Link::new_mbit_s(8000.0); // effectively instant
+        let t = service_time(
+            Duration::from_millis(100),
+            &per_conn,
+            &nic,
+            1024 * 1024,
+        );
+        assert!(t >= Duration::from_millis(1050), "{t:?}");
+    }
+}

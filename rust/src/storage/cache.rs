@@ -1,0 +1,296 @@
+//! Varnish-like byte-capped LRU cache in front of any store (§2.4
+//! "Caching" of the paper). The paper caps the cache at 2 GB — far below
+//! dataset size — so random access produces mostly misses; the cache
+//! helps exactly the configurations the paper says it helps (slow
+//! vanilla loaders) and we reproduce that in `bench_cache`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::{BoxFut, Bytes, ObjectStore, StatCounters, StoreStats};
+
+struct Entry {
+    key: String,
+    data: Bytes,
+    prev: usize,
+    next: usize,
+}
+
+const NIL: usize = usize::MAX;
+
+/// Intrusive-list LRU keyed by object, capped by total payload bytes.
+struct Lru {
+    map: HashMap<String, usize>,
+    slab: Vec<Entry>,
+    free: Vec<usize>,
+    head: usize, // most recent
+    tail: usize, // least recent
+    bytes: u64,
+    capacity: u64,
+}
+
+impl Lru {
+    fn new(capacity: u64) -> Lru {
+        Lru {
+            map: HashMap::new(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            bytes: 0,
+            capacity,
+        }
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (p, n) = (self.slab[i].prev, self.slab[i].next);
+        if p != NIL {
+            self.slab[p].next = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.slab[n].prev = p;
+        } else {
+            self.tail = p;
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.slab[i].prev = NIL;
+        self.slab[i].next = self.head;
+        if self.head != NIL {
+            self.slab[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    fn get(&mut self, key: &str) -> Option<Bytes> {
+        let &i = self.map.get(key)?;
+        self.unlink(i);
+        self.push_front(i);
+        Some(self.slab[i].data.clone())
+    }
+
+    /// Insert; returns number of evictions performed.
+    fn insert(&mut self, key: &str, data: Bytes) -> u64 {
+        if data.len() as u64 > self.capacity {
+            return 0; // object larger than the whole cache: don't cache
+        }
+        if let Some(&i) = self.map.get(key) {
+            self.bytes -= self.slab[i].data.len() as u64;
+            self.bytes += data.len() as u64;
+            self.slab[i].data = data;
+            self.unlink(i);
+            self.push_front(i);
+            return self.evict_to_fit();
+        }
+        let entry = Entry {
+            key: key.to_string(),
+            data: data.clone(),
+            prev: NIL,
+            next: NIL,
+        };
+        let i = if let Some(i) = self.free.pop() {
+            self.slab[i] = entry;
+            i
+        } else {
+            self.slab.push(entry);
+            self.slab.len() - 1
+        };
+        self.map.insert(key.to_string(), i);
+        self.bytes += data.len() as u64;
+        self.push_front(i);
+        self.evict_to_fit()
+    }
+
+    fn evict_to_fit(&mut self) -> u64 {
+        let mut evicted = 0;
+        while self.bytes > self.capacity && self.tail != NIL {
+            let i = self.tail;
+            self.unlink(i);
+            self.bytes -= self.slab[i].data.len() as u64;
+            let key = std::mem::take(&mut self.slab[i].key);
+            self.slab[i].data = Bytes::new(Vec::new());
+            self.map.remove(&key);
+            self.free.push(i);
+            evicted += 1;
+        }
+        evicted
+    }
+}
+
+/// Byte-capped LRU cache wrapping a (typically remote) store.
+pub struct VarnishCache {
+    inner: Arc<dyn ObjectStore>,
+    lru: Mutex<Lru>,
+    stats: StatCounters,
+}
+
+impl VarnishCache {
+    pub fn new(inner: Arc<dyn ObjectStore>, capacity_bytes: u64) -> Arc<VarnishCache> {
+        Arc::new(VarnishCache {
+            inner,
+            lru: Mutex::new(Lru::new(capacity_bytes)),
+            stats: StatCounters::default(),
+        })
+    }
+
+    pub fn cached_bytes(&self) -> u64 {
+        self.lru.lock().unwrap().bytes
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.lru.lock().unwrap().capacity
+    }
+
+    /// hit ratio so far
+    pub fn hit_ratio(&self) -> f64 {
+        let s = self.stats.snapshot();
+        if s.gets == 0 {
+            return 0.0;
+        }
+        s.hits as f64 / s.gets as f64
+    }
+
+    fn lookup(&self, key: &str) -> Option<Bytes> {
+        let mut lru = self.lru.lock().unwrap();
+        lru.get(key)
+    }
+
+    fn fill(&self, key: &str, data: Bytes) {
+        let evicted = self.lru.lock().unwrap().insert(key, data);
+        self.stats
+            .evictions
+            .fetch_add(evicted, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+impl ObjectStore for VarnishCache {
+    fn get(&self, key: &str) -> Result<Bytes> {
+        if let Some(hit) = self.lookup(key) {
+            self.stats.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.stats.record_get(hit.len() as u64);
+            return Ok(hit);
+        }
+        self.stats.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let data = self.inner.get(key)?; // pays the remote cost
+        self.stats.record_get(data.len() as u64);
+        self.fill(key, data.clone());
+        Ok(data)
+    }
+
+    fn get_async<'a>(&'a self, key: &'a str) -> BoxFut<'a, Result<Bytes>> {
+        Box::pin(async move {
+            if let Some(hit) = self.lookup(key) {
+                self.stats
+                    .hits
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.stats.record_get(hit.len() as u64);
+                return Ok(hit);
+            }
+            self.stats
+                .misses
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let data = self.inner.get_async(key).await?;
+            self.stats.record_get(data.len() as u64);
+            self.fill(key, data.clone());
+            Ok(data)
+        })
+    }
+
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        self.inner.put(key, data)
+    }
+
+    fn keys(&self) -> Vec<String> {
+        self.inner.keys()
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.inner.contains(key)
+    }
+
+    fn label(&self) -> String {
+        format!("varnish({})", self.inner.label())
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.stats.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+
+    fn backing(n: usize, size: usize) -> Arc<MemStore> {
+        let m = Arc::new(MemStore::new("b"));
+        for i in 0..n {
+            m.put(&format!("k{i}"), vec![i as u8; size]).unwrap();
+        }
+        m
+    }
+
+    #[test]
+    fn hit_after_miss() {
+        let c = VarnishCache::new(backing(4, 100), 1000);
+        c.get("k0").unwrap();
+        c.get("k0").unwrap();
+        let s = c.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 1);
+        assert!((c.hit_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn never_exceeds_capacity() {
+        let c = VarnishCache::new(backing(20, 100), 350);
+        for i in 0..20 {
+            c.get(&format!("k{i}")).unwrap();
+            assert!(c.cached_bytes() <= 350, "over cap: {}", c.cached_bytes());
+        }
+        assert!(c.stats().evictions > 0);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let c = VarnishCache::new(backing(3, 100), 200); // fits 2
+        c.get("k0").unwrap();
+        c.get("k1").unwrap();
+        c.get("k0").unwrap(); // k0 now MRU
+        c.get("k2").unwrap(); // evicts k1
+        let before = c.stats().misses;
+        c.get("k0").unwrap(); // hit
+        assert_eq!(c.stats().misses, before);
+        c.get("k1").unwrap(); // miss again
+        assert_eq!(c.stats().misses, before + 1);
+    }
+
+    #[test]
+    fn oversized_object_not_cached() {
+        let m = Arc::new(MemStore::new("b"));
+        m.put("big", vec![0; 1000]).unwrap();
+        let c = VarnishCache::new(m, 100);
+        c.get("big").unwrap();
+        c.get("big").unwrap();
+        assert_eq!(c.stats().hits, 0);
+        assert_eq!(c.cached_bytes(), 0);
+    }
+
+    #[test]
+    fn async_path_caches_too() {
+        let c = VarnishCache::new(backing(2, 50), 1000);
+        crate::asyncrt::block_on(async {
+            c.get_async("k0").await.unwrap();
+            c.get_async("k0").await.unwrap();
+        });
+        assert_eq!(c.stats().hits, 1);
+    }
+}

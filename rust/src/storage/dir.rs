@@ -1,0 +1,125 @@
+//! Directory-backed store: real files on the local filesystem — the
+//! "scratch" (locally mounted NVMe/SSD) storage of the paper when you
+//! want true disk I/O instead of a simulated latency model.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::{Bytes, ObjectStore, StatCounters, StoreStats};
+
+pub struct DirStore {
+    root: PathBuf,
+    stats: StatCounters,
+}
+
+impl DirStore {
+    /// Open (creating if needed) a directory store.
+    pub fn open(root: impl AsRef<Path>) -> Result<DirStore> {
+        let root = root.as_ref().to_path_buf();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("create {root:?}"))?;
+        Ok(DirStore { root, stats: StatCounters::default() })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn path_for(&self, key: &str) -> PathBuf {
+        // keys may contain '/' subdirs
+        self.root.join(key)
+    }
+}
+
+impl ObjectStore for DirStore {
+    fn get(&self, key: &str) -> Result<Bytes> {
+        let data = std::fs::read(self.path_for(key))
+            .with_context(|| format!("read {key}"))?;
+        self.stats.record_get(data.len() as u64);
+        Ok(Bytes::new(data))
+    }
+
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        let path = self.path_for(key);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, data).with_context(|| format!("write {key}"))?;
+        Ok(())
+    }
+
+    fn keys(&self) -> Vec<String> {
+        fn walk(dir: &Path, prefix: &str, out: &mut Vec<String>) {
+            let Ok(entries) = std::fs::read_dir(dir) else { return };
+            for e in entries.flatten() {
+                let name = e.file_name().to_string_lossy().to_string();
+                let key = if prefix.is_empty() {
+                    name.clone()
+                } else {
+                    format!("{prefix}/{name}")
+                };
+                let p = e.path();
+                if p.is_dir() {
+                    walk(&p, &key, out);
+                } else {
+                    out.push(key);
+                }
+            }
+        }
+        let mut keys = Vec::new();
+        walk(&self.root, "", &mut keys);
+        keys.sort();
+        keys
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.path_for(key).is_file()
+    }
+
+    fn label(&self) -> String {
+        "scratch".to_string()
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.stats.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "cdl-dirstore-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    #[test]
+    fn roundtrip_with_subdirs() {
+        let d = tmpdir("rt");
+        let s = DirStore::open(&d).unwrap();
+        s.put("cls0/img_000.simg", vec![7; 32]).unwrap();
+        s.put("cls1/img_001.simg", vec![8; 16]).unwrap();
+        assert_eq!(s.get("cls0/img_000.simg").unwrap().len(), 32);
+        assert_eq!(
+            s.keys(),
+            vec!["cls0/img_000.simg", "cls1/img_001.simg"]
+        );
+        assert!(s.contains("cls1/img_001.simg"));
+        assert!(!s.contains("nope"));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let d = tmpdir("miss");
+        let s = DirStore::open(&d).unwrap();
+        assert!(s.get("ghost").is_err());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -1,0 +1,113 @@
+//! In-memory object store — the backing blob-holder for all simulated
+//! remote stores (so "S3 latency" isn't polluted by local disk I/O).
+
+use std::collections::BTreeMap;
+use std::sync::RwLock;
+
+use anyhow::{anyhow, Result};
+
+use super::{Bytes, ObjectStore, StatCounters, StoreStats};
+
+pub struct MemStore {
+    name: String,
+    map: RwLock<BTreeMap<String, Bytes>>,
+    stats: StatCounters,
+}
+
+impl MemStore {
+    pub fn new(name: &str) -> MemStore {
+        MemStore {
+            name: name.to_string(),
+            map: RwLock::new(BTreeMap::new()),
+            stats: StatCounters::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.map.read().unwrap().values().map(|v| v.len() as u64).sum()
+    }
+}
+
+impl ObjectStore for MemStore {
+    fn get(&self, key: &str) -> Result<Bytes> {
+        let map = self.map.read().unwrap();
+        let v = map
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow!("no such key: {key}"))?;
+        self.stats.record_get(v.len() as u64);
+        Ok(v)
+    }
+
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        self.map
+            .write()
+            .unwrap()
+            .insert(key.to_string(), Bytes::new(data));
+        Ok(())
+    }
+
+    fn keys(&self) -> Vec<String> {
+        self.map.read().unwrap().keys().cloned().collect()
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.map.read().unwrap().contains_key(key)
+    }
+
+    fn label(&self) -> String {
+        self.name.clone()
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.stats.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = MemStore::new("m");
+        s.put("a/b", vec![9; 100]).unwrap();
+        assert_eq!(s.get("a/b").unwrap().len(), 100);
+        assert!(s.get("missing").is_err());
+    }
+
+    #[test]
+    fn keys_sorted() {
+        let s = MemStore::new("m");
+        s.put("b", vec![]).unwrap();
+        s.put("a", vec![]).unwrap();
+        assert_eq!(s.keys(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn stats_count_bytes() {
+        let s = MemStore::new("m");
+        s.put("k", vec![0; 64]).unwrap();
+        s.get("k").unwrap();
+        s.get("k").unwrap();
+        let st = s.stats();
+        assert_eq!(st.gets, 2);
+        assert_eq!(st.bytes, 128);
+    }
+
+    #[test]
+    fn total_bytes() {
+        let s = MemStore::new("m");
+        s.put("x", vec![0; 10]).unwrap();
+        s.put("y", vec![0; 20]).unwrap();
+        assert_eq!(s.total_bytes(), 30);
+    }
+}

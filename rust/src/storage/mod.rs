@@ -1,0 +1,127 @@
+//! Object-storage substrate.
+//!
+//! The paper's entire evaluation is "the same loader against storage with
+//! different latency structure": local NVMe *scratch*, AWS *S3*, *Ceph*
+//! object store / file system, *Gluster FS*, and a Varnish HTTP cache in
+//! front of S3. We reproduce the substrate as composable stores:
+//!
+//! * [`MemStore`] — in-memory blobs (the backing for simulated remotes).
+//! * [`DirStore`] — real files on local disk (true scratch I/O).
+//! * [`remote::SimRemoteStore`] — wraps any store with first-byte latency,
+//!   per-connection and NIC bandwidth, and a connection limit; presets
+//!   calibrated per storage type live in [`remote::RemoteProfile`].
+//! * [`cache::VarnishCache`] — byte-capped LRU in front of any store.
+//!
+//! Both a blocking and an async (`asyncrt`) fetch path are exposed; the
+//! async path is what the Asyncio fetcher uses.
+
+pub mod cache;
+pub mod dir;
+pub mod mem;
+pub mod remote;
+
+pub use cache::VarnishCache;
+pub use dir::DirStore;
+pub use mem::MemStore;
+pub use remote::{RemoteProfile, SimRemoteStore};
+
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+pub type Bytes = Arc<Vec<u8>>;
+pub type BoxFut<'a, T> = Pin<Box<dyn Future<Output = T> + Send + 'a>>;
+
+/// A key-value object store (S3-shaped: opaque bytes under string keys).
+pub trait ObjectStore: Send + Sync {
+    /// Blocking fetch.
+    fn get(&self, key: &str) -> Result<Bytes>;
+
+    /// Async fetch. Default: delegate to the blocking path (correct for
+    /// fast local stores); simulated remotes override this with
+    /// non-blocking latency waits.
+    fn get_async<'a>(&'a self, key: &'a str) -> BoxFut<'a, Result<Bytes>> {
+        Box::pin(async move { self.get(key) })
+    }
+
+    /// Store an object (used by dataset generation and tests).
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()>;
+
+    /// All keys, sorted (the dataset manifest ordering).
+    fn keys(&self) -> Vec<String>;
+
+    fn contains(&self, key: &str) -> bool {
+        self.get(key).is_ok()
+    }
+
+    /// Human label for reports ("s3", "scratch", ...).
+    fn label(&self) -> String;
+
+    /// Transfer statistics since creation.
+    fn stats(&self) -> StoreStats {
+        StoreStats::default()
+    }
+}
+
+/// Cumulative transfer counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StoreStats {
+    pub gets: u64,
+    pub bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// Shared counter block used by store implementations.
+#[derive(Debug, Default)]
+pub struct StatCounters {
+    pub gets: AtomicU64,
+    pub bytes: AtomicU64,
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub evictions: AtomicU64,
+}
+
+impl StatCounters {
+    pub fn record_get(&self, bytes: u64) {
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StoreStats {
+        StoreStats {
+            gets: self.gets.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_async_path_works() {
+        let store = MemStore::new("m");
+        store.put("k", vec![1, 2, 3]).unwrap();
+        let got = crate::asyncrt::block_on(store.get_async("k")).unwrap();
+        assert_eq!(&*got, &[1, 2, 3]);
+    }
+
+    #[test]
+    fn stat_counters_snapshot() {
+        let c = StatCounters::default();
+        c.record_get(10);
+        c.record_get(5);
+        let s = c.snapshot();
+        assert_eq!(s.gets, 2);
+        assert_eq!(s.bytes, 15);
+    }
+}

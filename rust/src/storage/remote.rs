@@ -1,0 +1,318 @@
+//! Simulated remote object stores.
+//!
+//! [`SimRemoteStore`] wraps any backing store with the timing structure
+//! of a remote storage service: per-request first-byte latency, a
+//! per-connection stream bandwidth, a shared NIC link, and a maximum
+//! connection count. Both a blocking path (thread sleeps — what the
+//! threaded/vanilla fetchers see) and an async path (`asyncrt` timer
+//! sleeps — what the asyncio fetcher sees) are provided; both go through
+//! the same connection-limit semaphore and the same NIC FIFO.
+//!
+//! [`RemoteProfile`] carries the calibrated presets per storage type
+//! (DESIGN.md §4): `s3`, `scratch`, `ceph_os`, `ceph_fs`, `gluster_fs`,
+//! plus `colab_s3` for the §A.2 sanity check.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::{BoxFut, Bytes, ObjectStore, StatCounters, StoreStats};
+use crate::asyncrt;
+use crate::simnet::{Link, LatencyModel};
+use crate::util::rng::Rng;
+
+/// Timing profile of a remote storage service.
+#[derive(Debug, Clone)]
+pub struct RemoteProfile {
+    pub name: &'static str,
+    pub first_byte: LatencyModel,
+    /// single-connection stream bandwidth
+    pub per_conn_mbit_s: f64,
+    /// aggregate NIC / service bandwidth
+    pub nic_mbit_s: f64,
+    /// maximum concurrent connections before requests queue
+    pub max_conns: usize,
+}
+
+impl RemoteProfile {
+    /// AWS-S3-like object storage (the paper's high-latency case:
+    /// ~120 ms median first byte, long tail, modest per-stream rate).
+    pub fn s3() -> RemoteProfile {
+        RemoteProfile {
+            name: "s3",
+            first_byte: LatencyModel::Mixture {
+                median: 0.120,
+                sigma: 0.55,
+                p_slow: 0.03,
+                slow_factor: 3.0,
+            },
+            per_conn_mbit_s: 25.0,
+            nic_mbit_s: 800.0,
+            max_conns: 128,
+        }
+    }
+
+    /// Local NVMe "scratch": sub-ms access, very high stream rate.
+    pub fn scratch() -> RemoteProfile {
+        RemoteProfile {
+            name: "scratch",
+            first_byte: LatencyModel::LogNormal { median: 0.00035, sigma: 0.4 },
+            per_conn_mbit_s: 4000.0,
+            nic_mbit_s: 16000.0,
+            max_conns: 4096,
+        }
+    }
+
+    /// Ceph object store — the slowest backend in the paper's App A.1.
+    pub fn ceph_os() -> RemoteProfile {
+        RemoteProfile {
+            name: "ceph_os",
+            first_byte: LatencyModel::Mixture {
+                median: 0.300,
+                sigma: 0.6,
+                p_slow: 0.05,
+                slow_factor: 3.0,
+            },
+            per_conn_mbit_s: 15.0,
+            nic_mbit_s: 400.0,
+            max_conns: 128,
+        }
+    }
+
+    /// Ceph FS mounted over the datacenter network.
+    pub fn ceph_fs() -> RemoteProfile {
+        RemoteProfile {
+            name: "ceph_fs",
+            first_byte: LatencyModel::LogNormal { median: 0.0012, sigma: 0.5 },
+            per_conn_mbit_s: 1500.0,
+            nic_mbit_s: 8000.0,
+            max_conns: 1024,
+        }
+    }
+
+    /// Gluster FS mounted over the datacenter network.
+    pub fn gluster_fs() -> RemoteProfile {
+        RemoteProfile {
+            name: "gluster_fs",
+            first_byte: LatencyModel::LogNormal { median: 0.0018, sigma: 0.5 },
+            per_conn_mbit_s: 1200.0,
+            nic_mbit_s: 6000.0,
+            max_conns: 1024,
+        }
+    }
+
+    /// S3 reached from a constrained Colab-like VM (§A.2): higher RTT,
+    /// lower aggregate bandwidth, few cores.
+    pub fn colab_s3() -> RemoteProfile {
+        RemoteProfile {
+            name: "colab_s3",
+            first_byte: LatencyModel::Mixture {
+                median: 0.180,
+                sigma: 0.6,
+                p_slow: 0.05,
+                slow_factor: 3.0,
+            },
+            per_conn_mbit_s: 15.0,
+            nic_mbit_s: 120.0,
+            max_conns: 64,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<RemoteProfile> {
+        Some(match name {
+            "s3" => Self::s3(),
+            "scratch" => Self::scratch(),
+            "ceph_os" => Self::ceph_os(),
+            "ceph_fs" => Self::ceph_fs(),
+            "gluster_fs" => Self::gluster_fs(),
+            "colab_s3" => Self::colab_s3(),
+            _ => return None,
+        })
+    }
+
+    /// Scale all latencies (benchmark `Scale` knob); bandwidths are left
+    /// alone (scaling them would change *which* resource saturates).
+    pub fn scaled(mut self, f: f64) -> RemoteProfile {
+        self.first_byte = self.first_byte.scaled(f);
+        self
+    }
+}
+
+/// A store wrapped with remote-service timing.
+pub struct SimRemoteStore {
+    inner: Arc<dyn ObjectStore>,
+    profile: RemoteProfile,
+    per_conn: Link,
+    nic: Link,
+    conns: Arc<asyncrt::Semaphore>,
+    rng: Mutex<Rng>,
+    stats: StatCounters,
+    /// recorded per-request service times (seconds) for report medians
+    request_times: Mutex<Vec<f64>>,
+}
+
+impl SimRemoteStore {
+    pub fn new(
+        inner: Arc<dyn ObjectStore>,
+        profile: RemoteProfile,
+        seed: u64,
+    ) -> Arc<SimRemoteStore> {
+        Arc::new(SimRemoteStore {
+            per_conn: Link::new_mbit_s(profile.per_conn_mbit_s),
+            nic: Link::new_mbit_s(profile.nic_mbit_s),
+            conns: asyncrt::Semaphore::new(profile.max_conns),
+            profile,
+            inner,
+            rng: Mutex::new(Rng::new(seed)),
+            stats: StatCounters::default(),
+            request_times: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn profile(&self) -> &RemoteProfile {
+        &self.profile
+    }
+
+    /// Compute this request's service time (latency draw + bandwidth
+    /// reservation). Shared by the sync and async paths.
+    fn plan(&self, bytes: u64) -> Duration {
+        let fb = {
+            let mut rng = self.rng.lock().unwrap();
+            self.profile.first_byte.sample(&mut rng)
+        };
+        let stream = self.per_conn.nominal(bytes);
+        let shared = self.nic.reserve(bytes);
+        fb + stream.max(shared)
+    }
+
+    fn record(&self, bytes: u64, service: Duration) {
+        self.stats.record_get(bytes);
+        self.request_times.lock().unwrap().push(service.as_secs_f64());
+    }
+
+    /// Median observed request time so far (the paper's right-heatmap
+    /// metric).
+    pub fn median_request_time(&self) -> f64 {
+        crate::util::stats::median(&self.request_times.lock().unwrap())
+    }
+
+    pub fn request_times(&self) -> Vec<f64> {
+        self.request_times.lock().unwrap().clone()
+    }
+}
+
+impl ObjectStore for SimRemoteStore {
+    fn get(&self, key: &str) -> Result<Bytes> {
+        // connection slot (blocking acquire via block_on)
+        let _permit = asyncrt::block_on(self.conns.acquire());
+        let data = self.inner.get(key)?;
+        let service = self.plan(data.len() as u64);
+        std::thread::sleep(service);
+        self.record(data.len() as u64, service);
+        Ok(data)
+    }
+
+    fn get_async<'a>(&'a self, key: &'a str) -> BoxFut<'a, Result<Bytes>> {
+        Box::pin(async move {
+            let _permit = self.conns.acquire().await;
+            let data = self.inner.get(key)?;
+            let service = self.plan(data.len() as u64);
+            asyncrt::sleep(service).await;
+            self.record(data.len() as u64, service);
+            Ok(data)
+        })
+    }
+
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        self.inner.put(key, data)
+    }
+
+    fn keys(&self) -> Vec<String> {
+        self.inner.keys()
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.inner.contains(key)
+    }
+
+    fn label(&self) -> String {
+        self.profile.name.to_string()
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.stats.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+    use std::time::Instant;
+
+    fn mk(profile: RemoteProfile) -> Arc<SimRemoteStore> {
+        let mem = Arc::new(MemStore::new("backing"));
+        mem.put("k", vec![0u8; 100 * 1024]).unwrap();
+        SimRemoteStore::new(mem, profile, 42)
+    }
+
+    #[test]
+    fn s3_get_pays_latency() {
+        let s = mk(RemoteProfile::s3().scaled(0.25)); // ~30 ms median
+        let t0 = Instant::now();
+        let data = s.get("k").unwrap();
+        assert_eq!(data.len(), 100 * 1024);
+        assert!(t0.elapsed() >= Duration::from_millis(5), "{:?}", t0.elapsed());
+        assert!(s.median_request_time() > 0.0);
+    }
+
+    #[test]
+    fn scratch_get_is_fast() {
+        let s = mk(RemoteProfile::scratch());
+        let t0 = Instant::now();
+        s.get("k").unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(50), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn async_path_overlaps_on_one_thread() {
+        // 8 concurrent async gets on a 1-thread runtime should take ~max
+        // service time, not ~sum — the asyncio win the paper reports.
+        let s = mk(RemoteProfile::s3().scaled(0.25));
+        let rt = asyncrt::Runtime::new(1);
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let s = s.clone();
+                rt.spawn(async move { s.get_async("k").await.unwrap().len() })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join(), 100 * 1024);
+        }
+        let seq_estimate: f64 = s.request_times().iter().sum();
+        assert!(
+            t0.elapsed().as_secs_f64() < 0.7 * seq_estimate,
+            "no overlap: wall {:?} vs sum {seq_estimate}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn profiles_by_name() {
+        for n in ["s3", "scratch", "ceph_os", "ceph_fs", "gluster_fs", "colab_s3"] {
+            assert_eq!(RemoteProfile::by_name(n).unwrap().name, n);
+        }
+        assert!(RemoteProfile::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let s = mk(RemoteProfile::scratch());
+        s.get("k").unwrap();
+        s.get("k").unwrap();
+        assert_eq!(s.stats().gets, 2);
+        assert_eq!(s.stats().bytes as usize, 2 * 100 * 1024);
+    }
+}

@@ -1,0 +1,337 @@
+//! Span telemetry — the "Measured activities" lane of the paper's Fig 1.
+//!
+//! Every instrumented activity (`get_batch`, `get_item`,
+//! `training_batch_to_device`, `run_training_batch`, the Lightning lanes,
+//! worker spawns…) is recorded as a [`Span`] with worker id, batch id and
+//! a start/end pair on a shared monotonic clock. Reports derive medians
+//! (Fig 14), timelines (Fig 2/17/19), fade-in/out histograms (Fig 23) and
+//! the Table 3 GPU-utilization aggregates from the same recorder.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// One recorded activity interval.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub name: &'static str,
+    pub worker: u32,
+    pub batch: i64,
+    /// start/end seconds on the recorder clock
+    pub t0: f64,
+    pub t1: f64,
+}
+
+impl Span {
+    pub fn duration(&self) -> f64 {
+        self.t1 - self.t0
+    }
+}
+
+/// Standard span names (the paper's measurement points).
+pub mod names {
+    pub const GET_BATCH: &str = "get_batch"; // next_data wait
+    pub const BATCH_INFLIGHT: &str = "batch_inflight"; // fetch start → queued
+    pub const GET_ITEM: &str = "get_item"; // Dataset __getitem__
+    pub const TO_DEVICE: &str = "training_batch_to_device";
+    pub const TRAIN_BATCH: &str = "run_training_batch";
+    pub const OPTIMIZER_STEP: &str = "optimizer_step";
+    pub const WORKER_SPAWN: &str = "worker_spawn";
+    pub const PIN_MEMORY: &str = "pin_memory";
+    // Lightning lanes (Fig 17)
+    pub const ADVANCE: &str = "advance";
+    pub const PRERUN: &str = "prerun";
+    pub const NEXT_DATA: &str = "next_data";
+    pub const PREP_TRAINING: &str = "prep_training";
+    pub const POSTRUN: &str = "postrun";
+}
+
+/// Thread-safe span recorder with a shared origin clock.
+pub struct Recorder {
+    origin: Instant,
+    spans: Mutex<Vec<Span>>,
+    enabled: AtomicBool,
+}
+
+impl Recorder {
+    pub fn new() -> Arc<Recorder> {
+        Arc::new(Recorder {
+            origin: Instant::now(),
+            spans: Mutex::new(Vec::new()),
+            enabled: AtomicBool::new(true),
+        })
+    }
+
+    /// Seconds since recorder creation.
+    pub fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, name: &'static str, worker: u32, batch: i64, t0: f64, t1: f64) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        self.spans.lock().unwrap().push(Span { name, worker, batch, t0, t1 });
+    }
+
+    /// Time a closure as a span.
+    pub fn time<T>(
+        &self,
+        name: &'static str,
+        worker: u32,
+        batch: i64,
+        f: impl FnOnce() -> T,
+    ) -> T {
+        let t0 = self.now();
+        let out = f();
+        self.record(name, worker, batch, t0, self.now());
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot all spans (sorted by start time).
+    pub fn snapshot(&self) -> Vec<Span> {
+        let mut v = self.spans.lock().unwrap().clone();
+        v.sort_by(|a, b| a.t0.partial_cmp(&b.t0).unwrap());
+        v
+    }
+
+    pub fn clear(&self) {
+        self.spans.lock().unwrap().clear();
+    }
+
+    /// Durations of all spans with the given name.
+    pub fn durations(&self, name: &str) -> Vec<f64> {
+        self.spans
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| s.duration())
+            .collect()
+    }
+
+    pub fn median(&self, name: &str) -> f64 {
+        stats::median(&self.durations(name))
+    }
+
+    /// Per-name summary table (Fig 14-style medians).
+    pub fn summary_table(&self, title: &str) -> Table {
+        use std::collections::BTreeMap;
+        let spans = self.spans.lock().unwrap();
+        let mut by_name: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+        for s in spans.iter() {
+            by_name.entry(s.name).or_default().push(s.duration());
+        }
+        let mut t = Table::new(
+            title,
+            &["span", "count", "median_s", "mean_s", "p90_s", "max_s"],
+        );
+        for (name, durs) in by_name {
+            let s = stats::Summary::of(&durs);
+            t.row(&[
+                name.to_string(),
+                s.count.to_string(),
+                format!("{:.4}", s.p50),
+                format!("{:.4}", s.mean),
+                format!("{:.4}", s.p90),
+                format!("{:.4}", s.max),
+            ]);
+        }
+        t
+    }
+
+    /// CSV export of the raw timeline (Fig 2 / Fig 17 data).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("name,worker,batch,t0,t1,duration\n");
+        for s in self.snapshot() {
+            out.push_str(&format!(
+                "{},{},{},{:.6},{:.6},{:.6}\n",
+                s.name,
+                s.worker,
+                s.batch,
+                s.t0,
+                s.t1,
+                s.duration()
+            ));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GPU utilization sampling (Table 3 metrics)
+// ---------------------------------------------------------------------------
+
+/// Shared gauges exported by the simulated device.
+#[derive(Debug, Default)]
+pub struct DeviceGauges {
+    /// busy-compute flag ⇒ util sample in percent ×100 (0 if idle)
+    pub util_x100: AtomicU64,
+    /// memory utilization in percent ×100
+    pub mem_x100: AtomicU64,
+}
+
+/// One 10 Hz utilization sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UtilSample {
+    pub t: f64,
+    pub util: f64,
+    pub mem: f64,
+}
+
+/// Sidecar sampler thread at `hz` (paper: 10 Hz).
+pub struct UtilSampler {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<Vec<UtilSample>>>,
+}
+
+impl UtilSampler {
+    pub fn start(rec: Arc<Recorder>, gauges: Arc<DeviceGauges>, hz: f64) -> UtilSampler {
+        let stop = Arc::new(AtomicBool::new(false));
+        let st = stop.clone();
+        let period = std::time::Duration::from_secs_f64(1.0 / hz);
+        let handle = std::thread::Builder::new()
+            .name("util-sampler".into())
+            .spawn(move || {
+                let mut samples = Vec::new();
+                while !st.load(Ordering::Relaxed) {
+                    samples.push(UtilSample {
+                        t: rec.now(),
+                        util: gauges.util_x100.load(Ordering::Relaxed) as f64 / 100.0,
+                        mem: gauges.mem_x100.load(Ordering::Relaxed) as f64 / 100.0,
+                    });
+                    std::thread::sleep(period);
+                }
+                samples
+            })
+            .expect("spawn util sampler");
+        UtilSampler { stop, handle: Some(handle) }
+    }
+
+    pub fn stop(mut self) -> Vec<UtilSample> {
+        self.stop.store(true, Ordering::Relaxed);
+        self.handle.take().map(|h| h.join().unwrap()).unwrap_or_default()
+    }
+}
+
+/// Table 3 aggregate: (util=0 %, mean util>0 %, mem=0 %, mean mem>0 %).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UtilAggregate {
+    pub util_zero_pct: f64,
+    pub util_nonzero_mean: f64,
+    pub mem_zero_pct: f64,
+    pub mem_nonzero_mean: f64,
+}
+
+pub fn aggregate_util(samples: &[UtilSample]) -> UtilAggregate {
+    let agg = |vals: Vec<f64>| -> (f64, f64) {
+        if vals.is_empty() {
+            return (f64::NAN, f64::NAN);
+        }
+        let zero = vals.iter().filter(|v| **v <= 0.0).count();
+        let nonzero: Vec<f64> = vals.iter().copied().filter(|v| *v > 0.0).collect();
+        (
+            100.0 * zero as f64 / vals.len() as f64,
+            stats::mean(&nonzero),
+        )
+    };
+    let (uz, um) = agg(samples.iter().map(|s| s.util).collect());
+    let (mz, mm) = agg(samples.iter().map(|s| s.mem).collect());
+    UtilAggregate {
+        util_zero_pct: uz,
+        util_nonzero_mean: um,
+        mem_zero_pct: mz,
+        mem_nonzero_mean: mm,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_median() {
+        let r = Recorder::new();
+        r.record(names::GET_ITEM, 0, 1, 0.0, 0.1);
+        r.record(names::GET_ITEM, 1, 1, 0.0, 0.3);
+        r.record(names::GET_ITEM, 2, 2, 0.0, 0.2);
+        assert_eq!(r.len(), 3);
+        assert!((r.median(names::GET_ITEM) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_closure() {
+        let r = Recorder::new();
+        let out = r.time(names::TRAIN_BATCH, 0, 0, || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            5
+        });
+        assert_eq!(out, 5);
+        let d = r.durations(names::TRAIN_BATCH);
+        assert_eq!(d.len(), 1);
+        assert!(d[0] >= 0.009);
+    }
+
+    #[test]
+    fn disabled_recorder_drops_spans() {
+        let r = Recorder::new();
+        r.set_enabled(false);
+        r.record("x", 0, 0, 0.0, 1.0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn csv_has_rows() {
+        let r = Recorder::new();
+        r.record(names::GET_BATCH, 0, 0, 0.1, 0.4);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("name,worker"));
+        assert!(csv.contains("get_batch,0,0"));
+    }
+
+    #[test]
+    fn summary_table_renders() {
+        let r = Recorder::new();
+        r.record(names::GET_BATCH, 0, 0, 0.0, 0.5);
+        r.record(names::TO_DEVICE, 0, 0, 0.5, 0.6);
+        let t = r.summary_table("spans");
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn util_sampler_and_aggregate() {
+        let rec = Recorder::new();
+        let gauges = Arc::new(DeviceGauges::default());
+        let sampler = UtilSampler::start(rec, gauges.clone(), 100.0);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        gauges.util_x100.store(7200, Ordering::Relaxed);
+        gauges.mem_x100.store(4000, Ordering::Relaxed);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let samples = sampler.stop();
+        assert!(samples.len() >= 5);
+        let agg = aggregate_util(&samples);
+        assert!(agg.util_zero_pct > 10.0 && agg.util_zero_pct < 90.0);
+        assert!((agg.util_nonzero_mean - 72.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn aggregate_empty_is_nan() {
+        let a = aggregate_util(&[]);
+        assert!(a.util_zero_pct.is_nan());
+    }
+}

@@ -1,0 +1,235 @@
+//! A small declarative CLI argument parser (clap is not available in the
+//! offline vendor set). Supports `--flag`, `--key value`, `--key=value`,
+//! positional arguments, defaults, and auto-generated help.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument set for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            values: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required `--name <value>`.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let lhs = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = match &o.default {
+                Some(d) if !o.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("{lhs:<26} {}{def}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse a token list (exclusive of the program/subcommand name).
+    pub fn parse(mut self, tokens: &[String]) -> Result<Parsed> {
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if t == "--help" || t == "-h" {
+                bail!("{}", self.help_text());
+            }
+            if let Some(stripped) = t.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .cloned();
+                let Some(opt) = opt else {
+                    bail!("unknown option --{key}\n\n{}", self.help_text());
+                };
+                let val = if opt.is_flag {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    if i >= tokens.len() {
+                        bail!("--{key} expects a value");
+                    }
+                    tokens[i].clone()
+                };
+                self.values.insert(key, val);
+            } else {
+                self.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        // defaults + required check
+        for o in &self.opts {
+            if !self.values.contains_key(&o.name) {
+                if let Some(d) = &o.default {
+                    self.values.insert(o.name.clone(), d.clone());
+                } else if !o.is_flag {
+                    bail!("missing required --{}\n\n{}", o.name, self.help_text());
+                }
+            }
+        }
+        Ok(Parsed { values: self.values, positional: self.positional })
+    }
+}
+
+/// Parsed argument values with typed getters.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("undeclared option {name}"))
+    }
+
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        matches!(self.values.get(name).map(|s| s.as_str()), Some("true"))
+    }
+
+    /// Comma-separated list of usize ("1,2,4,8").
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| Ok(s.trim().parse()?))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = Args::new("t", "test")
+            .opt("workers", "4", "n workers")
+            .flag("verbose", "chatty")
+            .parse(&toks(&["--workers", "8"]))
+            .unwrap();
+        assert_eq!(p.usize("workers").unwrap(), 8);
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let p = Args::new("t", "test")
+            .opt("mode", "a", "")
+            .flag("fast", "")
+            .parse(&toks(&["--mode=b", "--fast", "pos1"]))
+            .unwrap();
+        assert_eq!(p.get("mode"), "b");
+        assert!(p.flag("fast"));
+        assert_eq!(p.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn required_missing_errors() {
+        let r = Args::new("t", "test").req("out", "output").parse(&toks(&[]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let r = Args::new("t", "test").parse(&toks(&["--nope"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let p = Args::new("t", "test")
+            .opt("ws", "1,2,4", "")
+            .parse(&toks(&[]))
+            .unwrap();
+        assert_eq!(p.usize_list("ws").unwrap(), vec![1, 2, 4]);
+    }
+}

@@ -1,0 +1,68 @@
+//! Human-readable formatting of bytes, rates and durations for reports.
+
+/// "12.3 KiB", "4.6 MiB", ...
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Throughput in Mbit/s from bytes and seconds, using the paper's
+/// convention (`size/1024^2*8`).
+pub fn mbit_s(bytes: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return f64::NAN;
+    }
+    bytes as f64 / (1024.0 * 1024.0) * 8.0 / secs
+}
+
+pub fn fmt_mbit_s(bytes: u64, secs: f64) -> String {
+    format!("{:.2} Mbit/s", mbit_s(bytes, secs))
+}
+
+/// "1.23 s", "45.6 ms", "789 µs"
+pub fn fmt_duration(secs: f64) -> String {
+    if secs.is_nan() {
+        "n/a".to_string()
+    } else if secs >= 1.0 {
+        format!("{secs:.2} s")
+    } else if secs >= 1e-3 {
+        format!("{:.1} ms", secs * 1e3)
+    } else {
+        format!("{:.0} µs", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.0 MiB");
+    }
+
+    #[test]
+    fn mbit_convention_matches_paper() {
+        // 1 MiB in 1 s = 8 Mbit/s under the paper's 1024^2 convention
+        assert!((mbit_s(1024 * 1024, 1.0) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(fmt_duration(2.5), "2.50 s");
+        assert_eq!(fmt_duration(0.0456), "45.6 ms");
+        assert_eq!(fmt_duration(500e-6), "500 µs");
+    }
+}

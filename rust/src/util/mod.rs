@@ -1,0 +1,74 @@
+//! Foundation utilities: deterministic RNG, statistics, JSON, ascii
+//! tables, a small CLI argument parser, a property-testing harness, and
+//! byte/duration formatting.
+//!
+//! All of these exist in-tree because the reproduction builds fully
+//! offline (no crates.io): `rng` replaces `rand`, `prop` replaces
+//! `proptest`, `cli` replaces `clap`, `json` replaces `serde_json`.
+
+pub mod cli;
+pub mod fmt;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use fmt::{fmt_bytes, fmt_duration, fmt_mbit_s};
+pub use rng::Rng;
+pub use stats::Summary;
+
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Monotonic timestamp in seconds since an arbitrary process-local epoch.
+#[derive(Clone, Copy)]
+pub struct Clock {
+    origin: Instant,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Self { origin: Instant::now() }
+    }
+
+    /// Seconds since this clock was created.
+    pub fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.origin.elapsed()
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Wall-clock unix timestamp (the paper logs unix timestamps).
+pub fn unix_now() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default()
+        .as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotonic() {
+        let c = Clock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn unix_now_is_post_2020() {
+        assert!(unix_now() > 1_577_836_800.0);
+    }
+}

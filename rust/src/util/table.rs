@@ -1,0 +1,165 @@
+//! ASCII table rendering for benchmark reports (the harness prints the
+//! same rows the paper's tables/figures report).
+
+/// A simple column-aligned table with a title and optional footnote.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub note: Option<String>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            note: None,
+        }
+    }
+
+    /// Fully-dynamic constructor (computed headers, e.g. sweep columns).
+    pub fn new_dyn(title: impl Into<String>, header: Vec<String>) -> Self {
+        Table { title: title.into(), header, rows: Vec::new(), note: None }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    pub fn note(&mut self, note: &str) -> &mut Self {
+        self.note = Some(note.to_string());
+        self
+    }
+
+    /// Render with unicode box-drawing, columns auto-sized.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep = |l: char, m: char, r: char| {
+            let mut s = String::new();
+            s.push(l);
+            for (i, w) in widths.iter().enumerate() {
+                s.push_str(&"─".repeat(w + 2));
+                s.push(if i + 1 == ncols { r } else { m });
+            }
+            s.push('\n');
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("│");
+            for (i, c) in cells.iter().enumerate() {
+                let pad = widths[i] - c.chars().count();
+                // numbers right-aligned, text left-aligned
+                if c.parse::<f64>().is_ok() {
+                    s.push_str(&format!(" {}{} │", " ".repeat(pad), c));
+                } else {
+                    s.push_str(&format!(" {}{} │", c, " ".repeat(pad)));
+                }
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        out.push_str(&sep('┌', '┬', '┐'));
+        out.push_str(&fmt_row(&self.header));
+        out.push_str(&sep('├', '┼', '┤'));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out.push_str(&sep('└', '┴', '┘'));
+        if let Some(n) = &self.note {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+
+    /// CSV export (results/ directory).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format an f64 with `digits` decimals, "n/a" for NaN.
+pub fn num(x: f64, digits: usize) -> String {
+    if x.is_nan() {
+        "n/a".to_string()
+    } else {
+        format!("{x:.digits$}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(&["alpha".into(), "1.50".into()]);
+        t.row(&["b".into(), "222.00".into()]);
+        let s = t.render();
+        assert!(s.contains("## demo"));
+        assert!(s.contains("alpha"));
+        // all lines between borders have equal display width
+        let lines: Vec<&str> = s.lines().filter(|l| l.starts_with('│')).collect();
+        let w = lines[0].chars().count();
+        assert!(lines.iter().all(|l| l.chars().count() == w));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(&["has,comma".into()]);
+        assert_eq!(t.to_csv(), "a\n\"has,comma\"\n");
+    }
+
+    #[test]
+    fn num_formats() {
+        assert_eq!(num(1.23456, 2), "1.23");
+        assert_eq!(num(f64::NAN, 2), "n/a");
+    }
+}

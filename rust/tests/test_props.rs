@@ -1,0 +1,304 @@
+//! Property-based tests (in-tree `util::prop` harness) on the
+//! coordinator invariants: batching partitions, round-robin routing,
+//! order restoration after disassembly, sampler permutations, LRU cache
+//! capacity/accounting, token-bucket (Link) conservation, and stats
+//! bounds.
+
+use std::sync::Arc;
+
+use cdl::dataloader::collate::restore_order;
+use cdl::dataloader::sampler::{assign_round_robin, batches, Sampler};
+use cdl::simnet::Link;
+use cdl::storage::{MemStore, ObjectStore, VarnishCache};
+use cdl::util::prop::{check, gen, shrink_vec};
+use cdl::util::rng::Rng;
+use cdl::util::stats;
+
+#[test]
+fn prop_batching_partitions_order() {
+    check(
+        "batching partitions the order exactly",
+        |rng| {
+            let n = rng.below(500);
+            let bs = rng.range(1, 64);
+            (n, bs)
+        },
+        |&(n, bs)| {
+            let order: Vec<usize> = (0..n).collect();
+            let bs_list = batches(&order, bs, false);
+            let flat: Vec<usize> = bs_list.iter().flatten().copied().collect();
+            if flat != order {
+                return Err("concatenated batches != order".into());
+            }
+            if bs_list.iter().rev().skip(1).any(|b| b.len() != bs) {
+                return Err("non-final batch with wrong size".into());
+            }
+            if let Some(last) = bs_list.last() {
+                if last.is_empty() || last.len() > bs {
+                    return Err("bad final batch size".into());
+                }
+            }
+            // drop_last variant only removes a partial tail
+            let dropped = batches(&order, bs, true);
+            if dropped.iter().any(|b| b.len() != bs) {
+                return Err("drop_last left a partial batch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_round_robin_routing_complete_and_balanced() {
+    check(
+        "round-robin covers all batches, balanced ±1",
+        |rng| {
+            let n_batches = rng.below(200);
+            let workers = rng.range(1, 16);
+            (n_batches, workers)
+        },
+        |&(n_batches, workers)| {
+            let plan: Vec<Vec<usize>> =
+                (0..n_batches).map(|i| vec![i]).collect();
+            let assigned = assign_round_robin(plan, workers);
+            let mut ids: Vec<usize> = assigned
+                .iter()
+                .flat_map(|w| w.iter().map(|(id, _)| *id))
+                .collect();
+            ids.sort_unstable();
+            if ids != (0..n_batches).collect::<Vec<_>>() {
+                return Err("batch ids lost or duplicated".into());
+            }
+            let counts: Vec<usize> = assigned.iter().map(|w| w.len()).collect();
+            let (min, max) = (
+                counts.iter().min().copied().unwrap_or(0),
+                counts.iter().max().copied().unwrap_or(0),
+            );
+            if max - min > 1 {
+                return Err(format!("unbalanced: {counts:?}"));
+            }
+            // worker k's batches ≡ k (mod workers): torch routing
+            for (w, lst) in assigned.iter().enumerate() {
+                if lst.iter().any(|(id, _)| id % assigned.len() != w) {
+                    return Err(format!("worker {w} got foreign batch"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_restore_order_inverts_any_arrival_permutation() {
+    check(
+        "restore_order inverts arrival shuffles",
+        |rng| {
+            let n = rng.range(1, 64);
+            let perm = {
+                let mut r = rng.fork(1);
+                r.permutation(n)
+            };
+            (n, perm)
+        },
+        |&(n, ref perm)| {
+            // fabricate samples whose index encodes their position
+            let fetched: Vec<(usize, cdl::dataset::Sample)> = perm
+                .iter()
+                .map(|&pos| {
+                    (
+                        pos,
+                        cdl::dataset::Sample {
+                            index: 1000 + pos,
+                            label: 0,
+                            crop: cdl::data::U8Tensor::zeros(&[1, 1, 3]),
+                            raw_bytes: 0,
+                            fetch_time: 0.0,
+                            decode_time: 0.0,
+                        },
+                    )
+                })
+                .collect();
+            let sorted = restore_order(n, fetched);
+            for (pos, s) in sorted.iter().enumerate() {
+                if s.index != 1000 + pos {
+                    return Err(format!("position {pos} holds {}", s.index));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_random_sampler_is_permutation() {
+    check(
+        "random sampler yields a permutation for any (n, epoch, seed)",
+        |rng| (rng.below(300), rng.below(10), rng.next_u64()),
+        |&(n, epoch, seed)| {
+            let order = Sampler::Random { seed }.order(n, epoch);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            if sorted != (0..n).collect::<Vec<_>>() {
+                return Err("not a permutation".into());
+            }
+            // determinism
+            if order != (Sampler::Random { seed }).order(n, epoch) {
+                return Err("not deterministic".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lru_cache_never_exceeds_capacity_and_accounts() {
+    check_cache_property();
+}
+
+fn check_cache_property() {
+    check(
+        "LRU cache: bytes ≤ capacity; gets = hits + misses",
+        |rng| {
+            let capacity = rng.range(100, 2000) as u64;
+            let accesses = gen::usize_vec(rng, 30, 120);
+            let sizes: Vec<usize> =
+                (0..30).map(|_| rng.range(10, 400)).collect();
+            (capacity, accesses, sizes)
+        },
+        |(capacity, accesses, sizes)| {
+            let mem = Arc::new(MemStore::new("b"));
+            for (i, sz) in sizes.iter().enumerate() {
+                mem.put(&format!("k{i}"), vec![0u8; *sz]).unwrap();
+            }
+            let cache = VarnishCache::new(mem, *capacity);
+            for &a in accesses {
+                cache.get(&format!("k{a}")).unwrap();
+                if cache.cached_bytes() > *capacity {
+                    return Err(format!(
+                        "cache {} > cap {capacity}",
+                        cache.cached_bytes()
+                    ));
+                }
+            }
+            let s = cache.stats();
+            if s.gets != s.hits + s.misses {
+                return Err(format!("{s:?}: gets != hits+misses"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_link_reservations_conserve_time() {
+    check(
+        "link FIFO: total wait ≥ sum(bytes)/rate for back-to-back reserves",
+        |rng| {
+            let mbit = rng.uniform(1.0, 1000.0);
+            let sizes: Vec<usize> =
+                (0..rng.range(1, 20)).map(|_| rng.range(1, 1 << 20)).collect();
+            (mbit, sizes)
+        },
+        |(mbit, sizes)| {
+            let link = Link::new_mbit_s(*mbit);
+            let total_bytes: usize = sizes.iter().sum();
+            let mut last_wait = std::time::Duration::ZERO;
+            for &s in sizes {
+                last_wait = link.reserve(s as u64);
+            }
+            let floor = total_bytes as f64 / (mbit * 1024.0 * 1024.0 / 8.0);
+            // the last reservation completes no earlier than the serialized sum
+            if last_wait.as_secs_f64() < floor * 0.95 {
+                return Err(format!(
+                    "last wait {:.4}s < serialized floor {floor:.4}s",
+                    last_wait.as_secs_f64()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_percentiles_bounded_and_monotone() {
+    check(
+        "percentiles lie in [min,max] and are monotone in p",
+        |rng| gen::pos_f64_vec(rng, 200),
+        |xs| {
+            if xs.is_empty() {
+                return Ok(());
+            }
+            let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = xs.iter().cloned().fold(0.0, f64::max);
+            let mut prev = f64::NEG_INFINITY;
+            for p in [0.0, 10.0, 50.0, 90.0, 100.0] {
+                let v = stats::percentile(xs, p);
+                if v < lo - 1e-9 || v > hi + 1e-9 {
+                    return Err(format!("p{p} = {v} outside [{lo}, {hi}]"));
+                }
+                if v < prev - 1e-12 {
+                    return Err(format!("p{p} not monotone"));
+                }
+                prev = v;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shrinker_example_tar_roundtrip() {
+    // round-trip tar for arbitrary entry size vectors, with shrinking
+    cdl::util::prop::check_shrink(
+        "tar roundtrip for arbitrary sizes",
+        |rng| gen::usize_vec(rng, 3000, 12),
+        shrink_vec,
+        |sizes| {
+            let entries: Vec<cdl::shards::TarEntry> = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| cdl::shards::TarEntry {
+                    name: format!("e{i}.bin"),
+                    data: vec![(i % 251) as u8; s],
+                })
+                .collect();
+            let tar = cdl::shards::write_tar(&entries).map_err(|e| e.to_string())?;
+            let back = cdl::shards::read_tar(&tar).map_err(|e| e.to_string())?;
+            if back != entries {
+                return Err("tar roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_random_tables() {
+    check(
+        "json roundtrip of random benchmark-report-shaped docs",
+        |rng: &mut Rng| {
+            let mut obj = cdl::util::json::Json::obj();
+            for i in 0..rng.below(12) {
+                match rng.below(3) {
+                    0 => obj.set(&format!("k{i}"), rng.f64()),
+                    1 => obj.set(&format!("k{i}"), format!("v{}", rng.next_u32())),
+                    _ => obj.set(
+                        &format!("k{i}"),
+                        (0..rng.below(5))
+                            .map(|j| j as f64)
+                            .collect::<Vec<f64>>(),
+                    ),
+                };
+            }
+            obj
+        },
+        |doc| {
+            let text = doc.pretty();
+            let back = cdl::util::json::parse(&text).map_err(|e| e.to_string())?;
+            if &back != doc {
+                return Err("json roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,209 @@
+//! Integration tests for the PJRT runtime against the real AOT
+//! artifacts: loss numbers must match the python-side smoke values from
+//! `manifest.json`, and the kernel-only artifacts must match rust-side
+//! reference math.
+//!
+//! Skipped (with a loud message) when `artifacts/` hasn't been built —
+//! run `make artifacts` first.
+
+use std::sync::Arc;
+
+use cdl::runtime::{example_batch, Dtype, HostTensor, XlaEngine};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn engine_loads_and_lists_artifacts() {
+    let dir = require_artifacts!();
+    let engine = XlaEngine::start(dir).unwrap();
+    let names = engine.manifest().artifact_names();
+    assert!(names.iter().any(|n| n == "init"), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("train_step")));
+    assert!(engine.manifest().num_params() > 100_000);
+}
+
+#[test]
+fn init_params_match_manifest_shapes() {
+    let dir = require_artifacts!();
+    let engine = XlaEngine::start(dir).unwrap();
+    engine.init_params().unwrap();
+    let params = engine.get_params().unwrap();
+    let specs = engine.manifest().param_specs().unwrap();
+    assert_eq!(params.len(), specs.len());
+    for (p, s) in params.iter().zip(&specs) {
+        assert_eq!(p.dims, s.shape, "{}", s.name);
+        assert_eq!(p.dtype, Dtype::F32, "{}", s.name);
+    }
+    let total: usize = params.iter().map(|p| p.bytes.len() / 4).sum();
+    assert_eq!(total, engine.manifest().num_params());
+}
+
+#[test]
+fn train_step_reproduces_python_smoke_losses() {
+    let dir = require_artifacts!();
+    let engine = XlaEngine::start(dir).unwrap();
+    let smoke = engine.manifest().smoke().expect("manifest has smoke block");
+    engine.init_params().unwrap();
+    let classes = engine.manifest().num_classes();
+    let (images, labels) = example_batch(smoke.batch, smoke.image, classes);
+    for (step, want) in smoke.losses.iter().enumerate() {
+        let got = engine
+            .train_step(&smoke.variant, images.clone(), labels.clone())
+            .unwrap() as f64;
+        let rel = ((got - want) / want).abs();
+        assert!(
+            rel < smoke.rtol.max(1e-3),
+            "step {step}: rust loss {got} vs python {want} (rel {rel:.2e})"
+        );
+    }
+}
+
+#[test]
+fn training_reduces_loss_over_steps() {
+    let dir = require_artifacts!();
+    let engine = XlaEngine::start(dir).unwrap();
+    engine.init_params().unwrap();
+    let smoke = engine.manifest().smoke().unwrap();
+    let classes = engine.manifest().num_classes();
+    let (images, labels) = example_batch(smoke.batch, smoke.image, classes);
+    let mut losses = Vec::new();
+    for _ in 0..5 {
+        losses.push(
+            engine
+                .train_step(&smoke.variant, images.clone(), labels.clone())
+                .unwrap(),
+        );
+    }
+    assert!(
+        losses[4] < losses[0],
+        "loss did not decrease on a fixed batch: {losses:?}"
+    );
+}
+
+#[test]
+fn normalize_kernel_artifact_matches_reference() {
+    let dir = require_artifacts!();
+    let engine = XlaEngine::start(dir).unwrap();
+    // artifact shape: (4, 32, 32, 3) u8
+    let n = 4 * 32 * 32 * 3;
+    let data: Vec<u8> = (0..n).map(|i| (i * 7 % 256) as u8).collect();
+    let input = HostTensor::from_u8(&[4, 32, 32, 3], data.clone());
+    let out = engine.run("normalize_b4_i32", vec![input]).unwrap();
+    assert_eq!(out.len(), 1);
+    let got = out[0].to_f32_vec();
+    // rust-side reference: (x/255 - mean)/std per channel
+    const MEAN: [f32; 3] = [0.485, 0.456, 0.406];
+    const STD: [f32; 3] = [0.229, 0.224, 0.225];
+    for (i, (&raw, &g)) in data.iter().zip(&got).enumerate() {
+        let c = i % 3;
+        let want = (raw as f32 / 255.0 - MEAN[c]) / STD[c];
+        assert!(
+            (g - want).abs() < 1e-5,
+            "elem {i}: got {g}, want {want}"
+        );
+    }
+}
+
+#[test]
+fn matmul_kernel_artifact_matches_reference() {
+    let dir = require_artifacts!();
+    let engine = XlaEngine::start(dir).unwrap();
+    let n = 128usize;
+    let mut rng = cdl::util::rng::Rng::new(42);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let out = engine
+        .run(
+            "matmul_128",
+            vec![
+                HostTensor::from_f32(&[n, n], &a),
+                HostTensor::from_f32(&[n, n], &b),
+            ],
+        )
+        .unwrap();
+    let got = out[0].to_f32_vec();
+    // spot-check a handful of entries against naive matmul
+    for &(i, j) in &[(0usize, 0usize), (1, 7), (64, 64), (127, 127), (13, 100)] {
+        let mut want = 0f32;
+        for k in 0..n {
+            want += a[i * n + k] * b[k * n + j];
+        }
+        let g = got[i * n + j];
+        assert!(
+            (g - want).abs() < 1e-3 * (1.0 + want.abs()),
+            "({i},{j}): got {g}, want {want}"
+        );
+    }
+}
+
+#[test]
+fn forward_produces_finite_logits() {
+    let dir = require_artifacts!();
+    let engine = XlaEngine::start(dir).unwrap();
+    engine.init_params().unwrap();
+    let classes = engine.manifest().num_classes();
+    let (images, _) = example_batch(16, 64, classes);
+    let logits = engine.forward("forward_b16_i64", images).unwrap();
+    assert_eq!(logits.dims, vec![16, classes]);
+    assert!(logits.to_f32_vec().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn xla_device_trains_through_the_full_stack() {
+    // the e2e composition test: loader -> device(XLA) -> loss
+    let dir = require_artifacts!();
+    use cdl::data::synth::{generate_corpus, CorpusSpec};
+    use cdl::data::AugmentConfig;
+    use cdl::dataloader::{Dataloader, DataloaderConfig, FetchImpl};
+    use cdl::dataset::{Dataset, ImageFolderDataset};
+    use cdl::device::Device;
+    use cdl::storage::{MemStore, ObjectStore};
+    use cdl::telemetry::Recorder;
+
+    let engine = Arc::new(XlaEngine::start(dir).unwrap());
+    engine.init_params().unwrap();
+    let variant = engine.manifest().train_variant(8, 32).unwrap();
+
+    let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+    generate_corpus(&mem, &CorpusSpec::tiny(32)).unwrap();
+    let ds: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
+        mem,
+        AugmentConfig { crop: 32, ..Default::default() },
+    ));
+    let rec = Recorder::new();
+    let dl = Dataloader::new(
+        ds,
+        DataloaderConfig {
+            batch_size: 8,
+            num_workers: 2,
+            fetch_impl: FetchImpl::Threaded,
+            drop_last: true,
+            spawn_cost_override: Some(std::time::Duration::ZERO),
+            ..Default::default()
+        },
+        rec.clone(),
+    );
+    let device = Device::xla(engine, &variant, rec);
+    let mut losses = Vec::new();
+    for b in dl.epoch(0) {
+        let db = device.to_device(b);
+        losses.push(device.train_batch(&db).unwrap());
+    }
+    assert_eq!(losses.len(), 4);
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
