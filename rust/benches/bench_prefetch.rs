@@ -1,0 +1,10 @@
+//! `cargo bench --bench bench_prefetch` — regenerates the prefetch-engine
+//! experiment: readahead-depth sweep over the s3/ceph_os/gluster_fs
+//! profiles plus the LRU-vs-2Q hot-tier comparison.
+//! Scale via CDL_SCALE=quick|paper|<items multiplier> (default quick).
+
+fn main() -> anyhow::Result<()> {
+    let scale = cdl::bench::Scale::from_env();
+    cdl::bench::run_experiment("prefetch", scale)?;
+    Ok(())
+}

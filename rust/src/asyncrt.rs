@@ -289,8 +289,11 @@ struct TimerDriver {
     seq: AtomicU64,
 }
 
-static TIMER: once_cell::sync::Lazy<Arc<TimerDriver>> =
-    once_cell::sync::Lazy::new(|| {
+static TIMER: std::sync::OnceLock<Arc<TimerDriver>> = std::sync::OnceLock::new();
+
+/// Lazily-started shared timer driver (std-only `Lazy` replacement).
+fn timer() -> &'static Arc<TimerDriver> {
+    TIMER.get_or_init(|| {
         let d = Arc::new(TimerDriver {
             heap: Mutex::new(BinaryHeap::new()),
             cv: Condvar::new(),
@@ -302,7 +305,8 @@ static TIMER: once_cell::sync::Lazy<Arc<TimerDriver>> =
             .spawn(move || timer_loop(dd))
             .expect("spawn timer thread");
         d
-    });
+    })
+}
 
 fn timer_loop(d: Arc<TimerDriver>) {
     let mut heap = d.heap.lock().unwrap();
@@ -349,7 +353,7 @@ impl Future for Sleep {
         }
         // (Re-)register; registering on every poll is correct (the stale
         // entry just fires a spurious wake) and keeps the code simple.
-        let d = &*TIMER;
+        let d = timer();
         let entry = TimerEntry {
             deadline: self.deadline,
             seq: d.seq.fetch_add(1, Ordering::Relaxed),

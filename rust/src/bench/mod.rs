@@ -11,6 +11,7 @@
 pub mod exp_appendix;
 pub mod exp_core;
 pub mod exp_params;
+pub mod exp_prefetch;
 pub mod rig;
 
 use std::path::PathBuf;
@@ -93,10 +94,12 @@ pub fn emit_raw(exp: &str, name: &str, content: &str) -> Result<()> {
     Ok(())
 }
 
-/// All experiment ids, in paper order.
+/// All experiment ids: the paper's figures in paper order, then the
+/// repo's own extensions ("prefetch": sampler-ahead engine sweep).
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "t3", "f2", "f5", "f6", "f7", "f8", "f9", "f10", "f11", "f12", "f13",
     "f14", "f15", "f16", "t10", "f17", "f20", "f21", "f22", "f23",
+    "prefetch",
 ];
 
 /// Dispatch one experiment by id.
@@ -122,6 +125,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> Result<()> {
         "f21" => exp_appendix::f21_gil(scale),
         "f22" => exp_appendix::f22_shard_loaders(scale),
         "f23" => exp_appendix::f23_fade(scale),
+        "prefetch" => exp_prefetch::prefetch_sweep(scale),
         "all" => {
             for id in ALL_EXPERIMENTS {
                 println!("\n━━━ experiment {id} ━━━");

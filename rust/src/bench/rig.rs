@@ -12,6 +12,7 @@ use crate::dataloader::{Dataloader, DataloaderConfig, FetchImpl};
 use crate::dataset::{Dataset, ImageFolderDataset};
 use crate::device::Device;
 use crate::gil;
+use crate::prefetch::{CachePolicy, PrefetchConfig, PrefetchStore};
 use crate::storage::{
     MemStore, ObjectStore, RemoteProfile, SimRemoteStore, VarnishCache,
 };
@@ -33,6 +34,10 @@ pub struct RigSpec {
     pub fetch_impl: FetchImpl,
     pub num_fetch_workers: usize,
     pub batch_pool: usize,
+    /// sampler-ahead readahead window in items (0 = no prefetch engine)
+    pub prefetch_depth: usize,
+    /// hot-tier policy for the prefetch cache
+    pub prefetch_policy: CachePolicy,
     pub lazy_init: bool,
     pub runtime: gil::Runtime,
     pub trainer: TrainerKind,
@@ -56,6 +61,8 @@ impl RigSpec {
             fetch_impl: FetchImpl::Vanilla,
             num_fetch_workers: 16,
             batch_pool: 0,
+            prefetch_depth: 0,
+            prefetch_policy: CachePolicy::Lru,
             lazy_init: true,
             runtime: gil::Runtime::Python,
             trainer: TrainerKind::Torch,
@@ -93,19 +100,23 @@ pub struct Rig {
     pub store: Arc<dyn ObjectStore>,
     pub remote: Option<Arc<SimRemoteStore>>,
     pub cache: Option<Arc<VarnishCache>>,
+    pub prefetch: Option<Arc<PrefetchStore>>,
     pub corpus_bytes: u64,
 }
 
-/// Build the storage stack for a spec. Returns (top-of-stack store,
-/// remote layer handle, cache handle, corpus bytes).
-pub fn build_store(
-    spec: &RigSpec,
-) -> Result<(
-    Arc<dyn ObjectStore>,
-    Option<Arc<SimRemoteStore>>,
-    Option<Arc<VarnishCache>>,
-    u64,
-)> {
+/// Assembled storage stack: the top-of-stack store plus handles into
+/// each optional layer (new layers extend this struct, not every
+/// `build_store` call site).
+pub struct StorageStack {
+    pub store: Arc<dyn ObjectStore>,
+    pub remote: Option<Arc<SimRemoteStore>>,
+    pub cache: Option<Arc<VarnishCache>>,
+    pub prefetch: Option<Arc<PrefetchStore>>,
+    pub corpus_bytes: u64,
+}
+
+/// Build the storage stack for a spec.
+pub fn build_store(spec: &RigSpec) -> Result<StorageStack> {
     let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("corpus"));
     let (_, total) = generate_corpus(
         &mem,
@@ -138,13 +149,33 @@ pub fn build_store(
         } else {
             (store, None)
         };
-    Ok((store, remote, cache, total))
+    // sampler-ahead prefetch engine on top of the stack (hot tier over
+    // whatever sits below as the warm tier)
+    let (store, prefetch): (Arc<dyn ObjectStore>, Option<Arc<PrefetchStore>>) =
+        if spec.prefetch_depth > 0 {
+            let p = PrefetchStore::new(
+                store,
+                PrefetchConfig {
+                    depth: spec.prefetch_depth,
+                    policy: spec.prefetch_policy,
+                    ..Default::default()
+                },
+            );
+            (p.clone() as Arc<dyn ObjectStore>, Some(p))
+        } else {
+            (store, None)
+        };
+    Ok(StorageStack { store, remote, cache, prefetch, corpus_bytes: total })
 }
 
 /// Build the full rig.
 pub fn build(spec: &RigSpec) -> Result<Rig> {
     let recorder = Recorder::new();
-    let (store, remote, cache, corpus_bytes) = build_store(spec)?;
+    let StorageStack { store, remote, cache, prefetch, corpus_bytes } =
+        build_store(spec)?;
+    if let Some(p) = &prefetch {
+        p.set_recorder(recorder.clone());
+    }
     let dataset: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
         store.clone(),
         AugmentConfig { crop: spec.crop, seed: spec.seed, ..Default::default() },
@@ -156,6 +187,8 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
         fetch_impl: spec.fetch_impl,
         num_fetch_workers: spec.num_fetch_workers,
         batch_pool: spec.batch_pool,
+        prefetch_depth: spec.prefetch_depth,
+        prefetch_policy: spec.prefetch_policy,
         lazy_init: spec.lazy_init,
         runtime: spec.runtime,
         seed: spec.seed,
@@ -176,6 +209,7 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
         store,
         remote,
         cache,
+        prefetch,
         corpus_bytes,
     })
 }
@@ -235,7 +269,25 @@ mod tests {
         let rig = build(&spec).unwrap();
         assert!(rig.cache.is_some());
         assert!(rig.remote.is_some());
+        assert!(rig.prefetch.is_none());
         assert!(rig.store.label().starts_with("varnish"));
+    }
+
+    #[test]
+    fn prefetch_layer_attaches_and_serves_epoch() {
+        let mut spec = RigSpec::quick("s3", 0.02);
+        spec.items = 24;
+        spec.batch_size = 8;
+        spec.prefetch_depth = 16;
+        let rig = build(&spec).unwrap();
+        assert!(rig.prefetch.is_some());
+        assert!(rig.store.label().starts_with("prefetch(s3"));
+        let (_, _, n) = drain_epoch(&rig);
+        assert_eq!(n, 3);
+        let p = rig.prefetch.as_ref().unwrap();
+        let c = p.counters();
+        assert_eq!(c.gets, 24, "{c:?}");
+        assert!(c.issued > 0, "engine idle: {c:?}");
     }
 
     #[test]

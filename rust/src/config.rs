@@ -9,6 +9,8 @@
 //! num_workers = 4
 //! fetch_impl = threaded
 //! num_fetch_workers = 16
+//! prefetch_depth = 128      # sampler-ahead readahead window (items)
+//! prefetch_policy = 2q      # hot-tier policy: lru | 2q
 //! trainer = torch
 //! epochs = 2
 //! latency_scale = 0.25
@@ -120,6 +122,14 @@ impl ExperimentConfig {
             }
             "num_fetch_workers" => self.loader.num_fetch_workers = value.parse()?,
             "batch_pool" => self.loader.batch_pool = value.parse()?,
+            "prefetch_depth" => self.loader.prefetch_depth = value.parse()?,
+            "prefetch_policy" => {
+                self.loader.prefetch_policy =
+                    match crate::prefetch::CachePolicy::by_name(value) {
+                        Some(p) => p,
+                        None => bail!("unknown prefetch_policy {value} (lru|2q)"),
+                    }
+            }
             "pin_memory" => self.loader.pin_memory = value.parse()?,
             "start_method" => {
                 self.loader.start_method = match value {
@@ -190,6 +200,19 @@ mod tests {
         assert!(cfg.set("nope", "1").is_err());
         assert!(cfg.set("items", "abc").is_err());
         assert!(cfg.set("fetch_impl", "warp").is_err());
+        assert!(cfg.set("prefetch_policy", "arc").is_err());
+    }
+
+    #[test]
+    fn prefetch_knobs_parse() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_text("prefetch_depth = 128\nprefetch_policy = 2q\n")
+            .unwrap();
+        assert_eq!(cfg.loader.prefetch_depth, 128);
+        assert_eq!(
+            cfg.loader.prefetch_policy,
+            crate::prefetch::CachePolicy::TwoQ
+        );
     }
 
     #[test]

@@ -104,26 +104,25 @@ impl SimgImage {
 /// loop — decode is the loader's per-item CPU hot path, see
 /// EXPERIMENTS.md §Perf).
 pub fn crc32(data: &[u8]) -> u32 {
-    static TABLES: once_cell::sync::Lazy<[[u32; 256]; 8]> =
-        once_cell::sync::Lazy::new(|| {
-            let mut t = [[0u32; 256]; 8];
-            for i in 0..256usize {
-                let mut c = i as u32;
-                for _ in 0..8 {
-                    c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
-                }
-                t[0][i] = c;
+    static TABLES: std::sync::OnceLock<[[u32; 256]; 8]> = std::sync::OnceLock::new();
+    let t = TABLES.get_or_init(|| {
+        let mut t = [[0u32; 256]; 8];
+        for i in 0..256usize {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
             }
-            for i in 0..256usize {
-                let mut c = t[0][i];
-                for k in 1..8 {
-                    c = t[0][(c & 0xFF) as usize] ^ (c >> 8);
-                    t[k][i] = c;
-                }
+            t[0][i] = c;
+        }
+        for i in 0..256usize {
+            let mut c = t[0][i];
+            for k in 1..8 {
+                c = t[0][(c & 0xFF) as usize] ^ (c >> 8);
+                t[k][i] = c;
             }
-            t
-        });
-    let t = &*TABLES;
+        }
+        t
+    });
     let mut crc = !0u32;
     let mut chunks = data.chunks_exact(8);
     for c in &mut chunks {

@@ -35,6 +35,7 @@ use std::time::Duration;
 
 use crate::dataset::Dataset;
 use crate::gil;
+use crate::prefetch::CachePolicy;
 use crate::telemetry::{names, Recorder};
 
 /// In-batch fetch strategy (§2.2).
@@ -102,6 +103,17 @@ pub struct DataloaderConfig {
     pub drop_last: bool,
     /// override the start-method cost (tests / sweeps)
     pub spawn_cost_override: Option<Duration>,
+    /// sampler-ahead readahead window in items for the storage prefetch
+    /// engine (`crate::prefetch`); 0 disables the engine. NOTE: the
+    /// loader itself only *publishes* the sampler order each epoch —
+    /// the store wrapping happens in whatever assembles the stack
+    /// (`bench::rig::build` wraps in a `PrefetchStore` when this is
+    /// non-zero; direct library users wrap their store themselves, as
+    /// `examples/prefetch_s3.rs` shows).
+    pub prefetch_depth: usize,
+    /// hot-tier admission/eviction policy for the prefetch cache
+    /// (applied by the stack assembler, like `prefetch_depth`)
+    pub prefetch_policy: CachePolicy,
 }
 
 impl Default for DataloaderConfig {
@@ -122,6 +134,8 @@ impl Default for DataloaderConfig {
             seed: 1234,
             drop_last: false,
             spawn_cost_override: None,
+            prefetch_depth: 0,
+            prefetch_policy: CachePolicy::Lru,
         }
     }
 }
@@ -156,9 +170,9 @@ impl Dataloader {
         recorder: Arc<Recorder>,
     ) -> Dataloader {
         if cfg.pin_memory && cfg.start_method == StartMethod::Fork {
-            log::warn!(
-                "pin_memory=true with start_method=fork: pinning disabled \
-                 (CUDA init cannot follow fork)"
+            eprintln!(
+                "warning: pin_memory=true with start_method=fork: pinning \
+                 disabled (CUDA init cannot follow fork)"
             );
         }
         Dataloader { dataset, cfg: Arc::new(cfg), recorder }
@@ -197,6 +211,9 @@ impl Dataloader {
             Sampler::Sequential
         };
         let order = sampler.order(self.dataset.len(), epoch);
+        // publish the epoch's access order so a prefetching store can
+        // fetch ahead of demand (no-op for plain stores)
+        self.dataset.hint_epoch_order(epoch, &order);
         let plan = sampler::batches(&order, self.cfg.batch_size, self.cfg.drop_last);
         let n_batches = plan.len();
 

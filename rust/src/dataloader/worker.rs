@@ -68,7 +68,7 @@ fn run_worker(
                 let samples = match fetch_vanilla(&ctx, batch_id, &indices) {
                     Ok(s) => s,
                     Err(e) => {
-                        log::error!("worker {worker_id} batch {batch_id}: {e}");
+                        eprintln!("worker {worker_id} batch {batch_id}: {e:#}");
                         continue;
                     }
                 };
@@ -101,7 +101,7 @@ fn run_worker(
                 let fetched = match fetch_threaded(&ctx, &pool, chunk) {
                     Ok(f) => f,
                     Err(e) => {
-                        log::error!("worker {worker_id}: {e}");
+                        eprintln!("worker {worker_id}: {e:#}");
                         continue;
                     }
                 };
@@ -129,7 +129,7 @@ fn run_worker(
                 let samples = match fetch_async(&ctx, &rt, &sem, batch_id, &indices) {
                     Ok(s) => s,
                     Err(e) => {
-                        log::error!("worker {worker_id} batch {batch_id}: {e}");
+                        eprintln!("worker {worker_id} batch {batch_id}: {e:#}");
                         continue;
                     }
                 };

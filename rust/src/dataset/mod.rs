@@ -53,6 +53,12 @@ pub trait Dataset: Send + Sync {
     /// Set the augmentation epoch (torch reseeds per epoch).
     fn set_epoch(&self, epoch: usize);
 
+    /// Sampler-ahead hint: the epoch's upcoming item access order.
+    /// Storage-backed datasets translate it to keys and forward it to
+    /// their store (`ObjectStore::hint_order`), which lets a prefetch
+    /// layer (`crate::prefetch`) fetch ahead of demand. Default: ignore.
+    fn hint_epoch_order(&self, _epoch: usize, _order: &[usize]) {}
+
     /// Output crop side (informs collate shapes).
     fn crop(&self) -> usize;
 }
@@ -145,6 +151,14 @@ impl Dataset for ImageFolderDataset {
 
     fn set_epoch(&self, epoch: usize) {
         self.epoch.store(epoch, Ordering::Relaxed);
+    }
+
+    fn hint_epoch_order(&self, epoch: usize, order: &[usize]) {
+        let keys: Vec<String> = order
+            .iter()
+            .filter_map(|&i| self.keys.get(i).cloned())
+            .collect();
+        self.store.hint_order(epoch, &keys);
     }
 
     fn crop(&self) -> usize {

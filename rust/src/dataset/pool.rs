@@ -67,7 +67,7 @@ pub fn run_pool(
                         times.lock().unwrap().push(t.elapsed().as_secs_f64());
                     }
                     Err(e) => {
-                        log::warn!("pool get_item failed: {e}");
+                        eprintln!("pool get_item failed: {e:#}");
                     }
                 }
             });

@@ -15,6 +15,9 @@
 //! * [`simnet`] — latency models, bandwidth token buckets, conn pools.
 //! * [`gil`] — CPython GIL simulation (per-worker-process lock).
 //! * [`storage`] — object stores: mem/dir/simulated-remote/Varnish cache.
+//! * [`prefetch`] — sampler-ahead prefetch engine with tiered caching
+//!   (hot in-memory tier + pluggable LRU / 2Q-ghost policies) composable
+//!   over any store.
 //! * [`data`] — SIMG codec, synthetic ImageNet generator, pixel ops.
 //! * [`dataset`] — map-style `Dataset`, transforms, pool experiment.
 //! * [`dataloader`] — the paper's contribution: vanilla / threaded /
@@ -34,6 +37,7 @@ pub mod dataloader;
 pub mod dataset;
 pub mod device;
 pub mod gil;
+pub mod prefetch;
 pub mod runtime;
 pub mod shards;
 pub mod simnet;

@@ -132,14 +132,19 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         fetch_impl: cfg.loader.fetch_impl,
         num_fetch_workers: cfg.loader.num_fetch_workers,
         batch_pool: cfg.loader.batch_pool,
+        prefetch_depth: cfg.loader.prefetch_depth,
+        prefetch_policy: cfg.loader.prefetch_policy,
         lazy_init: cfg.loader.lazy_init,
         runtime: cfg.loader.runtime,
         trainer: cfg.trainer.kind,
         epochs: cfg.trainer.epochs,
         seed: cfg.seed,
     };
-    let (report, _rig) = cdl::bench::rig::run(&spec)?;
+    let (report, rig) = cdl::bench::rig::run(&spec)?;
     println!("{}", report.summary());
+    if let Some(p) = &rig.prefetch {
+        println!("{}", p.summary_table("prefetch tiers").render());
+    }
     Ok(())
 }
 
@@ -201,13 +206,15 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         },
         num_fetch_workers: 16,
         batch_pool: 0,
+        prefetch_depth: 0,
+        prefetch_policy: cdl::prefetch::CachePolicy::Lru,
         lazy_init: true,
         runtime: cdl::gil::Runtime::Native,
         trainer: trainer::TrainerKind::Torch,
         epochs: 1,
         seed: 7,
     };
-    let (store, _, _, _) = cdl::bench::rig::build_store(&spec)?;
+    let store = cdl::bench::rig::build_store(&spec)?.store;
     let ds: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
         store,
         AugmentConfig { crop: image, ..Default::default() },

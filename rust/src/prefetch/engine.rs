@@ -1,0 +1,377 @@
+//! Sampler-ahead scheduling engine.
+//!
+//! The engine receives the epoch's key order (via
+//! `ObjectStore::hint_order`), keeps a **cursor** at the consumer's
+//! position in that order, and speculatively fetches keys inside the
+//! window `[cursor, cursor + depth)` in background tasks on an `asyncrt`
+//! runtime. Three mechanisms bound and prioritize the speculation:
+//!
+//! * **in-flight window** — at most `max_inflight` background GETs at
+//!   once (the storage connection budget speculation may consume);
+//! * **demand preemption** — while any consumer thread is paying a
+//!   demand miss (`pending_demand > 0`), no new speculative fetch is
+//!   issued, so misses never queue behind speculation;
+//! * **priority aging** — a demand burst delays speculation but must not
+//!   starve it: after [`AGING`] behind the gate the scheduler issues one
+//!   speculative fetch anyway, then re-enters the gate.
+//!
+//! Within the window, fetches issue closest-to-cursor first (min-heap on
+//! the sampler position); entries whose position the consumer has
+//! already passed are dropped as *stale*.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::asyncrt;
+use crate::storage::ObjectStore;
+use crate::telemetry::{names, Recorder};
+
+use super::tier::HotTier;
+use super::PrefetchConfig;
+
+/// After this long gated behind demand misses the scheduler issues one
+/// speculative fetch anyway (aging: speculation is delayed, not starved).
+const AGING: Duration = Duration::from_millis(5);
+/// Condvar re-check period (also the liveness backstop: the scheduler can
+/// never deadlock on a missed wakeup).
+const TICK: Duration = Duration::from_millis(2);
+/// Telemetry worker id for background engine activity.
+pub const ENGINE_WORKER: u32 = u32::MAX;
+
+/// Cumulative engine counters.
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// demand lookups through the store
+    pub gets: AtomicU64,
+    /// bytes served to demand lookups
+    pub bytes: AtomicU64,
+    /// demand lookups answered from the hot tier immediately
+    pub hot_hits: AtomicU64,
+    /// demand lookups that waited on an in-flight speculative fetch
+    pub inflight_hits: AtomicU64,
+    /// demand lookups that had to fetch from the warm tier themselves
+    pub demand_misses: AtomicU64,
+    /// speculative fetches issued
+    pub issued: AtomicU64,
+    /// speculative fetches landed in the hot tier
+    pub completed: AtomicU64,
+    /// queued entries dropped because the consumer passed them
+    pub stale: AtomicU64,
+    /// speculative fetches that errored
+    pub errors: AtomicU64,
+}
+
+/// Plain-value snapshot of [`Counters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CounterSnapshot {
+    pub gets: u64,
+    pub bytes: u64,
+    pub hot_hits: u64,
+    pub inflight_hits: u64,
+    pub demand_misses: u64,
+    pub issued: u64,
+    pub completed: u64,
+    pub stale: u64,
+    pub errors: u64,
+}
+
+impl Counters {
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            gets: self.gets.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            hot_hits: self.hot_hits.load(Ordering::Relaxed),
+            inflight_hits: self.inflight_hits.load(Ordering::Relaxed),
+            demand_misses: self.demand_misses.load(Ordering::Relaxed),
+            issued: self.issued.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            stale: self.stale.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl CounterSnapshot {
+    /// Fraction of demand lookups the engine hid from the warm tier
+    /// (immediate hot hits plus waits on in-flight speculation).
+    pub fn hit_ratio(&self) -> f64 {
+        if self.gets == 0 {
+            return 0.0;
+        }
+        (self.hot_hits + self.inflight_hits) as f64 / self.gets as f64
+    }
+}
+
+/// Everything behind the engine's single state mutex.
+pub(super) struct State {
+    pub hot: HotTier,
+    /// keys with a background fetch in progress
+    pub inflight: HashSet<String>,
+    /// speculation queue: (sampler position, tiebreak seq, key)
+    pub queue: BinaryHeap<Reverse<(usize, u64, String)>>,
+    /// key → position in the current epoch's sampler order
+    pub pos_of: HashMap<String, usize>,
+    /// consumer position in the sampler order
+    pub cursor: usize,
+    /// demand misses currently paying warm-tier latency
+    pub pending_demand: usize,
+    pub seq: u64,
+    pub shutdown: bool,
+}
+
+impl State {
+    pub fn new(cfg: &PrefetchConfig) -> State {
+        State {
+            hot: HotTier::new(cfg.policy, cfg.hot_bytes)
+                .with_ghost_capacity(cfg.ghost_capacity),
+            inflight: HashSet::new(),
+            queue: BinaryHeap::new(),
+            pos_of: HashMap::new(),
+            cursor: 0,
+            pending_demand: 0,
+            seq: 0,
+            shutdown: false,
+        }
+    }
+}
+
+/// State shared between the store facade, the scheduler thread and the
+/// background fetch tasks. Deliberately does NOT hold the `asyncrt`
+/// runtime: background tasks own an `Arc<Shared>`, and keeping the
+/// runtime out of it guarantees the runtime is never dropped (and thus
+/// never self-joined) from one of its own worker threads.
+pub(super) struct Shared {
+    pub inner: Arc<dyn ObjectStore>,
+    pub state: Mutex<State>,
+    pub cv: Condvar,
+    pub counters: Counters,
+    pub cfg: PrefetchConfig,
+    pub recorder: Mutex<Option<Arc<Recorder>>>,
+}
+
+impl Shared {
+    pub fn recorder(&self) -> Option<Arc<Recorder>> {
+        self.recorder.lock().unwrap().clone()
+    }
+}
+
+enum Pick {
+    Issue(String),
+    /// speculation gated behind an active demand miss
+    DemandGate,
+    /// nothing issuable right now (empty queue, window full, or the
+    /// whole readahead window is already hot/in flight)
+    Idle,
+}
+
+fn pick_next(st: &mut State, shared: &Shared, aged: bool) -> Pick {
+    if st.inflight.len() >= shared.cfg.max_inflight.max(1) {
+        return Pick::Idle;
+    }
+    if st.pending_demand > 0 && !aged {
+        return Pick::DemandGate;
+    }
+    loop {
+        let Some(Reverse((pos, _seq, key))) = st.queue.peek().cloned() else {
+            return Pick::Idle;
+        };
+        if pos < st.cursor {
+            st.queue.pop();
+            shared.counters.stale.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        if pos >= st.cursor + shared.cfg.depth {
+            return Pick::Idle; // beyond the readahead window
+        }
+        st.queue.pop();
+        if st.hot.contains(&key) || st.inflight.contains(&key) {
+            continue;
+        }
+        st.inflight.insert(key.clone());
+        return Pick::Issue(key);
+    }
+}
+
+fn issue(shared: &Arc<Shared>, rt: &asyncrt::Runtime, key: String) {
+    shared.counters.issued.fetch_add(1, Ordering::Relaxed);
+    let sh = shared.clone();
+    rt.spawn(async move {
+        let recorder = sh.recorder();
+        let t0 = recorder.as_ref().map(|r| r.now());
+        let res = sh.inner.get_async(&key).await;
+        if let (Some(r), Some(t0)) = (&recorder, t0) {
+            r.record(names::PREFETCH_FETCH, ENGINE_WORKER, -1, t0, r.now());
+        }
+        let mut st = sh.state.lock().unwrap();
+        st.inflight.remove(&key);
+        match res {
+            Ok(data) => {
+                st.hot.insert(&key, data);
+                sh.counters.completed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                // demand waiters fall back to their own fetch, which
+                // surfaces the error to the caller properly
+                sh.counters.errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        drop(st);
+        sh.cv.notify_all();
+    });
+}
+
+fn scheduler_loop(shared: Arc<Shared>, rt: Arc<asyncrt::Runtime>) {
+    loop {
+        let key = {
+            let mut st = shared.state.lock().unwrap();
+            let mut gated_since: Option<Instant> = None;
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                let aged = gated_since.is_some_and(|t| t.elapsed() >= AGING);
+                match pick_next(&mut st, &shared, aged) {
+                    Pick::Issue(key) => break key,
+                    Pick::DemandGate => {
+                        gated_since.get_or_insert_with(Instant::now);
+                        st = shared.cv.wait_timeout(st, TICK).unwrap().0;
+                    }
+                    Pick::Idle => {
+                        gated_since = None;
+                        st = shared.cv.wait_timeout(st, TICK).unwrap().0;
+                    }
+                }
+            }
+        };
+        issue(&shared, &rt, key);
+    }
+}
+
+pub(super) fn spawn_scheduler(
+    shared: Arc<Shared>,
+    rt: Arc<asyncrt::Runtime>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("prefetch-sched".into())
+        .spawn(move || scheduler_loop(shared, rt))
+        .expect("spawn prefetch scheduler")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prefetch::tier::CachePolicy;
+    use crate::storage::{Bytes, MemStore};
+
+    fn shared(depth: usize, max_inflight: usize) -> Shared {
+        let cfg = PrefetchConfig {
+            depth,
+            max_inflight,
+            ..Default::default()
+        };
+        Shared {
+            inner: Arc::new(MemStore::new("m")),
+            state: Mutex::new(State::new(&cfg)),
+            cv: Condvar::new(),
+            counters: Counters::default(),
+            cfg,
+            recorder: Mutex::new(None),
+        }
+    }
+
+    fn enqueue(st: &mut State, items: &[(usize, &str)]) {
+        for &(pos, key) in items {
+            st.seq += 1;
+            let seq = st.seq;
+            st.pos_of.insert(key.to_string(), pos);
+            st.queue.push(Reverse((pos, seq, key.to_string())));
+        }
+    }
+
+    #[test]
+    fn picks_closest_to_cursor_first() {
+        let sh = shared(100, 4);
+        let mut st = sh.state.lock().unwrap();
+        enqueue(&mut st, &[(5, "e"), (1, "b"), (9, "f"), (0, "a")]);
+        match pick_next(&mut st, &sh, false) {
+            Pick::Issue(k) => assert_eq!(k, "a"),
+            _ => panic!("expected issue"),
+        }
+        match pick_next(&mut st, &sh, false) {
+            Pick::Issue(k) => assert_eq!(k, "b"),
+            _ => panic!("expected issue"),
+        }
+    }
+
+    #[test]
+    fn respects_window_and_inflight_cap() {
+        let sh = shared(2, 1);
+        let mut st = sh.state.lock().unwrap();
+        enqueue(&mut st, &[(0, "a"), (1, "b"), (5, "far")]);
+        assert!(matches!(pick_next(&mut st, &sh, false), Pick::Issue(_)));
+        // window full (max_inflight = 1)
+        assert!(matches!(pick_next(&mut st, &sh, false), Pick::Idle));
+        st.inflight.clear();
+        assert!(matches!(pick_next(&mut st, &sh, false), Pick::Issue(_)));
+        st.inflight.clear();
+        // "far" is outside [cursor, cursor+depth)
+        assert!(matches!(pick_next(&mut st, &sh, false), Pick::Idle));
+        st.cursor = 4;
+        assert!(matches!(pick_next(&mut st, &sh, false), Pick::Issue(_)));
+    }
+
+    #[test]
+    fn demand_gate_and_aging() {
+        let sh = shared(10, 4);
+        let mut st = sh.state.lock().unwrap();
+        enqueue(&mut st, &[(0, "a")]);
+        st.pending_demand = 1;
+        assert!(matches!(pick_next(&mut st, &sh, false), Pick::DemandGate));
+        // aged: issues despite the gate
+        assert!(matches!(pick_next(&mut st, &sh, true), Pick::Issue(_)));
+    }
+
+    #[test]
+    fn stale_entries_dropped() {
+        let sh = shared(10, 4);
+        let mut st = sh.state.lock().unwrap();
+        enqueue(&mut st, &[(0, "a"), (1, "b"), (2, "c")]);
+        st.cursor = 2; // consumer already passed a and b
+        match pick_next(&mut st, &sh, false) {
+            Pick::Issue(k) => assert_eq!(k, "c"),
+            _ => panic!("expected issue"),
+        }
+        assert_eq!(sh.counters.stale.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn hot_or_inflight_keys_skipped() {
+        let sh = shared(10, 4);
+        let mut st = sh.state.lock().unwrap();
+        enqueue(&mut st, &[(0, "hot"), (1, "fly"), (2, "new")]);
+        st.hot = {
+            let mut h = HotTier::new(CachePolicy::Lru, 1 << 20);
+            h.insert("hot", Bytes::new(vec![1]));
+            h
+        };
+        st.inflight.insert("fly".to_string());
+        match pick_next(&mut st, &sh, false) {
+            Pick::Issue(k) => assert_eq!(k, "new"),
+            _ => panic!("expected issue"),
+        }
+    }
+
+    #[test]
+    fn counter_snapshot_roundtrip() {
+        let c = Counters::default();
+        c.gets.store(10, Ordering::Relaxed);
+        c.hot_hits.store(4, Ordering::Relaxed);
+        c.inflight_hits.store(2, Ordering::Relaxed);
+        let s = c.snapshot();
+        assert_eq!(s.gets, 10);
+        assert!((s.hit_ratio() - 0.6).abs() < 1e-12);
+    }
+}

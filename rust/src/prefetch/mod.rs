@@ -1,0 +1,587 @@
+//! Sampler-ahead prefetch engine with tiered caching.
+//!
+//! The paper hides *in-batch* latency (threaded / asyncio fetchers), but
+//! nothing in the seed pipeline fetches **ahead of demand**: every epoch
+//! still pays full first-byte latency on cold keys. This subsystem adds
+//! the missing layer, following the design argument of "Hiding Latencies
+//! in Network-Based Image Loading for Deep Learning" (Versaci &
+//! Busonera, 2025) and MinatoLoader (Nouaji et al., 2025): the sampler
+//! already fixes the epoch's access order, so a loader on high-latency
+//! storage should be fetching the *next* items while the trainer consumes
+//! the current ones.
+//!
+//! Components:
+//!
+//! * [`PrefetchStore`] — a composable [`ObjectStore`] wrapper. Stack it
+//!   over any store (`SimRemoteStore`, `VarnishCache`, `DirStore`); the
+//!   wrapped store becomes the **warm tier**, and speculative fetches
+//!   land in an in-memory **hot tier** ([`tier::HotTier`]).
+//! * [`engine`] — the background scheduler: consumes the epoch order
+//!   published by `dataloader::sampler` (via `ObjectStore::hint_order`),
+//!   issues GETs on an `asyncrt` runtime through a bounded in-flight
+//!   window, preempts speculation while demand misses are outstanding,
+//!   and ages the gate so speculation is never starved.
+//! * [`tier`] — hot-tier admission/eviction policies: LRU and 2Q with a
+//!   ghost list.
+//!
+//! Wiring: `DataloaderConfig { prefetch_depth, prefetch_policy, .. }`
+//! selects the engine from experiment configs (`prefetch_depth = 0`
+//! disables speculation; the hot tier still caches demand fetches).
+//! `Dataloader::epoch` publishes the sampler order each epoch, so
+//! shuffled epochs re-steer the engine automatically. Per-tier hit/miss
+//! and engine counters surface through [`PrefetchStore::report`] /
+//! [`PrefetchStore::summary_table`] and, when a `telemetry::Recorder` is
+//! attached, as `prefetch_fetch` / `prefetch_wait` spans.
+
+pub mod engine;
+pub mod tier;
+
+pub use engine::CounterSnapshot;
+pub use tier::{CachePolicy, TierStats};
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::asyncrt;
+use crate::storage::{BoxFut, Bytes, ObjectStore, StoreStats};
+use crate::telemetry::{names, Recorder};
+use crate::util::table::Table;
+
+use engine::Shared;
+
+/// Prefetch engine configuration.
+#[derive(Debug, Clone)]
+pub struct PrefetchConfig {
+    /// readahead window in sampler positions (0 = no speculation; the
+    /// hot tier still caches demand fetches)
+    pub depth: usize,
+    /// max concurrent background GETs
+    pub max_inflight: usize,
+    /// hot-tier capacity in bytes
+    pub hot_bytes: u64,
+    /// hot-tier admission/eviction policy
+    pub policy: CachePolicy,
+    /// 2Q ghost-list capacity (keys remembered after probation eviction)
+    pub ghost_capacity: usize,
+    /// threads backing the engine's async runtime (GETs overlap via the
+    /// async path, so a couple of threads drive many in-flight requests)
+    pub runtime_threads: usize,
+}
+
+impl Default for PrefetchConfig {
+    fn default() -> Self {
+        PrefetchConfig {
+            depth: 64,
+            max_inflight: 16,
+            hot_bytes: 256 << 20,
+            policy: CachePolicy::Lru,
+            ghost_capacity: 4096,
+            runtime_threads: 2,
+        }
+    }
+}
+
+/// Per-tier view of a running [`PrefetchStore`] (hot = in-memory tier,
+/// warm = the wrapped store's own counters).
+#[derive(Debug, Clone)]
+pub struct PrefetchReport {
+    pub engine: CounterSnapshot,
+    pub hot: TierStats,
+    pub warm: StoreStats,
+    pub warm_label: String,
+    pub inflight_now: usize,
+    pub queued_now: usize,
+}
+
+/// A composable `ObjectStore` that prefetches the sampler's upcoming
+/// keys into a tiered cache. See the module docs.
+pub struct PrefetchStore {
+    shared: Arc<Shared>,
+    /// keep-alive handle for the engine's runtime; dropped (joining the
+    /// runtime workers) after the scheduler thread is joined in `Drop`
+    _rt: Arc<asyncrt::Runtime>,
+    scheduler: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl PrefetchStore {
+    pub fn new(inner: Arc<dyn ObjectStore>, cfg: PrefetchConfig) -> Arc<PrefetchStore> {
+        let shared = Arc::new(Shared {
+            inner,
+            state: Mutex::new(engine::State::new(&cfg)),
+            cv: std::sync::Condvar::new(),
+            counters: engine::Counters::default(),
+            cfg: cfg.clone(),
+            recorder: Mutex::new(None),
+        });
+        let rt = asyncrt::Runtime::new(cfg.runtime_threads.max(1));
+        let scheduler = engine::spawn_scheduler(shared.clone(), rt.clone());
+        Arc::new(PrefetchStore {
+            shared,
+            _rt: rt,
+            scheduler: Mutex::new(Some(scheduler)),
+        })
+    }
+
+    /// Attach a span recorder (`prefetch_fetch` / `prefetch_wait`).
+    pub fn set_recorder(&self, recorder: Arc<Recorder>) {
+        *self.shared.recorder.lock().unwrap() = Some(recorder);
+    }
+
+    pub fn config(&self) -> &PrefetchConfig {
+        &self.shared.cfg
+    }
+
+    /// Engine counter snapshot (cheap; atomics).
+    pub fn counters(&self) -> CounterSnapshot {
+        self.shared.counters.snapshot()
+    }
+
+    /// Fraction of demand lookups served without paying warm-tier
+    /// latency in the caller (hot hits + waits on in-flight fetches).
+    pub fn hit_ratio(&self) -> f64 {
+        self.counters().hit_ratio()
+    }
+
+    /// Full per-tier report.
+    pub fn report(&self) -> PrefetchReport {
+        let st = self.shared.state.lock().unwrap();
+        PrefetchReport {
+            engine: self.shared.counters.snapshot(),
+            hot: st.hot.stats(),
+            warm: self.shared.inner.stats(),
+            warm_label: self.shared.inner.label(),
+            inflight_now: st.inflight.len(),
+            queued_now: st.queue.len(),
+        }
+    }
+
+    /// Per-tier hit/miss/in-flight counter table for reports.
+    pub fn summary_table(&self, title: &str) -> Table {
+        let r = self.report();
+        let mut t = Table::new(
+            title,
+            &["tier", "gets", "hits", "misses", "hit %", "evictions", "notes"],
+        );
+        t.row(&[
+            "hot (mem)".to_string(),
+            r.engine.gets.to_string(),
+            (r.engine.hot_hits + r.engine.inflight_hits).to_string(),
+            r.engine.demand_misses.to_string(),
+            format!("{:.1}", 100.0 * r.engine.hit_ratio()),
+            r.hot.evictions.to_string(),
+            format!(
+                "{} prefetched, {} in flight, {} stale, {} ghost promotions",
+                r.engine.completed, r.inflight_now, r.engine.stale,
+                r.hot.ghost_promotions
+            ),
+        ]);
+        let warm_total = r.warm.hits + r.warm.misses;
+        t.row(&[
+            format!("warm ({})", r.warm_label),
+            r.warm.gets.to_string(),
+            r.warm.hits.to_string(),
+            r.warm.misses.to_string(),
+            if warm_total > 0 {
+                format!("{:.1}", 100.0 * r.warm.hits as f64 / warm_total as f64)
+            } else {
+                "-".to_string()
+            },
+            r.warm.evictions.to_string(),
+            String::new(),
+        ]);
+        t
+    }
+
+    /// Advance the sampler cursor for a demanded key (wakes the
+    /// scheduler so the readahead window slides forward).
+    fn advance_cursor(st: &mut engine::State, key: &str) {
+        if let Some(&pos) = st.pos_of.get(key) {
+            if pos >= st.cursor {
+                st.cursor = pos + 1;
+            }
+        }
+    }
+
+    fn served(&self, data: &Bytes) {
+        self.shared.counters.bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
+    }
+}
+
+/// RAII decrement for `pending_demand`: the increment happens under the
+/// state lock, but the demand fetch itself runs unlocked (and, on the
+/// async path, across an await where the caller may drop the future) —
+/// the guard guarantees the speculation gate reopens on every exit path.
+struct DemandGuard<'a> {
+    sh: &'a Shared,
+}
+
+impl Drop for DemandGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.sh.state.lock().unwrap();
+        st.pending_demand -= 1;
+        drop(st);
+        self.sh.cv.notify_all();
+    }
+}
+
+impl ObjectStore for PrefetchStore {
+    fn get(&self, key: &str) -> Result<Bytes> {
+        let sh = &self.shared;
+        sh.counters.gets.fetch_add(1, Ordering::Relaxed);
+        let recorder = sh.recorder();
+
+        let mut st = sh.state.lock().unwrap();
+        Self::advance_cursor(&mut st, key);
+        if let Some(hit) = st.hot.get(key) {
+            sh.counters.hot_hits.fetch_add(1, Ordering::Relaxed);
+            drop(st);
+            sh.cv.notify_all(); // cursor moved: window may slide
+            self.served(&hit);
+            return Ok(hit);
+        }
+        if st.inflight.contains(key) {
+            // a speculative fetch is already paying this latency — wait
+            // for it instead of issuing a duplicate GET
+            let t0 = recorder.as_ref().map(|r| r.now());
+            while st.inflight.contains(key) && !st.shutdown {
+                st = sh.cv.wait(st).unwrap();
+            }
+            // uncounted: still the same logical lookup as the miss above
+            if let Some(hit) = st.hot.peek(key) {
+                sh.counters.inflight_hits.fetch_add(1, Ordering::Relaxed);
+                drop(st);
+                if let (Some(r), Some(t0)) = (&recorder, t0) {
+                    r.record(names::PREFETCH_WAIT, engine::ENGINE_WORKER, -1, t0, r.now());
+                }
+                sh.cv.notify_all();
+                self.served(&hit);
+                return Ok(hit);
+            }
+            // the background fetch errored (or the entry was rejected /
+            // already evicted): fall through to a demand fetch
+        }
+        sh.counters.demand_misses.fetch_add(1, Ordering::Relaxed);
+        st.pending_demand += 1; // preempts speculative issuance
+        drop(st);
+        let guard = DemandGuard { sh };
+        let res = sh.inner.get(key);
+        if let Ok(data) = &res {
+            let mut st = sh.state.lock().unwrap();
+            st.hot.insert(key, data.clone());
+        }
+        drop(guard); // reopen the speculation gate (+ notify)
+        if let Ok(data) = &res {
+            self.served(data);
+        }
+        res
+    }
+
+    fn get_async<'a>(&'a self, key: &'a str) -> BoxFut<'a, Result<Bytes>> {
+        Box::pin(async move {
+            let sh = &self.shared;
+            sh.counters.gets.fetch_add(1, Ordering::Relaxed);
+            {
+                let mut st = sh.state.lock().unwrap();
+                Self::advance_cursor(&mut st, key);
+            }
+            sh.cv.notify_all();
+
+            enum Step {
+                Hit(Bytes),
+                Wait,
+                Fetch,
+            }
+            let mut waited = false;
+            loop {
+                let step = {
+                    let mut st = sh.state.lock().unwrap();
+                    // count the tier lookup once; poll iterations re-check
+                    // the same logical lookup uncounted
+                    let hit = if waited { st.hot.peek(key) } else { st.hot.get(key) };
+                    if let Some(hit) = hit {
+                        Step::Hit(hit)
+                    } else if st.inflight.contains(key) {
+                        Step::Wait
+                    } else {
+                        st.pending_demand += 1;
+                        Step::Fetch
+                    }
+                };
+                match step {
+                    Step::Hit(hit) => {
+                        let ctr = if waited {
+                            &sh.counters.inflight_hits
+                        } else {
+                            &sh.counters.hot_hits
+                        };
+                        ctr.fetch_add(1, Ordering::Relaxed);
+                        self.served(&hit);
+                        return Ok(hit);
+                    }
+                    Step::Wait => {
+                        // async demand wait: poll the in-flight set on the
+                        // timer (the engine has no per-key future to await)
+                        waited = true;
+                        asyncrt::sleep(Duration::from_micros(500)).await;
+                    }
+                    Step::Fetch => {
+                        sh.counters.demand_misses.fetch_add(1, Ordering::Relaxed);
+                        // the guard reopens the gate even if this future
+                        // is dropped mid-await (timeout/select)
+                        let guard = DemandGuard { sh };
+                        let res = sh.inner.get_async(key).await;
+                        if let Ok(data) = &res {
+                            let mut st = sh.state.lock().unwrap();
+                            st.hot.insert(key, data.clone());
+                        }
+                        drop(guard);
+                        if let Ok(data) = &res {
+                            self.served(data);
+                        }
+                        return res;
+                    }
+                }
+            }
+        })
+    }
+
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        self.shared.inner.put(key, data)
+    }
+
+    fn keys(&self) -> Vec<String> {
+        self.shared.inner.keys()
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.shared.state.lock().unwrap().hot.contains(key)
+            || self.shared.inner.contains(key)
+    }
+
+    fn label(&self) -> String {
+        format!("prefetch({})", self.shared.inner.label())
+    }
+
+    fn stats(&self) -> StoreStats {
+        let c = self.counters();
+        let hot = self.shared.state.lock().unwrap().hot.stats();
+        StoreStats {
+            gets: c.gets,
+            bytes: c.bytes,
+            hits: c.hot_hits + c.inflight_hits,
+            misses: c.demand_misses,
+            evictions: hot.evictions,
+        }
+    }
+
+    fn hint_order(&self, epoch: usize, keys: &[String]) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.cursor = 0;
+            st.pos_of.clear();
+            st.queue.clear();
+            for (pos, key) in keys.iter().enumerate() {
+                st.pos_of.insert(key.clone(), pos);
+                st.seq += 1;
+                let seq = st.seq;
+                st.queue
+                    .push(std::cmp::Reverse((pos, seq, key.clone())));
+            }
+        }
+        self.shared.cv.notify_all();
+        // forward down the stack (harmless for plain stores, lets a
+        // nested prefetch layer see the order too)
+        self.shared.inner.hint_order(epoch, keys);
+    }
+}
+
+impl Drop for PrefetchStore {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.scheduler.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        // self._rt drops afterwards on this thread, joining the runtime
+        // workers; in-flight tasks hold Shared but never the runtime.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{MemStore, RemoteProfile, SimRemoteStore};
+    use std::time::Instant;
+
+    fn corpus(n: usize, size: usize) -> Arc<MemStore> {
+        let m = Arc::new(MemStore::new("backing"));
+        for i in 0..n {
+            m.put(&key(i), vec![i as u8; size]).unwrap();
+        }
+        m
+    }
+
+    fn key(i: usize) -> String {
+        format!("k{i:03}")
+    }
+
+    fn order(n: usize) -> Vec<String> {
+        (0..n).map(key).collect()
+    }
+
+    fn wait_until(deadline_ms: u64, mut done: impl FnMut() -> bool) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_millis(deadline_ms) {
+            if done() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        done()
+    }
+
+    #[test]
+    fn demand_path_works_without_hints() {
+        let p = PrefetchStore::new(corpus(4, 100), PrefetchConfig::default());
+        let d = p.get(&key(0)).unwrap();
+        assert_eq!(d.len(), 100);
+        // second access is a hot hit (tiered-cache-only mode)
+        p.get(&key(0)).unwrap();
+        let c = p.counters();
+        assert_eq!(c.gets, 2);
+        assert_eq!(c.demand_misses, 1);
+        assert_eq!(c.hot_hits, 1);
+        assert!(p.get("missing").is_err());
+    }
+
+    #[test]
+    fn hint_order_prefetches_ahead() {
+        let p = PrefetchStore::new(
+            corpus(16, 64),
+            PrefetchConfig { depth: 16, ..Default::default() },
+        );
+        p.hint_order(0, &order(16));
+        assert!(
+            wait_until(2000, || p.counters().completed >= 16),
+            "engine never prefetched: {:?}",
+            p.counters()
+        );
+        // every demand access is now a hot hit
+        for i in 0..16 {
+            p.get(&key(i)).unwrap();
+        }
+        let c = p.counters();
+        assert_eq!(c.hot_hits, 16, "{c:?}");
+        assert_eq!(c.demand_misses, 0, "{c:?}");
+    }
+
+    #[test]
+    fn depth_zero_never_speculates() {
+        let p = PrefetchStore::new(
+            corpus(8, 64),
+            PrefetchConfig { depth: 0, ..Default::default() },
+        );
+        p.hint_order(0, &order(8));
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(p.counters().issued, 0);
+    }
+
+    #[test]
+    fn window_limits_speculation() {
+        let p = PrefetchStore::new(
+            corpus(32, 64),
+            PrefetchConfig { depth: 4, ..Default::default() },
+        );
+        p.hint_order(0, &order(32));
+        assert!(wait_until(2000, || p.counters().completed >= 4));
+        // without cursor movement, only [0, 4) may be fetched
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(p.counters().issued, 4, "{:?}", p.counters());
+        // consuming position 0 slides the window by one
+        p.get(&key(0)).unwrap();
+        assert!(
+            wait_until(2000, || p.counters().issued >= 5),
+            "window did not slide: {:?}",
+            p.counters()
+        );
+    }
+
+    #[test]
+    fn hides_simulated_remote_latency() {
+        let remote = SimRemoteStore::new(
+            corpus(24, 10 * 1024),
+            RemoteProfile::s3().scaled(0.25),
+            11,
+        );
+        let p = PrefetchStore::new(
+            remote,
+            PrefetchConfig { depth: 24, max_inflight: 24, ..Default::default() },
+        );
+        p.hint_order(0, &order(24));
+        assert!(wait_until(10_000, || p.counters().completed >= 24));
+        let t0 = Instant::now();
+        for i in 0..24 {
+            p.get(&key(i)).unwrap();
+        }
+        // 24 sequential s3 GETs at scale 0.25 would be ≫ 500 ms
+        assert!(
+            t0.elapsed() < Duration::from_millis(100),
+            "hot drain too slow: {:?}",
+            t0.elapsed()
+        );
+        assert!(p.hit_ratio() > 0.9, "{:?}", p.counters());
+    }
+
+    #[test]
+    fn async_demand_path_matches_sync() {
+        let p = PrefetchStore::new(corpus(4, 128), PrefetchConfig::default());
+        let via_async =
+            crate::asyncrt::block_on(p.get_async(&key(1))).unwrap();
+        let via_sync = p.get(&key(1)).unwrap();
+        assert_eq!(via_async, via_sync);
+        let c = p.counters();
+        assert_eq!(c.gets, 2);
+        assert_eq!(c.hot_hits, 1);
+    }
+
+    #[test]
+    fn stats_and_label_compose() {
+        let p = PrefetchStore::new(corpus(2, 50), PrefetchConfig::default());
+        p.get(&key(0)).unwrap();
+        p.get(&key(0)).unwrap();
+        let s = p.stats();
+        assert_eq!(s.gets, 2);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.bytes, 100);
+        assert_eq!(p.label(), "prefetch(backing)");
+        assert!(p.contains(&key(0)));
+        assert!(!p.contains("nope"));
+    }
+
+    #[test]
+    fn summary_table_has_both_tiers() {
+        let p = PrefetchStore::new(corpus(2, 50), PrefetchConfig::default());
+        p.get(&key(0)).unwrap();
+        let t = p.summary_table("tiers");
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.rows[0][0].starts_with("hot"));
+        assert!(t.rows[1][0].starts_with("warm"));
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly_with_queued_work() {
+        let p = PrefetchStore::new(
+            corpus(64, 256),
+            PrefetchConfig { depth: 64, max_inflight: 2, ..Default::default() },
+        );
+        p.hint_order(0, &order(64));
+        drop(p); // must not hang or panic
+    }
+}

@@ -213,7 +213,11 @@ impl ObjectStore for VarnishCache {
     }
 
     fn contains(&self, key: &str) -> bool {
-        self.inner.contains(key)
+        self.lru.lock().unwrap().map.contains_key(key) || self.inner.contains(key)
+    }
+
+    fn hint_order(&self, epoch: usize, keys: &[String]) {
+        self.inner.hint_order(epoch, keys)
     }
 
     fn label(&self) -> String {

@@ -11,9 +11,15 @@
 //!   per-connection and NIC bandwidth, and a connection limit; presets
 //!   calibrated per storage type live in [`remote::RemoteProfile`].
 //! * [`cache::VarnishCache`] — byte-capped LRU in front of any store.
+//! * [`crate::prefetch::PrefetchStore`] — sampler-ahead prefetch engine
+//!   with a tiered cache (hot in-memory tier over any of the above as
+//!   the warm tier); lives in its own subsystem, `crate::prefetch`.
 //!
 //! Both a blocking and an async (`asyncrt`) fetch path are exposed; the
-//! async path is what the Asyncio fetcher uses.
+//! async path is what the Asyncio fetcher uses. Stores also receive the
+//! epoch's upcoming key order through [`ObjectStore::hint_order`] —
+//! prefetching layers act on it, caches forward it down the stack, and
+//! plain stores ignore it.
 
 pub mod cache;
 pub mod dir;
@@ -53,9 +59,19 @@ pub trait ObjectStore: Send + Sync {
     /// All keys, sorted (the dataset manifest ordering).
     fn keys(&self) -> Vec<String>;
 
+    /// Cheap existence check. The default scans the key manifest and
+    /// never touches the data path, so stores with simulated transfer
+    /// costs don't pay latency or bandwidth (and don't skew `stats()`)
+    /// on a lookup; stores with a native index override it.
     fn contains(&self, key: &str) -> bool {
-        self.get(key).is_ok()
+        self.keys().iter().any(|k| k == key)
     }
+
+    /// Sampler-ahead hint: the epoch's upcoming key access order.
+    /// Prefetching stores ([`crate::prefetch::PrefetchStore`]) schedule
+    /// background fetches from it, wrapper stores forward it to their
+    /// inner store, and plain stores ignore it (the default).
+    fn hint_order(&self, _epoch: usize, _keys: &[String]) {}
 
     /// Human label for reports ("s3", "scratch", ...).
     fn label(&self) -> String;
@@ -113,6 +129,30 @@ mod tests {
         store.put("k", vec![1, 2, 3]).unwrap();
         let got = crate::asyncrt::block_on(store.get_async("k")).unwrap();
         assert_eq!(&*got, &[1, 2, 3]);
+    }
+
+    #[test]
+    fn default_contains_stays_off_the_data_path() {
+        // a store that panics if the data path is touched
+        struct NoGet;
+        impl ObjectStore for NoGet {
+            fn get(&self, _key: &str) -> Result<Bytes> {
+                panic!("contains must not call get");
+            }
+            fn put(&self, _key: &str, _data: Vec<u8>) -> Result<()> {
+                Ok(())
+            }
+            fn keys(&self) -> Vec<String> {
+                vec!["present".to_string()]
+            }
+            fn label(&self) -> String {
+                "noget".to_string()
+            }
+        }
+        let s = NoGet;
+        assert!(s.contains("present"));
+        assert!(!s.contains("absent"));
+        s.hint_order(0, &["present".to_string()]); // default: ignored
     }
 
     #[test]

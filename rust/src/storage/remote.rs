@@ -233,7 +233,12 @@ impl ObjectStore for SimRemoteStore {
     }
 
     fn contains(&self, key: &str) -> bool {
+        // metadata lookup: no latency draw, no bandwidth reservation
         self.inner.contains(key)
+    }
+
+    fn hint_order(&self, epoch: usize, keys: &[String]) {
+        self.inner.hint_order(epoch, keys)
     }
 
     fn label(&self) -> String {
@@ -305,6 +310,21 @@ mod tests {
             assert_eq!(RemoteProfile::by_name(n).unwrap().name, n);
         }
         assert!(RemoteProfile::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn contains_pays_no_latency_or_stats() {
+        let s = mk(RemoteProfile::s3()); // full 120 ms median latency
+        let t0 = Instant::now();
+        assert!(s.contains("k"));
+        assert!(!s.contains("nope"));
+        assert!(
+            t0.elapsed() < Duration::from_millis(20),
+            "contains hit the data path: {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(s.stats().gets, 0);
+        assert_eq!(s.stats().bytes, 0);
     }
 
     #[test]

@@ -41,6 +41,10 @@ pub mod names {
     pub const OPTIMIZER_STEP: &str = "optimizer_step";
     pub const WORKER_SPAWN: &str = "worker_spawn";
     pub const PIN_MEMORY: &str = "pin_memory";
+    /// background GET issued by the prefetch engine
+    pub const PREFETCH_FETCH: &str = "prefetch_fetch";
+    /// demand lookup that waited on an in-flight prefetch
+    pub const PREFETCH_WAIT: &str = "prefetch_wait";
     // Lightning lanes (Fig 17)
     pub const ADVANCE: &str = "advance";
     pub const PRERUN: &str = "prerun";

@@ -1,0 +1,191 @@
+//! Integration tests for the sampler-ahead prefetch subsystem: the full
+//! dataloader pipeline over a `PrefetchStore`, in-order delivery under
+//! shuffled samplers, latency hiding on simulated remotes, and hint
+//! forwarding through wrapper stores.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cdl::data::synth::{generate_corpus, CorpusSpec};
+use cdl::data::AugmentConfig;
+use cdl::dataloader::{Batch, Dataloader, DataloaderConfig, FetchImpl};
+use cdl::dataset::{Dataset, ImageFolderDataset};
+use cdl::prefetch::{CachePolicy, PrefetchConfig, PrefetchStore};
+use cdl::storage::{
+    MemStore, ObjectStore, RemoteProfile, SimRemoteStore, VarnishCache,
+};
+use cdl::telemetry::Recorder;
+
+fn corpus(items: usize) -> Arc<dyn ObjectStore> {
+    let m: Arc<dyn ObjectStore> = Arc::new(MemStore::new("c"));
+    generate_corpus(&m, &CorpusSpec::tiny(items)).unwrap();
+    m
+}
+
+fn s3_over(items: usize, latency_scale: f64) -> Arc<dyn ObjectStore> {
+    SimRemoteStore::new(
+        corpus(items),
+        RemoteProfile::s3().scaled(latency_scale),
+        9,
+    )
+}
+
+fn loader_over(
+    store: Arc<dyn ObjectStore>,
+    imp: FetchImpl,
+    workers: usize,
+    batch: usize,
+) -> Dataloader {
+    let ds: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
+        store,
+        AugmentConfig { crop: 16, ..Default::default() },
+    ));
+    Dataloader::new(
+        ds,
+        DataloaderConfig {
+            batch_size: batch,
+            num_workers: workers,
+            fetch_impl: imp,
+            spawn_cost_override: Some(Duration::ZERO),
+            ..Default::default()
+        },
+        Recorder::new(),
+    )
+}
+
+fn check_coverage(batches: &[Batch], n_items: usize) {
+    let mut seen: Vec<usize> =
+        batches.iter().flat_map(|b| b.indices.iter().copied()).collect();
+    seen.sort_unstable();
+    assert_eq!(seen, (0..n_items).collect::<Vec<_>>());
+}
+
+/// Shuffled epochs over a prefetching store still deliver every batch,
+/// in id order, exactly covering the dataset — across all fetchers.
+#[test]
+fn in_order_delivery_under_shuffled_sampler() {
+    for imp in FetchImpl::all() {
+        let store = PrefetchStore::new(
+            s3_over(22, 0.03),
+            PrefetchConfig { depth: 12, ..Default::default() },
+        );
+        let dl = loader_over(store, imp, 3, 5);
+        for epoch in 0..2 {
+            let batches: Vec<Batch> = dl.epoch(epoch).collect();
+            assert_eq!(batches.len(), 5, "{imp:?}");
+            let ids: Vec<usize> = batches.iter().map(|b| b.id).collect();
+            assert_eq!(ids, vec![0, 1, 2, 3, 4], "{imp:?}");
+            check_coverage(&batches, 22);
+        }
+    }
+}
+
+/// The engine reuses the sampler hint: after a drained epoch the hot
+/// tier has been fed by background fetches, not only demand fills.
+#[test]
+fn engine_prefetches_during_epoch() {
+    let store = PrefetchStore::new(
+        s3_over(24, 0.05),
+        PrefetchConfig { depth: 24, ..Default::default() },
+    );
+    let dl = loader_over(store.clone(), FetchImpl::Vanilla, 2, 8);
+    let batches: Vec<Batch> = dl.epoch(0).collect();
+    assert_eq!(batches.len(), 3);
+    let c = store.counters();
+    assert!(c.issued > 0, "no speculative fetches issued: {c:?}");
+    assert!(
+        c.hot_hits + c.inflight_hits > 0,
+        "engine never hid a lookup: {c:?}"
+    );
+    assert_eq!(c.gets, 24, "{c:?}");
+}
+
+/// Prefetching must make a vanilla epoch on s3 meaningfully faster.
+#[test]
+fn prefetch_speeds_up_vanilla_epoch_on_s3() {
+    let drain = |prefetch: bool| -> f64 {
+        // latency scale high enough that storage time dwarfs scheduler
+        // noise on loaded CI runners (plain epoch ≈ 400 ms)
+        let base = s3_over(24, 0.15);
+        let store: Arc<dyn ObjectStore> = if prefetch {
+            PrefetchStore::new(
+                base,
+                PrefetchConfig { depth: 16, max_inflight: 16, ..Default::default() },
+            )
+        } else {
+            base
+        };
+        let dl = loader_over(store, FetchImpl::Vanilla, 2, 8);
+        let t0 = Instant::now();
+        let batches: Vec<Batch> = dl.epoch(0).collect();
+        assert_eq!(batches.len(), 3);
+        t0.elapsed().as_secs_f64()
+    };
+    let off = drain(false);
+    let on = drain(true);
+    assert!(
+        on < 0.7 * off,
+        "prefetch epoch {on:.3}s not ≪ plain epoch {off:.3}s"
+    );
+}
+
+/// Epoch hints flow through wrapper stores down to the engine.
+#[test]
+fn hint_forwards_through_varnish() {
+    let prefetch = PrefetchStore::new(
+        corpus(16),
+        PrefetchConfig { depth: 16, ..Default::default() },
+    );
+    let varnish = VarnishCache::new(prefetch.clone(), 1 << 20);
+    let keys = prefetch.keys();
+    varnish.hint_order(0, &keys);
+    let t0 = Instant::now();
+    while prefetch.counters().completed < 16 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "hint never reached the engine: {:?}",
+            prefetch.counters()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Per-tier counters surface through the report and the summary table.
+#[test]
+fn tier_counters_reported() {
+    let store = PrefetchStore::new(
+        s3_over(16, 0.02),
+        PrefetchConfig { depth: 16, policy: CachePolicy::TwoQ, ..Default::default() },
+    );
+    let dl = loader_over(store.clone(), FetchImpl::Vanilla, 2, 8);
+    let _: Vec<Batch> = dl.epoch(0).collect();
+    let r = store.report();
+    assert_eq!(
+        r.engine.hot_hits + r.engine.inflight_hits + r.engine.demand_misses,
+        r.engine.gets,
+        "{r:?}"
+    );
+    assert!(r.hot.bytes > 0);
+    assert_eq!(r.warm_label, "s3");
+    let t = store.summary_table("tiers");
+    assert_eq!(t.rows.len(), 2);
+}
+
+/// Config-file knobs reach the engine through the rig.
+#[test]
+fn config_knobs_drive_the_rig() {
+    use cdl::bench::rig::{self, RigSpec};
+    use cdl::config::ExperimentConfig;
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.apply_text("prefetch_depth = 24\nprefetch_policy = 2q\n").unwrap();
+    let mut spec = RigSpec::quick("s3", 0.02);
+    spec.items = 16;
+    spec.batch_size = 8;
+    spec.prefetch_depth = cfg.loader.prefetch_depth;
+    spec.prefetch_policy = cfg.loader.prefetch_policy;
+    let rig = rig::build(&spec).unwrap();
+    let p = rig.prefetch.as_ref().expect("prefetch layer missing");
+    assert_eq!(p.config().depth, 24);
+    assert_eq!(p.config().policy, CachePolicy::TwoQ);
+}
