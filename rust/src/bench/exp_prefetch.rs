@@ -8,9 +8,9 @@
 //!   4×batch: mean/p90 batch latency, epoch wall time, and per-tier hit
 //!   rates. The headline: depth ≥ 2×batch cuts mean batch latency by
 //!   well over 2× on `s3`.
-//! * **Policy comparison** — LRU vs 2Q hot tier at 25% of corpus
-//!   capacity over two shuffled epochs: per-epoch hit rate, evictions,
-//!   ghost promotions.
+//! * **Policy comparison** — LRU vs 2Q vs S3-FIFO hot tier at 25% of
+//!   corpus capacity over two shuffled epochs: per-epoch hit rate,
+//!   evictions, ghost promotions.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -110,7 +110,8 @@ pub fn depth_sweep(scale: Scale) -> Result<(Table, f64)> {
     Ok((t, s3_mean_off / s3_mean_2x))
 }
 
-/// LRU vs 2Q hot tier under capacity pressure, at the store level.
+/// Every hot-tier policy (LRU, 2Q, S3-FIFO) under capacity pressure,
+/// at the store level.
 pub fn policy_comparison(scale: Scale) -> Result<Table> {
     let mut t = Table::new(
         "Prefetch — hot-tier policy under capacity pressure (s3, 2 shuffled epochs)",
@@ -123,7 +124,7 @@ pub fn policy_comparison(scale: Scale) -> Result<Table> {
         ],
     );
     let items = scale.items(96);
-    for policy in [CachePolicy::Lru, CachePolicy::TwoQ] {
+    for policy in CachePolicy::ALL {
         let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("corpus"));
         let (keys, total) = generate_corpus(
             &mem,
@@ -209,10 +210,11 @@ mod tests {
     }
 
     #[test]
-    fn policy_table_has_both_policies() {
+    fn policy_table_has_every_policy() {
         let t = policy_comparison(tiny()).unwrap();
-        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows.len(), CachePolicy::ALL.len());
         assert_eq!(t.rows[0][0], "lru");
         assert_eq!(t.rows[1][0], "2q");
+        assert_eq!(t.rows[2][0], "s3fifo");
     }
 }

@@ -25,6 +25,8 @@ pub struct RigSpec {
     pub storage: &'static str,
     pub latency_scale: f64,
     pub cache_bytes: u64,
+    /// varnish cache eviction policy (lru | 2q | s3fifo)
+    pub cache_policy: CachePolicy,
     pub items: usize,
     pub mean_kb: usize,
     pub crop: usize,
@@ -52,6 +54,7 @@ impl RigSpec {
             storage,
             latency_scale,
             cache_bytes: 0,
+            cache_policy: CachePolicy::Lru,
             items: 192,
             mean_kb: 48,
             crop: 32,
@@ -144,7 +147,8 @@ pub fn build_store(spec: &RigSpec) -> Result<StorageStack> {
         };
     let (store, cache): (Arc<dyn ObjectStore>, Option<Arc<VarnishCache>>) =
         if spec.cache_bytes > 0 {
-            let c = VarnishCache::new(store, spec.cache_bytes);
+            let c =
+                VarnishCache::with_policy(store, spec.cache_bytes, spec.cache_policy);
             (c.clone() as Arc<dyn ObjectStore>, Some(c))
         } else {
             (store, None)
@@ -266,11 +270,13 @@ mod tests {
         let mut spec = RigSpec::quick("s3", 0.02);
         spec.items = 16;
         spec.cache_bytes = 10 << 20;
+        spec.cache_policy = CachePolicy::TwoQ;
         let rig = build(&spec).unwrap();
         assert!(rig.cache.is_some());
         assert!(rig.remote.is_some());
         assert!(rig.prefetch.is_none());
         assert!(rig.store.label().starts_with("varnish"));
+        assert_eq!(rig.cache.as_ref().unwrap().policy(), CachePolicy::TwoQ);
     }
 
     #[test]

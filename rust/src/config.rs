@@ -10,7 +10,9 @@
 //! fetch_impl = threaded
 //! num_fetch_workers = 16
 //! prefetch_depth = 128      # sampler-ahead readahead window (items)
-//! prefetch_policy = 2q      # hot-tier policy: lru | 2q
+//! prefetch_policy = 2q      # hot-tier policy: lru | 2q | s3fifo
+//! cache_bytes = 2147483648  # varnish cache capacity (0 = no cache)
+//! cache_policy = lru        # varnish eviction policy: lru | 2q | s3fifo
 //! trainer = torch
 //! epochs = 2
 //! latency_scale = 0.25
@@ -23,6 +25,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::dataloader::{DataloaderConfig, FetchImpl, StartMethod};
 use crate::gil;
+use crate::storage::CachePolicy;
 use crate::trainer::{TrainerConfig, TrainerKind};
 
 /// Parsed experiment configuration.
@@ -33,6 +36,8 @@ pub struct ExperimentConfig {
     pub storage: String,
     /// Varnish cache capacity in bytes (0 = no cache)
     pub cache_bytes: u64,
+    /// Varnish cache eviction policy (lru | 2q | s3fifo)
+    pub cache_policy: CachePolicy,
     pub items: usize,
     pub classes: usize,
     pub mean_kb: usize,
@@ -51,6 +56,7 @@ impl Default for ExperimentConfig {
         ExperimentConfig {
             storage: "s3".into(),
             cache_bytes: 0,
+            cache_policy: CachePolicy::Lru,
             items: 256,
             classes: 512,
             mean_kb: 115,
@@ -103,6 +109,12 @@ impl ExperimentConfig {
         match key {
             "storage" => self.storage = value.to_string(),
             "cache_bytes" => self.cache_bytes = value.parse()?,
+            "cache_policy" => {
+                self.cache_policy = match CachePolicy::by_name(value) {
+                    Some(p) => p,
+                    None => bail!("unknown cache_policy {value} (lru|2q|s3fifo)"),
+                }
+            }
             "items" => self.items = value.parse()?,
             "classes" => self.classes = value.parse()?,
             "mean_kb" => self.mean_kb = value.parse()?,
@@ -124,11 +136,10 @@ impl ExperimentConfig {
             "batch_pool" => self.loader.batch_pool = value.parse()?,
             "prefetch_depth" => self.loader.prefetch_depth = value.parse()?,
             "prefetch_policy" => {
-                self.loader.prefetch_policy =
-                    match crate::prefetch::CachePolicy::by_name(value) {
-                        Some(p) => p,
-                        None => bail!("unknown prefetch_policy {value} (lru|2q)"),
-                    }
+                self.loader.prefetch_policy = match CachePolicy::by_name(value) {
+                    Some(p) => p,
+                    None => bail!("unknown prefetch_policy {value} (lru|2q|s3fifo)"),
+                }
             }
             "pin_memory" => self.loader.pin_memory = value.parse()?,
             "start_method" => {
@@ -201,6 +212,7 @@ mod tests {
         assert!(cfg.set("items", "abc").is_err());
         assert!(cfg.set("fetch_impl", "warp").is_err());
         assert!(cfg.set("prefetch_policy", "arc").is_err());
+        assert!(cfg.set("cache_policy", "arc").is_err());
     }
 
     #[test]
@@ -209,10 +221,21 @@ mod tests {
         cfg.apply_text("prefetch_depth = 128\nprefetch_policy = 2q\n")
             .unwrap();
         assert_eq!(cfg.loader.prefetch_depth, 128);
-        assert_eq!(
-            cfg.loader.prefetch_policy,
-            crate::prefetch::CachePolicy::TwoQ
-        );
+        assert_eq!(cfg.loader.prefetch_policy, CachePolicy::TwoQ);
+    }
+
+    #[test]
+    fn cache_policy_parses_like_prefetch_policy() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.cache_policy, CachePolicy::Lru);
+        cfg.apply_text("cache_bytes = 4096\ncache_policy = s3fifo\n")
+            .unwrap();
+        assert_eq!(cfg.cache_bytes, 4096);
+        assert_eq!(cfg.cache_policy, CachePolicy::S3Fifo);
+        cfg.set("cache_policy", "2q").unwrap();
+        assert_eq!(cfg.cache_policy, CachePolicy::TwoQ);
+        cfg.set("prefetch_policy", "s3fifo").unwrap();
+        assert_eq!(cfg.loader.prefetch_policy, CachePolicy::S3Fifo);
     }
 
     #[test]

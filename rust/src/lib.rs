@@ -14,10 +14,12 @@
 //! * [`asyncrt`] — in-tree mini async runtime (the "asyncio" analogue).
 //! * [`simnet`] — latency models, bandwidth token buckets, conn pools.
 //! * [`gil`] — CPython GIL simulation (per-worker-process lock).
-//! * [`storage`] — object stores: mem/dir/simulated-remote/Varnish cache.
+//! * [`storage`] — object stores: mem/dir/simulated-remote/Varnish
+//!   cache, plus the unified O(1) eviction core (`storage::evict`)
+//!   behind every byte-capped cache.
 //! * [`prefetch`] — sampler-ahead prefetch engine with tiered caching
-//!   (hot in-memory tier + pluggable LRU / 2Q-ghost policies) composable
-//!   over any store.
+//!   (hot in-memory tier + pluggable LRU / 2Q-ghost / S3-FIFO policies)
+//!   composable over any store.
 //! * [`data`] — SIMG codec, synthetic ImageNet generator, pixel ops.
 //! * [`dataset`] — map-style `Dataset`, transforms, pool experiment.
 //! * [`dataloader`] — the paper's contribution: vanilla / threaded /

@@ -123,6 +123,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         storage: Box::leak(cfg.storage.clone().into_boxed_str()),
         latency_scale: cfg.latency_scale,
         cache_bytes: cfg.cache_bytes,
+        cache_policy: cfg.cache_policy,
         items: cfg.items,
         mean_kb: cfg.mean_kb,
         crop: cfg.crop,
@@ -144,6 +145,20 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     println!("{}", report.summary());
     if let Some(p) = &rig.prefetch {
         println!("{}", p.summary_table("prefetch tiers").render());
+    }
+    if let Some(c) = &rig.cache {
+        let t = c.tier_stats();
+        println!(
+            "varnish cache [{}]: {}/{} bytes, {} entries (+{} ghosts), \
+             {} evictions, hit ratio {:.1}%",
+            c.policy().label(),
+            t.bytes,
+            t.capacity,
+            t.entries,
+            t.ghost_entries,
+            t.evictions,
+            100.0 * c.hit_ratio(),
+        );
     }
     Ok(())
 }
@@ -193,6 +208,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         storage: Box::leak(p.get("storage").to_string().into_boxed_str()),
         latency_scale: 0.25,
         cache_bytes: 0,
+        cache_policy: cdl::prefetch::CachePolicy::Lru,
         items: p.usize("items")?,
         mean_kb: 48,
         crop: image,

@@ -21,8 +21,9 @@
 //!   issues GETs on an `asyncrt` runtime through a bounded in-flight
 //!   window, preempts speculation while demand misses are outstanding,
 //!   and ages the gate so speculation is never starved.
-//! * [`tier`] — hot-tier admission/eviction policies: LRU and 2Q with a
-//!   ghost list.
+//! * [`tier`] — the hot tier: a facade over the unified O(1) eviction
+//!   core (`crate::storage::evict`) with pluggable policies — LRU, 2Q
+//!   with a ghost list, and a simplified S3-FIFO.
 //!
 //! Wiring: `DataloaderConfig { prefetch_depth, prefetch_policy, .. }`
 //! selects the engine from experiment configs (`prefetch_depth = 0`
@@ -62,7 +63,7 @@ pub struct PrefetchConfig {
     pub max_inflight: usize,
     /// hot-tier capacity in bytes
     pub hot_bytes: u64,
-    /// hot-tier admission/eviction policy
+    /// hot-tier admission/eviction policy (lru | 2q | s3fifo)
     pub policy: CachePolicy,
     /// 2Q ghost-list capacity (keys remembered after probation eviction)
     pub ghost_capacity: usize,
@@ -145,6 +146,12 @@ impl PrefetchStore {
         self.counters().hit_ratio()
     }
 
+    /// Re-verify the hot tier's eviction-core accounting (O(entries);
+    /// for tests and stress suites).
+    pub fn audit(&self) -> std::result::Result<(), String> {
+        self.shared.state.lock().unwrap().hot.audit()
+    }
+
     /// Full per-tier report.
     pub fn report(&self) -> PrefetchReport {
         let st = self.shared.state.lock().unwrap();
@@ -173,9 +180,10 @@ impl PrefetchStore {
             format!("{:.1}", 100.0 * r.engine.hit_ratio()),
             r.hot.evictions.to_string(),
             format!(
-                "{} prefetched, {} in flight, {} stale, {} ghost promotions",
+                "{} prefetched, {} in flight, {} stale, {} ghosts, \
+                 {} ghost promotions",
                 r.engine.completed, r.inflight_now, r.engine.stale,
-                r.hot.ghost_promotions
+                r.hot.ghost_entries, r.hot.ghost_promotions
             ),
         ]);
         let warm_total = r.warm.hits + r.warm.misses;
@@ -349,7 +357,12 @@ impl ObjectStore for PrefetchStore {
     }
 
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
-        self.shared.inner.put(key, data)
+        self.shared.inner.put(key, data)?;
+        // best-effort invalidation of any speculative/hot copy (an
+        // in-flight fetch or racing demand miss may still land the old
+        // bytes; that is the usual cache/write race, not lost accounting)
+        self.shared.state.lock().unwrap().hot.remove(key);
+        Ok(())
     }
 
     fn keys(&self) -> Vec<String> {

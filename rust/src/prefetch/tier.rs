@@ -3,177 +3,69 @@
 //! The prefetch engine lands speculative fetches in a byte-capped
 //! in-memory **hot tier**; whatever store it wraps (a `VarnishCache`, a
 //! `DirStore`, a bare `SimRemoteStore`) acts as the warm tier below it.
-//! Two policies are provided:
 //!
-//! * [`CachePolicy::Lru`] — plain least-recently-used eviction.
-//! * [`CachePolicy::TwoQ`] — a simplified 2Q: new keys enter a
-//!   *probation* queue; keys evicted from probation leave their name on a
-//!   **ghost list** (no payload); a re-admitted ghost key is promoted
-//!   straight to the *main* queue. Under the loader's shuffled scans this
-//!   keeps one-touch speculative fills from flushing genuinely re-used
-//!   objects — the standard scan-resistance argument.
+//! The tier is a thin facade over the unified eviction core
+//! ([`crate::storage::evict::EvictCore`]) — the same intrusive O(1)
+//! doubly-linked-list structure that backs `VarnishCache` — so victim
+//! selection costs O(1) regardless of resident entry count (the old
+//! per-eviction O(n) `min_by_key` scan over `last_used` ticks is gone).
+//! Policies ([`CachePolicy`]): LRU, 2Q with a ghost list, and a
+//! simplified S3-FIFO; see the core's module docs for the exact
+//! semantics. Under the loader's shuffled scans the ghost-list policies
+//! keep one-touch speculative fills from flushing genuinely re-used
+//! objects — the standard scan-resistance argument.
 //!
 //! The tier is a plain (non-thread-safe) structure; the engine guards it
-//! with its state mutex. Victim selection is an O(n) minimum scan over
-//! `last_used` ticks — at loader scale (thousands of keys) this is far
-//! cheaper than the storage latencies being hidden, and it keeps the
-//! recency bookkeeping trivially correct.
+//! with its state mutex.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+pub use crate::storage::evict::{CachePolicy, CoreStats as TierStats};
 
+use crate::storage::evict::EvictCore;
 use crate::storage::Bytes;
-
-/// Hot-tier admission/eviction policy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum CachePolicy {
-    /// Least-recently-used over a single queue.
-    Lru,
-    /// Two-queue with a ghost list (probation → ghost → main promotion).
-    TwoQ,
-}
-
-impl CachePolicy {
-    pub fn by_name(name: &str) -> Option<CachePolicy> {
-        match name {
-            "lru" => Some(CachePolicy::Lru),
-            "2q" | "twoq" => Some(CachePolicy::TwoQ),
-            _ => None,
-        }
-    }
-
-    pub fn label(&self) -> &'static str {
-        match self {
-            CachePolicy::Lru => "lru",
-            CachePolicy::TwoQ => "2q",
-        }
-    }
-}
-
-/// Cumulative hot-tier counters plus current occupancy.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
-pub struct TierStats {
-    pub hits: u64,
-    pub misses: u64,
-    pub insertions: u64,
-    pub evictions: u64,
-    /// 2Q only: re-admissions that hit the ghost list and went straight
-    /// to the main queue
-    pub ghost_promotions: u64,
-    pub bytes: u64,
-    pub capacity: u64,
-    pub entries: u64,
-}
-
-impl TierStats {
-    pub fn hit_ratio(&self) -> f64 {
-        let total = self.hits + self.misses;
-        if total == 0 {
-            return 0.0;
-        }
-        self.hits as f64 / total as f64
-    }
-}
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Queue {
-    Probation,
-    Main,
-}
-
-struct Slot {
-    data: Bytes,
-    last_used: u64,
-    queue: Queue,
-}
 
 /// Byte-capped in-memory cache tier (see module docs for the policies).
 pub struct HotTier {
-    policy: CachePolicy,
-    capacity: u64,
-    bytes: u64,
-    tick: u64,
-    map: HashMap<String, Slot>,
-    /// 2Q ghost list: keys (not payloads) recently evicted from probation
-    ghost: VecDeque<String>,
-    ghost_set: HashSet<String>,
-    ghost_cap: usize,
-    hits: u64,
-    misses: u64,
-    insertions: u64,
-    evictions: u64,
-    ghost_promotions: u64,
+    core: EvictCore,
 }
 
 impl HotTier {
     pub fn new(policy: CachePolicy, capacity_bytes: u64) -> HotTier {
-        HotTier {
-            policy,
-            capacity: capacity_bytes,
-            bytes: 0,
-            tick: 0,
-            map: HashMap::new(),
-            ghost: VecDeque::new(),
-            ghost_set: HashSet::new(),
-            ghost_cap: 4096,
-            hits: 0,
-            misses: 0,
-            insertions: 0,
-            evictions: 0,
-            ghost_promotions: 0,
-        }
+        HotTier { core: EvictCore::new(policy, capacity_bytes) }
     }
 
     /// Cap the ghost list (keys remembered after probation eviction).
     pub fn with_ghost_capacity(mut self, n: usize) -> HotTier {
-        self.ghost_cap = n;
+        self.core = self.core.with_ghost_capacity(n);
         self
     }
 
     pub fn contains(&self, key: &str) -> bool {
-        self.map.contains_key(key)
+        self.core.contains(key)
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.core.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.core.is_empty()
     }
 
     pub fn bytes(&self) -> u64 {
-        self.bytes
+        self.core.bytes()
     }
 
     pub fn capacity(&self) -> u64 {
-        self.capacity
+        self.core.capacity()
     }
 
     pub fn stats(&self) -> TierStats {
-        TierStats {
-            hits: self.hits,
-            misses: self.misses,
-            insertions: self.insertions,
-            evictions: self.evictions,
-            ghost_promotions: self.ghost_promotions,
-            bytes: self.bytes,
-            capacity: self.capacity,
-            entries: self.map.len() as u64,
-        }
+        self.core.stats()
     }
 
     /// Counted lookup; a hit refreshes recency.
     pub fn get(&mut self, key: &str) -> Option<Bytes> {
-        match self.peek(key) {
-            Some(data) => {
-                self.hits += 1;
-                Some(data)
-            }
-            None => {
-                self.misses += 1;
-                None
-            }
-        }
+        self.core.get(key)
     }
 
     /// Uncounted lookup for pollers re-checking the *same* logical
@@ -181,89 +73,25 @@ impl HotTier {
     /// on hit but leaves the hit/miss counters alone, so tier stats
     /// stay one-count-per-lookup.
     pub fn peek(&mut self, key: &str) -> Option<Bytes> {
-        self.tick += 1;
-        let tick = self.tick;
-        let slot = self.map.get_mut(key)?;
-        slot.last_used = tick;
-        Some(slot.data.clone())
+        self.core.peek(key)
     }
 
     /// Admit an object; returns the number of evictions performed.
     /// Objects larger than the whole tier are rejected outright.
     pub fn insert(&mut self, key: &str, data: Bytes) -> u64 {
-        if data.len() as u64 > self.capacity {
-            return 0;
-        }
-        self.tick += 1;
-        if let Some(slot) = self.map.get_mut(key) {
-            self.bytes -= slot.data.len() as u64;
-            self.bytes += data.len() as u64;
-            slot.data = data;
-            slot.last_used = self.tick;
-            return self.evict_to_fit();
-        }
-        let queue = match self.policy {
-            CachePolicy::Lru => Queue::Main,
-            CachePolicy::TwoQ => {
-                if self.ghost_set.remove(key) {
-                    self.ghost.retain(|k| k != key);
-                    self.ghost_promotions += 1;
-                    Queue::Main
-                } else {
-                    Queue::Probation
-                }
-            }
-        };
-        self.insertions += 1;
-        self.bytes += data.len() as u64;
-        self.map.insert(
-            key.to_string(),
-            Slot { data, last_used: self.tick, queue },
-        );
-        self.evict_to_fit()
+        self.core.insert(key, data)
     }
 
-    fn evict_to_fit(&mut self) -> u64 {
-        let mut evicted = 0;
-        while self.bytes > self.capacity {
-            let Some(victim) = self.pick_victim() else { break };
-            let slot = self.map.remove(&victim).expect("victim present");
-            self.bytes -= slot.data.len() as u64;
-            self.evictions += 1;
-            evicted += 1;
-            if self.policy == CachePolicy::TwoQ && slot.queue == Queue::Probation {
-                self.ghost.push_back(victim.clone());
-                self.ghost_set.insert(victim);
-                while self.ghost.len() > self.ghost_cap {
-                    if let Some(old) = self.ghost.pop_front() {
-                        self.ghost_set.remove(&old);
-                    }
-                }
-            }
-        }
-        evicted
+    /// Forget `key` (invalidation on overwrite); returns whether an
+    /// entry was removed.
+    pub fn remove(&mut self, key: &str) -> bool {
+        self.core.remove(key)
     }
 
-    fn least_recent_in(&self, queue: Queue) -> Option<String> {
-        self.map
-            .iter()
-            .filter(|(_, s)| s.queue == queue)
-            .min_by_key(|(_, s)| s.last_used)
-            .map(|(k, _)| k.clone())
-    }
-
-    fn pick_victim(&self) -> Option<String> {
-        match self.policy {
-            CachePolicy::Lru => self
-                .map
-                .iter()
-                .min_by_key(|(_, s)| s.last_used)
-                .map(|(k, _)| k.clone()),
-            // 2Q: probation drains before the main queue is touched
-            CachePolicy::TwoQ => self
-                .least_recent_in(Queue::Probation)
-                .or_else(|| self.least_recent_in(Queue::Main)),
-        }
+    /// Re-verify the eviction core's internal accounting (O(entries);
+    /// for tests and stress suites).
+    pub fn audit(&self) -> Result<(), String> {
+        self.core.audit()
     }
 }
 
@@ -273,15 +101,6 @@ mod tests {
 
     fn blob(n: usize, fill: u8) -> Bytes {
         Bytes::new(vec![fill; n])
-    }
-
-    #[test]
-    fn policy_names() {
-        assert_eq!(CachePolicy::by_name("lru"), Some(CachePolicy::Lru));
-        assert_eq!(CachePolicy::by_name("2q"), Some(CachePolicy::TwoQ));
-        assert_eq!(CachePolicy::by_name("twoq"), Some(CachePolicy::TwoQ));
-        assert_eq!(CachePolicy::by_name("arc"), None);
-        assert_eq!(CachePolicy::TwoQ.label(), "2q");
     }
 
     #[test]
@@ -310,6 +129,7 @@ mod tests {
         assert_eq!(s.insertions, 20);
         assert_eq!(s.evictions, 17); // 3 fit at a time
         assert_eq!(s.entries, 3);
+        t.audit().unwrap();
     }
 
     #[test]
@@ -368,8 +188,8 @@ mod tests {
         for i in 0..6 {
             t.insert(&format!("k{i}"), blob(100, i as u8));
         }
-        assert!(t.ghost.len() <= 2);
-        assert_eq!(t.ghost.len(), t.ghost_set.len());
+        assert!(t.stats().ghost_entries <= 2);
+        t.audit().unwrap();
     }
 
     #[test]
@@ -379,5 +199,16 @@ mod tests {
         t.insert("b", blob(100, 1)); // evicts a
         t.insert("a", blob(100, 2)); // plain re-admission
         assert_eq!(t.stats().ghost_promotions, 0);
+    }
+
+    #[test]
+    fn s3fifo_policy_runs_on_the_tier() {
+        let mut t = HotTier::new(CachePolicy::S3Fifo, 300);
+        for i in 0..8 {
+            t.insert(&format!("k{i}"), blob(100, i as u8));
+            assert!(t.bytes() <= 300);
+        }
+        assert!(t.stats().evictions > 0);
+        t.audit().unwrap();
     }
 }

@@ -372,8 +372,7 @@ impl Engine {
                 if self.params.is_empty() {
                     bail!("params not initialized (call init_params)");
                 }
-                let mut args: Vec<xla::Literal> =
-                    self.params.iter().map(|l| l.clone()).collect();
+                let mut args: Vec<xla::Literal> = self.params.clone();
                 args.push(Self::to_literal(&images)?);
                 args.push(Self::to_literal(&labels)?);
                 let mut outs = self.execute(&variant, &args)?;
@@ -395,8 +394,7 @@ impl Engine {
                 if self.params.is_empty() {
                     bail!("params not initialized");
                 }
-                let mut args: Vec<xla::Literal> =
-                    self.params.iter().map(|l| l.clone()).collect();
+                let mut args: Vec<xla::Literal> = self.params.clone();
                 args.push(Self::to_literal(&images)?);
                 let outs = self.execute(&variant, &args)?;
                 Ok(Response::Tensors(

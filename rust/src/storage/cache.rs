@@ -1,184 +1,91 @@
-//! Varnish-like byte-capped LRU cache in front of any store (§2.4
+//! Varnish-like byte-capped cache in front of any store (§2.4
 //! "Caching" of the paper). The paper caps the cache at 2 GB — far below
 //! dataset size — so random access produces mostly misses; the cache
 //! helps exactly the configurations the paper says it helps (slow
 //! vanilla loaders) and we reproduce that in `bench_cache`.
+//!
+//! Eviction runs on the unified O(1) core ([`super::evict::EvictCore`]);
+//! the policy defaults to LRU (matching Varnish) but any
+//! [`CachePolicy`] can be selected via [`VarnishCache::with_policy`]
+//! (config knob `cache_policy`).
 
-use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use super::evict::{CachePolicy, CoreStats, EvictCore};
 use super::{BoxFut, Bytes, ObjectStore, StatCounters, StoreStats};
 
-struct Entry {
-    key: String,
-    data: Bytes,
-    prev: usize,
-    next: usize,
-}
-
-const NIL: usize = usize::MAX;
-
-/// Intrusive-list LRU keyed by object, capped by total payload bytes.
-struct Lru {
-    map: HashMap<String, usize>,
-    slab: Vec<Entry>,
-    free: Vec<usize>,
-    head: usize, // most recent
-    tail: usize, // least recent
-    bytes: u64,
-    capacity: u64,
-}
-
-impl Lru {
-    fn new(capacity: u64) -> Lru {
-        Lru {
-            map: HashMap::new(),
-            slab: Vec::new(),
-            free: Vec::new(),
-            head: NIL,
-            tail: NIL,
-            bytes: 0,
-            capacity,
-        }
-    }
-
-    fn unlink(&mut self, i: usize) {
-        let (p, n) = (self.slab[i].prev, self.slab[i].next);
-        if p != NIL {
-            self.slab[p].next = n;
-        } else {
-            self.head = n;
-        }
-        if n != NIL {
-            self.slab[n].prev = p;
-        } else {
-            self.tail = p;
-        }
-    }
-
-    fn push_front(&mut self, i: usize) {
-        self.slab[i].prev = NIL;
-        self.slab[i].next = self.head;
-        if self.head != NIL {
-            self.slab[self.head].prev = i;
-        }
-        self.head = i;
-        if self.tail == NIL {
-            self.tail = i;
-        }
-    }
-
-    fn get(&mut self, key: &str) -> Option<Bytes> {
-        let &i = self.map.get(key)?;
-        self.unlink(i);
-        self.push_front(i);
-        Some(self.slab[i].data.clone())
-    }
-
-    /// Insert; returns number of evictions performed.
-    fn insert(&mut self, key: &str, data: Bytes) -> u64 {
-        if data.len() as u64 > self.capacity {
-            return 0; // object larger than the whole cache: don't cache
-        }
-        if let Some(&i) = self.map.get(key) {
-            self.bytes -= self.slab[i].data.len() as u64;
-            self.bytes += data.len() as u64;
-            self.slab[i].data = data;
-            self.unlink(i);
-            self.push_front(i);
-            return self.evict_to_fit();
-        }
-        let entry = Entry {
-            key: key.to_string(),
-            data: data.clone(),
-            prev: NIL,
-            next: NIL,
-        };
-        let i = if let Some(i) = self.free.pop() {
-            self.slab[i] = entry;
-            i
-        } else {
-            self.slab.push(entry);
-            self.slab.len() - 1
-        };
-        self.map.insert(key.to_string(), i);
-        self.bytes += data.len() as u64;
-        self.push_front(i);
-        self.evict_to_fit()
-    }
-
-    fn evict_to_fit(&mut self) -> u64 {
-        let mut evicted = 0;
-        while self.bytes > self.capacity && self.tail != NIL {
-            let i = self.tail;
-            self.unlink(i);
-            self.bytes -= self.slab[i].data.len() as u64;
-            let key = std::mem::take(&mut self.slab[i].key);
-            self.slab[i].data = Bytes::new(Vec::new());
-            self.map.remove(&key);
-            self.free.push(i);
-            evicted += 1;
-        }
-        evicted
-    }
-}
-
-/// Byte-capped LRU cache wrapping a (typically remote) store.
+/// Byte-capped cache wrapping a (typically remote) store.
 pub struct VarnishCache {
     inner: Arc<dyn ObjectStore>,
-    lru: Mutex<Lru>,
+    core: Mutex<EvictCore>,
     stats: StatCounters,
 }
 
 impl VarnishCache {
+    /// LRU cache (Varnish's default behavior).
     pub fn new(inner: Arc<dyn ObjectStore>, capacity_bytes: u64) -> Arc<VarnishCache> {
+        VarnishCache::with_policy(inner, capacity_bytes, CachePolicy::Lru)
+    }
+
+    /// Cache with an explicit eviction policy.
+    pub fn with_policy(
+        inner: Arc<dyn ObjectStore>,
+        capacity_bytes: u64,
+        policy: CachePolicy,
+    ) -> Arc<VarnishCache> {
         Arc::new(VarnishCache {
             inner,
-            lru: Mutex::new(Lru::new(capacity_bytes)),
+            core: Mutex::new(EvictCore::new(policy, capacity_bytes)),
             stats: StatCounters::default(),
         })
     }
 
     pub fn cached_bytes(&self) -> u64 {
-        self.lru.lock().unwrap().bytes
+        self.core.lock().unwrap().bytes()
     }
 
     pub fn capacity(&self) -> u64 {
-        self.lru.lock().unwrap().capacity
+        self.core.lock().unwrap().capacity()
     }
 
-    /// hit ratio so far
+    pub fn policy(&self) -> CachePolicy {
+        self.core.lock().unwrap().policy()
+    }
+
+    /// Unified per-tier counters from the eviction core.
+    pub fn tier_stats(&self) -> CoreStats {
+        self.core.lock().unwrap().stats()
+    }
+
+    /// Hit ratio so far; 0.0 (not NaN) before any lookup has occurred.
     pub fn hit_ratio(&self) -> f64 {
-        let s = self.stats.snapshot();
-        if s.gets == 0 {
-            return 0.0;
-        }
-        s.hits as f64 / s.gets as f64
+        self.tier_stats().hit_ratio()
+    }
+
+    /// Re-verify the eviction core's internal accounting (O(entries);
+    /// for tests and stress suites).
+    pub fn audit(&self) -> std::result::Result<(), String> {
+        self.core.lock().unwrap().audit()
     }
 
     fn lookup(&self, key: &str) -> Option<Bytes> {
-        let mut lru = self.lru.lock().unwrap();
-        lru.get(key)
+        self.core.lock().unwrap().get(key)
     }
 
     fn fill(&self, key: &str, data: Bytes) {
-        let evicted = self.lru.lock().unwrap().insert(key, data);
-        self.stats
-            .evictions
-            .fetch_add(evicted, std::sync::atomic::Ordering::Relaxed);
+        self.core.lock().unwrap().insert(key, data);
     }
 }
 
 impl ObjectStore for VarnishCache {
     fn get(&self, key: &str) -> Result<Bytes> {
+        // the core counts the hit/miss; StatCounters only tracks volume
         if let Some(hit) = self.lookup(key) {
-            self.stats.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             self.stats.record_get(hit.len() as u64);
             return Ok(hit);
         }
-        self.stats.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let data = self.inner.get(key)?; // pays the remote cost
         self.stats.record_get(data.len() as u64);
         self.fill(key, data.clone());
@@ -188,15 +95,9 @@ impl ObjectStore for VarnishCache {
     fn get_async<'a>(&'a self, key: &'a str) -> BoxFut<'a, Result<Bytes>> {
         Box::pin(async move {
             if let Some(hit) = self.lookup(key) {
-                self.stats
-                    .hits
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 self.stats.record_get(hit.len() as u64);
                 return Ok(hit);
             }
-            self.stats
-                .misses
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             let data = self.inner.get_async(key).await?;
             self.stats.record_get(data.len() as u64);
             self.fill(key, data.clone());
@@ -205,7 +106,12 @@ impl ObjectStore for VarnishCache {
     }
 
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
-        self.inner.put(key, data)
+        self.inner.put(key, data)?;
+        // best-effort invalidation: drop any cached copy so later reads
+        // see the new object (a get() racing this put can still re-fill
+        // the old bytes — the usual cache/write race)
+        self.core.lock().unwrap().remove(key);
+        Ok(())
     }
 
     fn keys(&self) -> Vec<String> {
@@ -213,7 +119,7 @@ impl ObjectStore for VarnishCache {
     }
 
     fn contains(&self, key: &str) -> bool {
-        self.lru.lock().unwrap().map.contains_key(key) || self.inner.contains(key)
+        self.core.lock().unwrap().contains(key) || self.inner.contains(key)
     }
 
     fn hint_order(&self, epoch: usize, keys: &[String]) {
@@ -225,7 +131,17 @@ impl ObjectStore for VarnishCache {
     }
 
     fn stats(&self) -> StoreStats {
-        self.stats.snapshot()
+        // gets/bytes from the transfer counters; hit/miss/eviction truth
+        // lives in the eviction core
+        let s = self.stats.snapshot();
+        let t = self.core.lock().unwrap().stats();
+        StoreStats {
+            gets: s.gets,
+            bytes: s.bytes,
+            hits: t.hits,
+            misses: t.misses,
+            evictions: t.evictions,
+        }
     }
 }
 
@@ -254,6 +170,14 @@ mod tests {
     }
 
     #[test]
+    fn hit_ratio_defined_before_any_lookup() {
+        let c = VarnishCache::new(backing(1, 10), 100);
+        let r = c.hit_ratio();
+        assert!(!r.is_nan(), "hit_ratio must never be NaN");
+        assert_eq!(r, 0.0);
+    }
+
+    #[test]
     fn never_exceeds_capacity() {
         let c = VarnishCache::new(backing(20, 100), 350);
         for i in 0..20 {
@@ -261,6 +185,7 @@ mod tests {
             assert!(c.cached_bytes() <= 350, "over cap: {}", c.cached_bytes());
         }
         assert!(c.stats().evictions > 0);
+        c.audit().unwrap();
     }
 
     #[test]
@@ -275,6 +200,29 @@ mod tests {
         assert_eq!(c.stats().misses, before);
         c.get("k1").unwrap(); // miss again
         assert_eq!(c.stats().misses, before + 1);
+    }
+
+    #[test]
+    fn twoq_policy_selectable() {
+        let c = VarnishCache::with_policy(backing(3, 100), 200, CachePolicy::TwoQ);
+        assert_eq!(c.policy(), CachePolicy::TwoQ);
+        c.get("k0").unwrap();
+        c.get("k1").unwrap();
+        c.get("k2").unwrap(); // evicts k0 from probation → ghost
+        c.get("k0").unwrap(); // refill: ghost promotion to main
+        assert_eq!(c.tier_stats().ghost_promotions, 1);
+        c.audit().unwrap();
+    }
+
+    #[test]
+    fn put_invalidates_cached_copy() {
+        let c = VarnishCache::new(backing(1, 100), 1000);
+        c.get("k0").unwrap(); // cached at 100 bytes
+        c.put("k0", vec![7u8; 40]).unwrap();
+        let fresh = c.get("k0").unwrap();
+        assert_eq!(fresh.len(), 40, "stale cached payload served");
+        assert_eq!(fresh[0], 7);
+        c.audit().unwrap();
     }
 
     #[test]

@@ -1,0 +1,723 @@
+//! Unified O(1) eviction core for every byte-capped cache in the tree.
+//!
+//! Before this module existed the repo carried two divergent byte-capped
+//! caches: an intrusive O(1) LRU list inside `storage/cache.rs` and an
+//! O(n) `min_by_key` victim scan inside `prefetch/tier.rs`. Both
+//! [`super::VarnishCache`] and the prefetch hot tier
+//! (`crate::prefetch::tier::HotTier`) are now thin facades over one
+//! [`EvictCore`]:
+//!
+//! * a **slab** of entries addressed by index, recycled through a free
+//!   list — no per-operation allocation beyond the key string;
+//! * three **intrusive doubly-linked lists** (probation, main, ghost)
+//!   selected by a per-entry queue tag, each with its own head/tail and
+//!   byte/length accounting, so every link/unlink/victim-pick is O(1);
+//! * a **ghost list** that remembers recently evicted keys *without
+//!   payloads* on the same slab (entries just carry an empty `Bytes`),
+//!   bounded by entry count.
+//!
+//! Three eviction policies ride the structure, selected by
+//! [`CachePolicy`]:
+//!
+//! * [`CachePolicy::Lru`] — single queue (main), hits move the entry to
+//!   the queue head, the victim is the queue tail.
+//! * [`CachePolicy::TwoQ`] — simplified 2Q: new keys enter *probation*;
+//!   probation evictions leave their key on the ghost list; re-admitting
+//!   a ghost key promotes it straight to *main*. Probation drains before
+//!   main is touched. Hits refresh recency within the entry's own queue.
+//! * [`CachePolicy::S3Fifo`] — simplified S3-FIFO (Yang et al., 2023):
+//!   two FIFO queues plus the ghost list. Hits only bump a small
+//!   per-entry frequency counter (capped at 3) — no list movement. The
+//!   *small* (probation) queue is evicted from while it holds ≥ 10% of
+//!   capacity; a small-queue tail with nonzero frequency is promoted to
+//!   main instead of evicted, a main-queue tail with nonzero frequency
+//!   is rotated back to the head with its counter decremented
+//!   (CLOCK-style second chance). Small-queue evictions go to the ghost
+//!   list; ghost re-admissions enter main directly.
+//!
+//! Counters ([`CoreStats`]) are maintained inside the core so every
+//! facade reports the same per-tier stats, and [`EvictCore::audit`]
+//! re-walks the lists to verify link and byte accounting (used by the
+//! property and stress suites in `rust/tests/test_cache.rs`).
+
+use std::collections::HashMap;
+
+use super::Bytes;
+
+/// Eviction policy for a byte-capped cache (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Least-recently-used over a single queue.
+    Lru,
+    /// Two-queue with a ghost list (probation → ghost → main promotion).
+    TwoQ,
+    /// Simplified S3-FIFO: FIFO queues + frequency second chance + ghost.
+    S3Fifo,
+}
+
+impl CachePolicy {
+    /// Every policy, in the order reports should list them.
+    pub const ALL: [CachePolicy; 3] = [CachePolicy::Lru, CachePolicy::TwoQ, CachePolicy::S3Fifo];
+
+    pub fn by_name(name: &str) -> Option<CachePolicy> {
+        match name {
+            "lru" => Some(CachePolicy::Lru),
+            "2q" | "twoq" => Some(CachePolicy::TwoQ),
+            "s3fifo" | "s3-fifo" => Some(CachePolicy::S3Fifo),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CachePolicy::Lru => "lru",
+            CachePolicy::TwoQ => "2q",
+            CachePolicy::S3Fifo => "s3fifo",
+        }
+    }
+}
+
+/// Cumulative counters plus current occupancy, identical across every
+/// cache built on the core.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CoreStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// re-admissions that hit the ghost list and went straight to main
+    pub ghost_promotions: u64,
+    pub bytes: u64,
+    pub capacity: u64,
+    pub entries: u64,
+    /// keys currently remembered on the ghost list (no payload)
+    pub ghost_entries: u64,
+}
+
+impl CoreStats {
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+const NIL: usize = usize::MAX;
+/// S3-FIFO frequency counter saturation.
+const FREQ_CAP: u8 = 3;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum QueueId {
+    Probation = 0,
+    Main = 1,
+    Ghost = 2,
+}
+
+struct Entry {
+    key: String,
+    /// empty for ghost entries (the key is remembered, the payload is not)
+    data: Bytes,
+    /// S3-FIFO access frequency (saturating at [`FREQ_CAP`])
+    freq: u8,
+    queue: QueueId,
+    prev: usize,
+    next: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct ListEnds {
+    head: usize,
+    tail: usize,
+    len: usize,
+    bytes: u64,
+}
+
+impl ListEnds {
+    const fn empty() -> ListEnds {
+        ListEnds { head: NIL, tail: NIL, len: 0, bytes: 0 }
+    }
+}
+
+/// The unified intrusive-list eviction structure. Not thread-safe by
+/// itself; every facade guards it with its own mutex.
+pub struct EvictCore {
+    policy: CachePolicy,
+    capacity: u64,
+    ghost_cap: usize,
+    map: HashMap<String, usize>,
+    slab: Vec<Entry>,
+    free: Vec<usize>,
+    qs: [ListEnds; 3],
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+    ghost_promotions: u64,
+}
+
+impl EvictCore {
+    pub fn new(policy: CachePolicy, capacity_bytes: u64) -> EvictCore {
+        EvictCore {
+            policy,
+            capacity: capacity_bytes,
+            ghost_cap: 4096,
+            map: HashMap::new(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            qs: [ListEnds::empty(); 3],
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+            ghost_promotions: 0,
+        }
+    }
+
+    /// Cap the ghost list (keys remembered after probation eviction).
+    pub fn with_ghost_capacity(mut self, n: usize) -> EvictCore {
+        self.ghost_cap = n;
+        self.trim_ghost();
+        self
+    }
+
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Resident payload bytes (ghost entries hold none).
+    pub fn bytes(&self) -> u64 {
+        self.qs[QueueId::Probation as usize].bytes + self.qs[QueueId::Main as usize].bytes
+    }
+
+    /// Resident entry count (excludes ghosts).
+    pub fn len(&self) -> usize {
+        self.qs[QueueId::Probation as usize].len + self.qs[QueueId::Main as usize].len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn ghost_len(&self) -> usize {
+        self.qs[QueueId::Ghost as usize].len
+    }
+
+    /// Is `key` resident (ghost entries don't count)?
+    pub fn contains(&self, key: &str) -> bool {
+        self.map
+            .get(key)
+            .is_some_and(|&i| self.slab[i].queue != QueueId::Ghost)
+    }
+
+    pub fn stats(&self) -> CoreStats {
+        CoreStats {
+            hits: self.hits,
+            misses: self.misses,
+            insertions: self.insertions,
+            evictions: self.evictions,
+            ghost_promotions: self.ghost_promotions,
+            bytes: self.bytes(),
+            capacity: self.capacity,
+            entries: self.len() as u64,
+            ghost_entries: self.ghost_len() as u64,
+        }
+    }
+
+    /// Counted lookup; a hit refreshes recency per the policy.
+    pub fn get(&mut self, key: &str) -> Option<Bytes> {
+        match self.peek(key) {
+            Some(data) => {
+                self.hits += 1;
+                Some(data)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Uncounted lookup for pollers re-checking the *same* logical
+    /// lookup: refreshes recency on hit but leaves the hit/miss
+    /// counters alone.
+    pub fn peek(&mut self, key: &str) -> Option<Bytes> {
+        let &i = self.map.get(key)?;
+        if self.slab[i].queue == QueueId::Ghost {
+            return None;
+        }
+        self.touch(i);
+        Some(self.slab[i].data.clone())
+    }
+
+    /// Admit an object; returns the number of evictions performed.
+    /// Objects larger than the whole cache are rejected outright.
+    pub fn insert(&mut self, key: &str, data: Bytes) -> u64 {
+        if data.len() as u64 > self.capacity {
+            return 0;
+        }
+        if let Some(&i) = self.map.get(key) {
+            if self.slab[i].queue != QueueId::Ghost {
+                // resident: replace the payload in place, refresh like a hit
+                let old = self.slab[i].data.len() as u64;
+                let qi = self.slab[i].queue as usize;
+                self.qs[qi].bytes = self.qs[qi].bytes - old + data.len() as u64;
+                self.slab[i].data = data;
+                self.touch(i);
+                return self.evict_to_fit();
+            }
+            // ghost hit: the key earned a second life — straight to main
+            self.unlink(i);
+            self.slab[i].data = data;
+            self.slab[i].freq = 0;
+            self.ghost_promotions += 1;
+            self.insertions += 1;
+            self.push_front(i, QueueId::Main);
+            return self.evict_to_fit();
+        }
+        let queue = match self.policy {
+            CachePolicy::Lru => QueueId::Main,
+            CachePolicy::TwoQ | CachePolicy::S3Fifo => QueueId::Probation,
+        };
+        let i = self.alloc(key, data);
+        self.insertions += 1;
+        self.map.insert(key.to_string(), i);
+        self.push_front(i, queue);
+        self.evict_to_fit()
+    }
+
+    /// Forget `key` entirely (resident or ghost); returns whether an
+    /// entry was removed. Used for invalidation on overwrite — not an
+    /// eviction: counters are untouched and nothing moves to the ghost
+    /// list.
+    pub fn remove(&mut self, key: &str) -> bool {
+        let Some(&i) = self.map.get(key) else {
+            return false;
+        };
+        self.unlink(i);
+        self.slab[i].data = Bytes::new(Vec::new());
+        let k = std::mem::take(&mut self.slab[i].key);
+        self.map.remove(&k);
+        self.free.push(i);
+        true
+    }
+
+    /// Resident keys in probation, most- to least-recently linked.
+    pub fn probation_keys(&self) -> Vec<String> {
+        self.keys_in(QueueId::Probation)
+    }
+
+    /// Resident keys in main, most- to least-recently linked.
+    pub fn main_keys(&self) -> Vec<String> {
+        self.keys_in(QueueId::Main)
+    }
+
+    /// Ghost keys, most- to least-recently evicted.
+    pub fn ghost_keys(&self) -> Vec<String> {
+        self.keys_in(QueueId::Ghost)
+    }
+
+    /// Re-walk every list and cross-check link structure, byte/length
+    /// accounting, the key map, and the capacity/ghost bounds. O(n);
+    /// meant for tests and stress suites, not the hot path.
+    pub fn audit(&self) -> Result<(), String> {
+        let mut listed = 0usize;
+        for q in [QueueId::Probation, QueueId::Main, QueueId::Ghost] {
+            let ends = self.qs[q as usize];
+            let mut i = ends.head;
+            let mut prev = NIL;
+            let mut n = 0usize;
+            let mut bytes = 0u64;
+            while i != NIL {
+                let e = &self.slab[i];
+                if e.queue != q {
+                    return Err(format!("entry {:?} tagged {:?}, linked in {q:?}", e.key, e.queue));
+                }
+                if e.prev != prev {
+                    return Err(format!("entry {:?} has a broken prev link", e.key));
+                }
+                if q == QueueId::Ghost && !e.data.is_empty() {
+                    return Err(format!("ghost entry {:?} still holds a payload", e.key));
+                }
+                if self.map.get(&e.key) != Some(&i) {
+                    return Err(format!("map does not point at linked entry {:?}", e.key));
+                }
+                bytes += e.data.len() as u64;
+                n += 1;
+                if n > self.slab.len() {
+                    return Err(format!("{q:?} list has a cycle"));
+                }
+                prev = i;
+                i = e.next;
+            }
+            if ends.tail != prev {
+                return Err(format!("{q:?} tail does not match the last linked entry"));
+            }
+            if n != ends.len {
+                return Err(format!("{q:?} len {} != walked {n}", ends.len));
+            }
+            if bytes != ends.bytes {
+                return Err(format!("{q:?} bytes {} != walked {bytes}", ends.bytes));
+            }
+            listed += n;
+        }
+        if listed != self.map.len() {
+            return Err(format!("map holds {} keys, lists hold {listed}", self.map.len()));
+        }
+        if self.bytes() > self.capacity {
+            return Err(format!("resident {} bytes over capacity {}", self.bytes(), self.capacity));
+        }
+        if self.ghost_len() > self.ghost_cap {
+            return Err(format!("ghost {} over cap {}", self.ghost_len(), self.ghost_cap));
+        }
+        Ok(())
+    }
+
+    fn keys_in(&self, q: QueueId) -> Vec<String> {
+        let mut out = Vec::with_capacity(self.qs[q as usize].len);
+        let mut i = self.qs[q as usize].head;
+        while i != NIL {
+            out.push(self.slab[i].key.clone());
+            i = self.slab[i].next;
+        }
+        out
+    }
+
+    fn alloc(&mut self, key: &str, data: Bytes) -> usize {
+        let entry = Entry {
+            key: key.to_string(),
+            data,
+            freq: 0,
+            queue: QueueId::Main,
+            prev: NIL,
+            next: NIL,
+        };
+        if let Some(i) = self.free.pop() {
+            self.slab[i] = entry;
+            i
+        } else {
+            self.slab.push(entry);
+            self.slab.len() - 1
+        }
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (p, n, q, sz) = {
+            let e = &self.slab[i];
+            (e.prev, e.next, e.queue as usize, e.data.len() as u64)
+        };
+        if p != NIL {
+            self.slab[p].next = n;
+        } else {
+            self.qs[q].head = n;
+        }
+        if n != NIL {
+            self.slab[n].prev = p;
+        } else {
+            self.qs[q].tail = p;
+        }
+        self.qs[q].len -= 1;
+        self.qs[q].bytes -= sz;
+    }
+
+    fn push_front(&mut self, i: usize, q: QueueId) {
+        let sz = self.slab[i].data.len() as u64;
+        let qi = q as usize;
+        let head = self.qs[qi].head;
+        self.slab[i].queue = q;
+        self.slab[i].prev = NIL;
+        self.slab[i].next = head;
+        if head != NIL {
+            self.slab[head].prev = i;
+        } else {
+            self.qs[qi].tail = i;
+        }
+        self.qs[qi].head = i;
+        self.qs[qi].len += 1;
+        self.qs[qi].bytes += sz;
+    }
+
+    /// Recency refresh on a resident entry: LRU/2Q move it to the head
+    /// of its queue; S3-FIFO only bumps the frequency counter.
+    fn touch(&mut self, i: usize) {
+        match self.policy {
+            CachePolicy::Lru | CachePolicy::TwoQ => {
+                let q = self.slab[i].queue;
+                self.unlink(i);
+                self.push_front(i, q);
+            }
+            CachePolicy::S3Fifo => {
+                let f = self.slab[i].freq;
+                self.slab[i].freq = (f + 1).min(FREQ_CAP);
+            }
+        }
+    }
+
+    fn evict_to_fit(&mut self) -> u64 {
+        let mut evicted = 0;
+        while self.bytes() > self.capacity {
+            if !self.evict_one() {
+                break;
+            }
+            evicted += 1;
+        }
+        self.trim_ghost();
+        evicted
+    }
+
+    /// Evict one resident entry per the policy. Returns false only when
+    /// nothing is resident.
+    fn evict_one(&mut self) -> bool {
+        match self.policy {
+            CachePolicy::Lru => {
+                let i = self.qs[QueueId::Main as usize].tail;
+                if i == NIL {
+                    return false;
+                }
+                self.drop_entry(i, false);
+                true
+            }
+            CachePolicy::TwoQ => {
+                // probation drains before the main queue is touched;
+                // only probation victims are remembered on the ghost list
+                let prob = self.qs[QueueId::Probation as usize].tail;
+                if prob != NIL {
+                    self.drop_entry(prob, true);
+                    return true;
+                }
+                let main = self.qs[QueueId::Main as usize].tail;
+                if main == NIL {
+                    return false;
+                }
+                self.drop_entry(main, false);
+                true
+            }
+            CachePolicy::S3Fifo => self.evict_one_s3fifo(),
+        }
+    }
+
+    fn evict_one_s3fifo(&mut self) -> bool {
+        loop {
+            let small_tail = self.qs[QueueId::Probation as usize].tail;
+            let small_bytes = self.qs[QueueId::Probation as usize].bytes;
+            let main_tail = self.qs[QueueId::Main as usize].tail;
+            // evict from the small queue while it holds ≥ 10% of capacity
+            let use_small = small_tail != NIL
+                && (small_bytes * 10 >= self.capacity || main_tail == NIL);
+            if use_small {
+                if self.slab[small_tail].freq > 0 {
+                    // touched since admission: promote instead of evicting
+                    self.unlink(small_tail);
+                    self.slab[small_tail].freq = 0;
+                    self.push_front(small_tail, QueueId::Main);
+                    continue;
+                }
+                self.drop_entry(small_tail, true);
+                return true;
+            }
+            if main_tail == NIL {
+                return false;
+            }
+            if self.slab[main_tail].freq > 0 {
+                // CLOCK-style second chance: rotate with decremented freq
+                self.slab[main_tail].freq -= 1;
+                self.unlink(main_tail);
+                self.push_front(main_tail, QueueId::Main);
+                continue;
+            }
+            self.drop_entry(main_tail, false);
+            return true;
+        }
+    }
+
+    /// Remove entry `i` from residency; `to_ghost` keeps the key (no
+    /// payload) on the ghost list instead of freeing the slot.
+    fn drop_entry(&mut self, i: usize, to_ghost: bool) {
+        self.unlink(i);
+        self.evictions += 1;
+        self.slab[i].data = Bytes::new(Vec::new());
+        if to_ghost {
+            self.slab[i].freq = 0;
+            self.push_front(i, QueueId::Ghost);
+        } else {
+            let key = std::mem::take(&mut self.slab[i].key);
+            self.map.remove(&key);
+            self.free.push(i);
+        }
+    }
+
+    fn trim_ghost(&mut self) {
+        while self.qs[QueueId::Ghost as usize].len > self.ghost_cap {
+            let i = self.qs[QueueId::Ghost as usize].tail;
+            self.unlink(i);
+            let key = std::mem::take(&mut self.slab[i].key);
+            self.map.remove(&key);
+            self.free.push(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(n: usize, fill: u8) -> Bytes {
+        Bytes::new(vec![fill; n])
+    }
+
+    #[test]
+    fn policy_names() {
+        assert_eq!(CachePolicy::by_name("lru"), Some(CachePolicy::Lru));
+        assert_eq!(CachePolicy::by_name("2q"), Some(CachePolicy::TwoQ));
+        assert_eq!(CachePolicy::by_name("twoq"), Some(CachePolicy::TwoQ));
+        assert_eq!(CachePolicy::by_name("s3fifo"), Some(CachePolicy::S3Fifo));
+        assert_eq!(CachePolicy::by_name("s3-fifo"), Some(CachePolicy::S3Fifo));
+        assert_eq!(CachePolicy::by_name("arc"), None);
+        assert_eq!(CachePolicy::S3Fifo.label(), "s3fifo");
+        assert_eq!(CachePolicy::ALL.len(), 3);
+    }
+
+    #[test]
+    fn lru_orders_and_evicts() {
+        let mut c = EvictCore::new(CachePolicy::Lru, 300);
+        c.insert("a", blob(100, 0));
+        c.insert("b", blob(100, 1));
+        c.insert("c", blob(100, 2));
+        assert_eq!(c.main_keys(), vec!["c", "b", "a"]);
+        assert!(c.get("a").is_some()); // a becomes MRU
+        assert_eq!(c.main_keys(), vec!["a", "c", "b"]);
+        let evicted = c.insert("d", blob(100, 3));
+        assert_eq!(evicted, 1);
+        assert!(!c.contains("b"), "LRU victim should be b");
+        assert_eq!(c.ghost_len(), 0, "LRU never ghosts");
+        c.audit().unwrap();
+    }
+
+    #[test]
+    fn twoq_probation_ghost_main_flow() {
+        let mut c = EvictCore::new(CachePolicy::TwoQ, 200);
+        c.insert("g", blob(100, 0));
+        c.insert("a", blob(100, 1));
+        c.insert("b", blob(100, 2)); // evicts g (probation LRU) → ghost
+        assert!(!c.contains("g"));
+        assert_eq!(c.ghost_keys(), vec!["g"]);
+        c.insert("g", blob(100, 3)); // ghost hit → main
+        assert_eq!(c.stats().ghost_promotions, 1);
+        assert_eq!(c.main_keys(), vec!["g"]);
+        c.insert("x", blob(100, 4));
+        c.insert("y", blob(100, 5));
+        assert!(c.contains("g"), "main key evicted before probation drained");
+        c.audit().unwrap();
+    }
+
+    #[test]
+    fn s3fifo_second_chance_promotes_touched_keys() {
+        // capacity fits two 100-byte objects; small queue is always
+        // ≥ 10% of capacity here, so eviction hits the small tail
+        let mut c = EvictCore::new(CachePolicy::S3Fifo, 200);
+        c.insert("hot", blob(100, 0));
+        c.insert("cold", blob(100, 1));
+        assert!(c.get("hot").is_some()); // freq("hot") = 1
+        c.insert("new", blob(100, 2));
+        // victim scan hits "hot" (small tail), sees freq > 0, promotes it
+        // to main, then evicts "cold"
+        assert!(c.contains("hot"), "touched key not given a second chance");
+        assert!(!c.contains("cold"));
+        assert_eq!(c.main_keys(), vec!["hot"]);
+        assert_eq!(c.ghost_keys(), vec!["cold"]);
+        // ghost re-admission goes straight to main
+        c.insert("cold", blob(100, 3));
+        assert_eq!(c.stats().ghost_promotions, 1);
+        assert!(c.main_keys().contains(&"cold".to_string()));
+        c.audit().unwrap();
+    }
+
+    #[test]
+    fn resident_reinsert_updates_bytes_in_place() {
+        for policy in CachePolicy::ALL {
+            let mut c = EvictCore::new(policy, 1000);
+            c.insert("a", blob(100, 1));
+            c.insert("a", blob(200, 2));
+            assert_eq!(c.bytes(), 200, "{policy:?}");
+            assert_eq!(c.len(), 1, "{policy:?}");
+            assert_eq!(c.get("a").unwrap().len(), 200, "{policy:?}");
+            assert_eq!(c.stats().insertions, 1, "{policy:?}");
+            c.audit().unwrap();
+        }
+    }
+
+    #[test]
+    fn oversized_object_rejected_all_policies() {
+        for policy in CachePolicy::ALL {
+            let mut c = EvictCore::new(policy, 100);
+            assert_eq!(c.insert("big", blob(500, 9)), 0);
+            assert!(!c.contains("big"), "{policy:?}");
+            assert_eq!(c.bytes(), 0);
+            assert_eq!(c.stats().insertions, 0);
+        }
+    }
+
+    #[test]
+    fn ghost_list_bounded_and_auditable() {
+        for policy in [CachePolicy::TwoQ, CachePolicy::S3Fifo] {
+            let mut c = EvictCore::new(policy, 100).with_ghost_capacity(2);
+            for i in 0..8 {
+                c.insert(&format!("k{i}"), blob(100, i as u8));
+            }
+            assert!(c.ghost_len() <= 2, "{policy:?}");
+            c.audit().unwrap();
+        }
+    }
+
+    #[test]
+    fn counters_track_lookups() {
+        let mut c = EvictCore::new(CachePolicy::Lru, 1000);
+        c.insert("a", blob(10, 0));
+        assert!(c.get("a").is_some());
+        assert!(c.get("a").is_some());
+        assert!(c.get("b").is_none());
+        assert!(c.peek("a").is_some()); // uncounted
+        let s = c.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 1);
+        assert!((s.hit_ratio() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(CoreStats::default().hit_ratio(), 0.0);
+    }
+
+    #[test]
+    fn remove_drops_resident_and_ghost_entries() {
+        let mut c = EvictCore::new(CachePolicy::TwoQ, 200);
+        c.insert("a", blob(100, 0));
+        c.insert("b", blob(100, 1));
+        c.insert("c", blob(100, 2)); // evicts a → ghost
+        assert!(c.remove("b"), "resident entry");
+        assert!(!c.contains("b"));
+        assert_eq!(c.bytes(), 100);
+        assert!(c.remove("a"), "ghost entry");
+        assert_eq!(c.ghost_len(), 0);
+        assert!(!c.remove("nope"));
+        // removal is not an eviction, and a removed ghost key re-enters
+        // on probation like a brand-new key
+        assert_eq!(c.stats().evictions, 1);
+        c.insert("a", blob(100, 3));
+        assert_eq!(c.stats().ghost_promotions, 0);
+        c.audit().unwrap();
+    }
+
+    #[test]
+    fn slab_slots_recycle() {
+        let mut c = EvictCore::new(CachePolicy::Lru, 200);
+        for i in 0..50 {
+            c.insert(&format!("k{i}"), blob(100, i as u8));
+        }
+        // capacity fits 2 entries; the slab must not grow past the
+        // resident set + a small recycling margin
+        assert!(c.slab.len() <= 3, "slab grew to {}", c.slab.len());
+        c.audit().unwrap();
+    }
+}

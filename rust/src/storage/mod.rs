@@ -10,10 +10,14 @@
 //! * [`remote::SimRemoteStore`] — wraps any store with first-byte latency,
 //!   per-connection and NIC bandwidth, and a connection limit; presets
 //!   calibrated per storage type live in [`remote::RemoteProfile`].
-//! * [`cache::VarnishCache`] — byte-capped LRU in front of any store.
+//! * [`cache::VarnishCache`] — byte-capped cache in front of any store
+//!   (LRU by default; any [`evict::CachePolicy`]).
 //! * [`crate::prefetch::PrefetchStore`] — sampler-ahead prefetch engine
 //!   with a tiered cache (hot in-memory tier over any of the above as
 //!   the warm tier); lives in its own subsystem, `crate::prefetch`.
+//!
+//! Every byte-capped cache in the tree (Varnish warm cache, prefetch hot
+//! tier) is built on one O(1) eviction structure, [`evict::EvictCore`].
 //!
 //! Both a blocking and an async (`asyncrt`) fetch path are exposed; the
 //! async path is what the Asyncio fetcher uses. Stores also receive the
@@ -23,11 +27,13 @@
 
 pub mod cache;
 pub mod dir;
+pub mod evict;
 pub mod mem;
 pub mod remote;
 
 pub use cache::VarnishCache;
 pub use dir::DirStore;
+pub use evict::{CachePolicy, CoreStats, EvictCore};
 pub use mem::MemStore;
 pub use remote::{RemoteProfile, SimRemoteStore};
 
@@ -92,14 +98,13 @@ pub struct StoreStats {
     pub evictions: u64,
 }
 
-/// Shared counter block used by store implementations.
+/// Shared counter block used by store implementations. Tracks transfer
+/// volume only; caching stores report hit/miss/eviction truth from
+/// their eviction core ([`evict::EvictCore`]).
 #[derive(Debug, Default)]
 pub struct StatCounters {
     pub gets: AtomicU64,
     pub bytes: AtomicU64,
-    pub hits: AtomicU64,
-    pub misses: AtomicU64,
-    pub evictions: AtomicU64,
 }
 
 impl StatCounters {
@@ -112,9 +117,7 @@ impl StatCounters {
         StoreStats {
             gets: self.gets.load(Ordering::Relaxed),
             bytes: self.bytes.load(Ordering::Relaxed),
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
+            ..StoreStats::default()
         }
     }
 }

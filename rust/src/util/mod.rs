@@ -26,6 +26,12 @@ pub struct Clock {
     origin: Instant,
 }
 
+impl Default for Clock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Clock {
     pub fn new() -> Self {
         Self { origin: Instant::now() }

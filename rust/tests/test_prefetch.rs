@@ -189,3 +189,35 @@ fn config_knobs_drive_the_rig() {
     assert_eq!(p.config().depth, 24);
     assert_eq!(p.config().policy, CachePolicy::TwoQ);
 }
+
+/// The S3-FIFO policy threads from a config file through the rig into
+/// both byte-capped caches (varnish warm cache and prefetch hot tier),
+/// and an epoch drains over the stack.
+#[test]
+fn s3fifo_policy_reaches_both_cache_layers() {
+    use cdl::bench::rig::{self, RigSpec};
+    use cdl::config::ExperimentConfig;
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.apply_text(
+        "prefetch_depth = 8\nprefetch_policy = s3fifo\n\
+         cache_bytes = 262144\ncache_policy = s3fifo\n",
+    )
+    .unwrap();
+    let mut spec = RigSpec::quick("s3", 0.02);
+    spec.items = 16;
+    spec.batch_size = 8;
+    spec.prefetch_depth = cfg.loader.prefetch_depth;
+    spec.prefetch_policy = cfg.loader.prefetch_policy;
+    spec.cache_bytes = cfg.cache_bytes;
+    spec.cache_policy = cfg.cache_policy;
+    let rig = rig::build(&spec).unwrap();
+    let p = rig.prefetch.as_ref().expect("prefetch layer missing");
+    assert_eq!(p.config().policy, CachePolicy::S3Fifo);
+    let cache = rig.cache.as_ref().expect("cache layer missing");
+    assert_eq!(cache.policy(), CachePolicy::S3Fifo);
+    let batches: Vec<Batch> = rig.dataloader.epoch(0).collect();
+    assert_eq!(batches.len(), 2);
+    cache.audit().unwrap();
+    p.audit().unwrap();
+}
