@@ -1,0 +1,11 @@
+//! `cargo bench --bench bench_hotpath` — regenerates the hot-path
+//! experiment: fused arena assembly vs the legacy copy path (batches/s,
+//! p50/p99 batch latency, allocs/batch via the counting allocator) plus
+//! work stealing vs static assignment on the high-latency profiles.
+//! Scale via CDL_SCALE=quick|paper|<items multiplier> (default quick).
+
+fn main() -> anyhow::Result<()> {
+    let scale = cdl::bench::Scale::from_env();
+    cdl::bench::run_experiment("hotpath", scale)?;
+    Ok(())
+}

@@ -7,10 +7,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use cdl::data::augment::{Augment, AugmentConfig};
-use cdl::data::simg::SimgImage;
+use cdl::data::simg::{SimgImage, SimgRef};
 use cdl::data::synth::{generate_image, CorpusSpec};
 use cdl::dataloader::collate::collate;
-use cdl::dataset::Sample;
+use cdl::dataloader::BatchArena;
+use cdl::dataset::{ItemMeta, Sample};
 use cdl::storage::{MemStore, ObjectStore, VarnishCache};
 use cdl::telemetry::Recorder;
 use cdl::util::rng::Rng;
@@ -80,7 +81,26 @@ fn main() {
         })
         .collect();
     bench("collate batch=64 of 64x64 crops", 200, || {
-        std::hint::black_box(collate(0, samples.clone()));
+        std::hint::black_box(collate(0, samples.clone()).unwrap());
+    });
+
+    // the fused arena path those copies disappear into: parse the raw
+    // object, augment straight into a recycled slab slot
+    let arena = BatchArena::new(64, 64, 2);
+    let view = SimgRef::parse(&encoded).unwrap();
+    let mut id = 0usize;
+    bench("arena batch=64 fused fill (zero-alloc)", 200, || {
+        let builder = arena.clone().checkout(id, 64);
+        id += 1;
+        for pos in 0..64 {
+            builder
+                .fill(pos, pos, |out| {
+                    aug.apply_u8_into(&view, 0, pos, out);
+                    Ok(ItemMeta { label: view.label, raw_bytes: encoded.len() })
+                })
+                .unwrap();
+        }
+        builder.finish().unwrap().recycle();
     });
 
     let rec = Recorder::new();

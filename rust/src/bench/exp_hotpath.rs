@@ -1,0 +1,216 @@
+//! Hot-path experiments (beyond the paper's figure set): what the
+//! memory path costs once storage latency is out of the picture, and
+//! what batch dispatch costs when it isn't.
+//!
+//! * **Fused arena assembly** — `mem` storage (no latency to hide, the
+//!   paper's 12× win already banked), batch 64, every fetcher × arena
+//!   on/off: batches/s, p50/p99 consumer batch latency, and per-batch
+//!   allocation counts from the counting global allocator. Arena-on
+//!   decodes straight into recycled slabs (no decode buffer, no crop
+//!   tensor, no collate copy); the allocs/batch column collapses and
+//!   batches/s rises with it.
+//! * **Work stealing vs static assignment** — threaded fetcher over the
+//!   high-latency `s3`/`ceph_os`/`gluster_fs` profiles: the shared
+//!   injector lets idle workers pick up the globally-next batch, so one
+//!   slow wave no longer pins the batches behind it to a busy worker
+//!   (the Versaci & Busonera straggler tail). Reported as epoch wall
+//!   time plus p50/p99 consumer batch latency.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::rig::{self, RigSpec};
+use super::{emit, Scale};
+use crate::dataloader::FetchImpl;
+use crate::util::alloc;
+use crate::util::stats;
+use crate::util::table::{num, Table};
+
+const BATCH: usize = 64;
+const STEAL_BATCH: usize = 16;
+const STEAL_PROFILES: [&str; 3] = ["s3", "ceph_os", "gluster_fs"];
+
+/// One measured epoch of a built rig: per-batch consumer latencies,
+/// wall seconds, and the allocation-counter delta.
+struct EpochMeasure {
+    latencies: Vec<f64>,
+    epoch_s: f64,
+    allocs: u64,
+}
+
+fn measure_epoch(rig: &rig::Rig, epoch: usize) -> EpochMeasure {
+    let before = alloc::counters();
+    let mut latencies = Vec::new();
+    let t0 = Instant::now();
+    let mut it = rig.dataloader.epoch(epoch);
+    loop {
+        let tb = Instant::now();
+        let Some(b) = it.next() else { break };
+        latencies.push(tb.elapsed().as_secs_f64());
+        b.recycle();
+    }
+    drop(it);
+    let epoch_s = t0.elapsed().as_secs_f64();
+    let allocs = alloc::counters().since(before).allocs;
+    EpochMeasure { latencies, epoch_s, allocs }
+}
+
+fn assembly_spec(fetch: FetchImpl, arena_on: bool, scale: Scale) -> RigSpec {
+    let mut spec = RigSpec::quick("mem", scale.latency);
+    spec.items = scale.items(256);
+    spec.batch_size = BATCH;
+    spec.mean_kb = 96;
+    spec.crop = 32;
+    spec.num_workers = 4;
+    spec.num_fetch_workers = 8;
+    spec.fetch_impl = fetch;
+    // native workers: measure the memory path itself, not the GIL tax
+    // stretching it (the tax multiplies both cells identically)
+    spec.runtime = crate::gil::Runtime::Native;
+    if arena_on {
+        // in-flight window: data queue (8) + one wave per worker (4) +
+        // the consumer's batch, with margin
+        spec.arena_slabs = 16;
+    }
+    spec
+}
+
+/// The fused-assembly table. Also returns the vanilla-fetcher speedup
+/// (arena-on batches/s over arena-off) for the headline/tests.
+pub fn assembly_table(scale: Scale) -> Result<(Table, f64)> {
+    let mut t = Table::new(
+        "Hot path — fused arena assembly vs legacy copy path (mem, batch 64)",
+        &[
+            "fetch",
+            "arena",
+            "batches/s",
+            "p50 batch ms",
+            "p99 batch ms",
+            "allocs/batch",
+            "speedup",
+        ],
+    );
+    let mut vanilla_speedup = f64::NAN;
+    for fetch in FetchImpl::all() {
+        let mut off_bps = f64::NAN;
+        for arena_on in [false, true] {
+            let spec = assembly_spec(fetch, arena_on, scale);
+            let rig = rig::build(&spec)?;
+            // epoch 0 warms workers, slabs, and allocator pools; epoch 1
+            // is the steady state we report
+            rig::drain_numbered_epoch(&rig, 0);
+            let m = measure_epoch(&rig, 1);
+            let n = m.latencies.len();
+            if n == 0 {
+                anyhow::bail!(
+                    "hotpath cell {}/arena={arena_on} delivered no batches",
+                    fetch.label()
+                );
+            }
+            let s = stats::Summary::of(&m.latencies);
+            let bps = n as f64 / m.epoch_s;
+            let speedup = if arena_on { bps / off_bps } else { f64::NAN };
+            if arena_on && fetch == FetchImpl::Vanilla {
+                vanilla_speedup = speedup;
+            }
+            if !arena_on {
+                off_bps = bps;
+            }
+            t.row(&[
+                fetch.label().to_string(),
+                if arena_on { "on" } else { "off" }.to_string(),
+                num(bps, 1),
+                num(s.p50 * 1e3, 2),
+                num(s.p99 * 1e3, 2),
+                num(m.allocs as f64 / n as f64, 0),
+                if arena_on { format!("{speedup:.2}x") } else { "-".to_string() },
+            ]);
+        }
+    }
+    Ok((t, vanilla_speedup))
+}
+
+fn stealing_spec(storage: &'static str, stealing: bool, scale: Scale) -> RigSpec {
+    let mut spec = RigSpec::quick(storage, scale.latency);
+    spec.items = scale.items(384);
+    spec.batch_size = STEAL_BATCH;
+    spec.num_workers = 4;
+    spec.fetch_impl = FetchImpl::Threaded;
+    spec.num_fetch_workers = STEAL_BATCH;
+    spec.arena_slabs = 32;
+    spec.work_stealing = stealing;
+    spec.runtime = crate::gil::Runtime::Native;
+    spec
+}
+
+/// The dispatch table. Also returns (static p99, stealing p99) on the
+/// s3 profile for the headline/tests.
+pub fn stealing_table(scale: Scale) -> Result<(Table, f64, f64)> {
+    let mut t = Table::new(
+        "Hot path — work stealing vs static round-robin (threaded fetcher)",
+        &[
+            "storage",
+            "dispatch",
+            "epoch s",
+            "p50 batch ms",
+            "p99 batch ms",
+        ],
+    );
+    let mut s3_static_p99 = f64::NAN;
+    let mut s3_steal_p99 = f64::NAN;
+    for storage in STEAL_PROFILES {
+        for stealing in [false, true] {
+            let spec = stealing_spec(storage, stealing, scale);
+            let rig = rig::build(&spec)?;
+            let m = measure_epoch(&rig, 0);
+            if m.latencies.is_empty() {
+                anyhow::bail!(
+                    "hotpath dispatch cell {storage}/stealing={stealing} \
+                     delivered no batches"
+                );
+            }
+            let s = stats::Summary::of(&m.latencies);
+            if storage == "s3" {
+                if stealing {
+                    s3_steal_p99 = s.p99;
+                } else {
+                    s3_static_p99 = s.p99;
+                }
+            }
+            t.row(&[
+                storage.to_string(),
+                if stealing { "stealing" } else { "static" }.to_string(),
+                num(m.epoch_s, 2),
+                num(s.p50 * 1e3, 1),
+                num(s.p99 * 1e3, 1),
+            ]);
+        }
+    }
+    Ok((t, s3_static_p99, s3_steal_p99))
+}
+
+/// Experiment entry point (id "hotpath"): fused assembly sweep + work
+/// stealing dispatch comparison.
+pub fn hotpath(scale: Scale) -> Result<()> {
+    let (assembly, vanilla_speedup) = assembly_table(scale)?;
+    emit("hotpath", &assembly)?;
+    println!(
+        "  arena-on vanilla assembly is {vanilla_speedup:.2}x the legacy \
+         copy path (batches/s, steady-state epoch)"
+    );
+    let (dispatch, static_p99, steal_p99) = stealing_table(scale)?;
+    emit("hotpath", &dispatch)?;
+    println!(
+        "  s3 p99 consumer batch latency: static {:.1} ms vs stealing {:.1} ms",
+        static_p99 * 1e3,
+        steal_p99 * 1e3,
+    );
+    Ok(())
+}
+
+// The throughput / allocation / tail assertions for this experiment
+// live in `tests/test_hotpath_exp.rs` — a deliberately single-test
+// integration binary, because they read wall clocks and the
+// process-wide allocation counters, which the parallel lib-test
+// harness would pollute.

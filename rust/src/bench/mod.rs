@@ -10,6 +10,7 @@
 
 pub mod exp_appendix;
 pub mod exp_core;
+pub mod exp_hotpath;
 pub mod exp_params;
 pub mod exp_prefetch;
 pub mod rig;
@@ -95,11 +96,12 @@ pub fn emit_raw(exp: &str, name: &str, content: &str) -> Result<()> {
 }
 
 /// All experiment ids: the paper's figures in paper order, then the
-/// repo's own extensions ("prefetch": sampler-ahead engine sweep).
+/// repo's own extensions ("prefetch": sampler-ahead engine sweep;
+/// "hotpath": fused arena assembly + work-stealing dispatch).
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "t3", "f2", "f5", "f6", "f7", "f8", "f9", "f10", "f11", "f12", "f13",
     "f14", "f15", "f16", "t10", "f17", "f20", "f21", "f22", "f23",
-    "prefetch",
+    "prefetch", "hotpath",
 ];
 
 /// Dispatch one experiment by id.
@@ -126,6 +128,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> Result<()> {
         "f22" => exp_appendix::f22_shard_loaders(scale),
         "f23" => exp_appendix::f23_fade(scale),
         "prefetch" => exp_prefetch::prefetch_sweep(scale),
+        "hotpath" => exp_hotpath::hotpath(scale),
         "all" => {
             for id in ALL_EXPERIMENTS {
                 println!("\n━━━ experiment {id} ━━━");

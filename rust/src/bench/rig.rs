@@ -40,6 +40,10 @@ pub struct RigSpec {
     pub prefetch_depth: usize,
     /// hot-tier policy for the prefetch cache
     pub prefetch_policy: CachePolicy,
+    /// recycled batch-slab pool size (0 = legacy copy path)
+    pub arena_slabs: usize,
+    /// shared work-stealing batch injector instead of static round-robin
+    pub work_stealing: bool,
     pub lazy_init: bool,
     pub runtime: gil::Runtime,
     pub trainer: TrainerKind,
@@ -66,6 +70,8 @@ impl RigSpec {
             batch_pool: 0,
             prefetch_depth: 0,
             prefetch_policy: CachePolicy::Lru,
+            arena_slabs: 0,
+            work_stealing: false,
             lazy_init: true,
             runtime: gil::Runtime::Python,
             trainer: TrainerKind::Torch,
@@ -193,6 +199,8 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
         batch_pool: spec.batch_pool,
         prefetch_depth: spec.prefetch_depth,
         prefetch_policy: spec.prefetch_policy,
+        arena_slabs: spec.arena_slabs,
+        work_stealing: spec.work_stealing,
         lazy_init: spec.lazy_init,
         runtime: spec.runtime,
         seed: spec.seed,
@@ -230,15 +238,22 @@ pub fn run(spec: &RigSpec) -> Result<(TrainReport, Rig)> {
     Ok((report, rig))
 }
 
-/// Loader-only epoch (no device): drain all batches, return
-/// (wall seconds, bytes, batches).
+/// Loader-only epoch (no device): drain all batches (recycling their
+/// slabs), return (wall seconds, bytes, batches).
 pub fn drain_epoch(rig: &Rig) -> (f64, u64, usize) {
+    drain_numbered_epoch(rig, 0)
+}
+
+/// [`drain_epoch`] for an arbitrary epoch number (arena-aware sweeps
+/// measure a *steady-state* epoch, not the cold first one).
+pub fn drain_numbered_epoch(rig: &Rig, epoch: usize) -> (f64, u64, usize) {
     let t0 = std::time::Instant::now();
     let mut bytes = 0u64;
     let mut n = 0usize;
-    for b in rig.dataloader.epoch(0) {
+    for b in rig.dataloader.epoch(epoch) {
         bytes += b.raw_bytes;
         n += 1;
+        b.recycle();
     }
     (t0.elapsed().as_secs_f64(), bytes, n)
 }
@@ -294,6 +309,23 @@ mod tests {
         let c = p.counters();
         assert_eq!(c.gets, 24, "{c:?}");
         assert!(c.issued > 0, "engine idle: {c:?}");
+    }
+
+    #[test]
+    fn arena_and_stealing_rig_drains_cleanly() {
+        let mut spec = RigSpec::quick("mem", 0.1);
+        spec.items = 32;
+        spec.batch_size = 8;
+        spec.arena_slabs = 12;
+        spec.work_stealing = true;
+        let rig = build(&spec).unwrap();
+        let (_, _, n) = drain_epoch(&rig);
+        assert_eq!(n, 4);
+        let (_, _, n) = drain_numbered_epoch(&rig, 1);
+        assert_eq!(n, 4);
+        let s = rig.dataloader.arena().unwrap().stats();
+        assert_eq!(s.checkouts, 8, "{s:?}");
+        assert!(s.reused >= 4, "{s:?}");
     }
 
     #[test]

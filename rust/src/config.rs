@@ -11,6 +11,8 @@
 //! num_fetch_workers = 16
 //! prefetch_depth = 128      # sampler-ahead readahead window (items)
 //! prefetch_policy = 2q      # hot-tier policy: lru | 2q | s3fifo
+//! arena_slabs = 16          # recycled batch-slab pool (0 = legacy copy path)
+//! work_stealing = true      # shared batch injector instead of round-robin
 //! cache_bytes = 2147483648  # varnish cache capacity (0 = no cache)
 //! cache_policy = lru        # varnish eviction policy: lru | 2q | s3fifo
 //! trainer = torch
@@ -141,6 +143,8 @@ impl ExperimentConfig {
                     None => bail!("unknown prefetch_policy {value} (lru|2q|s3fifo)"),
                 }
             }
+            "arena_slabs" => self.loader.arena_slabs = value.parse()?,
+            "work_stealing" => self.loader.work_stealing = value.parse()?,
             "pin_memory" => self.loader.pin_memory = value.parse()?,
             "start_method" => {
                 self.loader.start_method = match value {
@@ -236,6 +240,17 @@ mod tests {
         assert_eq!(cfg.cache_policy, CachePolicy::TwoQ);
         cfg.set("prefetch_policy", "s3fifo").unwrap();
         assert_eq!(cfg.loader.prefetch_policy, CachePolicy::S3Fifo);
+    }
+
+    #[test]
+    fn hotpath_knobs_parse() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.loader.arena_slabs, 0);
+        assert!(!cfg.loader.work_stealing);
+        cfg.apply_text("arena_slabs = 24\nwork_stealing = true\n").unwrap();
+        assert_eq!(cfg.loader.arena_slabs, 24);
+        assert!(cfg.loader.work_stealing);
+        assert!(cfg.set("work_stealing", "maybe").is_err());
     }
 
     #[test]

@@ -11,9 +11,11 @@
 //! Deterministic: each item's randomness derives from (seed, epoch,
 //! index).
 
-use super::simg::SimgImage;
+use super::simg::{SimgImage, SimgRef};
 use super::{Tensor, U8Tensor};
 use crate::util::rng::Rng;
+
+use std::cell::RefCell;
 
 /// ImageNet channel statistics (same constants as the python side).
 pub const MEAN: [f32; 3] = [0.485, 0.456, 0.406];
@@ -67,6 +69,25 @@ impl Augment {
 
     /// Apply crop+flip, returning a u8 HWC tensor (crop, crop, 3).
     pub fn apply_u8(&self, img: &SimgImage, epoch: usize, index: usize) -> U8Tensor {
+        let c = self.cfg.crop;
+        let mut out = U8Tensor::zeros(&[c, c, 3]);
+        self.apply_u8_into(&img.as_view(), epoch, index, &mut out.data);
+        out
+    }
+
+    /// Fused-path variant of [`Augment::apply_u8`]: write the augmented
+    /// crop directly into `out` (length `crop × crop × 3`, e.g. one
+    /// slot of a batch-arena slab), allocating nothing. Byte-identical
+    /// to `apply_u8` for the same (seed, epoch, index).
+    pub fn apply_u8_into(
+        &self,
+        img: &SimgRef<'_>,
+        epoch: usize,
+        index: usize,
+        out: &mut [u8],
+    ) {
+        let c = self.cfg.crop;
+        assert_eq!(out.len(), c * c * 3, "output slot is not crop×crop×3");
         let mut rng = self.item_rng(epoch, index);
         let (y0, x0, ch, cw) = sample_crop(
             &mut rng,
@@ -76,10 +97,7 @@ impl Augment {
             self.cfg.ratio_range,
         );
         let flip = rng.chance(self.cfg.flip_p);
-        let c = self.cfg.crop;
-        let mut out = U8Tensor::zeros(&[c, c, 3]);
-        bilinear_resize_region(img, y0, x0, ch, cw, c, c, flip, &mut out.data);
-        out
+        bilinear_resize_region(img, y0, x0, ch, cw, c, c, flip, out);
     }
 
     /// CPU ToTensor+Normalize (reference / CPU-only comparisons); CHW f32.
@@ -126,11 +144,18 @@ fn sample_crop(
     ((height - side) / 2, (width - side) / 2, side, side)
 }
 
+thread_local! {
+    /// Reusable column-LUT scratch for [`bilinear_resize_region`]: the
+    /// fused hot path must not allocate per item, so the LUT buffer is
+    /// grown once per thread and reused for every crop after that.
+    static COL_LUT: RefCell<Vec<(usize, usize, f32)>> = const { RefCell::new(Vec::new()) };
+}
+
 /// Bilinear-resize a source region (y0,x0,ch,cw) to (oh,ow), optional
 /// horizontal flip, writing u8 HWC into `out`.
 #[allow(clippy::too_many_arguments)]
 fn bilinear_resize_region(
-    img: &SimgImage,
+    img: &SimgRef<'_>,
     y0: usize,
     x0: usize,
     ch: usize,
@@ -144,18 +169,39 @@ fn bilinear_resize_region(
     let sy = ch as f32 / oh as f32;
     let sx = cw as f32 / ow as f32;
     let stride = img.width * 3;
-    let px = &img.pixels;
+    let px = img.pixels;
     // column LUT: the x-interpolation pattern is identical for every
     // output row — precompute (byte offsets, weight) once (§Perf:
-    // ~2× on the crop hot path vs recomputing per pixel).
-    let cols: Vec<(usize, usize, f32)> = (0..ow)
-        .map(|ox| {
+    // ~2× on the crop hot path vs recomputing per pixel). The buffer
+    // is thread-local so steady-state crops allocate nothing.
+    COL_LUT.with(|lut| {
+        let mut cols = lut.borrow_mut();
+        cols.clear();
+        cols.extend((0..ow).map(|ox| {
             let fx = ((ox as f32 + 0.5) * sx - 0.5).max(0.0);
             let ix = (fx as usize).min(cw - 1);
             let ix1 = (ix + 1).min(cw - 1);
             ((x0 + ix) * 3, (x0 + ix1) * 3, fx - ix as f32)
-        })
-        .collect();
+        }));
+        resize_rows(px, stride, y0, ch, sy, oh, ow, flip, &cols[..], out);
+    });
+}
+
+/// Row loop of the bilinear resize (split out so the column LUT borrow
+/// stays scoped).
+#[allow(clippy::too_many_arguments)]
+fn resize_rows(
+    px: &[u8],
+    stride: usize,
+    y0: usize,
+    ch: usize,
+    sy: f32,
+    oh: usize,
+    ow: usize,
+    flip: bool,
+    cols: &[(usize, usize, f32)],
+    out: &mut [u8],
+) {
     for oy in 0..oh {
         let fy = ((oy as f32 + 0.5) * sy - 0.5).max(0.0);
         let iy = (fy as usize).min(ch - 1);
@@ -213,6 +259,27 @@ mod tests {
         // different epoch -> different crop
         let c = aug.apply_u8(&img, 1, 5);
         assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn apply_into_matches_allocating_path_byte_for_byte() {
+        let aug = Augment::new(AugmentConfig { crop: 24, ..Default::default() });
+        let img = gradient_image(90, 70);
+        for (epoch, index) in [(0usize, 0usize), (0, 7), (3, 7), (5, 123)] {
+            let owned = aug.apply_u8(&img, epoch, index);
+            let mut slot = vec![0xAAu8; 24 * 24 * 3];
+            aug.apply_u8_into(&img.as_view(), epoch, index, &mut slot);
+            assert_eq!(owned.data, slot, "epoch {epoch} index {index}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "crop×crop×3")]
+    fn apply_into_checks_slot_length() {
+        let aug = Augment::new(AugmentConfig { crop: 8, ..Default::default() });
+        let img = gradient_image(16, 16);
+        let mut slot = vec![0u8; 7];
+        aug.apply_u8_into(&img.as_view(), 0, 0, &mut slot);
     }
 
     #[test]

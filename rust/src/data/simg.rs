@@ -32,34 +32,23 @@ pub struct SimgImage {
     pub pixels: Vec<u8>,
 }
 
-impl SimgImage {
-    pub fn new(height: usize, width: usize, label: u16, pixels: Vec<u8>) -> SimgImage {
-        assert_eq!(pixels.len(), height * width * 3);
-        SimgImage { height, width, channels: 3, label, pixels }
-    }
+/// A zero-copy view of a SIMG object: header fields plus a borrow of the
+/// pixel payload inside the encoded buffer. The fused hot path
+/// ([`crate::dataloader::arena`]) parses straight off the storage bytes
+/// and augments into a batch slab, so no decode buffer is ever
+/// allocated; [`SimgImage::decode`] is the owning wrapper around it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimgRef<'a> {
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub label: u16,
+    pub pixels: &'a [u8],
+}
 
-    /// Pixel at (y, x, c).
-    #[inline]
-    pub fn at(&self, y: usize, x: usize, c: usize) -> u8 {
-        self.pixels[(y * self.width + x) * self.channels + c]
-    }
-
-    /// Encode to the SIMG byte format.
-    pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(HEADER_LEN + self.pixels.len());
-        out.extend_from_slice(MAGIC);
-        out.push(1u8);
-        out.push(self.channels as u8);
-        out.extend_from_slice(&(self.height as u16).to_le_bytes());
-        out.extend_from_slice(&(self.width as u16).to_le_bytes());
-        out.extend_from_slice(&self.label.to_le_bytes());
-        out.extend_from_slice(&crc32(&self.pixels).to_le_bytes());
-        out.extend_from_slice(&self.pixels);
-        out
-    }
-
-    /// Decode and CRC-validate a SIMG buffer.
-    pub fn decode(buf: &[u8]) -> Result<SimgImage> {
+impl<'a> SimgRef<'a> {
+    /// Parse and CRC-validate a SIMG buffer without copying the payload.
+    pub fn parse(buf: &'a [u8]) -> Result<SimgRef<'a>> {
         if buf.len() < HEADER_LEN {
             bail!("SIMG too short: {} bytes", buf.len());
         }
@@ -86,13 +75,62 @@ impl SimgImage {
         if crc32(pixels) != crc {
             bail!("SIMG CRC mismatch");
         }
-        Ok(SimgImage {
-            height,
-            width,
-            channels,
-            label,
-            pixels: pixels.to_vec(),
-        })
+        Ok(SimgRef { height, width, channels, label, pixels })
+    }
+
+    /// Copy into an owning [`SimgImage`] (the legacy decode path).
+    pub fn to_image(&self) -> SimgImage {
+        SimgImage {
+            height: self.height,
+            width: self.width,
+            channels: self.channels,
+            label: self.label,
+            pixels: self.pixels.to_vec(),
+        }
+    }
+}
+
+impl SimgImage {
+    pub fn new(height: usize, width: usize, label: u16, pixels: Vec<u8>) -> SimgImage {
+        assert_eq!(pixels.len(), height * width * 3);
+        SimgImage { height, width, channels: 3, label, pixels }
+    }
+
+    /// Pixel at (y, x, c).
+    #[inline]
+    pub fn at(&self, y: usize, x: usize, c: usize) -> u8 {
+        self.pixels[(y * self.width + x) * self.channels + c]
+    }
+
+    /// Encode to the SIMG byte format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + self.pixels.len());
+        out.extend_from_slice(MAGIC);
+        out.push(1u8);
+        out.push(self.channels as u8);
+        out.extend_from_slice(&(self.height as u16).to_le_bytes());
+        out.extend_from_slice(&(self.width as u16).to_le_bytes());
+        out.extend_from_slice(&self.label.to_le_bytes());
+        out.extend_from_slice(&crc32(&self.pixels).to_le_bytes());
+        out.extend_from_slice(&self.pixels);
+        out
+    }
+
+    /// Decode and CRC-validate a SIMG buffer (owning copy of the
+    /// payload; the fused path uses [`SimgRef::parse`] instead).
+    pub fn decode(buf: &[u8]) -> Result<SimgImage> {
+        Ok(SimgRef::parse(buf)?.to_image())
+    }
+
+    /// Borrowed view of this image (for the write-into augment APIs).
+    pub fn as_view(&self) -> SimgRef<'_> {
+        SimgRef {
+            height: self.height,
+            width: self.width,
+            channels: self.channels,
+            label: self.label,
+            pixels: &self.pixels,
+        }
     }
 
     pub fn encoded_len(&self) -> usize {
@@ -180,6 +218,31 @@ mod tests {
         let buf = img.encode();
         assert!(SimgImage::decode(&buf[..10]).is_err());
         assert!(SimgImage::decode(&buf[..buf.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn parse_view_matches_decode_zero_copy() {
+        let img = sample(11, 7);
+        let buf = img.encode();
+        let v = SimgRef::parse(&buf).unwrap();
+        assert_eq!(v.height, 11);
+        assert_eq!(v.width, 7);
+        assert_eq!(v.label, 7);
+        assert_eq!(v.pixels, &img.pixels[..]);
+        // the view borrows the encoded buffer, no copy
+        assert!(std::ptr::eq(v.pixels.as_ptr(), buf[HEADER_LEN..].as_ptr()));
+        assert_eq!(v.to_image(), img);
+        assert_eq!(img.as_view(), v);
+    }
+
+    #[test]
+    fn parse_rejects_corruption_like_decode() {
+        let img = sample(6, 6);
+        let mut buf = img.encode();
+        let last = buf.len() - 1;
+        buf[last] ^= 0x55;
+        assert!(SimgRef::parse(&buf).is_err());
+        assert!(SimgRef::parse(&buf[..8]).is_err());
     }
 
     #[test]

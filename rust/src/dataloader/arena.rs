@@ -1,0 +1,670 @@
+//! Recycled batch arenas — the zero-alloc hot path (PR 3 tentpole).
+//!
+//! The legacy assembly path allocates three times per item and twice per
+//! batch: a decode buffer in `SimgImage::decode`, a crop tensor in
+//! `Augment::apply_u8`, and a *zeroed* batch tensor plus a copy loop in
+//! `collate`. Once storage latency is hidden (prefetch engine, PR 1),
+//! that memory traffic is what the workers burn CPU on.
+//!
+//! A [`BatchArena`] removes all of it. It pools `[B, crop, crop, 3]` u8
+//! slabs (plus their label/index/shape side-arrays); a worker checks a
+//! slab out as a [`BatchBuilder`], every fetch task decodes + augments
+//! its item **directly into its pre-assigned slot**, and `finish()`
+//! converts the filled slab into a [`Batch`] with no copy. After
+//! `to_device` the trainer calls [`Batch::recycle`], returning the
+//! buffers to the pool, so steady-state epochs run with **zero per-batch
+//! heap allocation** (asserted by `tests/test_alloc.rs` with the
+//! counting allocator).
+//!
+//! Lifecycle: `checkout → fill×n → finish → to_device → recycle`.
+//!
+//! ## Concurrency protocol
+//!
+//! A slab is filled by many threads at once (the threaded and asyncio
+//! fetchers). Slot windows are disjoint; exclusivity per slot is
+//! enforced by an atomic claim bit, and the consumer (`finish`) only
+//! runs after the worker has observed completion of every fill through
+//! a channel/join, which provides the happens-before edge for the raw
+//! slot writes. Builder clones held by fetch tasks are passive handles:
+//! only the primary builder (the one `checkout` returned) recovers the
+//! slab on drop.
+
+use std::fmt;
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::collate::Batch;
+use crate::data::U8Tensor;
+use crate::dataset::ItemMeta;
+
+/// The reusable buffer set behind one batch: pixel slab + side arrays.
+struct SlabBuf {
+    pixels: Vec<u8>,
+    shape: Vec<usize>,
+    labels: Vec<i32>,
+    indices: Vec<usize>,
+}
+
+impl SlabBuf {
+    fn with_capacity(slots: usize, per: usize) -> SlabBuf {
+        SlabBuf {
+            pixels: Vec::with_capacity(slots * per),
+            shape: Vec::with_capacity(4),
+            labels: Vec::with_capacity(slots),
+            indices: Vec::with_capacity(slots),
+        }
+    }
+}
+
+/// Shared fill-state of one checked-out slab. The raw pointers are
+/// write windows into the owned buffers in `owned`; they are published
+/// at checkout and nulled at finish/recover.
+struct SlabState {
+    /// per-slot claim words, generation-tagged: a slot checked out for
+    /// generation `g` holds `2g` while unclaimed and `2g + 1` once
+    /// claimed. Claiming is a single compare-exchange on `2g`, so a
+    /// stale builder clone (older generation) can *never* claim a slot
+    /// of a later checkout — no check-then-act window.
+    claimed: Box<[AtomicU64]>,
+    filled: AtomicUsize,
+    raw_bytes: AtomicU64,
+    /// checkout generation: bumped on every install, snapshotted by the
+    /// builder, fused into the claim words above
+    generation: AtomicU64,
+    /// slot count of the current checkout (0 = not checked out)
+    n: AtomicUsize,
+    /// bytes per slot of the current checkout
+    per: AtomicUsize,
+    pixels: AtomicPtr<u8>,
+    labels: AtomicPtr<i32>,
+    indices: AtomicPtr<usize>,
+    /// the owning buffers; present from checkout until finish/recover
+    owned: Mutex<Option<SlabBuf>>,
+}
+
+impl SlabState {
+    fn new(slots: usize) -> SlabState {
+        SlabState {
+            claimed: (0..slots).map(|_| AtomicU64::new(0)).collect(),
+            filled: AtomicUsize::new(0),
+            raw_bytes: AtomicU64::new(0),
+            generation: AtomicU64::new(0),
+            n: AtomicUsize::new(0),
+            per: AtomicUsize::new(0),
+            pixels: AtomicPtr::new(std::ptr::null_mut()),
+            labels: AtomicPtr::new(std::ptr::null_mut()),
+            indices: AtomicPtr::new(std::ptr::null_mut()),
+            owned: Mutex::new(None),
+        }
+    }
+
+    /// Publish write windows into `buf` for an `n`-item batch. Runs with
+    /// exclusive access (checkout path, before any filler exists).
+    fn install(&self, buf: &mut SlabBuf, n: usize, per: usize) {
+        let gen = self.generation.fetch_add(1, Ordering::Relaxed) + 1;
+        let unclaimed = gen.wrapping_mul(2);
+        for c in self.claimed.iter() {
+            c.store(unclaimed, Ordering::Relaxed);
+        }
+        self.filled.store(0, Ordering::Relaxed);
+        self.raw_bytes.store(0, Ordering::Relaxed);
+        self.per.store(per, Ordering::Relaxed);
+        self.pixels.store(buf.pixels.as_mut_ptr(), Ordering::Relaxed);
+        self.labels.store(buf.labels.as_mut_ptr(), Ordering::Relaxed);
+        self.indices.store(buf.indices.as_mut_ptr(), Ordering::Relaxed);
+        // the Release on `n` publishes everything above to fillers that
+        // Acquire-load it
+        self.n.store(n, Ordering::Release);
+    }
+
+    /// Retract the write windows (after finish/recover): any stray fill
+    /// now fails cleanly instead of scribbling on recycled memory.
+    fn clear_windows(&self) {
+        self.n.store(0, Ordering::Relaxed);
+        self.pixels.store(std::ptr::null_mut(), Ordering::Relaxed);
+        self.labels.store(std::ptr::null_mut(), Ordering::Relaxed);
+        self.indices.store(std::ptr::null_mut(), Ordering::Release);
+    }
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    checkouts: AtomicU64,
+    reused: AtomicU64,
+    fresh: AtomicU64,
+    recycled: AtomicU64,
+    discarded: AtomicU64,
+}
+
+/// Arena counters (cumulative since creation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ArenaStats {
+    /// slabs checked out
+    pub checkouts: u64,
+    /// checkouts served from the pool (zero-alloc path)
+    pub reused: u64,
+    /// checkouts that had to allocate a fresh slab
+    pub fresh: u64,
+    /// slabs returned to the pool
+    pub recycled: u64,
+    /// returns dropped because the pool was full / the buffer undersized
+    pub discarded: u64,
+    /// slabs currently resting in the pool
+    pub pooled: u64,
+}
+
+struct Pool {
+    states: Vec<Arc<SlabState>>,
+    bufs: Vec<SlabBuf>,
+}
+
+/// Pool of reference-counted, recycled batch slabs.
+pub struct BatchArena {
+    crop: usize,
+    /// bytes per item slot (crop × crop × 3)
+    per: usize,
+    /// slots per slab (the loader's batch_size)
+    max_batch: usize,
+    /// max slabs retained in the pool (`arena_slabs` knob)
+    capacity: usize,
+    pool: Mutex<Pool>,
+    stats: Counters,
+}
+
+impl fmt::Debug for BatchArena {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "BatchArena(crop={}, slots={}, capacity={})",
+            self.crop, self.max_batch, self.capacity
+        )
+    }
+}
+
+impl BatchArena {
+    /// An arena for `[batch_size, crop, crop, 3]` slabs retaining up to
+    /// `capacity` recycled slabs.
+    pub fn new(crop: usize, batch_size: usize, capacity: usize) -> Arc<BatchArena> {
+        let capacity = capacity.max(1);
+        Arc::new(BatchArena {
+            crop,
+            per: crop * crop * 3,
+            max_batch: batch_size.max(1),
+            capacity,
+            pool: Mutex::new(Pool {
+                states: Vec::with_capacity(capacity),
+                bufs: Vec::with_capacity(capacity),
+            }),
+            stats: Counters::default(),
+        })
+    }
+
+    pub fn crop(&self) -> usize {
+        self.crop
+    }
+
+    /// Bytes per item slot.
+    pub fn item_bytes(&self) -> usize {
+        self.per
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        let pooled = self.pool.lock().unwrap().bufs.len() as u64;
+        ArenaStats {
+            checkouts: self.stats.checkouts.load(Ordering::Relaxed),
+            reused: self.stats.reused.load(Ordering::Relaxed),
+            fresh: self.stats.fresh.load(Ordering::Relaxed),
+            recycled: self.stats.recycled.load(Ordering::Relaxed),
+            discarded: self.stats.discarded.load(Ordering::Relaxed),
+            pooled,
+        }
+    }
+
+    /// Check a slab out for batch `id` with `n` items. Never blocks: if
+    /// the pool is empty a fresh slab is allocated (counted in
+    /// `stats().fresh` — nonzero in steady state means `arena_slabs` is
+    /// too small for the in-flight batch count).
+    ///
+    /// Takes the `Arc` handle by value (clone it — a refcount bump, no
+    /// allocation): the builder and the batch it produces both keep a
+    /// handle for the recycle leg.
+    pub fn checkout(self: Arc<Self>, id: usize, n: usize) -> BatchBuilder {
+        self.stats.checkouts.fetch_add(1, Ordering::Relaxed);
+        let (state, buf) = {
+            let mut pool = self.pool.lock().unwrap();
+            (pool.states.pop(), pool.bufs.pop())
+        };
+        let state = match state {
+            Some(s) if s.claimed.len() >= n => s,
+            _ => Arc::new(SlabState::new(n.max(self.max_batch))),
+        };
+        let mut buf = match buf {
+            Some(b) => {
+                self.stats.reused.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.stats.fresh.fetch_add(1, Ordering::Relaxed);
+                SlabBuf::with_capacity(n.max(self.max_batch), self.per)
+            }
+        };
+        // size for this batch: within the retained capacity these are
+        // len adjustments only (a grow memsets just the regrown tail
+        // after a partial batch)
+        buf.pixels.resize(n * self.per, 0);
+        buf.labels.resize(n, 0);
+        buf.indices.resize(n, 0);
+        state.install(&mut buf, n, self.per);
+        *state.owned.lock().unwrap() = Some(buf);
+        let generation = state.generation.load(Ordering::Relaxed);
+        BatchBuilder {
+            arena: self,
+            state,
+            generation,
+            id,
+            n,
+            primary: true,
+        }
+    }
+
+    /// Return a finished batch's buffers to the pool (called by
+    /// [`Batch::recycle`] — trainer/device side, after `to_device`).
+    pub(crate) fn recycle_batch(&self, b: &mut Batch) {
+        let buf = SlabBuf {
+            shape: std::mem::take(&mut b.images.shape),
+            pixels: std::mem::take(&mut b.images.data),
+            labels: std::mem::take(&mut b.labels),
+            indices: std::mem::take(&mut b.indices),
+        };
+        self.recycle_parts(buf);
+    }
+
+    fn recycle_parts(&self, buf: SlabBuf) {
+        // undersized buffers (e.g. from a recycled clone of a partial
+        // batch) would churn with reallocs — drop them instead
+        if buf.pixels.capacity() < self.max_batch * self.per {
+            self.stats.discarded.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let mut pool = self.pool.lock().unwrap();
+        if pool.bufs.len() < self.capacity {
+            pool.bufs.push(buf);
+            self.stats.recycled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.discarded.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn return_state(&self, state: Arc<SlabState>) {
+        let mut pool = self.pool.lock().unwrap();
+        if pool.states.len() < self.capacity {
+            pool.states.push(state);
+        }
+    }
+}
+
+/// Handle on one checked-out slab. Cloned into each parallel fetch task;
+/// the clone that `checkout` returned (the *primary*) owns the slab's
+/// fate: `finish()` turns it into a [`Batch`], dropping it recovers the
+/// slab into the pool (the per-batch error path).
+pub struct BatchBuilder {
+    arena: Arc<BatchArena>,
+    state: Arc<SlabState>,
+    /// checkout generation this builder belongs to (see SlabState)
+    generation: u64,
+    id: usize,
+    n: usize,
+    primary: bool,
+}
+
+impl Clone for BatchBuilder {
+    fn clone(&self) -> BatchBuilder {
+        BatchBuilder {
+            arena: self.arena.clone(),
+            state: self.state.clone(),
+            generation: self.generation,
+            id: self.id,
+            n: self.n,
+            primary: false,
+        }
+    }
+}
+
+impl BatchBuilder {
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Item count of this batch.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Fill slot `pos` with item `index`: claims the slot, hands its
+    /// pixel window to `f` (which decodes + augments into it and returns
+    /// the item metadata), then records label/index/raw_bytes. Errors on
+    /// an out-of-range or doubly-filled slot and propagates `f`'s error
+    /// (the slot stays claimed; the batch then fails in `finish`).
+    pub fn fill<F>(&self, pos: usize, index: usize, f: F) -> Result<()>
+    where
+        F: FnOnce(&mut [u8]) -> Result<ItemMeta>,
+    {
+        let st = &*self.state;
+        let n = st.n.load(Ordering::Acquire);
+        if pos >= n {
+            bail!("slot {pos} out of range (batch of {n})");
+        }
+        // claim atomically *for this builder's generation*: one CAS both
+        // takes the slot and proves the slab wasn't re-checked out
+        let unclaimed = self.generation.wrapping_mul(2);
+        match st.claimed[pos].compare_exchange(
+            unclaimed,
+            unclaimed + 1,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => {}
+            Err(cur) if cur == unclaimed + 1 => bail!("slot {pos} filled twice"),
+            Err(_) => {
+                bail!("stale builder: slab was re-checked out for another batch")
+            }
+        }
+        let per = st.per.load(Ordering::Relaxed);
+        let px = st.pixels.load(Ordering::Relaxed);
+        let lb = st.labels.load(Ordering::Relaxed);
+        let ix = st.indices.load(Ordering::Relaxed);
+        if px.is_null() || lb.is_null() || ix.is_null() {
+            bail!("slab no longer checked out");
+        }
+        // SAFETY: the claim bit above grants this call exclusive access
+        // to slot `pos`; slot windows are disjoint by construction, and
+        // the owning SlabBuf stays resident in `st.owned` until
+        // finish()/recover, which the worker only runs after observing
+        // completion of every fill (channel/join happens-before).
+        let out = unsafe { std::slice::from_raw_parts_mut(px.add(pos * per), per) };
+        let meta = f(out)?;
+        // SAFETY: same exclusivity argument, one element at `pos`.
+        unsafe {
+            *lb.add(pos) = meta.label as i32;
+            *ix.add(pos) = index;
+        }
+        st.raw_bytes.fetch_add(meta.raw_bytes as u64, Ordering::Relaxed);
+        st.filled.fetch_add(1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Slots successfully filled so far.
+    pub fn filled(&self) -> usize {
+        self.state.filled.load(Ordering::Acquire)
+    }
+
+    /// Convert the fully-filled slab into a [`Batch`] (no copy). Errors
+    /// — returning the slab to the pool — if any slot is unfilled. Must
+    /// only be called after every fill completed (see module docs).
+    pub fn finish(mut self) -> Result<Batch> {
+        // disarm the Drop recovery — this call consumes the slab itself
+        self.primary = false;
+        let arena = self.arena.clone();
+        let state = self.state.clone();
+        let (id, n) = (self.id, self.n);
+        drop(self);
+        let filled = state.filled.load(Ordering::Acquire);
+        let Some(mut buf) = state.owned.lock().unwrap().take() else {
+            bail!("batch {id}: slab already finished or recovered");
+        };
+        state.clear_windows();
+        if n == 0 || filled != n {
+            arena.recycle_parts(buf);
+            arena.return_state(state);
+            bail!("batch {id}: {filled}/{n} slots filled");
+        }
+        let per = arena.per;
+        buf.pixels.truncate(n * per);
+        buf.labels.truncate(n);
+        buf.indices.truncate(n);
+        let mut shape = std::mem::take(&mut buf.shape);
+        shape.clear();
+        shape.extend_from_slice(&[n, arena.crop, arena.crop, 3]);
+        let images = U8Tensor {
+            shape,
+            data: std::mem::take(&mut buf.pixels),
+        };
+        let labels = std::mem::take(&mut buf.labels);
+        let indices = std::mem::take(&mut buf.indices);
+        let raw_bytes = state.raw_bytes.load(Ordering::Relaxed);
+        arena.return_state(state);
+        Ok(Batch {
+            id,
+            images,
+            labels,
+            indices,
+            raw_bytes,
+            pinned: false,
+            arena: Some(arena),
+        })
+    }
+}
+
+impl Drop for BatchBuilder {
+    fn drop(&mut self) {
+        if !self.primary {
+            return;
+        }
+        // abandoned wave (item error / consumer hung up): recover the
+        // slab so the pool doesn't leak capacity
+        if let Some(buf) = self.state.owned.lock().unwrap().take() {
+            self.state.clear_windows();
+            self.arena.recycle_parts(buf);
+            self.arena.return_state(self.state.clone());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(label: u16, raw: usize) -> ItemMeta {
+        ItemMeta { label, raw_bytes: raw }
+    }
+
+    fn fill_all(b: &BatchBuilder, base: usize) {
+        for pos in 0..b.len() {
+            b.fill(pos, base + pos, |out| {
+                out.fill((base + pos) as u8);
+                Ok(meta(pos as u16, 100))
+            })
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn roundtrip_builds_correct_batch() {
+        let arena = BatchArena::new(4, 3, 2);
+        let b = arena.clone().checkout(7, 3);
+        fill_all(&b, 10);
+        let batch = b.finish().unwrap();
+        assert_eq!(batch.id, 7);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.images.shape, vec![3, 4, 4, 3]);
+        assert_eq!(batch.images.data.len(), 3 * 48);
+        for pos in 0..3 {
+            assert!(batch.images.data[pos * 48..(pos + 1) * 48]
+                .iter()
+                .all(|&v| v == (10 + pos) as u8));
+        }
+        assert_eq!(batch.labels, vec![0, 1, 2]);
+        assert_eq!(batch.indices, vec![10, 11, 12]);
+        assert_eq!(batch.raw_bytes, 300);
+        assert!(batch.arena.is_some());
+    }
+
+    #[test]
+    fn recycle_reuses_slab_without_fresh_alloc() {
+        let arena = BatchArena::new(4, 2, 2);
+        for id in 0..5 {
+            let b = arena.clone().checkout(id, 2);
+            fill_all(&b, id);
+            b.finish().unwrap().recycle();
+        }
+        let s = arena.stats();
+        assert_eq!(s.checkouts, 5);
+        assert_eq!(s.fresh, 1, "{s:?}");
+        assert_eq!(s.reused, 4, "{s:?}");
+        assert_eq!(s.recycled, 5, "{s:?}");
+        assert_eq!(s.pooled, 1, "{s:?}");
+    }
+
+    #[test]
+    fn duplicate_fill_is_an_error_not_a_panic() {
+        let arena = BatchArena::new(2, 2, 1);
+        let b = arena.clone().checkout(0, 2);
+        b.fill(0, 0, |out| {
+            out.fill(1);
+            Ok(meta(0, 1))
+        })
+        .unwrap();
+        let err = b
+            .fill(0, 9, |out| {
+                out.fill(2);
+                Ok(meta(0, 1))
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("filled twice"), "{err}");
+        assert!(b.fill(5, 0, |_| Ok(meta(0, 1))).is_err());
+    }
+
+    #[test]
+    fn finish_with_hole_errors_and_recovers_slab() {
+        let arena = BatchArena::new(2, 2, 2);
+        let b = arena.clone().checkout(3, 2);
+        b.fill(0, 0, |out| {
+            out.fill(1);
+            Ok(meta(0, 1))
+        })
+        .unwrap();
+        let err = b.finish().unwrap_err();
+        assert!(err.to_string().contains("1/2 slots"), "{err}");
+        // slab went back to the pool, the next checkout reuses it
+        let b2 = arena.clone().checkout(4, 2);
+        fill_all(&b2, 0);
+        b2.finish().unwrap();
+        let s = arena.stats();
+        assert_eq!(s.fresh, 1, "{s:?}");
+        assert_eq!(s.reused, 1, "{s:?}");
+    }
+
+    #[test]
+    fn dropped_builder_recovers_slab() {
+        let arena = BatchArena::new(2, 2, 2);
+        let b = arena.clone().checkout(0, 2);
+        let clone = b.clone();
+        drop(clone); // passive handle: no recovery
+        assert_eq!(arena.stats().recycled, 0);
+        drop(b); // primary: recovers
+        assert_eq!(arena.stats().recycled, 1);
+        assert_eq!(arena.stats().pooled, 1);
+    }
+
+    #[test]
+    fn partial_batch_truncates_then_regrows() {
+        let arena = BatchArena::new(2, 4, 2);
+        let b = arena.clone().checkout(0, 2); // partial: 2 of 4 slots
+        fill_all(&b, 0);
+        let batch = b.finish().unwrap();
+        assert_eq!(batch.images.shape, vec![2, 2, 2, 3]);
+        assert_eq!(batch.images.data.len(), 2 * 12);
+        batch.recycle();
+        let b2 = arena.clone().checkout(1, 4); // full batch on the recycled slab
+        fill_all(&b2, 0);
+        let batch2 = b2.finish().unwrap();
+        assert_eq!(batch2.images.data.len(), 4 * 12);
+        assert_eq!(arena.stats().reused, 1);
+    }
+
+    #[test]
+    fn capacity_bounds_pool_retention() {
+        let arena = BatchArena::new(2, 2, 1);
+        let a = arena.clone().checkout(0, 2);
+        let b = arena.clone().checkout(1, 2);
+        fill_all(&a, 0);
+        fill_all(&b, 0);
+        a.finish().unwrap().recycle();
+        b.finish().unwrap().recycle();
+        let s = arena.stats();
+        assert_eq!(s.recycled, 1, "{s:?}");
+        assert_eq!(s.discarded, 1, "{s:?}");
+        assert_eq!(s.pooled, 1, "{s:?}");
+    }
+
+    #[test]
+    fn concurrent_fills_land_in_their_slots() {
+        let arena = BatchArena::new(8, 16, 2);
+        let b = arena.clone().checkout(0, 16);
+        std::thread::scope(|s| {
+            for pos in 0..16 {
+                let h = b.clone();
+                s.spawn(move || {
+                    h.fill(pos, 100 + pos, |out| {
+                        out.fill(pos as u8);
+                        Ok(meta(pos as u16, 10))
+                    })
+                    .unwrap();
+                });
+            }
+        });
+        let batch = b.finish().unwrap();
+        let per = 8 * 8 * 3;
+        for pos in 0..16 {
+            assert!(
+                batch.images.data[pos * per..(pos + 1) * per]
+                    .iter()
+                    .all(|&v| v == pos as u8),
+                "slot {pos} corrupted"
+            );
+            assert_eq!(batch.labels[pos], pos as i32);
+            assert_eq!(batch.indices[pos], 100 + pos);
+        }
+        assert_eq!(batch.raw_bytes, 160);
+    }
+
+    #[test]
+    fn fill_after_finish_fails_cleanly() {
+        let arena = BatchArena::new(2, 1, 1);
+        let b = arena.clone().checkout(0, 1);
+        let stale = b.clone();
+        b.fill(0, 0, |out| {
+            out.fill(3);
+            Ok(meta(0, 1))
+        })
+        .unwrap();
+        let batch = b.finish().unwrap();
+        assert!(stale.fill(0, 0, |_| Ok(meta(0, 1))).is_err());
+        batch.recycle();
+
+        // harder case: the slab is re-checked out for a NEW batch — the
+        // stale clone's generation no longer matches, so it cannot
+        // scribble on the new batch's slots
+        let b2 = arena.clone().checkout(1, 1);
+        let err = stale.fill(0, 9, |_| Ok(meta(0, 1))).unwrap_err();
+        assert!(err.to_string().contains("stale builder"), "{err}");
+        b2.fill(0, 5, |out| {
+            out.fill(8);
+            Ok(meta(1, 2))
+        })
+        .unwrap();
+        let batch2 = b2.finish().unwrap();
+        assert!(batch2.images.data.iter().all(|&v| v == 8));
+        assert_eq!(batch2.indices, vec![5]);
+    }
+}

@@ -1,7 +1,17 @@
 //! Batch collation: assemble fetched samples (in request order) into one
 //! contiguous u8 image tensor + label vector — torch's default
 //! `collate_fn`, which runs inside the worker process (under its GIL).
+//!
+//! This is the *legacy* copying path; with a [`crate::dataloader::arena`]
+//! attached the fetchers write into the batch slab directly and no
+//! collate step exists. Both paths produce byte-identical batches
+//! (`tests/test_hotpath.rs`).
 
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::arena::BatchArena;
 use crate::data::U8Tensor;
 use crate::dataset::Sample;
 
@@ -17,6 +27,9 @@ pub struct Batch {
     /// total stored object bytes (throughput accounting)
     pub raw_bytes: u64,
     pub pinned: bool,
+    /// the arena this batch's slab came from (None for heap batches);
+    /// [`Batch::recycle`] returns the buffers there
+    pub(crate) arena: Option<Arc<BatchArena>>,
 }
 
 impl Batch {
@@ -32,13 +45,31 @@ impl Batch {
     pub fn tensor_bytes(&self) -> usize {
         self.images.data.len()
     }
+
+    /// Whether this batch rides an arena slab (and should be recycled).
+    pub fn is_pooled(&self) -> bool {
+        self.arena.is_some()
+    }
+
+    /// Return this batch's buffers to their arena — the trainer/device
+    /// side of the slab lifecycle (checkout → fill → to_device →
+    /// **recycle**). A no-op for heap-allocated batches, so callers can
+    /// recycle unconditionally. Forgetting to call it never breaks
+    /// correctness; the pool just refills through fresh allocations.
+    pub fn recycle(mut self) {
+        if let Some(arena) = self.arena.take() {
+            arena.recycle_batch(&mut self);
+        }
+    }
 }
 
 /// Collate samples (already sorted to request order) into a [`Batch`].
-/// Panics if crops disagree in shape — samples of one dataset always
-/// share the transform output shape.
-pub fn collate(id: usize, samples: Vec<Sample>) -> Batch {
-    assert!(!samples.is_empty(), "collate of empty batch");
+/// Empty and ragged inputs are *errors* (surfaced through the worker's
+/// per-batch error path), not process aborts.
+pub fn collate(id: usize, samples: Vec<Sample>) -> Result<Batch> {
+    if samples.is_empty() {
+        bail!("collate of empty batch {id}");
+    }
     let crop_shape = samples[0].crop.shape.clone();
     let per = samples[0].crop.data.len();
     let b = samples.len();
@@ -47,13 +78,27 @@ pub fn collate(id: usize, samples: Vec<Sample>) -> Batch {
     let mut indices = Vec::with_capacity(b);
     let mut raw_bytes = 0u64;
     for (i, s) in samples.into_iter().enumerate() {
-        assert_eq!(s.crop.shape, crop_shape, "ragged crop shapes");
+        if s.crop.shape != crop_shape {
+            bail!(
+                "ragged crop shapes in batch {id}: {:?} vs {:?}",
+                s.crop.shape,
+                crop_shape
+            );
+        }
         images.data[i * per..(i + 1) * per].copy_from_slice(&s.crop.data);
         labels.push(s.label as i32);
         indices.push(s.index);
         raw_bytes += s.raw_bytes as u64;
     }
-    Batch { id, images, labels, indices, raw_bytes, pinned: false }
+    Ok(Batch {
+        id,
+        images,
+        labels,
+        indices,
+        raw_bytes,
+        pinned: false,
+        arena: None,
+    })
 }
 
 /// Restore request order after parallel fetch: place each sample at its
@@ -95,7 +140,7 @@ mod tests {
             fake_sample(5, 1, 10, 2),
             fake_sample(9, 2, 20, 2),
         ];
-        let b = collate(3, samples);
+        let b = collate(3, samples).unwrap();
         assert_eq!(b.id, 3);
         assert_eq!(b.len(), 2);
         assert_eq!(b.images.shape, vec![2, 2, 2, 3]);
@@ -104,6 +149,8 @@ mod tests {
         assert_eq!(b.labels, vec![1, 2]);
         assert_eq!(b.indices, vec![5, 9]);
         assert_eq!(b.raw_bytes, 105 + 109);
+        assert!(!b.is_pooled());
+        b.recycle(); // no-op for heap batches
     }
 
     #[test]
@@ -136,8 +183,15 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "ragged")]
-    fn collate_rejects_ragged() {
-        collate(0, vec![fake_sample(0, 0, 0, 2), fake_sample(1, 0, 0, 3)]);
+    fn collate_rejects_ragged_as_error() {
+        let err = collate(0, vec![fake_sample(0, 0, 0, 2), fake_sample(1, 0, 0, 3)])
+            .unwrap_err();
+        assert!(err.to_string().contains("ragged"), "{err}");
+    }
+
+    #[test]
+    fn collate_rejects_empty_as_error() {
+        let err = collate(4, Vec::new()).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
     }
 }

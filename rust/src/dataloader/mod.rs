@@ -19,12 +19,24 @@
 //!   a blocking creation loop;
 //! * `pin_memory` staging (disabled under `fork`, as in torch);
 //! * in-order batch delivery (out-of-order arrivals are buffered).
+//!
+//! Beyond the paper, two hot-path extensions (PR 3):
+//! * `arena_slabs` attaches a recycled [`arena::BatchArena`]: fetchers
+//!   decode straight into pooled batch slabs (no decode buffer, no crop
+//!   tensor, no collate copy) and the trainer recycles each batch after
+//!   `to_device`, making steady-state epochs allocation-free;
+//! * `work_stealing` replaces the static round-robin batch assignment
+//!   with a shared injector queue ([`sampler::BatchInjector`]) that idle
+//!   workers steal from, killing the straggler stall on high-latency
+//!   storage (in-order delivery still holds via the reorder buffer).
 
+pub mod arena;
 pub mod collate;
 pub mod fetch;
 pub mod sampler;
 pub mod worker;
 
+pub use arena::{ArenaStats, BatchArena};
 pub use collate::Batch;
 pub use sampler::Sampler;
 
@@ -114,6 +126,19 @@ pub struct DataloaderConfig {
     /// hot-tier admission/eviction policy for the prefetch cache
     /// (applied by the stack assembler, like `prefetch_depth`)
     pub prefetch_policy: CachePolicy,
+    /// recycled batch-slab pool size (0 disables the arena): with an
+    /// arena attached, fetchers assemble batches in place (zero-alloc
+    /// hot path) and the trainer returns slabs after `to_device`. Size
+    /// it ≥ the in-flight batch count — normally `queue_capacity() +
+    /// num_workers`, but a straggling batch holding up in-order delivery
+    /// widens the window (the consumer's reorder buffer is unbounded,
+    /// and under `work_stealing` the other workers keep racing ahead);
+    /// an undersized pool stays correct, checkouts just fall back to
+    /// fresh allocations.
+    pub arena_slabs: usize,
+    /// dispatch batches through a shared work-stealing injector instead
+    /// of the static per-worker round-robin split
+    pub work_stealing: bool,
 }
 
 impl Default for DataloaderConfig {
@@ -136,6 +161,8 @@ impl Default for DataloaderConfig {
             spawn_cost_override: None,
             prefetch_depth: 0,
             prefetch_policy: CachePolicy::Lru,
+            arena_slabs: 0,
+            work_stealing: false,
         }
     }
 }
@@ -161,6 +188,8 @@ pub struct Dataloader {
     dataset: Arc<dyn Dataset>,
     cfg: Arc<DataloaderConfig>,
     recorder: Arc<Recorder>,
+    /// batch-slab pool, shared by every epoch's workers (`arena_slabs`)
+    arena: Option<Arc<BatchArena>>,
 }
 
 impl Dataloader {
@@ -175,7 +204,12 @@ impl Dataloader {
                  disabled (CUDA init cannot follow fork)"
             );
         }
-        Dataloader { dataset, cfg: Arc::new(cfg), recorder }
+        let arena = if cfg.arena_slabs > 0 {
+            Some(BatchArena::new(dataset.crop(), cfg.batch_size, cfg.arena_slabs))
+        } else {
+            None
+        };
+        Dataloader { dataset, cfg: Arc::new(cfg), recorder, arena }
     }
 
     pub fn config(&self) -> &DataloaderConfig {
@@ -188,6 +222,11 @@ impl Dataloader {
 
     pub fn dataset(&self) -> &Arc<dyn Dataset> {
         &self.dataset
+    }
+
+    /// The batch arena, when `arena_slabs > 0` (pool stats live here).
+    pub fn arena(&self) -> Option<&Arc<BatchArena>> {
+        self.arena.as_ref()
     }
 
     /// Number of batches per epoch.
@@ -217,18 +256,30 @@ impl Dataloader {
         let plan = sampler::batches(&order, self.cfg.batch_size, self.cfg.drop_last);
         let n_batches = plan.len();
 
-        let (tx, rx) = std::sync::mpsc::sync_channel::<Batch>(self.cfg.queue_capacity());
+        let (tx, rx) =
+            std::sync::mpsc::sync_channel::<worker::WorkerMsg>(self.cfg.queue_capacity());
+
+        // dispatch mode: shared injector (work stealing) or the torch
+        // static round-robin split
+        let (static_plan, injector) = if self.cfg.work_stealing && self.cfg.num_workers > 0
+        {
+            (None, Some(Arc::new(sampler::BatchInjector::new(plan))))
+        } else {
+            (Some(sampler::assign_round_robin(plan, self.cfg.num_workers)), None)
+        };
 
         let mut iter = EpochIter {
             dataset: self.dataset.clone(),
             cfg: self.cfg.clone(),
             recorder: self.recorder.clone(),
+            arena: self.arena.clone(),
             rx: Some(rx),
             tx: Some(tx),
             pending: HashMap::new(),
             next_id: 0,
             n_batches,
-            plan: Some(sampler::assign_round_robin(plan, self.cfg.num_workers)),
+            plan: static_plan,
+            injector,
             inline_plan: None,
             workers: Vec::new(),
             spawner: None,
@@ -257,12 +308,15 @@ pub struct EpochIter {
     dataset: Arc<dyn Dataset>,
     cfg: Arc<DataloaderConfig>,
     recorder: Arc<Recorder>,
-    rx: Option<Receiver<Batch>>,
-    tx: Option<SyncSender<Batch>>,
-    pending: HashMap<usize, Batch>,
+    arena: Option<Arc<BatchArena>>,
+    rx: Option<Receiver<worker::WorkerMsg>>,
+    tx: Option<SyncSender<worker::WorkerMsg>>,
+    /// reorder buffer: out-of-order arrivals, `None` = failure tombstone
+    pending: HashMap<usize, Option<Batch>>,
     next_id: usize,
     n_batches: usize,
     plan: Option<Vec<Vec<(usize, Vec<usize>)>>>,
+    injector: Option<Arc<sampler::BatchInjector>>,
     inline_plan: Option<std::collections::VecDeque<(usize, Vec<usize>)>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     spawner: Option<std::thread::JoinHandle<Vec<std::thread::JoinHandle<()>>>>,
@@ -274,11 +328,28 @@ impl EpochIter {
         self.n_batches
     }
 
+    /// One work source per worker: clones of the shared injector, or the
+    /// pre-split static assignments.
+    fn take_sources(&mut self) -> Vec<worker::WorkSource> {
+        if let Some(inj) = self.injector.take() {
+            (0..self.cfg.num_workers)
+                .map(|_| worker::WorkSource::Stealing(inj.clone()))
+                .collect()
+        } else {
+            self.plan
+                .take()
+                .expect("already started")
+                .into_iter()
+                .map(|assignments| worker::WorkSource::Static(assignments.into()))
+                .collect()
+        }
+    }
+
     fn start_workers_blocking(&mut self) {
-        let plan = self.plan.take().expect("already started");
+        let sources = self.take_sources();
         let tx = self.tx.take().expect("tx taken");
         let cost = self.cfg.spawn_cost();
-        for (w, assignments) in plan.into_iter().enumerate() {
+        for (w, source) in sources.into_iter().enumerate() {
             // the creation loop itself blocks per process (Fig 8 left)
             std::thread::sleep(cost);
             self.workers.push(worker::spawn_worker(
@@ -286,7 +357,8 @@ impl EpochIter {
                 self.dataset.clone(),
                 self.recorder.clone(),
                 self.cfg.clone(),
-                assignments,
+                source,
+                self.arena.clone(),
                 tx.clone(),
                 Duration::ZERO, // cost already paid in the loop
             ));
@@ -295,12 +367,13 @@ impl EpochIter {
     }
 
     fn start_workers_lazy(&mut self) {
-        let plan = self.plan.take().expect("already started");
+        let sources = self.take_sources();
         let tx = self.tx.take().expect("tx taken");
         let cost = self.cfg.spawn_cost();
         let dataset = self.dataset.clone();
         let recorder = self.recorder.clone();
         let cfg = self.cfg.clone();
+        let arena = self.arena.clone();
         // start_download(): yield each worker as it is created (Fig 8
         // right) — creation runs off the consumer's critical path
         self.spawner = Some(
@@ -308,14 +381,15 @@ impl EpochIter {
                 .name("dl-spawner".into())
                 .spawn(move || {
                     let mut handles = Vec::new();
-                    for (w, assignments) in plan.into_iter().enumerate() {
+                    for (w, source) in sources.into_iter().enumerate() {
                         std::thread::sleep(cost);
                         handles.push(worker::spawn_worker(
                             w as u32,
                             dataset.clone(),
                             recorder.clone(),
                             cfg.clone(),
-                            assignments,
+                            source,
+                            arena.clone(),
                             tx.clone(),
                             Duration::ZERO,
                         ));
@@ -328,7 +402,6 @@ impl EpochIter {
     }
 
     fn next_inline(&mut self) -> Option<Batch> {
-        let (batch_id, indices) = self.inline_plan.as_mut()?.pop_front()?;
         let gil = gil::Gil::new(self.cfg.runtime, self.cfg.python_tax);
         let ctx = fetch::FetchCtx {
             worker_id: 0,
@@ -336,17 +409,33 @@ impl EpochIter {
             gil: gil.clone(),
             recorder: self.recorder.clone(),
         };
-        let t0 = self.recorder.now();
-        let samples = fetch::fetch_vanilla(&ctx, batch_id, &indices).ok()?;
-        let batch = gil.cpu(|| collate::collate(batch_id, samples));
-        self.recorder.record(
-            names::BATCH_INFLIGHT,
-            0,
-            batch_id as i64,
-            t0,
-            self.recorder.now(),
-        );
-        Some(batch)
+        loop {
+            let (batch_id, indices) = self.inline_plan.as_mut()?.pop_front()?;
+            let t0 = self.recorder.now();
+            let res = if let Some(arena) = &self.arena {
+                // fused: assemble in the recycled slab, no copies
+                fetch::fetch_vanilla_fused(&ctx, arena, batch_id, &indices)
+            } else {
+                fetch::fetch_vanilla(&ctx, batch_id, &indices)
+                    .and_then(|samples| gil.cpu(|| collate::collate(batch_id, samples)))
+            };
+            match res {
+                Ok(batch) => {
+                    self.recorder.record(
+                        names::BATCH_INFLIGHT,
+                        0,
+                        batch_id as i64,
+                        t0,
+                        self.recorder.now(),
+                    );
+                    return Some(batch);
+                }
+                Err(e) => {
+                    // same per-batch error semantics as the worker path
+                    eprintln!("inline loader batch {batch_id}: {e:#}");
+                }
+            }
+        }
     }
 
     /// Apply the pin-memory staging cost and flag.
@@ -391,22 +480,43 @@ impl Iterator for EpochIter {
         }
         // in-order delivery: drain until the expected id arrives
         loop {
-            if let Some(b) = self.pending.remove(&self.next_id) {
-                self.next_id += 1;
-                self.recorder.record(
-                    names::GET_BATCH,
-                    0,
-                    b.id as i64,
-                    t0,
-                    self.recorder.now(),
-                );
-                return Some(self.pin(b));
+            match self.pending.remove(&self.next_id) {
+                Some(Some(b)) => {
+                    self.next_id += 1;
+                    self.recorder.record(
+                        names::GET_BATCH,
+                        0,
+                        b.id as i64,
+                        t0,
+                        self.recorder.now(),
+                    );
+                    return Some(self.pin(b));
+                }
+                Some(None) => {
+                    // failure tombstone: the worker already logged it —
+                    // advance past the gap and keep delivering
+                    self.next_id += 1;
+                    continue;
+                }
+                None => {}
             }
             match self.rx.as_ref().expect("rx gone").recv() {
-                Ok(b) => {
-                    self.pending.insert(b.id, b);
+                Ok(worker::WorkerMsg::Batch(b)) => {
+                    self.pending.insert(b.id, Some(b));
                 }
-                Err(_) => return None, // all workers done & channel drained
+                Ok(worker::WorkerMsg::Failed(id)) => {
+                    self.pending.insert(id, None);
+                }
+                Err(_) => {
+                    // all workers done & channel drained. Backstop for a
+                    // gap with no tombstone (e.g. a worker died): skip
+                    // to the next buffered id instead of silently
+                    // truncating the epoch.
+                    let Some(&next) = self.pending.keys().min() else {
+                        return None;
+                    };
+                    self.next_id = next;
+                }
             }
         }
     }
@@ -486,6 +596,123 @@ mod tests {
             // in-order ids
             let ids: Vec<usize> = batches.iter().map(|b| b.id).collect();
             assert_eq!(ids, vec![0, 1, 2, 3, 4], "{impl_:?}");
+        }
+    }
+
+    #[test]
+    fn work_stealing_epoch_covers_dataset_in_order_all_impls() {
+        for impl_ in FetchImpl::all() {
+            let dl = Dataloader::new(
+                dataset(22, false),
+                DataloaderConfig {
+                    batch_size: 5,
+                    num_workers: 3,
+                    fetch_impl: impl_,
+                    num_fetch_workers: 4,
+                    work_stealing: true,
+                    spawn_cost_override: Some(Duration::ZERO),
+                    ..Default::default()
+                },
+                Recorder::new(),
+            );
+            let batches = collect_epoch(&dl, 0);
+            assert_eq!(batches.len(), 5, "{impl_:?}");
+            check_full_coverage(&batches, 22);
+            let ids: Vec<usize> = batches.iter().map(|b| b.id).collect();
+            assert_eq!(ids, vec![0, 1, 2, 3, 4], "{impl_:?}");
+        }
+    }
+
+    #[test]
+    fn arena_epochs_reuse_slabs_across_epochs() {
+        let dl = Dataloader::new(
+            dataset(24, false),
+            DataloaderConfig {
+                batch_size: 4,
+                num_workers: 2,
+                arena_slabs: 16,
+                spawn_cost_override: Some(Duration::ZERO),
+                ..Default::default()
+            },
+            Recorder::new(),
+        );
+        for epoch in 0..3 {
+            let batches = collect_epoch(&dl, epoch);
+            assert_eq!(batches.len(), 6);
+            check_full_coverage(&batches, 24);
+            assert!(batches.iter().all(|b| b.is_pooled()));
+            // consumer side of the lifecycle: recycle after use
+            for b in batches {
+                b.recycle();
+            }
+        }
+        let s = dl.arena().unwrap().stats();
+        assert_eq!(s.checkouts, 18, "{s:?}");
+        assert_eq!(s.recycled, 18, "{s:?}");
+        // steady state: only the first epoch's in-flight window ever
+        // allocated fresh slabs
+        assert!(s.fresh <= 8, "{s:?}");
+        assert!(s.reused >= 10, "{s:?}");
+    }
+
+    #[test]
+    fn arena_with_work_stealing_and_shuffle_is_equivalent_to_legacy() {
+        let mk = |arena: usize, stealing: bool| {
+            Dataloader::new(
+                dataset(19, false),
+                DataloaderConfig {
+                    batch_size: 4,
+                    num_workers: 3,
+                    fetch_impl: FetchImpl::Threaded,
+                    num_fetch_workers: 4,
+                    arena_slabs: arena,
+                    work_stealing: stealing,
+                    spawn_cost_override: Some(Duration::ZERO),
+                    ..Default::default()
+                },
+                Recorder::new(),
+            )
+        };
+        let legacy: Vec<Batch> = collect_epoch(&mk(0, false), 1);
+        let fused: Vec<Batch> = collect_epoch(&mk(12, true), 1);
+        assert_eq!(legacy.len(), fused.len());
+        for (a, b) in legacy.iter().zip(fused.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.images, b.images);
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.indices, b.indices);
+            assert_eq!(a.raw_bytes, b.raw_bytes);
+        }
+    }
+
+    #[test]
+    fn failed_batch_skips_not_truncates_the_epoch() {
+        use crate::data::synth::generate_corpus as gen;
+        // corrupt one object: its batch fails in the worker, every other
+        // batch must still be delivered, in order
+        let mem: Arc<dyn crate::storage::ObjectStore> = Arc::new(MemStore::new("m"));
+        let (keys, _) = gen(&mem, &CorpusSpec::tiny(12)).unwrap();
+        mem.put(&keys[2], vec![7, 7, 7]).unwrap(); // not a SIMG
+        let ds: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
+            mem,
+            AugmentConfig { crop: 16, ..Default::default() },
+        ));
+        for (workers, stealing) in [(2usize, false), (3, true), (0, false)] {
+            let dl = Dataloader::new(
+                ds.clone(),
+                DataloaderConfig {
+                    batch_size: 4,
+                    num_workers: workers,
+                    shuffle: false, // item 2 lands in batch 0
+                    work_stealing: stealing,
+                    spawn_cost_override: Some(Duration::ZERO),
+                    ..Default::default()
+                },
+                Recorder::new(),
+            );
+            let batches = collect_epoch(&dl, 0);
+            let ids: Vec<usize> = batches.iter().map(|b| b.id).collect();
+            assert_eq!(ids, vec![1, 2], "workers={workers} stealing={stealing}");
         }
     }
 

@@ -1,6 +1,13 @@
 //! Samplers and batch samplers (torch `RandomSampler` /
 //! `SequentialSampler` / `BatchSampler` semantics): produce the epoch's
-//! batch index lists that get distributed over worker index queues.
+//! batch index lists that get distributed over worker index queues —
+//! either pre-split round-robin (torch), or through a shared
+//! [`BatchInjector`] that idle workers steal from (`work_stealing`
+//! knob), which kills the end-of-epoch straggler stall on
+//! high-latency storage.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
 
 use crate::util::rng::Rng;
 
@@ -40,6 +47,43 @@ pub fn batches(order: &[usize], batch_size: usize, drop_last: bool) -> Vec<Vec<u
         }
     }
     out
+}
+
+/// Shared batch injector queue for work-stealing dispatch: every worker
+/// pops the globally-next batch when it goes idle, so one slow batch
+/// never pins the batches behind it to a busy worker (in-order delivery
+/// is preserved by the consumer's reorder buffer, exactly as with
+/// static assignment).
+pub struct BatchInjector {
+    queue: Mutex<VecDeque<(usize, Vec<usize>)>>,
+}
+
+impl BatchInjector {
+    /// Build from an epoch's batch plan; batch ids are assigned in plan
+    /// order (the same ids static assignment would use).
+    pub fn new(batches: Vec<Vec<usize>>) -> BatchInjector {
+        BatchInjector {
+            queue: Mutex::new(batches.into_iter().enumerate().collect()),
+        }
+    }
+
+    /// Steal the next batch; `None` once the epoch is drained.
+    pub fn steal(&self) -> Option<(usize, Vec<usize>)> {
+        self.queue.lock().unwrap().pop_front()
+    }
+
+    /// Steal up to `k` consecutive batches in one grab (batch
+    /// disassembly pulls a whole wave at once).
+    pub fn steal_group(&self, k: usize) -> Vec<(usize, Vec<usize>)> {
+        let mut q = self.queue.lock().unwrap();
+        let take = k.max(1).min(q.len());
+        q.drain(..take).collect()
+    }
+
+    /// Batches not yet claimed.
+    pub fn remaining(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
 }
 
 /// Round-robin assignment of (batch_id, indices) to workers — torch
@@ -92,6 +136,50 @@ mod tests {
     fn exact_multiple_keeps_all() {
         let order: Vec<usize> = (0..8).collect();
         assert_eq!(batches(&order, 4, true).len(), 2);
+    }
+
+    #[test]
+    fn injector_steals_in_plan_order_exactly_once() {
+        let inj = BatchInjector::new(batches(&(0..20).collect::<Vec<_>>(), 4, false));
+        assert_eq!(inj.remaining(), 5);
+        let first = inj.steal().unwrap();
+        assert_eq!(first.0, 0);
+        assert_eq!(first.1, vec![0, 1, 2, 3]);
+        let group = inj.steal_group(3);
+        assert_eq!(
+            group.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+        let tail = inj.steal_group(10); // clamped to what's left
+        assert_eq!(tail.len(), 1);
+        assert_eq!(tail[0].0, 4);
+        assert!(inj.steal().is_none());
+        assert_eq!(inj.remaining(), 0);
+    }
+
+    #[test]
+    fn injector_concurrent_steals_partition_the_epoch() {
+        use std::sync::Arc;
+        let inj = Arc::new(BatchInjector::new(batches(
+            &(0..64).collect::<Vec<_>>(),
+            2,
+            false,
+        )));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let inj = inj.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some((id, _)) = inj.steal() {
+                    got.push(id);
+                }
+                got
+            }));
+        }
+        let mut all: Vec<usize> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..32).collect::<Vec<_>>());
     }
 
     #[test]

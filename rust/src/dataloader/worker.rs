@@ -1,35 +1,82 @@
-//! Worker "processes" (Fig 3/4 of the paper): each worker owns an index
-//! queue slice, fetches batches via the configured fetcher strategy,
-//! collates, and pushes finished batches into the bounded data queue.
+//! Worker "processes" (Fig 3/4 of the paper): each worker pulls batch
+//! work from its [`WorkSource`] — a pre-split static assignment (torch
+//! round-robin) or the shared work-stealing injector — fetches batches
+//! via the configured fetcher strategy, assembles them (legacy collate
+//! copy, or fused straight into an arena slab), and pushes finished
+//! batches into the bounded data queue.
 //!
 //! A worker is an OS thread standing in for a CPython worker process:
 //! it owns its own [`Gil`] (decode/augment serialize within the worker,
 //! never across workers) and pays the configured process start-up cost
 //! (`fork` vs `spawn`) before doing any work.
+//!
+//! Per-batch failures (corrupt object, ragged/empty collate) are
+//! surfaced on stderr and skipped — one bad batch never aborts the
+//! process or the epoch.
 
 use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
 
+use anyhow::anyhow;
+
 use crate::asyncrt;
+use crate::dataloader::arena::BatchArena;
 use crate::dataloader::collate::{collate, Batch};
 use crate::dataloader::fetch::{
-    fetch_async, fetch_threaded, fetch_vanilla, FetchCtx, ThreadPool,
+    fetch_async, fetch_async_fused, fetch_threaded, fetch_threaded_fused,
+    fetch_vanilla, fetch_vanilla_fused, FetchCtx, ThreadPool,
 };
+use crate::dataloader::sampler::BatchInjector;
 use crate::dataloader::{DataloaderConfig, FetchImpl};
 use crate::dataset::Dataset;
 use crate::gil::Gil;
 use crate::telemetry::{names, Recorder};
 
-/// Spawn one worker thread over its assigned (batch_id, indices) list.
-/// `spawn_delay` is paid *inside* the thread before any fetching (the
-/// interpreter start-up of a `spawn`-method process, or ~0 for `fork`).
+/// What a worker pushes into the data queue: a finished batch, or a
+/// tombstone for a batch that failed (so the in-order consumer can
+/// advance past the gap immediately instead of buffering the rest of
+/// the epoch waiting for an id that will never arrive).
+pub enum WorkerMsg {
+    Batch(Batch),
+    /// batch `id` failed in this worker (already logged to stderr)
+    Failed(usize),
+}
+
+/// Where a worker's batches come from.
+pub enum WorkSource {
+    /// Pre-split per-worker assignment (torch's static round-robin).
+    /// A deque so each wave pops from the front in O(wave), not O(rest).
+    Static(std::collections::VecDeque<(usize, Vec<usize>)>),
+    /// Shared injector queue — this worker steals the globally-next
+    /// batch whenever it goes idle (`work_stealing` knob).
+    Stealing(Arc<BatchInjector>),
+}
+
+impl WorkSource {
+    /// Next wave of up to `k` batches; empty when the epoch is drained.
+    fn next_group(&mut self, k: usize) -> Vec<(usize, Vec<usize>)> {
+        match self {
+            WorkSource::Static(list) => {
+                let take = k.max(1).min(list.len());
+                list.drain(..take).collect()
+            }
+            WorkSource::Stealing(inj) => inj.steal_group(k),
+        }
+    }
+}
+
+/// Spawn one worker thread over its work source. `spawn_delay` is paid
+/// *inside* the thread before any fetching (the interpreter start-up of
+/// a `spawn`-method process, or ~0 for `fork`).
+#[allow(clippy::too_many_arguments)]
 pub fn spawn_worker(
     worker_id: u32,
     dataset: Arc<dyn Dataset>,
     recorder: Arc<Recorder>,
     cfg: Arc<DataloaderConfig>,
-    assignments: Vec<(usize, Vec<usize>)>,
-    out: SyncSender<Batch>,
+    source: WorkSource,
+    arena: Option<Arc<BatchArena>>,
+    out: SyncSender<WorkerMsg>,
     spawn_delay: std::time::Duration,
 ) -> std::thread::JoinHandle<()> {
     std::thread::Builder::new()
@@ -40,9 +87,16 @@ pub fn spawn_worker(
                 std::thread::sleep(spawn_delay);
             }
             recorder.record(names::WORKER_SPAWN, worker_id, -1, t0, recorder.now());
-            run_worker(worker_id, dataset, recorder, cfg, assignments, out);
+            run_worker(worker_id, dataset, recorder, cfg, source, arena, out);
         })
         .expect("spawn dataloader worker")
+}
+
+/// Per-impl fetch machinery, built once per worker.
+enum Engine {
+    Vanilla,
+    Threaded(ThreadPool),
+    Asyncio(Arc<asyncrt::Runtime>, Arc<asyncrt::Semaphore>),
 }
 
 fn run_worker(
@@ -50,8 +104,9 @@ fn run_worker(
     dataset: Arc<dyn Dataset>,
     recorder: Arc<Recorder>,
     cfg: Arc<DataloaderConfig>,
-    assignments: Vec<(usize, Vec<usize>)>,
-    out: SyncSender<Batch>,
+    mut source: WorkSource,
+    arena: Option<Arc<BatchArena>>,
+    out: SyncSender<WorkerMsg>,
 ) {
     let gil = Gil::new(cfg.runtime, cfg.python_tax);
     let ctx = Arc::new(FetchCtx {
@@ -61,52 +116,81 @@ fn run_worker(
         recorder: recorder.clone(),
     });
 
-    match cfg.fetch_impl {
-        FetchImpl::Vanilla => {
-            for (batch_id, indices) in assignments {
-                let t0 = recorder.now();
-                let samples = match fetch_vanilla(&ctx, batch_id, &indices) {
-                    Ok(s) => s,
-                    Err(e) => {
-                        eprintln!("worker {worker_id} batch {batch_id}: {e:#}");
-                        continue;
-                    }
-                };
-                let batch = gil.cpu(|| collate(batch_id, samples));
-                recorder.record(
-                    names::BATCH_INFLIGHT,
-                    worker_id,
-                    batch_id as i64,
-                    t0,
-                    recorder.now(),
-                );
-                if out.send(batch).is_err() {
-                    return; // consumer gone
-                }
-            }
+    let engine = match cfg.fetch_impl {
+        FetchImpl::Vanilla => Engine::Vanilla,
+        FetchImpl::Threaded => Engine::Threaded(ThreadPool::new(
+            cfg.num_fetch_workers,
+            &format!("w{worker_id}"),
+        )),
+        FetchImpl::Asyncio => Engine::Asyncio(
+            // single-threaded event loop: the asyncio worker model
+            asyncrt::Runtime::new(1),
+            asyncrt::Semaphore::new(cfg.num_fetch_workers.max(1)),
+        ),
+    };
+    // batch disassembly: number of batches pulled per wave (Threaded)
+    let group = match (&engine, cfg.batch_pool) {
+        (Engine::Threaded(_), pool) if pool > 0 => {
+            (pool / cfg.batch_size.max(1)).max(1)
         }
-        FetchImpl::Threaded => {
-            let pool = ThreadPool::new(
-                cfg.num_fetch_workers,
-                &format!("w{worker_id}"),
-            );
-            // batch disassembly: number of batches pulled per wave
-            let group = if cfg.batch_pool > 0 {
-                (cfg.batch_pool / cfg.batch_size.max(1)).max(1)
-            } else {
-                1
-            };
-            for chunk in assignments.chunks(group) {
-                let t0 = recorder.now();
-                let fetched = match fetch_threaded(&ctx, &pool, chunk) {
-                    Ok(f) => f,
-                    Err(e) => {
-                        eprintln!("worker {worker_id}: {e:#}");
-                        continue;
-                    }
-                };
-                for (batch_id, samples) in fetched {
-                    let batch = gil.cpu(|| collate(batch_id, samples));
+        _ => 1,
+    };
+
+    loop {
+        let work = source.next_group(group);
+        if work.is_empty() {
+            return; // epoch drained
+        }
+        let t0 = recorder.now();
+        let results: Vec<(usize, anyhow::Result<Batch>)> = match (&engine, &arena) {
+            // ---- fused zero-alloc paths (arena attached) -------------
+            (Engine::Vanilla, Some(arena)) => work
+                .iter()
+                .map(|(id, idxs)| (*id, fetch_vanilla_fused(&ctx, arena, *id, idxs)))
+                .collect(),
+            (Engine::Threaded(pool), Some(arena)) => {
+                fetch_threaded_fused(&ctx, pool, arena, &work)
+            }
+            (Engine::Asyncio(rt, sem), Some(arena)) => work
+                .iter()
+                .map(|(id, idxs)| {
+                    (*id, fetch_async_fused(&ctx, rt, sem, arena, *id, idxs))
+                })
+                .collect(),
+            // ---- legacy copying paths --------------------------------
+            (Engine::Vanilla, None) => work
+                .iter()
+                .map(|(id, idxs)| {
+                    let res = fetch_vanilla(&ctx, *id, idxs)
+                        .and_then(|samples| gil.cpu(|| collate(*id, samples)));
+                    (*id, res)
+                })
+                .collect(),
+            (Engine::Threaded(pool), None) => match fetch_threaded(&ctx, pool, &work) {
+                Ok(fetched) => fetched
+                    .into_iter()
+                    .map(|(id, samples)| (id, gil.cpu(|| collate(id, samples))))
+                    .collect(),
+                Err(e) => {
+                    // whole-wave failure: report it once per batch id
+                    let msg = format!("{e:#}");
+                    work.iter()
+                        .map(|(id, _)| (*id, Err(anyhow!("fetch wave failed: {msg}"))))
+                        .collect()
+                }
+            },
+            (Engine::Asyncio(rt, sem), None) => work
+                .iter()
+                .map(|(id, idxs)| {
+                    let res = fetch_async(&ctx, rt, sem, *id, idxs)
+                        .and_then(|samples| gil.cpu(|| collate(*id, samples)));
+                    (*id, res)
+                })
+                .collect(),
+        };
+        for (batch_id, res) in results {
+            let msg = match res {
+                Ok(batch) => {
                     recorder.record(
                         names::BATCH_INFLIGHT,
                         worker_id,
@@ -114,36 +198,16 @@ fn run_worker(
                         t0,
                         recorder.now(),
                     );
-                    if out.send(batch).is_err() {
-                        return;
-                    }
+                    WorkerMsg::Batch(batch)
                 }
-            }
-        }
-        FetchImpl::Asyncio => {
-            // single-threaded event loop: the asyncio worker model
-            let rt = asyncrt::Runtime::new(1);
-            let sem = asyncrt::Semaphore::new(cfg.num_fetch_workers.max(1));
-            for (batch_id, indices) in assignments {
-                let t0 = recorder.now();
-                let samples = match fetch_async(&ctx, &rt, &sem, batch_id, &indices) {
-                    Ok(s) => s,
-                    Err(e) => {
-                        eprintln!("worker {worker_id} batch {batch_id}: {e:#}");
-                        continue;
-                    }
-                };
-                let batch = gil.cpu(|| collate(batch_id, samples));
-                recorder.record(
-                    names::BATCH_INFLIGHT,
-                    worker_id,
-                    batch_id as i64,
-                    t0,
-                    recorder.now(),
-                );
-                if out.send(batch).is_err() {
-                    return;
+                Err(e) => {
+                    // the per-batch error path: log, tombstone, move on
+                    eprintln!("worker {worker_id} batch {batch_id}: {e:#}");
+                    WorkerMsg::Failed(batch_id)
                 }
+            };
+            if out.send(msg).is_err() {
+                return; // consumer gone
             }
         }
     }
@@ -167,18 +231,36 @@ mod tests {
         ))
     }
 
+    fn batches_of(rx: mpsc::Receiver<WorkerMsg>) -> Vec<Batch> {
+        rx.iter()
+            .filter_map(|m| match m {
+                WorkerMsg::Batch(b) => Some(b),
+                WorkerMsg::Failed(_) => None,
+            })
+            .collect()
+    }
+
     fn run(cfg: DataloaderConfig, assignments: Vec<(usize, Vec<usize>)>) -> Vec<Batch> {
+        run_with_arena(cfg, assignments, None)
+    }
+
+    fn run_with_arena(
+        cfg: DataloaderConfig,
+        assignments: Vec<(usize, Vec<usize>)>,
+        arena: Option<Arc<BatchArena>>,
+    ) -> Vec<Batch> {
         let (tx, rx) = mpsc::sync_channel(64);
         let h = spawn_worker(
             0,
             ds(16),
             Recorder::new(),
             Arc::new(cfg),
-            assignments,
+            WorkSource::Static(assignments.into()),
+            arena,
             tx,
             std::time::Duration::ZERO,
         );
-        let got: Vec<Batch> = rx.iter().collect();
+        let got = batches_of(rx);
         h.join().unwrap();
         got
     }
@@ -235,12 +317,110 @@ mod tests {
             ds(16),
             Recorder::new(),
             Arc::new(DataloaderConfig { batch_size: 2, ..Default::default() }),
-            (0..8).map(|i| (i, vec![i, i + 1])).collect(),
+            WorkSource::Static((0..8).map(|i| (i, vec![i, i + 1])).collect()),
+            None,
             tx,
             std::time::Duration::ZERO,
         );
         let _first = rx.recv().unwrap();
         drop(rx);
         h.join().unwrap(); // must not hang
+    }
+
+    #[test]
+    fn fused_worker_emits_pooled_batches_for_every_impl() {
+        for impl_ in FetchImpl::all() {
+            let cfg = DataloaderConfig {
+                batch_size: 4,
+                fetch_impl: impl_,
+                num_fetch_workers: 4,
+                ..Default::default()
+            };
+            let arena = BatchArena::new(16, 4, 4);
+            let got = run_with_arena(
+                cfg,
+                vec![(0, vec![0, 1, 2, 3]), (1, vec![4, 5, 6, 7])],
+                Some(arena.clone()),
+            );
+            assert_eq!(got.len(), 2, "{impl_:?}");
+            assert!(got.iter().all(|b| b.is_pooled()), "{impl_:?}");
+            assert_eq!(got[0].indices, vec![0, 1, 2, 3], "{impl_:?}");
+            assert_eq!(arena.stats().checkouts, 2, "{impl_:?}");
+        }
+    }
+
+    #[test]
+    fn stealing_workers_cover_the_epoch_between_them() {
+        let plan: Vec<Vec<usize>> = (0..8).map(|b| vec![2 * b, 2 * b + 1]).collect();
+        let inj = Arc::new(BatchInjector::new(plan));
+        let (tx, rx) = mpsc::sync_channel(64);
+        let cfg = Arc::new(DataloaderConfig { batch_size: 2, ..Default::default() });
+        let dataset = ds(16);
+        let h1 = spawn_worker(
+            0,
+            dataset.clone(),
+            Recorder::new(),
+            cfg.clone(),
+            WorkSource::Stealing(inj.clone()),
+            None,
+            tx.clone(),
+            std::time::Duration::ZERO,
+        );
+        let h2 = spawn_worker(
+            1,
+            dataset,
+            Recorder::new(),
+            cfg,
+            WorkSource::Stealing(inj),
+            None,
+            tx,
+            std::time::Duration::ZERO,
+        );
+        let got = batches_of(rx);
+        h1.join().unwrap();
+        h2.join().unwrap();
+        let mut ids: Vec<usize> = got.iter().map(|b| b.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+        let mut seen: Vec<usize> =
+            got.iter().flat_map(|b| b.indices.iter().copied()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn corrupt_item_skips_its_batch_only() {
+        let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+        let (keys, _) = generate_corpus(&mem, &CorpusSpec::tiny(8)).unwrap();
+        mem.put(&keys[1], vec![9, 9, 9]).unwrap(); // corrupt batch 0's item
+        let dataset: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
+            mem,
+            AugmentConfig { crop: 16, ..Default::default() },
+        ));
+        for arena in [None, Some(BatchArena::new(16, 4, 2))] {
+            let (tx, rx) = mpsc::sync_channel(8);
+            let h = spawn_worker(
+                0,
+                dataset.clone(),
+                Recorder::new(),
+                Arc::new(DataloaderConfig { batch_size: 4, ..Default::default() }),
+                WorkSource::Static(
+                    vec![(0, vec![0, 1, 2, 3]), (1, vec![4, 5, 6, 7])].into(),
+                ),
+                arena,
+                tx,
+                std::time::Duration::ZERO,
+            );
+            let msgs: Vec<WorkerMsg> = rx.iter().collect();
+            h.join().unwrap();
+            // batch 0 failed (corrupt item) and was tombstoned so the
+            // consumer can advance; batch 1 delivered
+            assert_eq!(msgs.len(), 2);
+            assert!(matches!(msgs[0], WorkerMsg::Failed(0)));
+            match &msgs[1] {
+                WorkerMsg::Batch(b) => assert_eq!(b.id, 1),
+                WorkerMsg::Failed(id) => panic!("batch 1 failed too: {id}"),
+            }
+        }
     }
 }

@@ -15,9 +15,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::data::simg::SimgRef;
 use crate::data::{Augment, AugmentConfig, SimgImage, U8Tensor};
 use crate::gil::Gil;
-use crate::storage::{BoxFut, ObjectStore};
+use crate::storage::{BoxFut, Bytes, ObjectStore};
 use crate::util::rng::Rng;
 
 /// One loaded training item.
@@ -33,6 +34,34 @@ pub struct Sample {
     pub fetch_time: f64,
     /// decode+augment CPU time (s), including GIL wait
     pub decode_time: f64,
+}
+
+/// Metadata of one item loaded through the fused write-into path — a
+/// [`Sample`] minus the crop, which went straight into a batch-arena
+/// slot instead of its own allocation. Timing lives in the `get_item`
+/// telemetry spans, not here: the fused path avoids per-item clock
+/// reads it has no consumer for.
+#[derive(Debug, Clone, Copy)]
+pub struct ItemMeta {
+    pub label: u16,
+    /// size of the stored object (throughput accounting uses this)
+    pub raw_bytes: usize,
+}
+
+/// Copy a fully-loaded sample's crop into an arena slot — the fallback
+/// assembly for datasets without a fused write-into path. A size
+/// mismatch is a per-batch error, not a panic.
+pub fn copy_sample_into(s: &Sample, out: &mut [u8]) -> Result<ItemMeta> {
+    if s.crop.data.len() != out.len() {
+        anyhow::bail!(
+            "item {}: crop is {} bytes but the slot holds {}",
+            s.index,
+            s.crop.data.len(),
+            out.len()
+        );
+    }
+    out.copy_from_slice(&s.crop.data);
+    Ok(ItemMeta { label: s.label, raw_bytes: s.raw_bytes })
 }
 
 /// Map-style dataset interface.
@@ -61,6 +90,48 @@ pub trait Dataset: Send + Sync {
 
     /// Output crop side (informs collate shapes).
     fn crop(&self) -> usize;
+
+    // ---- fused write-into path (batch arena, PR 3) --------------------
+
+    /// `__getitem__` fused with collate: load item `index` and write its
+    /// augmented crop directly into `out` (length `crop()²·3` — one
+    /// arena slot), returning the metadata. The default routes through
+    /// [`Dataset::get_item`] plus one copy, so any dataset works behind
+    /// the arena; decode-aware datasets override it to skip every
+    /// intermediate buffer.
+    fn get_item_into(&self, index: usize, gil: &Gil, out: &mut [u8]) -> Result<ItemMeta> {
+        let s = self.get_item(index, gil)?;
+        copy_sample_into(&s, out)
+    }
+
+    /// Whether this dataset supports the raw-bytes fused path
+    /// ([`Dataset::get_raw_async`] + [`Dataset::process_raw_into`]).
+    /// The asyncio fetcher uses it to split storage wait (awaited on the
+    /// event loop) from decode (written straight into the slab).
+    fn supports_raw(&self) -> bool {
+        false
+    }
+
+    /// Fetch the raw stored bytes of item `index` (no decode). Only
+    /// meaningful when [`Dataset::supports_raw`] returns true.
+    fn get_raw_async<'a>(&'a self, _index: usize) -> BoxFut<'a, Result<Bytes>> {
+        Box::pin(async move {
+            Err(anyhow::anyhow!("fused raw fetch unsupported by this dataset"))
+        })
+    }
+
+    /// Decode + augment previously fetched raw bytes into `out` under
+    /// the caller's GIL. Only meaningful when [`Dataset::supports_raw`]
+    /// returns true.
+    fn process_raw_into(
+        &self,
+        _index: usize,
+        _raw: &[u8],
+        _gil: &Gil,
+        _out: &mut [u8],
+    ) -> Result<ItemMeta> {
+        Err(anyhow::anyhow!("fused decode unsupported by this dataset"))
+    }
 }
 
 /// Dataset over SIMG objects in any [`ObjectStore`] (the ImageNet-folder
@@ -164,6 +235,46 @@ impl Dataset for ImageFolderDataset {
     fn crop(&self) -> usize {
         self.augment.cfg.crop
     }
+
+    fn get_item_into(&self, index: usize, gil: &Gil, out: &mut [u8]) -> Result<ItemMeta> {
+        let key = &self.keys[index];
+        let raw = gil.io(|| self.store.get(key))?;
+        self.process_raw_into(index, &raw, gil, out)
+    }
+
+    fn supports_raw(&self) -> bool {
+        true
+    }
+
+    fn get_raw_async<'a>(&'a self, index: usize) -> BoxFut<'a, Result<Bytes>> {
+        Box::pin(async move { self.store.get_async(&self.keys[index]).await })
+    }
+
+    fn process_raw_into(
+        &self,
+        index: usize,
+        raw: &[u8],
+        gil: &Gil,
+        out: &mut [u8],
+    ) -> Result<ItemMeta> {
+        // a mis-sized slot is a per-batch error, not a worker panic
+        // (apply_u8_into asserts the same invariant)
+        let want = self.crop() * self.crop() * 3;
+        if out.len() != want {
+            anyhow::bail!(
+                "item {index}: slot holds {} bytes, crop needs {want}",
+                out.len()
+            );
+        }
+        let epoch = self.epoch.load(Ordering::Relaxed);
+        gil.cpu(|| {
+            // zero-copy parse off the storage bytes, augment straight
+            // into the arena slot: no decode buffer, no crop tensor
+            let img = SimgRef::parse(raw)?;
+            self.augment.apply_u8_into(&img, epoch, index, out);
+            Ok(ItemMeta { label: img.label, raw_bytes: raw.len() })
+        })
+    }
 }
 
 /// `get_random_item` from the paper's §3.2: draw a random index and load
@@ -221,6 +332,69 @@ mod tests {
         ds.set_epoch(1);
         let b = ds.get_item(0, &gil).unwrap();
         assert_ne!(a.crop.data, b.crop.data);
+    }
+
+    #[test]
+    fn fused_into_path_matches_get_item_bytes() {
+        let ds = tiny_dataset(6, 24);
+        let gil = Gil::native();
+        for index in 0..6 {
+            let s = ds.get_item(index, &gil).unwrap();
+            let mut slot = vec![0u8; 24 * 24 * 3];
+            let meta = ds.get_item_into(index, &gil, &mut slot).unwrap();
+            assert_eq!(s.crop.data, slot, "index {index}");
+            assert_eq!(s.label, meta.label);
+            assert_eq!(s.raw_bytes, meta.raw_bytes);
+        }
+    }
+
+    #[test]
+    fn raw_async_plus_process_matches_sync() {
+        let ds = tiny_dataset(4, 16);
+        let gil = Gil::native();
+        assert!(ds.supports_raw());
+        let raw = crate::asyncrt::block_on(ds.get_raw_async(2)).unwrap();
+        let mut slot = vec![0u8; 16 * 16 * 3];
+        let meta = ds.process_raw_into(2, &raw, &gil, &mut slot).unwrap();
+        let s = ds.get_item(2, &gil).unwrap();
+        assert_eq!(s.crop.data, slot);
+        assert_eq!(s.label, meta.label);
+    }
+
+    #[test]
+    fn default_fused_fallback_copies_through_get_item() {
+        // a wrapper dataset without its own fused impl still works
+        struct Wrap(ImageFolderDataset);
+        impl Dataset for Wrap {
+            fn len(&self) -> usize {
+                self.0.len()
+            }
+            fn get_item(&self, index: usize, gil: &Gil) -> Result<Sample> {
+                self.0.get_item(index, gil)
+            }
+            fn get_item_async<'a>(
+                &'a self,
+                index: usize,
+                gil: &'a Gil,
+            ) -> BoxFut<'a, Result<Sample>> {
+                self.0.get_item_async(index, gil)
+            }
+            fn set_epoch(&self, epoch: usize) {
+                self.0.set_epoch(epoch)
+            }
+            fn crop(&self) -> usize {
+                self.0.crop()
+            }
+        }
+        let w = Wrap(tiny_dataset(3, 16));
+        let gil = Gil::native();
+        assert!(!w.supports_raw());
+        let mut slot = vec![0u8; 16 * 16 * 3];
+        let meta = w.get_item_into(1, &gil, &mut slot).unwrap();
+        let s = w.get_item(1, &gil).unwrap();
+        assert_eq!(s.crop.data, slot);
+        assert_eq!(s.label, meta.label);
+        assert!(crate::asyncrt::block_on(w.get_raw_async(0)).is_err());
     }
 
     #[test]

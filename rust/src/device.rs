@@ -102,6 +102,16 @@ pub struct DeviceBatch {
     pub transfer_time: Duration,
 }
 
+impl DeviceBatch {
+    /// Release the host-side buffers back to their batch arena (the
+    /// trainer calls this once the training step no longer needs the
+    /// host copy) — the `recycle` leg of the slab lifecycle. No-op for
+    /// heap batches.
+    pub fn recycle(self) {
+        self.batch.recycle();
+    }
+}
+
 /// The simulated training device.
 pub struct Device {
     backend: Backend,
@@ -251,6 +261,7 @@ mod tests {
             indices: (0..b).collect(),
             raw_bytes: (b * 1000) as u64,
             pinned: false,
+            arena: None,
         }
     }
 

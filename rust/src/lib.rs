@@ -50,3 +50,14 @@ pub mod util;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
+
+/// Counting allocator (default `count-alloc` feature): every binary
+/// linking `cdl` gets process-wide and per-thread allocation counters
+/// ([`util::alloc`]) — the `hotpath` experiment's allocs/batch column
+/// and the arena zero-alloc regression test read them. Overhead per
+/// malloc/free is two relaxed atomic adds and two thread-local bumps;
+/// build with `--no-default-features` for allocator-untouched timing
+/// runs (the counters then read zero).
+#[cfg(feature = "count-alloc")]
+#[global_allocator]
+static GLOBAL_ALLOC: util::alloc::CountingAlloc = util::alloc::CountingAlloc;

@@ -135,6 +135,8 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         batch_pool: cfg.loader.batch_pool,
         prefetch_depth: cfg.loader.prefetch_depth,
         prefetch_policy: cfg.loader.prefetch_policy,
+        arena_slabs: cfg.loader.arena_slabs,
+        work_stealing: cfg.loader.work_stealing,
         lazy_init: cfg.loader.lazy_init,
         runtime: cfg.loader.runtime,
         trainer: cfg.trainer.kind,
@@ -143,6 +145,14 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     };
     let (report, rig) = cdl::bench::rig::run(&spec)?;
     println!("{}", report.summary());
+    if let Some(a) = rig.dataloader.arena() {
+        let s = a.stats();
+        println!(
+            "batch arena: {} checkouts ({} reused, {} fresh), {} recycled, \
+             {} pooled",
+            s.checkouts, s.reused, s.fresh, s.recycled, s.pooled,
+        );
+    }
     if let Some(p) = &rig.prefetch {
         println!("{}", p.summary_table("prefetch tiers").render());
     }
@@ -224,6 +234,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         batch_pool: 0,
         prefetch_depth: 0,
         prefetch_policy: cdl::prefetch::CachePolicy::Lru,
+        arena_slabs: 0,
+        work_stealing: false,
         lazy_init: true,
         runtime: cdl::gil::Runtime::Native,
         trainer: trainer::TrainerKind::Torch,

@@ -169,11 +169,15 @@ pub fn train(
         let mut iter = dl.epoch(epoch);
         loop {
             if cfg.max_batches > 0 && step % dl.batches_per_epoch().max(1) >= cfg.max_batches {
-                // drain remaining batches of this epoch cheaply
-                if iter.next().is_none() {
-                    break;
+                // drain remaining batches of this epoch cheaply (still
+                // recycling their slabs)
+                match iter.next() {
+                    Some(b) => {
+                        b.recycle();
+                        continue;
+                    }
+                    None => break,
                 }
-                continue;
             }
             match cfg.kind {
                 TrainerKind::Torch => {
@@ -182,6 +186,8 @@ pub fn train(
                     bytes += batch.raw_bytes;
                     let db = device.to_device(batch);
                     losses.push(device.train_batch(&db)?);
+                    // slab lifecycle: host buffers return to the arena
+                    db.recycle();
                 }
                 TrainerKind::Lightning => {
                     let t_adv = recorder.now();
@@ -234,6 +240,7 @@ pub fn train(
                         t_adv,
                         recorder.now(),
                     );
+                    db.recycle();
                 }
             }
             step += 1;
@@ -311,6 +318,36 @@ mod tests {
         assert!(r.img_per_s > 0.0);
         assert!(r.mbit_per_s > 0.0);
         assert!(r.median_train > 0.0);
+    }
+
+    #[test]
+    fn torch_loop_recycles_arena_slabs() {
+        let rec = Recorder::new();
+        let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+        generate_corpus(&mem, &CorpusSpec::tiny(24)).unwrap();
+        let ds: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
+            mem,
+            AugmentConfig { crop: 16, ..Default::default() },
+        ));
+        let dl = Dataloader::new(
+            ds,
+            DataloaderConfig {
+                batch_size: 8,
+                num_workers: 2,
+                arena_slabs: 8,
+                spawn_cost_override: Some(Duration::ZERO),
+                ..Default::default()
+            },
+            rec.clone(),
+        );
+        let dev = mk_device(rec.clone());
+        let r = train(&dl, &dev, &TrainerConfig::torch(2), rec).unwrap();
+        assert_eq!(r.images, 48);
+        let s = dl.arena().unwrap().stats();
+        assert_eq!(s.checkouts, 6, "{s:?}");
+        assert_eq!(s.recycled, 6, "{s:?}");
+        // the second epoch must run on recycled slabs
+        assert!(s.reused >= 3, "{s:?}");
     }
 
     #[test]

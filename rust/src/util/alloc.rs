@@ -1,0 +1,161 @@
+//! Counting allocator — the measurement substrate for the zero-alloc
+//! hot path (dataloader arena, PR 3).
+//!
+//! [`CountingAlloc`] wraps the system allocator and keeps two sets of
+//! counters:
+//!
+//! * **process-wide** atomics — what the `hotpath` experiment reads to
+//!   report allocs/batch across the whole worker pipeline;
+//! * **per-thread** cells — what the steady-state regression test reads,
+//!   so concurrent activity on other threads (the libtest harness, a
+//!   sampler sidecar) cannot pollute a single-threaded measurement.
+//!
+//! The crate installs it as the `#[global_allocator]` (see `lib.rs`), so
+//! every binary linking `cdl` pays two relaxed atomic adds and two
+//! thread-local bumps per malloc/free — noise next to the allocation
+//! itself.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static G_ALLOCS: AtomicU64 = AtomicU64::new(0);
+static G_FREES: AtomicU64 = AtomicU64::new(0);
+static G_BYTES: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static T_ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static T_FREES: Cell<u64> = const { Cell::new(0) };
+    static T_BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Allocation counters at one instant (or a delta between two instants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct AllocCounters {
+    /// calls into `alloc`/`alloc_zeroed`/`realloc`
+    pub allocs: u64,
+    /// calls into `dealloc`
+    pub frees: u64,
+    /// bytes requested by the counted alloc calls
+    pub bytes: u64,
+}
+
+impl AllocCounters {
+    /// Counter movement since `earlier` (saturating, so a stale snapshot
+    /// never underflows).
+    pub fn since(&self, earlier: AllocCounters) -> AllocCounters {
+        AllocCounters {
+            allocs: self.allocs.saturating_sub(earlier.allocs),
+            frees: self.frees.saturating_sub(earlier.frees),
+            bytes: self.bytes.saturating_sub(earlier.bytes),
+        }
+    }
+}
+
+/// Process-wide counters (all threads).
+pub fn counters() -> AllocCounters {
+    AllocCounters {
+        allocs: G_ALLOCS.load(Ordering::Relaxed),
+        frees: G_FREES.load(Ordering::Relaxed),
+        bytes: G_BYTES.load(Ordering::Relaxed),
+    }
+}
+
+/// Counters for the calling thread only.
+pub fn thread_counters() -> AllocCounters {
+    AllocCounters {
+        allocs: T_ALLOCS.with(|c| c.get()),
+        frees: T_FREES.with(|c| c.get()),
+        bytes: T_BYTES.with(|c| c.get()),
+    }
+}
+
+#[inline]
+fn count(size: usize) {
+    G_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    G_BYTES.fetch_add(size as u64, Ordering::Relaxed);
+    // try_with: never panic inside the allocator, even during thread
+    // teardown
+    let _ = T_ALLOCS.try_with(|c| c.set(c.get() + 1));
+    let _ = T_BYTES.try_with(|c| c.set(c.get() + size as u64));
+}
+
+#[inline]
+fn count_free() {
+    G_FREES.fetch_add(1, Ordering::Relaxed);
+    let _ = T_FREES.try_with(|c| c.set(c.get() + 1));
+}
+
+/// The counting `GlobalAlloc` wrapper over [`System`].
+pub struct CountingAlloc;
+
+// SAFETY: pure pass-through to `System` plus relaxed counter updates;
+// no allocation happens inside the hooks themselves (thread-locals are
+// const-initialized `Cell`s).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        count(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        count(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        count_free();
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // a realloc is one alloc event (the regression test treats any
+        // growth in the hot loop as a failure) plus the implicit free of
+        // the old block, keeping allocs/frees symmetric
+        count(new_size);
+        count_free();
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+// Counter behavior is only observable when the crate's global
+// allocator is installed (the default `count-alloc` feature).
+#[cfg(all(test, feature = "count-alloc"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_growth_is_counted() {
+        let before = thread_counters();
+        let v: Vec<u64> = Vec::with_capacity(1024);
+        let d = thread_counters().since(before);
+        assert!(d.allocs >= 1, "{d:?}");
+        assert!(d.bytes >= 8 * 1024, "{d:?}");
+        drop(v);
+        let d = thread_counters().since(before);
+        assert!(d.frees >= 1, "{d:?}");
+    }
+
+    #[test]
+    fn no_alloc_loop_counts_zero() {
+        let mut buf = vec![0u8; 4096];
+        let before = thread_counters();
+        for i in 0..1000usize {
+            buf[i % 4096] = (i % 251) as u8;
+        }
+        let d = thread_counters().since(before);
+        assert_eq!(d.allocs, 0, "{d:?}");
+        assert_eq!(std::hint::black_box(&buf).len(), 4096);
+    }
+
+    #[test]
+    fn global_counters_monotonic() {
+        let a = counters();
+        let v = vec![1u8; 64];
+        let b = counters();
+        assert!(b.allocs >= a.allocs + 1);
+        drop(v);
+        let c = counters();
+        assert!(c.frees >= b.frees + 1);
+    }
+}

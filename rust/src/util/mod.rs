@@ -4,8 +4,11 @@
 //!
 //! All of these exist in-tree because the reproduction builds fully
 //! offline (no crates.io): `rng` replaces `rand`, `prop` replaces
-//! `proptest`, `cli` replaces `clap`, `json` replaces `serde_json`.
+//! `proptest`, `cli` replaces `clap`, `json` replaces `serde_json`,
+//! and `alloc` provides the counting global allocator behind the
+//! zero-alloc hot-path measurements.
 
+pub mod alloc;
 pub mod cli;
 pub mod fmt;
 pub mod json;
@@ -44,12 +47,6 @@ impl Clock {
 
     pub fn elapsed(&self) -> Duration {
         self.origin.elapsed()
-    }
-}
-
-impl Default for Clock {
-    fn default() -> Self {
-        Self::new()
     }
 }
 

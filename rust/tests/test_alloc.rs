@@ -1,0 +1,77 @@
+//! Steady-state allocation regression for the fused hot path: once the
+//! arena pool, the CRC tables, and the augment scratch are warm, one
+//! full checkout → parse → augment-into → finish → recycle cycle
+//! performs **zero** heap allocations.
+//!
+//! This file deliberately contains a single test: the assertion reads
+//! the *per-thread* counters of the crate's counting global allocator,
+//! and a quiet binary keeps the measured thread unambiguous.
+
+use std::sync::Arc;
+
+use cdl::data::augment::{Augment, AugmentConfig};
+use cdl::data::simg::SimgRef;
+use cdl::data::synth::{generate_corpus, CorpusSpec};
+use cdl::dataloader::BatchArena;
+use cdl::dataset::ItemMeta;
+use cdl::storage::{Bytes, MemStore, ObjectStore};
+use cdl::util::alloc;
+
+#[test]
+fn arena_assembly_is_zero_alloc_in_steady_state() {
+    const B: usize = 16;
+    const CROP: usize = 24;
+    let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+    let (keys, _) = generate_corpus(&store, &CorpusSpec::tiny(B)).unwrap();
+    // raw object bytes resident (the storage layer shares Arcs, so the
+    // loop below touches no storage-side allocation either)
+    let raws: Vec<Bytes> = keys.iter().map(|k| store.get(k).unwrap()).collect();
+    let aug = Augment::new(AugmentConfig { crop: CROP, ..Default::default() });
+    let arena = BatchArena::new(CROP, B, 2);
+
+    let run_batch = |id: usize| {
+        let builder = arena.clone().checkout(id, B);
+        for pos in 0..B {
+            let raw = &raws[pos];
+            builder
+                .fill(pos, pos, |out| {
+                    let img = SimgRef::parse(&raw[..])?;
+                    aug.apply_u8_into(&img, id, pos, out);
+                    Ok(ItemMeta { label: img.label, raw_bytes: raw.len() })
+                })
+                .unwrap();
+        }
+        let batch = builder.finish().unwrap();
+        assert_eq!(batch.len(), B);
+        assert_eq!(batch.images.data.len(), B * CROP * CROP * 3);
+        batch.recycle();
+    };
+
+    // warm-up: first slab allocation, CRC tables, column-LUT scratch
+    for id in 0..3 {
+        run_batch(id);
+    }
+
+    let before = alloc::thread_counters();
+    for id in 3..19 {
+        run_batch(id);
+    }
+    let delta = alloc::thread_counters().since(before);
+
+    assert_eq!(
+        delta.allocs, 0,
+        "steady-state fused assembly allocated ({} batches): {delta:?}",
+        16
+    );
+    assert_eq!(
+        delta.frees, 0,
+        "steady-state fused assembly freed ({} batches): {delta:?}",
+        16
+    );
+
+    // sanity: the pool really was recycling one slab the whole time
+    let stats = arena.stats();
+    assert_eq!(stats.checkouts, 19, "{stats:?}");
+    assert_eq!(stats.fresh, 1, "{stats:?}");
+    assert_eq!(stats.reused, 18, "{stats:?}");
+}

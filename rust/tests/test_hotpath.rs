@@ -1,0 +1,138 @@
+//! Byte-identical equivalence of the fused arena assembly against the
+//! legacy copy path: same images, labels, indices, and raw-byte counts
+//! for every fetcher implementation, both dispatch modes, partial
+//! batches, and recycled slabs across epochs.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cdl::data::synth::{generate_corpus, CorpusSpec};
+use cdl::data::AugmentConfig;
+use cdl::dataloader::{Batch, Dataloader, DataloaderConfig, FetchImpl};
+use cdl::dataset::{Dataset, ImageFolderDataset};
+use cdl::storage::{MemStore, ObjectStore};
+use cdl::telemetry::Recorder;
+
+const ITEMS: usize = 37; // not a multiple of the batch size: partial tail
+const BATCH: usize = 8;
+
+fn dataset() -> Arc<dyn Dataset> {
+    let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+    generate_corpus(&mem, &CorpusSpec::tiny(ITEMS)).unwrap();
+    Arc::new(ImageFolderDataset::new(
+        mem,
+        AugmentConfig { crop: 16, ..Default::default() },
+    ))
+}
+
+fn loader(fetch: FetchImpl, arena_slabs: usize, work_stealing: bool) -> Dataloader {
+    Dataloader::new(
+        dataset(),
+        DataloaderConfig {
+            batch_size: BATCH,
+            num_workers: 3,
+            fetch_impl: fetch,
+            num_fetch_workers: 4,
+            arena_slabs,
+            work_stealing,
+            spawn_cost_override: Some(Duration::ZERO),
+            ..Default::default()
+        },
+        Recorder::new(),
+    )
+}
+
+fn assert_batches_identical(legacy: &[Batch], fused: &[Batch], ctx: &str) {
+    assert_eq!(legacy.len(), fused.len(), "{ctx}: batch count");
+    for (a, b) in legacy.iter().zip(fused.iter()) {
+        assert_eq!(a.id, b.id, "{ctx}");
+        assert_eq!(a.images.shape, b.images.shape, "{ctx}: batch {}", a.id);
+        assert_eq!(a.images.data, b.images.data, "{ctx}: batch {} bytes", a.id);
+        assert_eq!(a.labels, b.labels, "{ctx}: batch {}", a.id);
+        assert_eq!(a.indices, b.indices, "{ctx}: batch {}", a.id);
+        assert_eq!(a.raw_bytes, b.raw_bytes, "{ctx}: batch {}", a.id);
+    }
+}
+
+#[test]
+fn fused_assembly_is_byte_identical_for_every_fetcher() {
+    for fetch in FetchImpl::all() {
+        let legacy: Vec<Batch> = loader(fetch, 0, false).epoch(0).collect();
+        assert!(legacy.last().unwrap().len() == ITEMS % BATCH); // partial tail
+        let fused: Vec<Batch> = loader(fetch, 12, false).epoch(0).collect();
+        assert!(fused.iter().all(|b| b.is_pooled()));
+        assert_batches_identical(&legacy, &fused, fetch.label());
+    }
+}
+
+#[test]
+fn fused_assembly_is_byte_identical_under_work_stealing() {
+    for fetch in FetchImpl::all() {
+        let legacy: Vec<Batch> = loader(fetch, 0, false).epoch(0).collect();
+        let fused: Vec<Batch> = loader(fetch, 12, true).epoch(0).collect();
+        assert_batches_identical(&legacy, &fused, fetch.label());
+    }
+}
+
+#[test]
+fn recycled_slabs_stay_byte_identical_across_epochs() {
+    // one fused loader reusing its slab pool for three epochs must keep
+    // matching a fresh legacy loader epoch by epoch — any stale-slot or
+    // truncation bug in the recycle path shows up here
+    let fused_dl = loader(FetchImpl::Threaded, 10, true);
+    for epoch in 0..3 {
+        let legacy: Vec<Batch> =
+            loader(FetchImpl::Threaded, 0, false).epoch(epoch).collect();
+        let fused: Vec<Batch> = fused_dl.epoch(epoch).collect();
+        assert_batches_identical(&legacy, &fused, &format!("epoch {epoch}"));
+        for b in fused {
+            b.recycle();
+        }
+    }
+    let stats = fused_dl.arena().unwrap().stats();
+    assert!(stats.reused > 0, "{stats:?}");
+    assert_eq!(stats.checkouts, 15, "{stats:?}"); // 5 batches × 3 epochs
+}
+
+#[test]
+fn inline_loader_fused_matches_legacy() {
+    let mk = |arena_slabs| {
+        Dataloader::new(
+            dataset(),
+            DataloaderConfig {
+                batch_size: BATCH,
+                num_workers: 0, // inline in the consumer
+                arena_slabs,
+                ..Default::default()
+            },
+            Recorder::new(),
+        )
+    };
+    let legacy: Vec<Batch> = mk(0).epoch(0).collect();
+    let fused: Vec<Batch> = mk(4).epoch(0).collect();
+    assert!(fused.iter().all(|b| b.is_pooled()));
+    assert_batches_identical(&legacy, &fused, "inline");
+}
+
+#[test]
+fn fused_batch_pool_disassembly_matches_legacy() {
+    let mk = |arena_slabs| {
+        Dataloader::new(
+            dataset(),
+            DataloaderConfig {
+                batch_size: BATCH,
+                num_workers: 2,
+                fetch_impl: FetchImpl::Threaded,
+                num_fetch_workers: 8,
+                batch_pool: 2 * BATCH, // two batches per wave
+                arena_slabs,
+                spawn_cost_override: Some(Duration::ZERO),
+                ..Default::default()
+            },
+            Recorder::new(),
+        )
+    };
+    let legacy: Vec<Batch> = mk(0).epoch(0).collect();
+    let fused: Vec<Batch> = mk(12).epoch(0).collect();
+    assert_batches_identical(&legacy, &fused, "batch_pool");
+}

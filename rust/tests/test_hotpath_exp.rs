@@ -1,0 +1,65 @@
+//! Acceptance assertions for the `hotpath` experiment: fused arena
+//! assembly beats the legacy copy path and collapses the per-batch
+//! allocation count; work-stealing dispatch never regresses the
+//! straggler tail.
+//!
+//! This file deliberately contains a single test: the measurements read
+//! wall clocks and the process-wide allocation counters of the counting
+//! global allocator, so they need a quiet process (test binaries run
+//! sequentially; tests *within* a binary do not).
+//!
+//! Wall-clock thresholds are deliberately two-tier: the unconditional
+//! bounds only catch catastrophic regressions (they must hold even on a
+//! noisy shared CI runner); `CDL_STRICT_PERF=1` enforces the PR's
+//! acceptance criteria (arena ≥ 1.5× batches/s, stealing p99 strictly
+//! below static on s3) for quiet benchmarking machines. The
+//! *allocation* assertions are deterministic and always strict.
+
+use cdl::bench::exp_hotpath::{assembly_table, stealing_table};
+use cdl::bench::Scale;
+
+#[test]
+fn hotpath_experiment_acceptance() {
+    let strict = std::env::var("CDL_STRICT_PERF").as_deref() == Ok("1");
+    let scale = Scale { latency: 0.05, items: 1.0, epochs: 1.0 };
+
+    // ---- fused assembly: throughput up, allocations collapsed -------
+    let (t, vanilla_speedup) = assembly_table(scale).unwrap();
+    assert_eq!(t.rows.len(), 6);
+    let speedup_floor = if strict { 1.5 } else { 0.85 };
+    assert!(
+        vanilla_speedup >= speedup_floor,
+        "fused assembly speedup only {vanilla_speedup:.2}x (floor {speedup_floor})"
+    );
+    // allocs/batch: arena-on strictly below arena-off for every fetcher
+    // (rows alternate off/on per impl) — deterministic, always strict.
+    // Only meaningful when the counting allocator is installed (the
+    // default count-alloc feature); without it every cell reads 0.
+    if cdl::util::alloc::counters().allocs > 0 {
+        for pair in t.rows.chunks(2) {
+            let off: f64 = pair[0][5].parse().unwrap();
+            let on: f64 = pair[1][5].parse().unwrap();
+            assert!(
+                on < off,
+                "{} arena-on allocs/batch {on} !< arena-off {off}",
+                pair[0][0]
+            );
+        }
+        // vanilla fused must eliminate the per-item decode+crop
+        // allocations wholesale, not just shave them
+        let off: f64 = t.rows[0][5].parse().unwrap();
+        let on: f64 = t.rows[1][5].parse().unwrap();
+        assert!(on < off / 2.0, "vanilla: {on} allocs/batch not ≪ {off}");
+    }
+
+    // ---- work stealing: tail no worse than static dispatch ----------
+    let (t, static_p99, steal_p99) = stealing_table(scale).unwrap();
+    assert_eq!(t.rows.len(), 6);
+    assert!(static_p99 > 0.0 && steal_p99 > 0.0);
+    let tail_ceiling = if strict { 1.0 } else { 1.75 };
+    assert!(
+        steal_p99 <= static_p99 * tail_ceiling,
+        "stealing p99 {steal_p99:.4}s regressed vs static {static_p99:.4}s \
+         (ceiling {tail_ceiling}x)"
+    );
+}
