@@ -9,13 +9,25 @@
 //!   decodes straight into recycled slabs (no decode buffer, no crop
 //!   tensor, no collate copy); the allocs/batch column collapses and
 //!   batches/s rises with it.
-//! * **Work stealing vs static assignment** — threaded fetcher over the
-//!   high-latency `s3`/`ceph_os`/`gluster_fs` profiles: the shared
-//!   injector lets idle workers pick up the globally-next batch, so one
-//!   slow wave no longer pins the batches behind it to a busy worker
-//!   (the Versaci & Busonera straggler tail). Reported as epoch wall
-//!   time plus p50/p99 consumer batch latency.
+//! * **Dispatch tail** — threaded fetcher over the high-latency
+//!   `s3`/`ceph_os`/`gluster_fs` profiles, static vs batch-steal vs
+//!   item-steal dispatch at one worker count, all credit-bounded:
+//!   p50/p99/max consumer batch latency, the reorder-buffer high-water
+//!   mark (must stay ≤ `consumer_credit` — the run *fails* otherwise),
+//!   and items stolen per epoch. Item stealing lets idle workers finish
+//!   a straggling batch's tail, cutting the p99 beyond batch-level
+//!   stealing (the MinatoLoader argument).
+//! * **Pinned slabs** — `pin_memory` over an arena hands out page-locked
+//!   slabs: batches are born pinned, skip the staging copy, and ride the
+//!   ~2× pinned-bandwidth `to_device` path. Reported as the
+//!   pageable-vs-pinned transfer delta.
+//! * **`get_into` scratch reads** — `DirStore` (real files) read via the
+//!   legacy `get` (one `Vec` per read) vs the zero-copy `get_into`
+//!   (pread into a reused buffer): reads/s and allocs/read; the
+//!   get_into row must report **0 allocs/read** in steady state (the
+//!   run fails otherwise, when the counting allocator is installed).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -23,6 +35,7 @@ use anyhow::Result;
 use super::rig::{self, RigSpec};
 use super::{emit, Scale};
 use crate::dataloader::FetchImpl;
+use crate::storage::{DirStore, ObjectStore};
 use crate::util::alloc;
 use crate::util::stats;
 use crate::util::table::{num, Table};
@@ -30,13 +43,17 @@ use crate::util::table::{num, Table};
 const BATCH: usize = 64;
 const STEAL_BATCH: usize = 16;
 const STEAL_PROFILES: [&str; 3] = ["s3", "ceph_os", "gluster_fs"];
+/// Reorder-buffer bound used by every dispatch-tail cell.
+pub const TAIL_CREDIT: usize = 6;
 
 /// One measured epoch of a built rig: per-batch consumer latencies,
-/// wall seconds, and the allocation-counter delta.
+/// wall seconds, allocation-counter delta, and the tail-taming gauges.
 struct EpochMeasure {
     latencies: Vec<f64>,
     epoch_s: f64,
     allocs: u64,
+    reorder_hwm: usize,
+    item_steals: u64,
 }
 
 fn measure_epoch(rig: &rig::Rig, epoch: usize) -> EpochMeasure {
@@ -50,10 +67,12 @@ fn measure_epoch(rig: &rig::Rig, epoch: usize) -> EpochMeasure {
         latencies.push(tb.elapsed().as_secs_f64());
         b.recycle();
     }
+    let reorder_hwm = it.reorder_high_water();
+    let item_steals = it.item_steals();
     drop(it);
     let epoch_s = t0.elapsed().as_secs_f64();
     let allocs = alloc::counters().since(before).allocs;
-    EpochMeasure { latencies, epoch_s, allocs }
+    EpochMeasure { latencies, epoch_s, allocs, reorder_hwm, item_steals }
 }
 
 fn assembly_spec(fetch: FetchImpl, arena_on: bool, scale: Scale) -> RigSpec {
@@ -131,7 +150,25 @@ pub fn assembly_table(scale: Scale) -> Result<(Table, f64)> {
     Ok((t, vanilla_speedup))
 }
 
-fn stealing_spec(storage: &'static str, stealing: bool, scale: Scale) -> RigSpec {
+/// One tail-table dispatch mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dispatch {
+    Static,
+    BatchSteal,
+    ItemSteal,
+}
+
+impl Dispatch {
+    fn label(&self) -> &'static str {
+        match self {
+            Dispatch::Static => "static",
+            Dispatch::BatchSteal => "batch-steal",
+            Dispatch::ItemSteal => "item-steal",
+        }
+    }
+}
+
+fn tail_spec(storage: &'static str, dispatch: Dispatch, scale: Scale) -> RigSpec {
     let mut spec = RigSpec::quick(storage, scale.latency);
     spec.items = scale.items(384);
     spec.batch_size = STEAL_BATCH;
@@ -139,59 +176,209 @@ fn stealing_spec(storage: &'static str, stealing: bool, scale: Scale) -> RigSpec
     spec.fetch_impl = FetchImpl::Threaded;
     spec.num_fetch_workers = STEAL_BATCH;
     spec.arena_slabs = 32;
-    spec.work_stealing = stealing;
+    spec.consumer_credit = TAIL_CREDIT;
+    spec.work_stealing = dispatch != Dispatch::Static;
+    spec.steal_items = dispatch == Dispatch::ItemSteal;
     spec.runtime = crate::gil::Runtime::Native;
     spec
 }
 
-/// The dispatch table. Also returns (static p99, stealing p99) on the
-/// s3 profile for the headline/tests.
-pub fn stealing_table(scale: Scale) -> Result<(Table, f64, f64)> {
+/// The dispatch-tail table. Also returns (batch-steal p99, item-steal
+/// p99) on the ceph_os profile — the slowest backend, where the tail is
+/// fattest — for the headline/tests. Fails if any cell's
+/// reorder-buffer high-water mark exceeds the credit bound.
+pub fn tail_table(scale: Scale) -> Result<(Table, f64, f64)> {
     let mut t = Table::new(
-        "Hot path — work stealing vs static round-robin (threaded fetcher)",
+        "Hot path — dispatch tail: static vs batch-steal vs item-steal \
+         (threaded fetcher, credit-bounded reorder buffer)",
         &[
             "storage",
             "dispatch",
             "epoch s",
             "p50 batch ms",
             "p99 batch ms",
+            "max batch ms",
+            "reorder hwm",
+            "steals",
         ],
     );
-    let mut s3_static_p99 = f64::NAN;
-    let mut s3_steal_p99 = f64::NAN;
+    let mut ceph_batch_p99 = f64::NAN;
+    let mut ceph_item_p99 = f64::NAN;
     for storage in STEAL_PROFILES {
-        for stealing in [false, true] {
-            let spec = stealing_spec(storage, stealing, scale);
+        for dispatch in [Dispatch::Static, Dispatch::BatchSteal, Dispatch::ItemSteal] {
+            let spec = tail_spec(storage, dispatch, scale);
             let rig = rig::build(&spec)?;
             let m = measure_epoch(&rig, 0);
             if m.latencies.is_empty() {
                 anyhow::bail!(
-                    "hotpath dispatch cell {storage}/stealing={stealing} \
-                     delivered no batches"
+                    "hotpath tail cell {storage}/{} delivered no batches",
+                    dispatch.label()
+                );
+            }
+            if m.reorder_hwm > TAIL_CREDIT {
+                anyhow::bail!(
+                    "reorder-buffer high-water regression: {} on {storage} \
+                     reached {} with consumer_credit={TAIL_CREDIT}",
+                    dispatch.label(),
+                    m.reorder_hwm
                 );
             }
             let s = stats::Summary::of(&m.latencies);
-            if storage == "s3" {
-                if stealing {
-                    s3_steal_p99 = s.p99;
-                } else {
-                    s3_static_p99 = s.p99;
+            if storage == "ceph_os" {
+                match dispatch {
+                    Dispatch::BatchSteal => ceph_batch_p99 = s.p99,
+                    Dispatch::ItemSteal => ceph_item_p99 = s.p99,
+                    Dispatch::Static => {}
                 }
             }
             t.row(&[
                 storage.to_string(),
-                if stealing { "stealing" } else { "static" }.to_string(),
+                dispatch.label().to_string(),
                 num(m.epoch_s, 2),
                 num(s.p50 * 1e3, 1),
                 num(s.p99 * 1e3, 1),
+                num(s.max * 1e3, 1),
+                m.reorder_hwm.to_string(),
+                m.item_steals.to_string(),
             ]);
         }
     }
-    Ok((t, s3_static_p99, s3_steal_p99))
+    Ok((t, ceph_batch_p99, ceph_item_p99))
 }
 
-/// Experiment entry point (id "hotpath"): fused assembly sweep + work
-/// stealing dispatch comparison.
+fn pinned_spec(pinned: bool, scale: Scale) -> RigSpec {
+    let mut spec = RigSpec::quick("mem", scale.latency);
+    spec.items = scale.items(192);
+    spec.batch_size = BATCH;
+    spec.mean_kb = 96;
+    spec.crop = 32;
+    spec.num_workers = 4;
+    spec.arena_slabs = 16;
+    spec.pin_memory = pinned;
+    spec.runtime = crate::gil::Runtime::Native;
+    spec
+}
+
+/// Pageable vs pinned-slab transfer: drain a steady-state epoch through
+/// `to_device`. Returns the table plus (pageable ms, pinned ms) mean
+/// transfer per batch.
+pub fn pinned_table(scale: Scale) -> Result<(Table, f64, f64)> {
+    let mut t = Table::new(
+        "Hot path — pageable vs pinned arena slabs (mem, batch 64, to_device)",
+        &["slabs", "transfer ms/batch", "epoch s", "batches"],
+    );
+    let mut pageable_ms = f64::NAN;
+    let mut pinned_ms = f64::NAN;
+    for pinned in [false, true] {
+        let spec = pinned_spec(pinned, scale);
+        let rig = rig::build(&spec)?;
+        // warm epoch: spawn-method start-up, fresh slabs, pin
+        // registration — all off the measured epoch
+        rig::drain_numbered_epoch(&rig, 0);
+        let skip = rig
+            .recorder
+            .durations(crate::telemetry::names::TO_DEVICE)
+            .len();
+        let t0 = Instant::now();
+        let mut n = 0usize;
+        for b in rig.dataloader.epoch(1) {
+            let db = rig.device.to_device(b);
+            db.recycle();
+            n += 1;
+        }
+        let epoch_s = t0.elapsed().as_secs_f64();
+        let spans = rig.recorder.durations(crate::telemetry::names::TO_DEVICE);
+        let measured = &spans[skip..];
+        if measured.is_empty() {
+            anyhow::bail!("pinned cell pinned={pinned} recorded no transfers");
+        }
+        let mean_ms = measured.iter().sum::<f64>() / measured.len() as f64 * 1e3;
+        if pinned {
+            pinned_ms = mean_ms;
+        } else {
+            pageable_ms = mean_ms;
+        }
+        t.row(&[
+            if pinned { "pinned" } else { "pageable" }.to_string(),
+            num(mean_ms, 3),
+            num(epoch_s, 2),
+            n.to_string(),
+        ]);
+    }
+    Ok((t, pageable_ms, pinned_ms))
+}
+
+/// Legacy `get` (one Vec per read) vs zero-copy `get_into` (pread into
+/// a reused scratch) on a real-file `DirStore`. Returns the table plus
+/// the steady-state allocs/read of the get_into path (must be 0).
+/// Fails on a nonzero get_into count when the counting allocator is
+/// installed.
+pub fn get_into_table(scale: Scale) -> Result<(Table, f64)> {
+    let mut t = Table::new(
+        "Hot path — DirStore read path: get (Vec per read) vs get_into (pread)",
+        &["path", "reads/s", "allocs/read"],
+    );
+    let root = std::env::temp_dir().join(format!(
+        "cdl-hotpath-getinto-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let store: Arc<dyn ObjectStore> = Arc::new(DirStore::open(&root)?);
+    let items = scale.items(64);
+    let (keys, _) = crate::data::synth::generate_corpus(
+        &store,
+        &crate::data::synth::CorpusSpec {
+            items,
+            classes: 16,
+            mean_bytes: 24 * 1024,
+            sigma: 0.3,
+            seed: 11,
+        },
+    )?;
+    let passes = 4usize;
+    let mut scratch: Vec<u8> = Vec::new();
+    // warm pass: handle cache + scratch growth
+    for k in &keys {
+        crate::storage::get_into_vec(&store, k, &mut scratch)?;
+    }
+    let mut into_allocs_per_read = f64::NAN;
+    for use_into in [false, true] {
+        let before = alloc::thread_counters();
+        let t0 = Instant::now();
+        for _ in 0..passes {
+            for k in &keys {
+                if use_into {
+                    crate::storage::get_into_vec(&store, k, &mut scratch)?;
+                } else {
+                    store.get(k)?;
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let reads = (passes * keys.len()) as f64;
+        let allocs = alloc::thread_counters().since(before).allocs as f64 / reads;
+        if use_into {
+            into_allocs_per_read = allocs;
+        }
+        t.row(&[
+            if use_into { "get_into" } else { "get" }.to_string(),
+            num(reads / wall, 0),
+            num(allocs, 2),
+        ]);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+    if alloc::counters().allocs > 0 && into_allocs_per_read != 0.0 {
+        anyhow::bail!(
+            "get_into DirStore path allocated in steady state: \
+             {into_allocs_per_read} allocs/read (want 0)"
+        );
+    }
+    Ok((t, into_allocs_per_read))
+}
+
+/// Experiment entry point (id "hotpath"): fused assembly sweep,
+/// dispatch-tail comparison, pinned-slab transfer delta, and the
+/// DirStore zero-copy read path.
 pub fn hotpath(scale: Scale) -> Result<()> {
     let (assembly, vanilla_speedup) = assembly_table(scale)?;
     emit("hotpath", &assembly)?;
@@ -199,12 +386,24 @@ pub fn hotpath(scale: Scale) -> Result<()> {
         "  arena-on vanilla assembly is {vanilla_speedup:.2}x the legacy \
          copy path (batches/s, steady-state epoch)"
     );
-    let (dispatch, static_p99, steal_p99) = stealing_table(scale)?;
-    emit("hotpath", &dispatch)?;
+    let (tail, batch_p99, item_p99) = tail_table(scale)?;
+    emit("hotpath", &tail)?;
     println!(
-        "  s3 p99 consumer batch latency: static {:.1} ms vs stealing {:.1} ms",
-        static_p99 * 1e3,
-        steal_p99 * 1e3,
+        "  ceph_os p99 consumer batch latency: batch-steal {:.1} ms vs \
+         item-steal {:.1} ms (reorder buffer ≤ {TAIL_CREDIT} everywhere)",
+        batch_p99 * 1e3,
+        item_p99 * 1e3,
+    );
+    let (pin, pageable_ms, pinned_ms) = pinned_table(scale)?;
+    emit("hotpath", &pin)?;
+    println!(
+        "  to_device transfer: pageable {pageable_ms:.3} ms vs pinned \
+         {pinned_ms:.3} ms per batch"
+    );
+    let (gi, into_allocs) = get_into_table(scale)?;
+    emit("hotpath", &gi)?;
+    println!(
+        "  DirStore get_into steady state: {into_allocs:.0} allocs/read"
     );
     Ok(())
 }

@@ -44,6 +44,14 @@ pub struct RigSpec {
     pub arena_slabs: usize,
     /// shared work-stealing batch injector instead of static round-robin
     pub work_stealing: bool,
+    /// item-level stealing inside straggling batches (needs
+    /// work_stealing + arena_slabs)
+    pub steal_items: bool,
+    /// reorder-buffer bound in batches (0 = unbounded)
+    pub consumer_credit: usize,
+    /// page-locked staging: implies the spawn start method (torch's
+    /// rule), and with an arena the slabs themselves are pinned
+    pub pin_memory: bool,
     pub lazy_init: bool,
     pub runtime: gil::Runtime,
     pub trainer: TrainerKind,
@@ -72,6 +80,9 @@ impl RigSpec {
             prefetch_policy: CachePolicy::Lru,
             arena_slabs: 0,
             work_stealing: false,
+            steal_items: false,
+            consumer_credit: 0,
+            pin_memory: false,
             lazy_init: true,
             runtime: gil::Runtime::Python,
             trainer: TrainerKind::Torch,
@@ -201,6 +212,15 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
         prefetch_policy: spec.prefetch_policy,
         arena_slabs: spec.arena_slabs,
         work_stealing: spec.work_stealing,
+        steal_items: spec.steal_items,
+        consumer_credit: spec.consumer_credit,
+        pin_memory: spec.pin_memory,
+        // pinning needs CUDA init, which fork forbids (torch rule)
+        start_method: if spec.pin_memory {
+            crate::dataloader::StartMethod::Spawn
+        } else {
+            crate::dataloader::StartMethod::Fork
+        },
         lazy_init: spec.lazy_init,
         runtime: spec.runtime,
         seed: spec.seed,

@@ -13,6 +13,8 @@
 //! prefetch_policy = 2q      # hot-tier policy: lru | 2q | s3fifo
 //! arena_slabs = 16          # recycled batch-slab pool (0 = legacy copy path)
 //! work_stealing = true      # shared batch injector instead of round-robin
+//! steal_items = true        # idle workers fill stragglers' tail items
+//! consumer_credit = 8       # reorder-buffer bound in batches (0 = unbounded)
 //! cache_bytes = 2147483648  # varnish cache capacity (0 = no cache)
 //! cache_policy = lru        # varnish eviction policy: lru | 2q | s3fifo
 //! trainer = torch
@@ -145,6 +147,8 @@ impl ExperimentConfig {
             }
             "arena_slabs" => self.loader.arena_slabs = value.parse()?,
             "work_stealing" => self.loader.work_stealing = value.parse()?,
+            "steal_items" => self.loader.steal_items = value.parse()?,
+            "consumer_credit" => self.loader.consumer_credit = value.parse()?,
             "pin_memory" => self.loader.pin_memory = value.parse()?,
             "start_method" => {
                 self.loader.start_method = match value {
@@ -251,6 +255,18 @@ mod tests {
         assert_eq!(cfg.loader.arena_slabs, 24);
         assert!(cfg.loader.work_stealing);
         assert!(cfg.set("work_stealing", "maybe").is_err());
+    }
+
+    #[test]
+    fn tail_knobs_parse() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(!cfg.loader.steal_items);
+        assert_eq!(cfg.loader.consumer_credit, 0);
+        cfg.apply_text("steal_items = true\nconsumer_credit = 6\n").unwrap();
+        assert!(cfg.loader.steal_items);
+        assert_eq!(cfg.loader.consumer_credit, 6);
+        assert!(cfg.set("steal_items", "2").is_err());
+        assert!(cfg.set("consumer_credit", "x").is_err());
     }
 
     #[test]

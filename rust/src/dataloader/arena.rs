@@ -169,6 +169,11 @@ pub struct BatchArena {
     max_batch: usize,
     /// max slabs retained in the pool (`arena_slabs` knob)
     capacity: usize,
+    /// hand out page-locked (simulated-pinned) slabs: batches are born
+    /// pinned (`Batch.pinned`), `to_device` takes the pinned-bandwidth
+    /// path, and the loader skips the staging copy. Fresh allocations
+    /// pay a one-time registration cost; recycling amortizes it away.
+    pinned: bool,
     pool: Mutex<Pool>,
     stats: Counters,
 }
@@ -177,8 +182,8 @@ impl fmt::Debug for BatchArena {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "BatchArena(crop={}, slots={}, capacity={})",
-            self.crop, self.max_batch, self.capacity
+            "BatchArena(crop={}, slots={}, capacity={}, pinned={})",
+            self.crop, self.max_batch, self.capacity, self.pinned
         )
     }
 }
@@ -187,12 +192,23 @@ impl BatchArena {
     /// An arena for `[batch_size, crop, crop, 3]` slabs retaining up to
     /// `capacity` recycled slabs.
     pub fn new(crop: usize, batch_size: usize, capacity: usize) -> Arc<BatchArena> {
+        BatchArena::new_opts(crop, batch_size, capacity, false)
+    }
+
+    /// [`BatchArena::new`] with pinning control (`pin_memory` knob).
+    pub fn new_opts(
+        crop: usize,
+        batch_size: usize,
+        capacity: usize,
+        pinned: bool,
+    ) -> Arc<BatchArena> {
         let capacity = capacity.max(1);
         Arc::new(BatchArena {
             crop,
             per: crop * crop * 3,
             max_batch: batch_size.max(1),
             capacity,
+            pinned,
             pool: Mutex::new(Pool {
                 states: Vec::with_capacity(capacity),
                 bufs: Vec::with_capacity(capacity),
@@ -203,6 +219,11 @@ impl BatchArena {
 
     pub fn crop(&self) -> usize {
         self.crop
+    }
+
+    /// Whether slabs are handed out page-locked.
+    pub fn pinned(&self) -> bool {
+        self.pinned
     }
 
     /// Bytes per item slot.
@@ -251,6 +272,18 @@ impl BatchArena {
             }
             None => {
                 self.stats.fresh.fetch_add(1, Ordering::Relaxed);
+                if self.pinned {
+                    // one-time page-lock registration (cudaHostRegister
+                    // analogue): setup plus per-byte pinning cost — paid
+                    // only on fresh slabs, so a warm pool never pays it
+                    let bytes = n.max(self.max_batch) * self.per;
+                    std::thread::sleep(
+                        std::time::Duration::from_micros(60)
+                            + std::time::Duration::from_secs_f64(
+                                bytes as f64 / 1.5e9,
+                            ),
+                    );
+                }
                 SlabBuf::with_capacity(n.max(self.max_batch), self.per)
             }
         };
@@ -443,13 +476,14 @@ impl BatchBuilder {
         let indices = std::mem::take(&mut buf.indices);
         let raw_bytes = state.raw_bytes.load(Ordering::Relaxed);
         arena.return_state(state);
+        let pinned = arena.pinned;
         Ok(Batch {
             id,
             images,
             labels,
             indices,
             raw_bytes,
-            pinned: false,
+            pinned,
             arena: Some(arena),
         })
     }
@@ -636,6 +670,29 @@ mod tests {
             assert_eq!(batch.indices[pos], 100 + pos);
         }
         assert_eq!(batch.raw_bytes, 160);
+    }
+
+    #[test]
+    fn pinned_arena_marks_batches_and_recycles_pinning() {
+        let arena = BatchArena::new_opts(4, 2, 2, true);
+        assert!(arena.pinned());
+        let b = arena.clone().checkout(0, 2);
+        fill_all(&b, 0);
+        let batch = b.finish().unwrap();
+        assert!(batch.pinned);
+        batch.recycle();
+        // recycled slab: still pinned, no fresh registration
+        let b = arena.clone().checkout(1, 2);
+        fill_all(&b, 0);
+        assert!(b.finish().unwrap().pinned);
+        let s = arena.stats();
+        assert_eq!(s.fresh, 1, "{s:?}");
+        // unpinned arena produces unpinned batches
+        let plain = BatchArena::new(4, 2, 2);
+        assert!(!plain.pinned());
+        let b = plain.clone().checkout(0, 2);
+        fill_all(&b, 0);
+        assert!(!b.finish().unwrap().pinned);
     }
 
     #[test]

@@ -18,6 +18,15 @@
 //! intermediate `Sample.crop`, no `restore_order` re-sort (slots are
 //! positional), no collate copy. All variants record one `get_item`
 //! span per item.
+//!
+//! The fused twins schedule at **item granularity** through
+//! [`ItemTask`] claim cursors: the threaded/asyncio paths submit one
+//! job/future per *executor slot* (a wave slice), each looping "claim
+//! next unfilled slot → decode into it" until the wave is dry — not one
+//! boxed job per item, and never an item parked behind a slow sibling.
+//! Passing the worker's [`BatchInjector`] (`steal_items`) additionally
+//! registers each in-progress batch so *other* workers' idle threads
+//! can claim its tail items.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -27,6 +36,7 @@ use anyhow::{bail, Result};
 
 use super::arena::{BatchArena, BatchBuilder};
 use super::collate::{restore_order, Batch};
+use super::sampler::{BatchInjector, ItemClaim, ItemTask};
 use crate::asyncrt;
 use crate::dataset::{copy_sample_into, Dataset, Sample};
 use crate::gil::Gil;
@@ -77,6 +87,19 @@ impl FetchCtx {
         );
         res
     }
+
+    /// Execute one [`ItemClaim`]: decode the claimed item into its slot
+    /// and report the outcome. This is the unit both wave-slice jobs and
+    /// cross-worker item thieves run.
+    pub fn run_claim(&self, claim: ItemClaim) {
+        let res = self.fill_one(
+            claim.task().builder(),
+            claim.task().batch_id(),
+            claim.pos(),
+            claim.index(),
+        );
+        claim.finish(res);
+    }
 }
 
 /// Sequential in-batch fetch (vanilla torch).
@@ -102,23 +125,104 @@ pub fn fetch_vanilla_fused(
 }
 
 // ---------------------------------------------------------------------------
+// Item-task wave machinery (shared by the fused threaded/asyncio paths)
+// ---------------------------------------------------------------------------
+
+/// One checked-out batch of a fused wave: the primary builder (owns the
+/// slab's fate) plus the claim cursor fillers pull from.
+struct WaveEntry {
+    builder: BatchBuilder,
+    task: Arc<ItemTask>,
+}
+
+/// Check out a slab + item task per batch of the wave, registering each
+/// task with the injector when item stealing is on.
+fn wave_entries(
+    ctx: &FetchCtx,
+    arena: &Arc<BatchArena>,
+    work: &[(usize, Vec<usize>)],
+    registry: Option<&BatchInjector>,
+) -> Vec<WaveEntry> {
+    work.iter()
+        .map(|(id, idxs)| {
+            let builder = arena.clone().checkout(*id, idxs.len());
+            let task = ItemTask::new(*id, ctx.worker_id, builder.clone(), idxs.clone());
+            if let Some(inj) = registry {
+                inj.register(task.clone());
+            }
+            WaveEntry { builder, task }
+        })
+        .collect()
+}
+
+/// Settle every batch of the wave in order: wait until no fill is
+/// outstanding, withdraw it from the steal registry, then publish
+/// (finish) or fail it.
+fn settle_wave(
+    entries: Vec<WaveEntry>,
+    registry: Option<&BatchInjector>,
+) -> Vec<(usize, Result<Batch>)> {
+    entries
+        .into_iter()
+        .map(|WaveEntry { builder, task }| {
+            let err = task.wait_settled();
+            if let Some(inj) = registry {
+                inj.unregister(task.batch_id());
+            }
+            let id = task.batch_id();
+            match err {
+                None => (id, builder.finish()),
+                Some(e) => {
+                    drop(builder); // recover the slab
+                    (id, Err(e))
+                }
+            }
+        })
+        .collect()
+}
+
+/// Sequential fused wave over claim cursors — the vanilla engine's
+/// item-steal path: the worker fills its registered batches in order
+/// while siblings may concurrently take tail items off the same
+/// cursors. Without a registry this is behaviorally identical to
+/// looping [`fetch_vanilla_fused`].
+pub fn fill_wave_sequential(
+    ctx: &Arc<FetchCtx>,
+    arena: &Arc<BatchArena>,
+    work: &[(usize, Vec<usize>)],
+    registry: Option<&BatchInjector>,
+) -> Vec<(usize, Result<Batch>)> {
+    let entries = wave_entries(ctx, arena, work, registry);
+    for entry in &entries {
+        while let Some(claim) = ItemTask::claim(&entry.task) {
+            ctx.run_claim(claim);
+        }
+    }
+    settle_wave(entries, registry)
+}
+
+// ---------------------------------------------------------------------------
 // Threaded fetcher
 // ---------------------------------------------------------------------------
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Sentinel depth marking a queue whose thread died (panicked job).
+const DEAD: usize = usize::MAX;
+
 /// Persistent in-worker thread pool (`ThreadPoolExecutor` analogue).
 ///
-/// Each thread owns its private job queue and `submit` round-robins
-/// across them, so a large `num_fetch_workers` never serializes on one
-/// shared `Mutex<Receiver>` (the old funnel this replaces). The
-/// trade-off: round-robin placement is not work-conserving — a job
-/// queued behind a p99-slow storage fetch waits for that queue even if
-/// other threads idle. Batch-level stealing (the loader's
-/// `work_stealing` injector) absorbs most of that tail; item-level
-/// stealing inside a wave is a ROADMAP open item.
+/// Each thread owns its private job queue; `submit` places a job on the
+/// **least-loaded live queue** (per-queue depth counters count queued +
+/// running jobs), so no job is parked behind a p99-slow storage fetch
+/// while sibling threads idle — the pool is work-conserving at submit
+/// time. Ties rotate, a large `num_fetch_workers` never serializes on
+/// one shared `Mutex<Receiver>` (the old funnel), and a queue whose
+/// thread died is marked dead and skipped forever (failover preserved).
 pub struct ThreadPool {
     txs: Vec<mpsc::Sender<Job>>,
+    /// per-queue load: jobs queued or running; `DEAD` = thread gone
+    depth: Arc<Vec<AtomicUsize>>,
     next: AtomicUsize,
     threads: Vec<std::thread::JoinHandle<()>>,
     size: usize,
@@ -127,17 +231,25 @@ pub struct ThreadPool {
 impl ThreadPool {
     pub fn new(size: usize, name: &str) -> ThreadPool {
         let size = size.max(1);
+        let depth: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..size).map(|_| AtomicUsize::new(0)).collect());
         let mut txs = Vec::with_capacity(size);
         let mut threads = Vec::with_capacity(size);
         for i in 0..size {
             let (tx, rx) = mpsc::channel::<Job>();
             txs.push(tx);
+            let depth = depth.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("{name}-fetch{i}"))
                     .spawn(move || {
                         while let Ok(job) = rx.recv() {
                             job();
+                            // after, not before: a thread busy on a slow
+                            // fetch must keep reading as loaded. A panic
+                            // in job() skips this — the queue then fails
+                            // sends and is marked DEAD by the submitter.
+                            depth[i].fetch_sub(1, Ordering::Relaxed);
                         }
                     })
                     .expect("spawn fetch thread"),
@@ -145,6 +257,7 @@ impl ThreadPool {
         }
         ThreadPool {
             txs,
+            depth,
             next: AtomicUsize::new(0),
             threads,
             size,
@@ -156,18 +269,34 @@ impl ThreadPool {
     }
 
     pub fn submit(&self, mut job: Job) {
-        // round-robin across the private queues; a queue whose thread
-        // died (panicked job) hands the send back — fail over to the
-        // next live queue instead of poisoning the whole pool
         let n = self.txs.len();
-        let start = self.next.fetch_add(1, Ordering::Relaxed);
-        for k in 0..n {
-            match self.txs[(start + k) % n].send(job) {
+        let rot = self.next.fetch_add(1, Ordering::Relaxed);
+        loop {
+            // least-loaded live queue, rotating tie-break
+            let mut best: Option<(usize, usize)> = None;
+            for k in 0..n {
+                let i = (rot + k) % n;
+                let d = self.depth[i].load(Ordering::Relaxed);
+                if d == DEAD {
+                    continue;
+                }
+                if best.is_none_or(|(bd, _)| d < bd) {
+                    best = Some((d, i));
+                }
+            }
+            let Some((_, i)) = best else {
+                panic!("every fetch pool thread died");
+            };
+            self.depth[i].fetch_add(1, Ordering::Relaxed);
+            match self.txs[i].send(job) {
                 Ok(()) => return,
-                Err(mpsc::SendError(j)) => job = j,
+                Err(mpsc::SendError(j)) => {
+                    // thread gone: mark the queue dead, try the next-best
+                    self.depth[i].store(DEAD, Ordering::Relaxed);
+                    job = j;
+                }
             }
         }
-        panic!("every fetch pool thread died");
     }
 }
 
@@ -226,64 +355,55 @@ pub fn fetch_threaded(
     Ok(out)
 }
 
-/// Fused threaded fetch: every item of the wave decodes in parallel
-/// directly into its slot of its batch's slab. Per-batch results — one
-/// failed item fails only its own batch, the rest of the wave is
-/// delivered (and the failed batch's slab returns to the pool).
+/// Fused threaded fetch: the wave's items decode in parallel directly
+/// into their slabs. Per-batch results — one failed item fails only its
+/// own batch, the rest of the wave is delivered (and the failed batch's
+/// slab returns to the pool).
 pub fn fetch_threaded_fused(
     ctx: &Arc<FetchCtx>,
     pool: &ThreadPool,
     arena: &Arc<BatchArena>,
     work: &[(usize, Vec<usize>)],
 ) -> Vec<(usize, Result<Batch>)> {
-    let builders: Vec<BatchBuilder> = work
-        .iter()
-        .map(|(id, idxs)| arena.clone().checkout(*id, idxs.len()))
-        .collect();
-    let (otx, orx) = mpsc::channel::<(usize, Result<()>)>();
-    let mut total = 0usize;
-    for (bpos, (batch_id, indices)) in work.iter().enumerate() {
-        for (ipos, &index) in indices.iter().enumerate() {
-            let ctx = ctx.clone();
-            let otx = otx.clone();
-            let builder = builders[bpos].clone();
-            let batch_id = *batch_id;
-            total += 1;
-            pool.submit(Box::new(move || {
-                let res = ctx.fill_one(&builder, batch_id, ipos, index);
-                drop(builder);
-                let _ = otx.send((bpos, res));
-            }));
-        }
-    }
-    drop(otx);
+    fetch_threaded_fused_tasks(ctx, pool, arena, work, None)
+}
 
-    // collect every result before finishing any slab: the channel recv
-    // is the happens-before edge for the parallel slot writes
-    let mut errs: Vec<Option<anyhow::Error>> = work.iter().map(|_| None).collect();
-    for _ in 0..total {
-        let Ok((bpos, res)) = orx.recv() else {
-            // a pool thread died (job panicked), dropping its queued
-            // jobs: disconnect proves no fill is still running, and each
-            // affected batch surfaces the holes through finish() below
-            break;
-        };
-        if let Err(e) = res {
-            errs[bpos].get_or_insert(e);
+/// [`fetch_threaded_fused`] with an optional steal registry: one boxed
+/// job per pool thread (a *wave slice*), each claiming slots off the
+/// wave's [`ItemTask`] cursors until the wave is dry. The calling worker
+/// participates too, so the wave completes even if every pool thread is
+/// dead, and `wait_settled` can never hang on an unclaimed slot.
+pub fn fetch_threaded_fused_tasks(
+    ctx: &Arc<FetchCtx>,
+    pool: &ThreadPool,
+    arena: &Arc<BatchArena>,
+    work: &[(usize, Vec<usize>)],
+    registry: Option<&BatchInjector>,
+) -> Vec<(usize, Result<Batch>)> {
+    let entries = wave_entries(ctx, arena, work, registry);
+    let tasks: Vec<Arc<ItemTask>> = entries.iter().map(|e| e.task.clone()).collect();
+    let total: usize = tasks.iter().map(|t| t.len()).sum();
+    // wave slices: one job per executor slot, not one per item. The
+    // worker thread itself takes one slice, so only size-1 go to the
+    // pool when the wave is small.
+    let slices = pool.size().min(total).saturating_sub(1);
+    for _ in 0..slices {
+        let tasks = tasks.clone();
+        let ctx = ctx.clone();
+        pool.submit(Box::new(move || {
+            for task in &tasks {
+                while let Some(claim) = ItemTask::claim(task) {
+                    ctx.run_claim(claim);
+                }
+            }
+        }));
+    }
+    for task in &tasks {
+        while let Some(claim) = ItemTask::claim(task) {
+            ctx.run_claim(claim);
         }
     }
-    builders
-        .into_iter()
-        .zip(errs)
-        .zip(work.iter())
-        .map(|((builder, err), (id, _))| match err {
-            None => (*id, builder.finish()),
-            Some(e) => {
-                drop(builder); // recover the slab
-                (*id, Err(e))
-            }
-        })
-        .collect()
+    settle_wave(entries, registry)
 }
 
 // ---------------------------------------------------------------------------
@@ -328,10 +448,39 @@ pub fn fetch_async(
     Ok(restore_order(indices.len(), ok))
 }
 
-/// Fused asyncio fetch: the event loop overlaps the raw-byte waits of
-/// all items; each task then decodes straight into its slab slot (for
-/// datasets with [`Dataset::supports_raw`]; others fall back to
-/// `get_item_async` plus one copy into the slot).
+/// One async claim execution: overlap the raw-byte wait on the event
+/// loop, then decode straight into the slab slot (datasets with
+/// [`Dataset::supports_raw`]; others fall back to `get_item_async` plus
+/// one copy into the slot).
+async fn run_claim_async(ctx: &FetchCtx, claim: ItemClaim) {
+    let task = claim.task().clone();
+    let (pos, index, batch_id) = (claim.pos(), claim.index(), task.batch_id());
+    let t0 = ctx.recorder.now();
+    let res = if ctx.dataset.supports_raw() {
+        match ctx.dataset.get_raw_async(index).await {
+            Ok(raw) => task.builder().fill(pos, index, |out| {
+                ctx.dataset.process_raw_into(index, &raw, &ctx.gil, out)
+            }),
+            Err(e) => Err(e),
+        }
+    } else {
+        match ctx.dataset.get_item_async(index, &ctx.gil).await {
+            Ok(s) => task.builder().fill(pos, index, |out| copy_sample_into(&s, out)),
+            Err(e) => Err(e),
+        }
+    };
+    ctx.recorder.record(
+        names::GET_ITEM,
+        ctx.worker_id,
+        batch_id as i64,
+        t0,
+        ctx.recorder.now(),
+    );
+    claim.finish(res);
+}
+
+/// Fused asyncio fetch over one batch (see
+/// [`fetch_async_fused_tasks`] for the wave/steal-aware variant).
 pub fn fetch_async_fused(
     ctx: &Arc<FetchCtx>,
     rt: &Arc<asyncrt::Runtime>,
@@ -340,48 +489,48 @@ pub fn fetch_async_fused(
     batch_id: usize,
     indices: &[usize],
 ) -> Result<Batch> {
-    let builder = arena.clone().checkout(batch_id, indices.len());
-    let handles: Vec<_> = indices
-        .iter()
-        .enumerate()
-        .map(|(pos, &index)| {
+    let work = [(batch_id, indices.to_vec())];
+    fetch_async_fused_tasks(ctx, rt, sem, arena, &work, None)
+        .pop()
+        .expect("one batch in, one result out")
+        .1
+}
+
+/// Fused asyncio fetch of a wave: `min(num_fetch_workers, items)`
+/// looping futures (not one per item) each claim the next unfilled
+/// slot, await its raw bytes on the event loop, and decode into the
+/// slab. With a registry, other workers may claim tail items of the
+/// same batches concurrently.
+pub fn fetch_async_fused_tasks(
+    ctx: &Arc<FetchCtx>,
+    rt: &Arc<asyncrt::Runtime>,
+    sem: &Arc<asyncrt::Semaphore>,
+    arena: &Arc<BatchArena>,
+    work: &[(usize, Vec<usize>)],
+    registry: Option<&BatchInjector>,
+) -> Vec<(usize, Result<Batch>)> {
+    let entries = wave_entries(ctx, arena, work, registry);
+    let tasks: Vec<Arc<ItemTask>> = entries.iter().map(|e| e.task.clone()).collect();
+    let total: usize = tasks.iter().map(|t| t.len()).sum();
+    let loops = sem.available().max(1).min(total.max(1));
+    let handles: Vec<_> = (0..loops)
+        .map(|_| {
             let ctx = ctx.clone();
-            let sem = sem.clone();
-            let task_builder = builder.clone();
+            let tasks = tasks.clone();
             rt.spawn(async move {
-                let _permit = sem.acquire().await;
-                let t0 = ctx.recorder.now();
-                let res = if ctx.dataset.supports_raw() {
-                    match ctx.dataset.get_raw_async(index).await {
-                        Ok(raw) => task_builder.fill(pos, index, |out| {
-                            ctx.dataset.process_raw_into(index, &raw, &ctx.gil, out)
-                        }),
-                        Err(e) => Err(e),
+                for task in &tasks {
+                    while let Some(claim) = ItemTask::claim(task) {
+                        run_claim_async(&ctx, claim).await;
                     }
-                } else {
-                    match ctx.dataset.get_item_async(index, &ctx.gil).await {
-                        Ok(s) => task_builder
-                            .fill(pos, index, |out| copy_sample_into(&s, out)),
-                        Err(e) => Err(e),
-                    }
-                };
-                ctx.recorder.record(
-                    names::GET_ITEM,
-                    ctx.worker_id,
-                    batch_id as i64,
-                    t0,
-                    ctx.recorder.now(),
-                );
-                res
+                }
             })
         })
         .collect();
-    // join_all completes only after every fill finished — the
-    // happens-before edge for finish()
-    for res in asyncrt::block_on(asyncrt::join_all(handles)) {
-        res?;
-    }
-    builder.finish()
+    // join_all completes only after every loop future finished — all
+    // *locally* claimed slots are filled; wait_settled in settle_wave
+    // covers slots claimed by thieves on other workers
+    asyncrt::block_on(asyncrt::join_all(handles));
+    settle_wave(entries, registry)
 }
 
 #[cfg(test)]
@@ -541,19 +690,18 @@ mod tests {
     }
 
     #[test]
-    fn pool_round_robins_across_private_queues() {
-        // 4 jobs on a 4-thread pool land on 4 distinct threads (one per
-        // private queue) — the lock-funnel this replaces gave no such
-        // guarantee
-        let pool = ThreadPool::new(4, "rr");
+    fn pool_spreads_jobs_across_idle_threads() {
+        // 4 back-to-back jobs on a 4-thread pool land on 4 distinct
+        // threads: each submit sees the previous queues still loaded
+        // (depth decrements only after the 20 ms hold) and picks an
+        // empty one
+        let pool = ThreadPool::new(4, "ll");
         let (tx, rx) = mpsc::channel();
         for _ in 0..4 {
             let tx = tx.clone();
             pool.submit(Box::new(move || {
                 tx.send(std::thread::current().name().unwrap_or("?").to_string())
                     .unwrap();
-                // hold the thread briefly so a re-dispatched job could
-                // not sneak onto it anyway
                 std::thread::sleep(std::time::Duration::from_millis(20));
             }));
         }
@@ -562,6 +710,35 @@ mod tests {
         names.sort();
         names.dedup();
         assert_eq!(names.len(), 4, "{names:?}");
+    }
+
+    #[test]
+    fn pool_submit_avoids_a_busy_queue() {
+        // occupy one thread with a long job, then trickle quick jobs:
+        // none may land behind the sleeper (the old round-robin parked
+        // every other job there)
+        let pool = ThreadPool::new(2, "busy");
+        let (stx, srx) = mpsc::channel();
+        pool.submit(Box::new(move || {
+            stx.send(std::thread::current().name().unwrap_or("?").to_string())
+                .unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(80));
+        }));
+        let sleeper = srx.recv().unwrap();
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..4 {
+            let tx = tx.clone();
+            pool.submit(Box::new(move || {
+                tx.send(std::thread::current().name().unwrap_or("?").to_string())
+                    .unwrap();
+            }));
+            // let the quick job drain so its queue reads depth 0 again
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        drop(tx);
+        for name in rx.iter() {
+            assert_ne!(name, sleeper, "job parked behind the busy thread");
+        }
     }
 
     #[test]
@@ -637,5 +814,32 @@ mod tests {
         let ok = fetch_vanilla_fused(&ctx, &arena, 1, &[0, 1, 3]).unwrap();
         assert_eq!(ok.len(), 3);
         assert_eq!(arena.stats().reused, 1);
+    }
+
+    #[test]
+    fn fused_threaded_failure_fails_only_its_batch() {
+        let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+        let (keys, _) = generate_corpus(&mem, &CorpusSpec::tiny(8)).unwrap();
+        mem.put(&keys[1], vec![9, 9]).unwrap(); // corrupt batch 0's item
+        let ds = ImageFolderDataset::new(
+            mem,
+            AugmentConfig { crop: 16, ..Default::default() },
+        );
+        let ctx = Arc::new(FetchCtx {
+            worker_id: 0,
+            dataset: Arc::new(ds),
+            gil: Gil::native(),
+            recorder: Recorder::new(),
+        });
+        let pool = ThreadPool::new(4, "pf");
+        let arena = arena_for(&ctx, 4);
+        let work = vec![(0usize, indices(4)), (1usize, (4..8).collect())];
+        let out = fetch_threaded_fused(&ctx, &pool, &arena, &work);
+        assert!(out[0].1.is_err());
+        let b1 = out[1].1.as_ref().unwrap();
+        assert_eq!(b1.indices, (4..8).collect::<Vec<_>>());
+        // failed batch's slab recovered, healthy one published
+        assert_eq!(arena.stats().checkouts, 2);
+        assert_eq!(arena.stats().recycled, 1);
     }
 }

@@ -131,14 +131,25 @@ pub struct DataloaderConfig {
     /// hot path) and the trainer returns slabs after `to_device`. Size
     /// it ≥ the in-flight batch count — normally `queue_capacity() +
     /// num_workers`, but a straggling batch holding up in-order delivery
-    /// widens the window (the consumer's reorder buffer is unbounded,
-    /// and under `work_stealing` the other workers keep racing ahead);
-    /// an undersized pool stays correct, checkouts just fall back to
-    /// fresh allocations.
+    /// widens the window (bounded by `consumer_credit` when set; under
+    /// plain `work_stealing` the other workers keep racing ahead); an
+    /// undersized pool stays correct, checkouts just fall back to fresh
+    /// allocations. With `pin_memory` under `spawn`, slabs are handed
+    /// out page-locked, so batches are born pinned and skip the staging
+    /// copy.
     pub arena_slabs: usize,
     /// dispatch batches through a shared work-stealing injector instead
     /// of the static per-worker round-robin split
     pub work_stealing: bool,
+    /// steal at *item* granularity: a worker that cannot start a new
+    /// batch claims unclaimed tail items of siblings' in-progress
+    /// batches and decodes them into the owners' arena slabs. Requires
+    /// `work_stealing` and `arena_slabs > 0` (ignored otherwise).
+    pub steal_items: bool,
+    /// max batches any worker may run ahead of in-order delivery; bounds
+    /// the consumer's reorder buffer at O(credit) instead of O(epoch)
+    /// behind a straggler. 0 = unbounded (legacy).
+    pub consumer_credit: usize,
 }
 
 impl Default for DataloaderConfig {
@@ -163,6 +174,8 @@ impl Default for DataloaderConfig {
             prefetch_policy: CachePolicy::Lru,
             arena_slabs: 0,
             work_stealing: false,
+            steal_items: false,
+            consumer_credit: 0,
         }
     }
 }
@@ -204,8 +217,23 @@ impl Dataloader {
                  disabled (CUDA init cannot follow fork)"
             );
         }
+        if cfg.steal_items && (!cfg.work_stealing || cfg.arena_slabs == 0) {
+            eprintln!(
+                "warning: steal_items=true needs work_stealing=true and \
+                 arena_slabs > 0 (item claims live in the slab's claim \
+                 bits); falling back to batch-level dispatch"
+            );
+        }
         let arena = if cfg.arena_slabs > 0 {
-            Some(BatchArena::new(dataset.crop(), cfg.batch_size, cfg.arena_slabs))
+            // under effective pin_memory the arena hands out page-locked
+            // slabs: batches are born pinned, to_device takes the
+            // pinned-bandwidth path, and the staging copy disappears
+            Some(BatchArena::new_opts(
+                dataset.crop(),
+                cfg.batch_size,
+                cfg.arena_slabs,
+                cfg.effective_pin_memory(),
+            ))
         } else {
             None
         };
@@ -279,7 +307,10 @@ impl Dataloader {
             next_id: 0,
             n_batches,
             plan: static_plan,
+            injector_stats: injector.clone(),
             injector,
+            gate: sampler::CreditGate::new(self.cfg.consumer_credit),
+            reorder_hwm: 0,
             inline_plan: None,
             workers: Vec::new(),
             spawner: None,
@@ -317,6 +348,13 @@ pub struct EpochIter {
     n_batches: usize,
     plan: Option<Vec<Vec<(usize, Vec<usize>)>>>,
     injector: Option<Arc<sampler::BatchInjector>>,
+    /// second handle on the injector, kept across `take_sources` so
+    /// steal counters survive for reporting
+    injector_stats: Option<Arc<sampler::BatchInjector>>,
+    /// consumer-credit gate shared with the workers (`consumer_credit`)
+    gate: Arc<sampler::CreditGate>,
+    /// max reorder-buffer occupancy seen this epoch
+    reorder_hwm: usize,
     inline_plan: Option<std::collections::VecDeque<(usize, Vec<usize>)>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     spawner: Option<std::thread::JoinHandle<Vec<std::thread::JoinHandle<()>>>>,
@@ -326,6 +364,21 @@ pub struct EpochIter {
 impl EpochIter {
     pub fn n_batches(&self) -> usize {
         self.n_batches
+    }
+
+    /// Highest reorder-buffer occupancy observed so far this epoch.
+    /// With `consumer_credit = K > 0` this never exceeds K (the workers
+    /// cannot start batch `cursor + K` before the cursor advances).
+    pub fn reorder_high_water(&self) -> usize {
+        self.reorder_hwm
+    }
+
+    /// Items filled by non-owner workers so far this epoch (0 without
+    /// `steal_items`/work-stealing dispatch).
+    pub fn item_steals(&self) -> u64 {
+        self.injector_stats
+            .as_ref()
+            .map_or(0, |inj| inj.item_steal_count())
     }
 
     /// One work source per worker: clones of the shared injector, or the
@@ -359,6 +412,7 @@ impl EpochIter {
                 self.cfg.clone(),
                 source,
                 self.arena.clone(),
+                self.gate.clone(),
                 tx.clone(),
                 Duration::ZERO, // cost already paid in the loop
             ));
@@ -374,6 +428,7 @@ impl EpochIter {
         let recorder = self.recorder.clone();
         let cfg = self.cfg.clone();
         let arena = self.arena.clone();
+        let gate = self.gate.clone();
         // start_download(): yield each worker as it is created (Fig 8
         // right) — creation runs off the consumer's critical path
         self.spawner = Some(
@@ -390,6 +445,7 @@ impl EpochIter {
                             cfg.clone(),
                             source,
                             arena.clone(),
+                            gate.clone(),
                             tx.clone(),
                             Duration::ZERO,
                         ));
@@ -438,9 +494,14 @@ impl EpochIter {
         }
     }
 
-    /// Apply the pin-memory staging cost and flag.
+    /// Apply the pin-memory staging cost and flag. Batches born in a
+    /// pinned arena slab skip the staging copy entirely — they are
+    /// already page-locked at the source.
     fn pin(&self, mut batch: Batch) -> Batch {
         if self.cfg.effective_pin_memory() {
+            if batch.pinned {
+                return batch;
+            }
             let t0 = self.recorder.now();
             // page-locked copy at ~12 GB/s
             let secs = batch.tensor_bytes() as f64 / 12.0e9 + 50e-6;
@@ -483,6 +544,9 @@ impl Iterator for EpochIter {
             match self.pending.remove(&self.next_id) {
                 Some(Some(b)) => {
                     self.next_id += 1;
+                    // publish the new cursor: credit-blocked workers may
+                    // now start the next batch of the window
+                    self.gate.advance(self.next_id);
                     self.recorder.record(
                         names::GET_BATCH,
                         0,
@@ -496,6 +560,7 @@ impl Iterator for EpochIter {
                     // failure tombstone: the worker already logged it —
                     // advance past the gap and keep delivering
                     self.next_id += 1;
+                    self.gate.advance(self.next_id);
                     continue;
                 }
                 None => {}
@@ -503,9 +568,11 @@ impl Iterator for EpochIter {
             match self.rx.as_ref().expect("rx gone").recv() {
                 Ok(worker::WorkerMsg::Batch(b)) => {
                     self.pending.insert(b.id, Some(b));
+                    self.reorder_hwm = self.reorder_hwm.max(self.pending.len());
                 }
                 Ok(worker::WorkerMsg::Failed(id)) => {
                     self.pending.insert(id, None);
+                    self.reorder_hwm = self.reorder_hwm.max(self.pending.len());
                 }
                 Err(_) => {
                     // all workers done & channel drained. Backstop for a
@@ -516,6 +583,7 @@ impl Iterator for EpochIter {
                         return None;
                     };
                     self.next_id = next;
+                    self.gate.advance(self.next_id);
                 }
             }
         }
@@ -524,7 +592,9 @@ impl Iterator for EpochIter {
 
 impl Drop for EpochIter {
     fn drop(&mut self) {
-        // unblock any worker stuck on send: drop our receiver first
+        // open the credit gate first (workers parked on it must wake to
+        // notice the dead channel), then drop our receiver
+        self.gate.close();
         self.pending.clear();
         drop(self.rx.take());
         drop(self.tx.take());
@@ -621,6 +691,105 @@ mod tests {
             let ids: Vec<usize> = batches.iter().map(|b| b.id).collect();
             assert_eq!(ids, vec![0, 1, 2, 3, 4], "{impl_:?}");
         }
+    }
+
+    #[test]
+    fn item_steal_epoch_covers_dataset_in_order_all_impls() {
+        for impl_ in FetchImpl::all() {
+            let dl = Dataloader::new(
+                dataset(22, false),
+                DataloaderConfig {
+                    batch_size: 5,
+                    num_workers: 3,
+                    fetch_impl: impl_,
+                    num_fetch_workers: 4,
+                    work_stealing: true,
+                    steal_items: true,
+                    arena_slabs: 12,
+                    consumer_credit: 3,
+                    spawn_cost_override: Some(Duration::ZERO),
+                    ..Default::default()
+                },
+                Recorder::new(),
+            );
+            let mut it = dl.epoch(0);
+            let mut batches = Vec::new();
+            for b in it.by_ref() {
+                batches.push(b);
+            }
+            let hwm = it.reorder_high_water();
+            drop(it);
+            assert_eq!(batches.len(), 5, "{impl_:?}");
+            check_full_coverage(&batches, 22);
+            let ids: Vec<usize> = batches.iter().map(|b| b.id).collect();
+            assert_eq!(ids, vec![0, 1, 2, 3, 4], "{impl_:?}");
+            assert!(batches.iter().all(|b| b.is_pooled()), "{impl_:?}");
+            assert!(hwm <= 3, "{impl_:?}: reorder hwm {hwm} > credit 3");
+        }
+    }
+
+    #[test]
+    fn consumer_credit_bounds_reorder_buffer_in_every_dispatch_mode() {
+        for (stealing, items) in [(false, false), (true, false), (true, true)] {
+            let dl = Dataloader::new(
+                dataset(30, true), // remote latency: real reordering
+                DataloaderConfig {
+                    batch_size: 3,
+                    num_workers: 4,
+                    fetch_impl: FetchImpl::Threaded,
+                    num_fetch_workers: 4,
+                    work_stealing: stealing,
+                    steal_items: items,
+                    arena_slabs: 10,
+                    consumer_credit: 2,
+                    spawn_cost_override: Some(Duration::ZERO),
+                    ..Default::default()
+                },
+                Recorder::new(),
+            );
+            let mut it = dl.epoch(0);
+            let mut n = 0;
+            for b in it.by_ref() {
+                n += 1;
+                b.recycle();
+            }
+            let hwm = it.reorder_high_water();
+            assert_eq!(n, 10, "stealing={stealing} items={items}");
+            assert!(
+                hwm <= 2,
+                "stealing={stealing} items={items}: hwm {hwm} > credit 2"
+            );
+        }
+    }
+
+    #[test]
+    fn pinned_arena_batches_are_born_pinned() {
+        let mk = |arena_slabs| {
+            Dataloader::new(
+                dataset(8, false),
+                DataloaderConfig {
+                    batch_size: 4,
+                    num_workers: 2,
+                    pin_memory: true,
+                    start_method: StartMethod::Spawn,
+                    arena_slabs,
+                    spawn_cost_override: Some(Duration::ZERO),
+                    ..Default::default()
+                },
+                Recorder::new(),
+            )
+        };
+        // arena path: slabs are page-locked, no staging copy recorded
+        let dl = mk(6);
+        assert!(dl.arena().unwrap().pinned());
+        let batches = collect_epoch(&dl, 0);
+        assert!(batches.iter().all(|b| b.pinned && b.is_pooled()));
+        assert_eq!(dl.recorder().durations(names::PIN_MEMORY).len(), 0);
+        // legacy path: heap batches still pay the staging copy
+        let dl = mk(0);
+        let batches = collect_epoch(&dl, 0);
+        assert!(batches.iter().all(|b| b.pinned && !b.is_pooled()));
+        assert_eq!(dl.recorder().durations(names::PIN_MEMORY).len(), 2);
     }
 
     #[test]

@@ -5,10 +5,26 @@
 //! [`BatchInjector`] that idle workers steal from (`work_stealing`
 //! knob), which kills the end-of-epoch straggler stall on
 //! high-latency storage.
+//!
+//! Two tail-taming mechanisms ride on the same types (PR 4):
+//!
+//! * **Item-level stealing** ([`ItemTask`], `steal_items` knob): a
+//!   worker processing a batch registers it with the injector; an idle
+//!   sibling claims *unclaimed tail items* and decodes them straight
+//!   into the batch's arena slab (the slab's per-slot claim bits make
+//!   the concurrent in-place fill safe). The batch completes when every
+//!   claimed slot is filled; the original owner publishes it.
+//! * **Consumer credit** ([`CreditGate`], `consumer_credit` knob):
+//!   workers may only *start* a batch while its id is within `credit`
+//!   of the consumer's in-order delivery cursor, bounding the reorder
+//!   buffer at O(credit) instead of O(epoch) behind a straggler.
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
+use crate::dataloader::arena::BatchBuilder;
 use crate::util::rng::Rng;
 
 /// Item-order sampler for one epoch.
@@ -49,13 +65,311 @@ pub fn batches(order: &[usize], batch_size: usize, drop_last: bool) -> Vec<Vec<u
     out
 }
 
+// ---------------------------------------------------------------------------
+// Consumer-credit gate
+// ---------------------------------------------------------------------------
+
+struct GateState {
+    /// the consumer's in-order delivery cursor (next expected batch id)
+    cursor: usize,
+    /// epoch torn down (consumer dropped): admit everything so workers
+    /// drain their sources and exit on the dead channel
+    closed: bool,
+}
+
+/// Bounds how far ahead of in-order delivery the workers may run: batch
+/// `id` may only be *started* while `id < cursor + credit`. Since the
+/// reorder buffer can only hold finished batches with ids in
+/// `[cursor, cursor + credit)`, its size is bounded by `credit` instead
+/// of O(epoch) behind one straggling batch. `credit = 0` disables the
+/// gate (legacy unbounded behavior).
+pub struct CreditGate {
+    credit: usize,
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+impl CreditGate {
+    pub fn new(credit: usize) -> Arc<CreditGate> {
+        Arc::new(CreditGate {
+            credit,
+            state: Mutex::new(GateState { cursor: 0, closed: false }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// The configured credit (0 = unbounded).
+    pub fn credit(&self) -> usize {
+        self.credit
+    }
+
+    fn admits_locked(&self, st: &GateState, id: usize) -> bool {
+        self.credit == 0 || st.closed || id < st.cursor + self.credit
+    }
+
+    /// May batch `id` be started right now?
+    pub fn admits(&self, id: usize) -> bool {
+        self.admits_locked(&self.state.lock().unwrap(), id)
+    }
+
+    /// Consumer side: publish the new in-order cursor (monotonic), waking
+    /// every worker parked on the gate.
+    pub fn advance(&self, cursor: usize) {
+        let mut st = self.state.lock().unwrap();
+        if cursor > st.cursor {
+            st.cursor = cursor;
+            drop(st);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Consumer gone / epoch torn down: open the gate permanently.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until batch `id` is admitted.
+    pub fn wait_admit(&self, id: usize) {
+        let mut st = self.state.lock().unwrap();
+        while !self.admits_locked(&st, id) {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Block until batch `id` is admitted or `timeout` elapses; returns
+    /// whether it is now admitted. Workers that can do useful side work
+    /// while parked (item stealing) use this instead of [`wait_admit`].
+    ///
+    /// [`wait_admit`]: CreditGate::wait_admit
+    pub fn wait_admit_timeout(&self, id: usize, timeout: Duration) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        while !self.admits_locked(&st, id) {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Item-level work stealing
+// ---------------------------------------------------------------------------
+
+struct TaskState {
+    /// slots handed out so far (positions `0..claimed` are claimed)
+    claimed: usize,
+    /// claimed slots whose fill has completed (success or error)
+    done: usize,
+    /// first fill error; once set, no further claims are handed out
+    error: Option<anyhow::Error>,
+}
+
+/// One in-progress batch whose unclaimed tail items may be filled by
+/// any worker. Created by the owning worker around an arena
+/// [`BatchBuilder`]; fillers claim `(slot, dataset index)` pairs through
+/// [`ItemTask::claim`] and report completion, and the owner blocks in
+/// [`ItemTask::wait_settled`] until every claimed slot has been filled
+/// (the mutex/condvar pair is the happens-before edge that makes the
+/// subsequent `finish()` sound — same role the channel/join played for
+/// the in-worker fetchers).
+pub struct ItemTask {
+    batch_id: usize,
+    owner: u32,
+    /// passive handle on the batch's slab (the owner keeps the primary)
+    builder: BatchBuilder,
+    indices: Vec<usize>,
+    state: Mutex<TaskState>,
+    cv: Condvar,
+}
+
+impl ItemTask {
+    pub fn new(
+        batch_id: usize,
+        owner: u32,
+        builder: BatchBuilder,
+        indices: Vec<usize>,
+    ) -> Arc<ItemTask> {
+        Arc::new(ItemTask {
+            batch_id,
+            owner,
+            builder,
+            indices,
+            state: Mutex::new(TaskState { claimed: 0, done: 0, error: None }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn batch_id(&self) -> usize {
+        self.batch_id
+    }
+
+    /// Worker id of the batch's owner (the publisher).
+    pub fn owner(&self) -> u32 {
+        self.owner
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// The slab handle fillers decode into.
+    pub fn builder(&self) -> &BatchBuilder {
+        &self.builder
+    }
+
+    /// Slots not yet handed out (0 once fully claimed or failed).
+    pub fn unclaimed(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        if st.error.is_some() {
+            0
+        } else {
+            self.indices.len() - st.claimed
+        }
+    }
+
+    /// Hand out the next unfilled slot: `(slot position, dataset
+    /// index)`. `None` once every slot is claimed or the batch has
+    /// failed. Prefer [`ItemTask::claim`], which wraps the result in
+    /// the RAII [`ItemClaim`] guard.
+    fn take_slot(&self) -> Option<(usize, usize)> {
+        let mut st = self.state.lock().unwrap();
+        if st.error.is_some() || st.claimed >= self.indices.len() {
+            return None;
+        }
+        let pos = st.claimed;
+        st.claimed += 1;
+        Some((pos, self.indices[pos]))
+    }
+
+    /// Claim the next unfilled slot of `task` as an RAII [`ItemClaim`].
+    /// (An associated fn because the guard needs its own `Arc` handle —
+    /// `&Arc<Self>` receivers aren't a stable self type.)
+    pub fn claim(task: &Arc<ItemTask>) -> Option<ItemClaim> {
+        let (pos, index) = task.take_slot()?;
+        Some(ItemClaim {
+            task: task.clone(),
+            pos,
+            index,
+            completed: false,
+        })
+    }
+
+    fn complete(&self, res: anyhow::Result<()>) {
+        let mut st = self.state.lock().unwrap();
+        st.done += 1;
+        if let Err(e) = res {
+            if st.error.is_none() {
+                st.error = Some(e);
+            }
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Owner side: block until no fill is outstanding (every claimed
+    /// slot completed, and either all slots were claimed or the batch
+    /// failed). Returns the first fill error, if any. After this
+    /// returns `None` the owner may `finish()` the primary builder.
+    pub fn wait_settled(&self) -> Option<anyhow::Error> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let settled = st.done == st.claimed
+                && (st.error.is_some() || st.claimed == self.indices.len());
+            if settled {
+                // exhaust the cursor for good: taking the error must not
+                // let a late thief resurrect claims on a batch the owner
+                // is about to fail/finish (its fill would still bail on
+                // the recovered slab, but don't even hand out the slot)
+                st.claimed = self.indices.len();
+                return st.error.take();
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// RAII claim on one slot of an [`ItemTask`]. Call [`ItemClaim::finish`]
+/// with the fill result; dropping an unfinished claim (a panicking fill)
+/// reports it as an error so the owner's [`ItemTask::wait_settled`]
+/// never hangs on a slot that will never complete.
+pub struct ItemClaim {
+    task: Arc<ItemTask>,
+    pos: usize,
+    index: usize,
+    completed: bool,
+}
+
+impl ItemClaim {
+    /// Slot position inside the batch.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Dataset index to load into the slot.
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    pub fn task(&self) -> &Arc<ItemTask> {
+        &self.task
+    }
+
+    /// Report the fill outcome for this slot.
+    pub fn finish(mut self, res: anyhow::Result<()>) {
+        self.completed = true;
+        self.task.complete(res);
+    }
+}
+
+impl Drop for ItemClaim {
+    fn drop(&mut self) {
+        if !self.completed {
+            self.task.complete(Err(anyhow::anyhow!(
+                "slot {} abandoned mid-fill (filler panicked or was dropped)",
+                self.pos
+            )));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch injector
+// ---------------------------------------------------------------------------
+
+/// Result of a credit-gated grab from the injector.
+pub enum Claimed {
+    /// Admitted batches to work on (≥ 1).
+    Work(Vec<(usize, Vec<usize>)>),
+    /// The queue head (this id) exists but is outside the credit
+    /// window — park on the gate or steal items meanwhile.
+    Blocked(usize),
+    /// The epoch's batch queue is drained.
+    Drained,
+}
+
 /// Shared batch injector queue for work-stealing dispatch: every worker
 /// pops the globally-next batch when it goes idle, so one slow batch
 /// never pins the batches behind it to a busy worker (in-order delivery
 /// is preserved by the consumer's reorder buffer, exactly as with
-/// static assignment).
+/// static assignment). With `steal_items` it also tracks the in-progress
+/// batches whose unclaimed tail items idle workers may fill in place.
 pub struct BatchInjector {
     queue: Mutex<VecDeque<(usize, Vec<usize>)>>,
+    /// in-progress item tasks, registered in pop order (≈ batch id
+    /// order, so thieves help the batch the consumer wants soonest)
+    active: Mutex<Vec<Arc<ItemTask>>>,
+    /// items filled by a worker other than the batch's owner
+    item_steals: AtomicU64,
 }
 
 impl BatchInjector {
@@ -64,6 +378,8 @@ impl BatchInjector {
     pub fn new(batches: Vec<Vec<usize>>) -> BatchInjector {
         BatchInjector {
             queue: Mutex::new(batches.into_iter().enumerate().collect()),
+            active: Mutex::new(Vec::new()),
+            item_steals: AtomicU64::new(0),
         }
     }
 
@@ -80,10 +396,74 @@ impl BatchInjector {
         q.drain(..take).collect()
     }
 
+    /// Credit-gated wave grab: pop up to `k` batches whose ids the gate
+    /// admits right now.
+    pub fn steal_group_admitted(&self, k: usize, gate: &CreditGate) -> Claimed {
+        take_admitted(&mut self.queue.lock().unwrap(), k, gate)
+    }
+
     /// Batches not yet claimed.
     pub fn remaining(&self) -> usize {
         self.queue.lock().unwrap().len()
     }
+
+    /// Publish an in-progress batch for item-level stealing.
+    pub fn register(&self, task: Arc<ItemTask>) {
+        self.active.lock().unwrap().push(task);
+    }
+
+    /// Withdraw a finished/failed batch from the steal registry.
+    pub fn unregister(&self, batch_id: usize) {
+        self.active.lock().unwrap().retain(|t| t.batch_id() != batch_id);
+    }
+
+    /// Steal one unclaimed item from the oldest in-progress batch that
+    /// has any. `thief` is the calling worker's id — a claim on a batch
+    /// it does not own counts toward [`BatchInjector::item_steal_count`].
+    pub fn steal_item(&self, thief: u32) -> Option<ItemClaim> {
+        let active = self.active.lock().unwrap();
+        for task in active.iter() {
+            if let Some(claim) = ItemTask::claim(task) {
+                if task.owner() != thief {
+                    self.item_steals.fetch_add(1, Ordering::Relaxed);
+                }
+                return Some(claim);
+            }
+        }
+        None
+    }
+
+    /// In-progress batches currently registered.
+    pub fn active_tasks(&self) -> usize {
+        self.active.lock().unwrap().len()
+    }
+
+    /// Items filled by non-owner workers so far this epoch.
+    pub fn item_steal_count(&self) -> u64 {
+        self.item_steals.load(Ordering::Relaxed)
+    }
+}
+
+/// Pop the admitted prefix (up to `k` batches) off a batch queue —
+/// the one credit-window grab shared by the injector and the static
+/// per-worker deques, so the two dispatch modes cannot diverge.
+pub fn take_admitted(
+    q: &mut VecDeque<(usize, Vec<usize>)>,
+    k: usize,
+    gate: &CreditGate,
+) -> Claimed {
+    let Some(&(head, _)) = q.front() else {
+        return Claimed::Drained;
+    };
+    if !gate.admits(head) {
+        return Claimed::Blocked(head);
+    }
+    let mut take = 1;
+    let max = k.max(1).min(q.len());
+    while take < max && gate.admits(q[take].0) {
+        take += 1;
+    }
+    Claimed::Work(q.drain(..take).collect())
 }
 
 /// Round-robin assignment of (batch_id, indices) to workers — torch
@@ -195,5 +575,168 @@ mod tests {
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
         // worker 0 gets 0, 3; worker 1 gets 1, 4; worker 2 gets 2
         assert_eq!(assigned[0].iter().map(|(i, _)| *i).collect::<Vec<_>>(), vec![0, 3]);
+    }
+
+    #[test]
+    fn credit_gate_admits_within_window_only() {
+        let gate = CreditGate::new(3);
+        assert!(gate.admits(0));
+        assert!(gate.admits(2));
+        assert!(!gate.admits(3));
+        gate.advance(2);
+        assert!(gate.admits(4));
+        assert!(!gate.admits(5));
+        // cursor is monotonic
+        gate.advance(1);
+        assert!(gate.admits(4));
+        assert!(!gate.admits(5));
+        // close opens everything
+        gate.close();
+        assert!(gate.admits(1_000_000));
+    }
+
+    #[test]
+    fn credit_gate_zero_is_unbounded() {
+        let gate = CreditGate::new(0);
+        assert!(gate.admits(usize::MAX - 1));
+        assert!(gate.wait_admit_timeout(10_000, Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn credit_gate_wait_wakes_on_advance() {
+        let gate = CreditGate::new(1);
+        assert!(!gate.wait_admit_timeout(3, Duration::from_millis(5)));
+        let g2 = gate.clone();
+        let h = std::thread::spawn(move || {
+            g2.wait_admit(3); // needs cursor ≥ 3
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        gate.advance(3);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn credit_gated_grab_respects_window() {
+        let inj = BatchInjector::new(batches(&(0..20).collect::<Vec<_>>(), 4, false));
+        let gate = CreditGate::new(2);
+        // window [0, 2): only batches 0 and 1 admitted
+        match inj.steal_group_admitted(10, &gate) {
+            Claimed::Work(w) => {
+                assert_eq!(w.iter().map(|(id, _)| *id).collect::<Vec<_>>(), vec![0, 1]);
+            }
+            _ => panic!("expected work"),
+        }
+        match inj.steal_group_admitted(10, &gate) {
+            Claimed::Blocked(id) => assert_eq!(id, 2),
+            _ => panic!("expected blocked"),
+        }
+        gate.advance(3); // window [3, 5)
+        match inj.steal_group_admitted(1, &gate) {
+            Claimed::Work(w) => assert_eq!(w[0].0, 2),
+            _ => panic!("expected work"),
+        }
+        inj.steal_group(10);
+        assert!(matches!(inj.steal_group_admitted(1, &gate), Claimed::Drained));
+    }
+
+    mod item_tasks {
+        use super::*;
+        use crate::dataloader::arena::{BatchArena, BatchBuilder};
+        use crate::dataset::ItemMeta;
+
+        fn task_of(n: usize, owner: u32) -> (BatchBuilder, Arc<ItemTask>) {
+            // batch id = owner, so registry tests can tell tasks apart
+            let id = owner as usize;
+            let arena = BatchArena::new(2, n, 2);
+            let b = arena.checkout(id, n);
+            let t = ItemTask::new(id, owner, b.clone(), (10..10 + n).collect());
+            (b, t)
+        }
+
+        fn fill_claim(claim: ItemClaim) {
+            let res = claim.task().builder().fill(claim.pos(), claim.index(), |out| {
+                out.fill(claim.pos() as u8);
+                Ok(ItemMeta { label: 0, raw_bytes: 1 })
+            });
+            claim.finish(res);
+        }
+
+        #[test]
+        fn claims_hand_out_each_slot_once_and_settle() {
+            let (b, t) = task_of(4, 0);
+            let mut seen = Vec::new();
+            while let Some(c) = ItemTask::claim(&t) {
+                seen.push((c.pos(), c.index()));
+                fill_claim(c);
+            }
+            assert_eq!(seen, vec![(0, 10), (1, 11), (2, 12), (3, 13)]);
+            assert!(t.wait_settled().is_none());
+            let batch = b.finish().unwrap();
+            assert_eq!(batch.indices, vec![10, 11, 12, 13]);
+        }
+
+        #[test]
+        fn error_stops_further_claims_and_surfaces_in_settle() {
+            let (b, t) = task_of(4, 0);
+            let c = ItemTask::claim(&t).unwrap();
+            c.finish(Err(anyhow::anyhow!("boom")));
+            assert!(ItemTask::claim(&t).is_none());
+            assert_eq!(t.unclaimed(), 0);
+            let err = t.wait_settled().unwrap();
+            assert!(err.to_string().contains("boom"), "{err}");
+            drop(b); // slab recovery is the owner's job
+        }
+
+        #[test]
+        fn dropped_claim_reports_abandonment() {
+            let (_b, t) = task_of(2, 0);
+            let c = ItemTask::claim(&t).unwrap();
+            drop(c); // simulated panic mid-fill
+            let err = t.wait_settled().unwrap();
+            assert!(err.to_string().contains("abandoned"), "{err}");
+        }
+
+        #[test]
+        fn settle_waits_for_concurrent_fillers() {
+            let (b, t) = task_of(8, 0);
+            std::thread::scope(|s| {
+                for _ in 0..3 {
+                    let t = t.clone();
+                    s.spawn(move || {
+                        while let Some(c) = ItemTask::claim(&t) {
+                            std::thread::sleep(Duration::from_millis(1));
+                            fill_claim(c);
+                        }
+                    });
+                }
+                assert!(t.wait_settled().is_none());
+            });
+            assert_eq!(b.finish().unwrap().len(), 8);
+        }
+
+        #[test]
+        fn injector_registry_steals_from_oldest_and_counts() {
+            let inj = BatchInjector::new(Vec::new());
+            let (_b0, t0) = task_of(2, 0);
+            let (_b1, t1) = task_of(2, 1);
+            inj.register(t0.clone());
+            inj.register(t1.clone());
+            assert_eq!(inj.active_tasks(), 2);
+            // thief = worker 1: first two claims come from t0 (owner 0)
+            let c = inj.steal_item(1).unwrap();
+            assert_eq!(c.task().batch_id(), t0.batch_id());
+            fill_claim(c);
+            fill_claim(inj.steal_item(1).unwrap());
+            assert_eq!(inj.item_steal_count(), 2);
+            // next claims come from t1 — owner 1 stealing its own batch
+            // does not count
+            fill_claim(inj.steal_item(1).unwrap());
+            assert_eq!(inj.item_steal_count(), 2);
+            inj.unregister(t0.batch_id());
+            assert_eq!(inj.active_tasks(), 1);
+            fill_claim(inj.steal_item(0).unwrap());
+            assert_eq!(inj.item_steal_count(), 3);
+            assert!(inj.steal_item(0).is_none());
+        }
     }
 }

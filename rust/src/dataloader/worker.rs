@@ -10,12 +10,23 @@
 //! never across workers) and pays the configured process start-up cost
 //! (`fork` vs `spawn`) before doing any work.
 //!
+//! Two tail-taming behaviors (PR 4):
+//!
+//! * every acquisition goes through the epoch's [`CreditGate`]: a batch
+//!   is only *started* while its id is within `consumer_credit` of the
+//!   consumer's in-order cursor, bounding the reorder buffer;
+//! * with `steal_items` (work-stealing dispatch + arena), a worker that
+//!   cannot start a new batch — credit-blocked or epoch drained — claims
+//!   *unclaimed tail items* of siblings' in-progress batches and decodes
+//!   them straight into the owners' slabs instead of idling.
+//!
 //! Per-batch failures (corrupt object, ragged/empty collate) are
 //! surfaced on stderr and skipped — one bad batch never aborts the
 //! process or the epoch.
 
 use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::anyhow;
 
@@ -23,14 +34,18 @@ use crate::asyncrt;
 use crate::dataloader::arena::BatchArena;
 use crate::dataloader::collate::{collate, Batch};
 use crate::dataloader::fetch::{
-    fetch_async, fetch_async_fused, fetch_threaded, fetch_threaded_fused,
-    fetch_vanilla, fetch_vanilla_fused, FetchCtx, ThreadPool,
+    fetch_async, fetch_async_fused_tasks, fetch_threaded, fetch_threaded_fused_tasks,
+    fetch_vanilla, fetch_vanilla_fused, fill_wave_sequential, FetchCtx, ThreadPool,
 };
-use crate::dataloader::sampler::BatchInjector;
+use crate::dataloader::sampler::{self, BatchInjector, Claimed, CreditGate};
 use crate::dataloader::{DataloaderConfig, FetchImpl};
 use crate::dataset::Dataset;
 use crate::gil::Gil;
 use crate::telemetry::{names, Recorder};
+
+/// How long a blocked worker parks on the credit gate between item-steal
+/// attempts (it is woken early on every consumer delivery).
+const STEAL_PARK: Duration = Duration::from_millis(1);
 
 /// What a worker pushes into the data queue: a finished batch, or a
 /// tombstone for a batch that failed (so the in-order consumer can
@@ -53,14 +68,19 @@ pub enum WorkSource {
 }
 
 impl WorkSource {
-    /// Next wave of up to `k` batches; empty when the epoch is drained.
-    fn next_group(&mut self, k: usize) -> Vec<(usize, Vec<usize>)> {
+    /// Credit-gated wave acquisition: up to `k` batches whose ids the
+    /// gate admits.
+    fn next_group(&mut self, k: usize, gate: &CreditGate) -> Claimed {
         match self {
-            WorkSource::Static(list) => {
-                let take = k.max(1).min(list.len());
-                list.drain(..take).collect()
-            }
-            WorkSource::Stealing(inj) => inj.steal_group(k),
+            WorkSource::Static(list) => sampler::take_admitted(list, k, gate),
+            WorkSource::Stealing(inj) => inj.steal_group_admitted(k, gate),
+        }
+    }
+
+    fn injector(&self) -> Option<&Arc<BatchInjector>> {
+        match self {
+            WorkSource::Static(_) => None,
+            WorkSource::Stealing(inj) => Some(inj),
         }
     }
 }
@@ -76,6 +96,7 @@ pub fn spawn_worker(
     cfg: Arc<DataloaderConfig>,
     source: WorkSource,
     arena: Option<Arc<BatchArena>>,
+    gate: Arc<CreditGate>,
     out: SyncSender<WorkerMsg>,
     spawn_delay: std::time::Duration,
 ) -> std::thread::JoinHandle<()> {
@@ -87,7 +108,7 @@ pub fn spawn_worker(
                 std::thread::sleep(spawn_delay);
             }
             recorder.record(names::WORKER_SPAWN, worker_id, -1, t0, recorder.now());
-            run_worker(worker_id, dataset, recorder, cfg, source, arena, out);
+            run_worker(worker_id, dataset, recorder, cfg, source, arena, gate, out);
         })
         .expect("spawn dataloader worker")
 }
@@ -99,6 +120,7 @@ enum Engine {
     Asyncio(Arc<asyncrt::Runtime>, Arc<asyncrt::Semaphore>),
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_worker(
     worker_id: u32,
     dataset: Arc<dyn Dataset>,
@@ -106,6 +128,7 @@ fn run_worker(
     cfg: Arc<DataloaderConfig>,
     mut source: WorkSource,
     arena: Option<Arc<BatchArena>>,
+    gate: Arc<CreditGate>,
     out: SyncSender<WorkerMsg>,
 ) {
     let gil = Gil::new(cfg.runtime, cfg.python_tax);
@@ -135,58 +158,64 @@ fn run_worker(
         }
         _ => 1,
     };
+    // item-level stealing needs both the shared injector (to find
+    // siblings' in-progress batches) and the arena (whose per-slot claim
+    // bits make concurrent in-place fill safe)
+    let steal_items = cfg.steal_items && arena.is_some() && source.injector().is_some();
 
     loop {
-        let work = source.next_group(group);
-        if work.is_empty() {
-            return; // epoch drained
-        }
-        let t0 = recorder.now();
-        let results: Vec<(usize, anyhow::Result<Batch>)> = match (&engine, &arena) {
-            // ---- fused zero-alloc paths (arena attached) -------------
-            (Engine::Vanilla, Some(arena)) => work
-                .iter()
-                .map(|(id, idxs)| (*id, fetch_vanilla_fused(&ctx, arena, *id, idxs)))
-                .collect(),
-            (Engine::Threaded(pool), Some(arena)) => {
-                fetch_threaded_fused(&ctx, pool, arena, &work)
-            }
-            (Engine::Asyncio(rt, sem), Some(arena)) => work
-                .iter()
-                .map(|(id, idxs)| {
-                    (*id, fetch_async_fused(&ctx, rt, sem, arena, *id, idxs))
-                })
-                .collect(),
-            // ---- legacy copying paths --------------------------------
-            (Engine::Vanilla, None) => work
-                .iter()
-                .map(|(id, idxs)| {
-                    let res = fetch_vanilla(&ctx, *id, idxs)
-                        .and_then(|samples| gil.cpu(|| collate(*id, samples)));
-                    (*id, res)
-                })
-                .collect(),
-            (Engine::Threaded(pool), None) => match fetch_threaded(&ctx, pool, &work) {
-                Ok(fetched) => fetched
-                    .into_iter()
-                    .map(|(id, samples)| (id, gil.cpu(|| collate(id, samples))))
-                    .collect(),
-                Err(e) => {
-                    // whole-wave failure: report it once per batch id
-                    let msg = format!("{e:#}");
-                    work.iter()
-                        .map(|(id, _)| (*id, Err(anyhow!("fetch wave failed: {msg}"))))
-                        .collect()
+        let work = match source.next_group(group, &gate) {
+            Claimed::Work(work) => work,
+            Claimed::Blocked(head) => {
+                // can't start a new batch yet: help a straggler instead
+                // of idling, else park until the consumer catches up. A
+                // stealing worker re-polls (new tail items may appear);
+                // a non-stealing one has nothing to do but wait, so it
+                // blocks outright (advance()/close() wake it).
+                if steal_items {
+                    if !steal_one_item(&ctx, &source) {
+                        gate.wait_admit_timeout(head, STEAL_PARK);
+                    }
+                } else {
+                    gate.wait_admit(head);
                 }
-            },
-            (Engine::Asyncio(rt, sem), None) => work
-                .iter()
-                .map(|(id, idxs)| {
-                    let res = fetch_async(&ctx, rt, sem, *id, idxs)
-                        .and_then(|samples| gil.cpu(|| collate(*id, samples)));
-                    (*id, res)
-                })
-                .collect(),
+                continue;
+            }
+            Claimed::Drained => {
+                // end of epoch: drain any stealable tail items before
+                // exiting (the last batches are exactly the stragglers)
+                if steal_items && steal_one_item(&ctx, &source) {
+                    continue;
+                }
+                return;
+            }
+        };
+        let t0 = recorder.now();
+        // Panic containment: a panic anywhere in the wave (e.g. the
+        // fetch pool losing its last thread) must still produce one
+        // message per claimed batch id — under `consumer_credit` the
+        // siblings are parked until these ids deliver, so a silently
+        // vanished wave would hang the whole epoch, not just lose data.
+        // Unwinding drops the wave's builders (slabs recover) and any
+        // held ItemClaims (reported as abandoned to their tasks).
+        let wave = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_wave(&engine, &arena, &ctx, &gil, &source, steal_items, &work)
+        }));
+        let results: Vec<(usize, anyhow::Result<Batch>)> = match wave {
+            Ok(results) => results,
+            Err(_) => {
+                // withdraw the wave's tasks from the steal registry —
+                // settle_wave never ran, and stale tasks would otherwise
+                // hand thieves slots into recovered slabs all epoch
+                if let Some(inj) = source.injector() {
+                    for (id, _) in &work {
+                        inj.unregister(*id);
+                    }
+                }
+                work.iter()
+                    .map(|(id, _)| (*id, Err(anyhow!("worker panicked mid-wave"))))
+                    .collect()
+            }
         };
         for (batch_id, res) in results {
             let msg = match res {
@@ -210,6 +239,104 @@ fn run_worker(
                 return; // consumer gone
             }
         }
+    }
+}
+
+/// One wave of fetching/assembly for the engine × arena combination —
+/// the body `run_worker` wraps in panic containment.
+fn run_wave(
+    engine: &Engine,
+    arena: &Option<Arc<BatchArena>>,
+    ctx: &Arc<FetchCtx>,
+    gil: &Arc<Gil>,
+    source: &WorkSource,
+    steal_items: bool,
+    work: &[(usize, Vec<usize>)],
+) -> Vec<(usize, anyhow::Result<Batch>)> {
+    match (engine, arena) {
+        // ---- fused zero-alloc paths (arena attached) -----------------
+        // with steal_items, in-progress batches are registered on the
+        // injector so idle siblings can claim tail items
+        (Engine::Vanilla, Some(arena)) => {
+            if steal_items {
+                fill_wave_sequential(
+                    ctx,
+                    arena,
+                    work,
+                    source.injector().map(|a| a.as_ref()),
+                )
+            } else {
+                work.iter()
+                    .map(|(id, idxs)| {
+                        (*id, fetch_vanilla_fused(ctx, arena, *id, idxs))
+                    })
+                    .collect()
+            }
+        }
+        (Engine::Threaded(pool), Some(arena)) => {
+            let registry = if steal_items { source.injector() } else { None };
+            fetch_threaded_fused_tasks(
+                ctx,
+                pool,
+                arena,
+                work,
+                registry.map(|a| a.as_ref()),
+            )
+        }
+        (Engine::Asyncio(rt, sem), Some(arena)) => {
+            let registry = if steal_items { source.injector() } else { None };
+            fetch_async_fused_tasks(
+                ctx,
+                rt,
+                sem,
+                arena,
+                work,
+                registry.map(|a| a.as_ref()),
+            )
+        }
+        // ---- legacy copying paths ------------------------------------
+        (Engine::Vanilla, None) => work
+            .iter()
+            .map(|(id, idxs)| {
+                let res = fetch_vanilla(ctx, *id, idxs)
+                    .and_then(|samples| gil.cpu(|| collate(*id, samples)));
+                (*id, res)
+            })
+            .collect(),
+        (Engine::Threaded(pool), None) => match fetch_threaded(ctx, pool, work) {
+            Ok(fetched) => fetched
+                .into_iter()
+                .map(|(id, samples)| (id, gil.cpu(|| collate(id, samples))))
+                .collect(),
+            Err(e) => {
+                // whole-wave failure: report it once per batch id
+                let msg = format!("{e:#}");
+                work.iter()
+                    .map(|(id, _)| (*id, Err(anyhow!("fetch wave failed: {msg}"))))
+                    .collect()
+            }
+        },
+        (Engine::Asyncio(rt, sem), None) => work
+            .iter()
+            .map(|(id, idxs)| {
+                let res = fetch_async(ctx, rt, sem, *id, idxs)
+                    .and_then(|samples| gil.cpu(|| collate(*id, samples)));
+                (*id, res)
+            })
+            .collect(),
+    }
+}
+
+/// Claim and fill one stealable tail item from a sibling's in-progress
+/// batch; false when nothing is stealable right now.
+fn steal_one_item(ctx: &FetchCtx, source: &WorkSource) -> bool {
+    let Some(inj) = source.injector() else { return false };
+    match inj.steal_item(ctx.worker_id) {
+        Some(claim) => {
+            ctx.run_claim(claim);
+            true
+        }
+        None => false,
     }
 }
 
@@ -257,6 +384,7 @@ mod tests {
             Arc::new(cfg),
             WorkSource::Static(assignments.into()),
             arena,
+            CreditGate::new(0),
             tx,
             std::time::Duration::ZERO,
         );
@@ -319,12 +447,42 @@ mod tests {
             Arc::new(DataloaderConfig { batch_size: 2, ..Default::default() }),
             WorkSource::Static((0..8).map(|i| (i, vec![i, i + 1])).collect()),
             None,
+            CreditGate::new(0),
             tx,
             std::time::Duration::ZERO,
         );
         let _first = rx.recv().unwrap();
         drop(rx);
         h.join().unwrap(); // must not hang
+    }
+
+    #[test]
+    fn credit_blocked_worker_proceeds_as_consumer_advances() {
+        // credit 1: the worker may only run one batch ahead of delivery
+        let (tx, rx) = mpsc::sync_channel(64);
+        let gate = CreditGate::new(1);
+        let h = spawn_worker(
+            0,
+            ds(16),
+            Recorder::new(),
+            Arc::new(DataloaderConfig { batch_size: 2, ..Default::default() }),
+            WorkSource::Static((0..4).map(|i| (i, vec![2 * i, 2 * i + 1])).collect()),
+            None,
+            gate.clone(),
+            tx,
+            std::time::Duration::ZERO,
+        );
+        let mut got = Vec::new();
+        for expect in 0..4usize {
+            let WorkerMsg::Batch(b) = rx.recv().unwrap() else {
+                panic!("batch {expect} failed");
+            };
+            assert_eq!(b.id, expect);
+            got.push(b);
+            gate.advance(expect + 1); // consumer delivered it in order
+        }
+        h.join().unwrap();
+        assert_eq!(got.len(), 4);
     }
 
     #[test]
@@ -363,6 +521,7 @@ mod tests {
             cfg.clone(),
             WorkSource::Stealing(inj.clone()),
             None,
+            CreditGate::new(0),
             tx.clone(),
             std::time::Duration::ZERO,
         );
@@ -373,6 +532,7 @@ mod tests {
             cfg,
             WorkSource::Stealing(inj),
             None,
+            CreditGate::new(0),
             tx,
             std::time::Duration::ZERO,
         );
@@ -386,6 +546,55 @@ mod tests {
             got.iter().flat_map(|b| b.indices.iter().copied()).collect();
         seen.sort_unstable();
         assert_eq!(seen, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn item_stealing_workers_fill_each_others_batches() {
+        // two item-steal workers over one injector: full coverage, every
+        // batch published exactly once by its owner
+        let plan: Vec<Vec<usize>> = (0..6).map(|b| vec![2 * b, 2 * b + 1]).collect();
+        let inj = Arc::new(BatchInjector::new(plan));
+        let (tx, rx) = mpsc::sync_channel(64);
+        let cfg = Arc::new(DataloaderConfig {
+            batch_size: 2,
+            steal_items: true,
+            work_stealing: true,
+            ..Default::default()
+        });
+        let dataset = ds(16);
+        let arena = BatchArena::new(16, 2, 8);
+        let h1 = spawn_worker(
+            0,
+            dataset.clone(),
+            Recorder::new(),
+            cfg.clone(),
+            WorkSource::Stealing(inj.clone()),
+            Some(arena.clone()),
+            CreditGate::new(0),
+            tx.clone(),
+            std::time::Duration::ZERO,
+        );
+        let h2 = spawn_worker(
+            1,
+            dataset,
+            Recorder::new(),
+            cfg,
+            WorkSource::Stealing(inj.clone()),
+            Some(arena),
+            CreditGate::new(0),
+            tx,
+            std::time::Duration::ZERO,
+        );
+        let got = batches_of(rx);
+        h1.join().unwrap();
+        h2.join().unwrap();
+        let mut ids: Vec<usize> = got.iter().map(|b| b.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        for b in &got {
+            assert_eq!(b.indices, vec![2 * b.id, 2 * b.id + 1]);
+        }
+        assert_eq!(inj.active_tasks(), 0, "steal registry must drain");
     }
 
     #[test]
@@ -408,6 +617,7 @@ mod tests {
                     vec![(0, vec![0, 1, 2, 3]), (1, vec![4, 5, 6, 7])].into(),
                 ),
                 arena,
+                CreditGate::new(0),
                 tx,
                 std::time::Duration::ZERO,
             );

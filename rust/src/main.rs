@@ -137,6 +137,12 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         prefetch_policy: cfg.loader.prefetch_policy,
         arena_slabs: cfg.loader.arena_slabs,
         work_stealing: cfg.loader.work_stealing,
+        steal_items: cfg.loader.steal_items,
+        consumer_credit: cfg.loader.consumer_credit,
+        // the rig pairs pinning with the spawn start method itself
+        // (torch's rule), so pass the raw knob — `pin_memory=true`
+        // must pin, not silently no-op under the default fork
+        pin_memory: cfg.loader.pin_memory,
         lazy_init: cfg.loader.lazy_init,
         runtime: cfg.loader.runtime,
         trainer: cfg.trainer.kind,
@@ -236,6 +242,9 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         prefetch_policy: cdl::prefetch::CachePolicy::Lru,
         arena_slabs: 0,
         work_stealing: false,
+        steal_items: false,
+        consumer_credit: 0,
+        pin_memory: false,
         lazy_init: true,
         runtime: cdl::gil::Runtime::Native,
         trainer: trainer::TrainerKind::Torch,

@@ -356,6 +356,65 @@ impl ObjectStore for PrefetchStore {
         })
     }
 
+    fn get_into(&self, key: &str, out: &mut [u8]) -> Result<usize> {
+        let sh = &self.shared;
+        sh.counters.gets.fetch_add(1, Ordering::Relaxed);
+
+        let mut st = sh.state.lock().unwrap();
+        Self::advance_cursor(&mut st, key);
+        // hot hit (or an in-flight speculative fetch about to become
+        // one): serve by copy-out of the tier's shared Bytes
+        let hit = if let Some(hit) = st.hot.get(key) {
+            sh.counters.hot_hits.fetch_add(1, Ordering::Relaxed);
+            Some(hit)
+        } else if st.inflight.contains(key) {
+            while st.inflight.contains(key) && !st.shutdown {
+                st = sh.cv.wait(st).unwrap();
+            }
+            let hit = st.hot.peek(key);
+            if hit.is_some() {
+                sh.counters.inflight_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            hit
+        } else {
+            None
+        };
+        if let Some(hit) = hit {
+            drop(st);
+            sh.cv.notify_all(); // cursor moved: window may slide
+            let n = hit.len();
+            if n <= out.len() {
+                out[..n].copy_from_slice(&hit);
+                self.served(&hit);
+            }
+            return Ok(n);
+        }
+        // demand miss: delegate straight down into the caller's buffer.
+        // No hot-tier fill (that would need an owned copy — the exact
+        // allocation this path removes); the speculative engine and the
+        // `get` path remain the tier's admission routes.
+        sh.counters.demand_misses.fetch_add(1, Ordering::Relaxed);
+        st.pending_demand += 1; // preempts speculative issuance
+        drop(st);
+        let guard = DemandGuard { sh };
+        let res = sh.inner.get_into(key, out);
+        drop(guard); // reopen the speculation gate (+ notify)
+        if let Ok(n) = &res {
+            if *n <= out.len() {
+                sh.counters.bytes.fetch_add(*n as u64, Ordering::Relaxed);
+            }
+        }
+        res
+    }
+
+    fn native_get_into(&self) -> bool {
+        // deliberately NOT forwarded (like `VarnishCache`): demand
+        // misses on the `get_into` path skip hot-tier admission, so a
+        // dataset steered through it would only ever warm the tier via
+        // speculation. The `get` path keeps demand admission.
+        false
+    }
+
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
         self.shared.inner.put(key, data)?;
         // best-effort invalidation of any speculative/hot copy (an

@@ -105,6 +105,36 @@ impl ObjectStore for VarnishCache {
         })
     }
 
+    fn get_into(&self, key: &str, out: &mut [u8]) -> Result<usize> {
+        // hit: copy out of the cached Bytes (the core still counts it)
+        if let Some(hit) = self.lookup(key) {
+            let n = hit.len();
+            if n <= out.len() {
+                out[..n].copy_from_slice(&hit);
+                self.stats.record_get(n as u64);
+            }
+            return Ok(n);
+        }
+        // miss: delegate straight down — no cache fill (filling would
+        // need an owned copy of the caller's buffer, re-adding exactly
+        // the allocation this path removes). The `get` path remains the
+        // admission route.
+        let n = self.inner.get_into(key, out)?;
+        if n <= out.len() {
+            self.stats.record_get(n as u64);
+        }
+        Ok(n)
+    }
+
+    fn native_get_into(&self) -> bool {
+        // deliberately NOT forwarded: advertising the inner store's
+        // native path would steer datasets through `get_into`, whose
+        // misses bypass admission — the cache would never warm. Routing
+        // reads through `get` keeps admission; hits are shared-Bytes
+        // serves either way.
+        false
+    }
+
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
         self.inner.put(key, data)?;
         // best-effort invalidation: drop any cached copy so later reads

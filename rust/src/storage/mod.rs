@@ -59,6 +59,38 @@ pub trait ObjectStore: Send + Sync {
         Box::pin(async move { self.get(key) })
     }
 
+    /// Zero-copy read: fetch `key` into the caller's buffer, returning
+    /// the object's **total size** in bytes. When the returned size
+    /// exceeds `out.len()` the buffer was too small and nothing was
+    /// written — the caller grows the buffer and retries (see
+    /// [`get_into_vec`], which does exactly that). This snprintf-style
+    /// contract keeps the signature allocation-free in both directions.
+    ///
+    /// The default falls back to [`ObjectStore::get`] plus one copy, so
+    /// every store works; stores with a native scratch path
+    /// ([`DirStore`]) read straight into `out` with no intermediate
+    /// `Vec`, and facades ([`VarnishCache`], the prefetch store) serve
+    /// hits by copy-out and delegate misses downward.
+    fn get_into(&self, key: &str, out: &mut [u8]) -> Result<usize> {
+        let data = self.get(key)?;
+        let n = data.len();
+        if n <= out.len() {
+            out[..n].copy_from_slice(&data);
+        }
+        Ok(n)
+    }
+
+    /// Whether this store (or, for facades, the store at the bottom of
+    /// the stack) implements [`ObjectStore::get_into`] natively — i.e.
+    /// reading into a caller buffer is *cheaper* than [`ObjectStore::get`],
+    /// not just a copy of it. Datasets use this to pick their raw-byte
+    /// path: shared-`Bytes` stores (`MemStore` and everything simulated
+    /// on top of it) already serve `get` without allocating, so forcing
+    /// them through `get_into` would add a copy for nothing.
+    fn native_get_into(&self) -> bool {
+        false
+    }
+
     /// Store an object (used by dataset generation and tests).
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()>;
 
@@ -85,6 +117,29 @@ pub trait ObjectStore: Send + Sync {
     /// Transfer statistics since creation.
     fn stats(&self) -> StoreStats {
         StoreStats::default()
+    }
+}
+
+/// Drive [`ObjectStore::get_into`] against a growable scratch buffer:
+/// grow-and-retry until the object fits, returning its size. `buf` keeps
+/// its (largest-seen) capacity across calls, so a reused scratch reaches
+/// a zero-allocation steady state after the largest object in the
+/// working set has been read once.
+pub fn get_into_vec(
+    store: &dyn ObjectStore,
+    key: &str,
+    buf: &mut Vec<u8>,
+) -> Result<usize> {
+    const MIN_SCRATCH: usize = 64 << 10;
+    if buf.is_empty() {
+        buf.resize(MIN_SCRATCH, 0);
+    }
+    loop {
+        let need = store.get_into(key, buf)?;
+        if need <= buf.len() {
+            return Ok(need);
+        }
+        buf.resize(need, 0);
     }
 }
 
@@ -156,6 +211,39 @@ mod tests {
         assert!(s.contains("present"));
         assert!(!s.contains("absent"));
         s.hint_order(0, &["present".to_string()]); // default: ignored
+    }
+
+    #[test]
+    fn default_get_into_copies_out_or_reports_size() {
+        let store = MemStore::new("m");
+        store.put("k", vec![5u8; 40]).unwrap();
+        let mut big = vec![0u8; 64];
+        assert_eq!(store.get_into("k", &mut big).unwrap(), 40);
+        assert!(big[..40].iter().all(|&b| b == 5));
+        assert_eq!(big[40], 0);
+        // too-small buffer: size reported, nothing written
+        let mut small = vec![9u8; 8];
+        assert_eq!(store.get_into("k", &mut small).unwrap(), 40);
+        assert!(small.iter().all(|&b| b == 9));
+        assert!(store.get_into("ghost", &mut big).is_err());
+        assert!(!store.native_get_into());
+    }
+
+    #[test]
+    fn get_into_vec_grows_to_fit() {
+        let store = MemStore::new("m");
+        store.put("big", vec![3u8; 200 << 10]).unwrap();
+        store.put("small", vec![4u8; 16]).unwrap();
+        let mut buf = Vec::new();
+        let n = get_into_vec(&store, "big", &mut buf).unwrap();
+        assert_eq!(n, 200 << 10);
+        assert!(buf[..n].iter().all(|&b| b == 3));
+        let cap = buf.capacity();
+        // smaller object reuses the grown scratch without shrinking it
+        let n = get_into_vec(&store, "small", &mut buf).unwrap();
+        assert_eq!(n, 16);
+        assert!(buf[..16].iter().all(|&b| b == 4));
+        assert_eq!(buf.capacity(), cap);
     }
 
     #[test]

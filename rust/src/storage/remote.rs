@@ -224,6 +224,25 @@ impl ObjectStore for SimRemoteStore {
         })
     }
 
+    fn get_into(&self, key: &str, out: &mut [u8]) -> Result<usize> {
+        let _permit = asyncrt::block_on(self.conns.acquire());
+        let n = self.inner.get_into(key, out)?;
+        if n > out.len() {
+            // size probe (buffer too small, nothing transferred): no
+            // latency draw, like `contains` — the caller retries with a
+            // grown buffer and pays the service time then
+            return Ok(n);
+        }
+        let service = self.plan(n as u64);
+        std::thread::sleep(service);
+        self.record(n as u64, service);
+        Ok(n)
+    }
+
+    fn native_get_into(&self) -> bool {
+        self.inner.native_get_into()
+    }
+
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
         self.inner.put(key, data)
     }

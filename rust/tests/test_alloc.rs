@@ -1,11 +1,13 @@
 //! Steady-state allocation regression for the fused hot path: once the
 //! arena pool, the CRC tables, and the augment scratch are warm, one
 //! full checkout → parse → augment-into → finish → recycle cycle
-//! performs **zero** heap allocations.
+//! performs **zero** heap allocations — and the `get_into` read path
+//! over a real-file `DirStore` holds the same bar end to end (pread
+//! into a reused scratch, decode straight into the slot).
 //!
-//! This file deliberately contains a single test: the assertion reads
-//! the *per-thread* counters of the crate's counting global allocator,
-//! and a quiet binary keeps the measured thread unambiguous.
+//! The assertions read the *per-thread* counters of the crate's
+//! counting global allocator, so each test measures only its own
+//! thread and stays immune to the parallel test harness.
 
 use std::sync::Arc;
 
@@ -13,8 +15,9 @@ use cdl::data::augment::{Augment, AugmentConfig};
 use cdl::data::simg::SimgRef;
 use cdl::data::synth::{generate_corpus, CorpusSpec};
 use cdl::dataloader::BatchArena;
-use cdl::dataset::ItemMeta;
-use cdl::storage::{Bytes, MemStore, ObjectStore};
+use cdl::dataset::{Dataset, ImageFolderDataset, ItemMeta};
+use cdl::gil::Gil;
+use cdl::storage::{Bytes, DirStore, MemStore, ObjectStore};
 use cdl::util::alloc;
 
 #[test]
@@ -74,4 +77,52 @@ fn arena_assembly_is_zero_alloc_in_steady_state() {
     assert_eq!(stats.checkouts, 19, "{stats:?}");
     assert_eq!(stats.fresh, 1, "{stats:?}");
     assert_eq!(stats.reused, 18, "{stats:?}");
+}
+
+#[cfg(unix)]
+#[test]
+fn dirstore_get_into_item_path_is_zero_alloc_in_steady_state() {
+    // the full per-item read path over real files: cached-handle pread
+    // into the thread's raw scratch, zero-copy SIMG parse, augment into
+    // the slot — no Vec per read, no allocation once handles, scratch,
+    // and LUTs are warm
+    const N: usize = 8;
+    const CROP: usize = 24;
+    let root = std::env::temp_dir().join(format!(
+        "cdl-alloc-getinto-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let store: Arc<dyn ObjectStore> = Arc::new(DirStore::open(&root).unwrap());
+    generate_corpus(&store, &CorpusSpec::tiny(N)).unwrap();
+    let ds = ImageFolderDataset::new(
+        store,
+        AugmentConfig { crop: CROP, ..Default::default() },
+    );
+    let gil = Gil::native();
+    let mut slot = vec![0u8; CROP * CROP * 3];
+
+    // warm-up: handle cache, raw scratch growth, CRC tables, column LUT
+    for _ in 0..2 {
+        for index in 0..N {
+            ds.get_item_into(index, &gil, &mut slot).unwrap();
+        }
+    }
+
+    let before = alloc::thread_counters();
+    for _ in 0..4 {
+        for index in 0..N {
+            ds.get_item_into(index, &gil, &mut slot).unwrap();
+        }
+    }
+    let delta = alloc::thread_counters().since(before);
+    assert_eq!(
+        delta.allocs, 0,
+        "steady-state get_into item path allocated: {delta:?}"
+    );
+    assert_eq!(
+        delta.frees, 0,
+        "steady-state get_into item path freed: {delta:?}"
+    );
+    let _ = std::fs::remove_dir_all(&root);
 }

@@ -1,7 +1,10 @@
 //! Byte-identical equivalence of the fused arena assembly against the
 //! legacy copy path: same images, labels, indices, and raw-byte counts
-//! for every fetcher implementation, both dispatch modes, partial
-//! batches, and recycled slabs across epochs.
+//! for every fetcher implementation, every dispatch mode (static,
+//! batch-steal, item-steal), the `get_into` scratch-read path, partial
+//! batches, and recycled slabs across epochs. Plus the consumer-credit
+//! stress: under an adversarial straggler schedule the reorder buffer
+//! never exceeds `consumer_credit`.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -10,7 +13,7 @@ use cdl::data::synth::{generate_corpus, CorpusSpec};
 use cdl::data::AugmentConfig;
 use cdl::dataloader::{Batch, Dataloader, DataloaderConfig, FetchImpl};
 use cdl::dataset::{Dataset, ImageFolderDataset};
-use cdl::storage::{MemStore, ObjectStore};
+use cdl::storage::{Bytes, MemStore, ObjectStore, StoreStats};
 use cdl::telemetry::Recorder;
 
 const ITEMS: usize = 37; // not a multiple of the batch size: partial tail
@@ -92,6 +95,164 @@ fn recycled_slabs_stay_byte_identical_across_epochs() {
     let stats = fused_dl.arena().unwrap().stats();
     assert!(stats.reused > 0, "{stats:?}");
     assert_eq!(stats.checkouts, 15, "{stats:?}"); // 5 batches × 3 epochs
+}
+
+#[test]
+fn item_steal_assembly_is_byte_identical_for_every_fetcher() {
+    // item-granular dispatch (slots filled by whichever worker claims
+    // them) must not change a single byte, label, index, or raw count
+    for fetch in FetchImpl::all() {
+        let legacy: Vec<Batch> = loader(fetch, 0, false).epoch(0).collect();
+        let dl = Dataloader::new(
+            dataset(),
+            DataloaderConfig {
+                batch_size: BATCH,
+                num_workers: 3,
+                fetch_impl: fetch,
+                num_fetch_workers: 4,
+                arena_slabs: 12,
+                work_stealing: true,
+                steal_items: true,
+                consumer_credit: 3,
+                spawn_cost_override: Some(Duration::ZERO),
+                ..Default::default()
+            },
+            Recorder::new(),
+        );
+        let fused: Vec<Batch> = dl.epoch(0).collect();
+        assert!(fused.iter().all(|b| b.is_pooled()), "{}", fetch.label());
+        assert_batches_identical(&legacy, &fused, &format!("item-steal {}", fetch.label()));
+    }
+}
+
+#[test]
+fn dirstore_get_into_pipeline_matches_memstore_legacy() {
+    // same corpus spec written to real files: the fused loader reads it
+    // through the zero-copy get_into path and must produce the same
+    // batches as the legacy MemStore loader
+    let root = std::env::temp_dir().join(format!(
+        "cdl-hotpath-dirstore-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let dir: Arc<dyn ObjectStore> =
+        Arc::new(cdl::storage::DirStore::open(&root).unwrap());
+    generate_corpus(&dir, &CorpusSpec::tiny(ITEMS)).unwrap();
+    let ds: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
+        dir,
+        AugmentConfig { crop: 16, ..Default::default() },
+    ));
+    let legacy: Vec<Batch> = loader(FetchImpl::Threaded, 0, false).epoch(0).collect();
+    let dl = Dataloader::new(
+        ds,
+        DataloaderConfig {
+            batch_size: BATCH,
+            num_workers: 3,
+            fetch_impl: FetchImpl::Threaded,
+            num_fetch_workers: 4,
+            arena_slabs: 12,
+            work_stealing: true,
+            spawn_cost_override: Some(Duration::ZERO),
+            ..Default::default()
+        },
+        Recorder::new(),
+    );
+    let fused: Vec<Batch> = dl.epoch(0).collect();
+    assert_batches_identical(&legacy, &fused, "dirstore get_into");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Store wrapper that stalls chosen keys — an adversarial straggler
+/// schedule for the credit/backpressure stress below.
+struct StragglerStore {
+    inner: Arc<dyn ObjectStore>,
+    /// stall every key whose (sorted) position is ≡ 0 mod this
+    every: usize,
+    delay: Duration,
+    slow_keys: Vec<String>,
+}
+
+impl StragglerStore {
+    fn new(inner: Arc<dyn ObjectStore>, every: usize, delay: Duration) -> StragglerStore {
+        let slow_keys = inner.keys().into_iter().step_by(every).collect();
+        StragglerStore { inner, every, delay, slow_keys }
+    }
+}
+
+impl ObjectStore for StragglerStore {
+    fn get(&self, key: &str) -> anyhow::Result<Bytes> {
+        if self.slow_keys.iter().any(|k| k == key) {
+            std::thread::sleep(self.delay);
+        }
+        self.inner.get(key)
+    }
+
+    fn put(&self, key: &str, data: Vec<u8>) -> anyhow::Result<()> {
+        self.inner.put(key, data)
+    }
+
+    fn keys(&self) -> Vec<String> {
+        self.inner.keys()
+    }
+
+    fn label(&self) -> String {
+        format!("straggler(1/{} × {:?})", self.every, self.delay)
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.inner.stats()
+    }
+}
+
+#[test]
+fn reorder_buffer_never_exceeds_credit_under_adversarial_stragglers() {
+    const CREDIT: usize = 2;
+    let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+    generate_corpus(&mem, &CorpusSpec::tiny(ITEMS)).unwrap();
+    let slow: Arc<dyn ObjectStore> =
+        Arc::new(StragglerStore::new(mem, 7, Duration::from_millis(25)));
+    let ds: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
+        slow,
+        AugmentConfig { crop: 16, ..Default::default() },
+    ));
+    for fetch in FetchImpl::all() {
+        for (work_stealing, steal_items) in [(false, false), (true, false), (true, true)] {
+            let dl = Dataloader::new(
+                ds.clone(),
+                DataloaderConfig {
+                    batch_size: BATCH,
+                    num_workers: 3,
+                    fetch_impl: fetch,
+                    num_fetch_workers: 4,
+                    arena_slabs: 10,
+                    work_stealing,
+                    steal_items,
+                    consumer_credit: CREDIT,
+                    spawn_cost_override: Some(Duration::ZERO),
+                    ..Default::default()
+                },
+                Recorder::new(),
+            );
+            let ctx = format!(
+                "{} stealing={work_stealing} items={steal_items}",
+                fetch.label()
+            );
+            let mut it = dl.epoch(0);
+            let mut ids = Vec::new();
+            let mut seen = Vec::new();
+            for b in it.by_ref() {
+                ids.push(b.id);
+                seen.extend(b.indices.iter().copied());
+                b.recycle();
+            }
+            let hwm = it.reorder_high_water();
+            drop(it);
+            assert_eq!(ids, (0..5).collect::<Vec<_>>(), "{ctx}");
+            seen.sort_unstable();
+            assert_eq!(seen, (0..ITEMS).collect::<Vec<_>>(), "{ctx}");
+            assert!(hwm <= CREDIT, "{ctx}: reorder hwm {hwm} > credit {CREDIT}");
+        }
+    }
 }
 
 #[test]
