@@ -17,6 +17,13 @@
 //!   and items stolen per epoch. Item stealing lets idle workers finish
 //!   a straggling batch's tail, cutting the p99 beyond batch-level
 //!   stealing (the MinatoLoader argument).
+//! * **Epoch boundary** — the same high-latency profiles over three
+//!   epochs, drained (`epoch_pipeline=0`) vs pipelined (`=1`): the
+//!   inter-epoch gap (last batch of N → first batch of N+1) and the
+//!   workers' cumulative idle time at the seam. Persistent workers plus
+//!   a pre-published next-epoch plan keep the fetch pipeline warm
+//!   across the boundary; the table *fails* if the pipelined gap is not
+//!   strictly smaller than the drained gap on s3.
 //! * **Pinned slabs** — `pin_memory` over an arena hands out page-locked
 //!   slabs: batches are born pinned, skip the staging copy, and ride the
 //!   ~2× pinned-bandwidth `to_device` path. Reported as the
@@ -45,6 +52,8 @@ const STEAL_BATCH: usize = 16;
 const STEAL_PROFILES: [&str; 3] = ["s3", "ceph_os", "gluster_fs"];
 /// Reorder-buffer bound used by every dispatch-tail cell.
 pub const TAIL_CREDIT: usize = 6;
+/// Epochs per epoch-boundary cell (gaps are measured at the seams).
+pub const BOUNDARY_EPOCHS: usize = 3;
 
 /// One measured epoch of a built rig: per-batch consumer latencies,
 /// wall seconds, allocation-counter delta, and the tail-taming gauges.
@@ -246,6 +255,107 @@ pub fn tail_table(scale: Scale) -> Result<(Table, f64, f64)> {
     Ok((t, ceph_batch_p99, ceph_item_p99))
 }
 
+fn boundary_spec(storage: &'static str, pipelined: bool, scale: Scale) -> RigSpec {
+    let mut spec = tail_spec(storage, Dispatch::ItemSteal, scale);
+    spec.items = scale.items(192);
+    spec.epoch_pipeline = usize::from(pipelined);
+    spec
+}
+
+/// The epoch-boundary table: inter-epoch gap (last batch of epoch N →
+/// first batch of epoch N+1) and cumulative worker idle time at the
+/// seam, drained (`epoch_pipeline = 0`) vs pipelined (`= 1`), across
+/// the three high-latency profiles. Returns the table plus the s3
+/// (drained gap, pipelined gap) pair; **fails** if the pipelined gap is
+/// not strictly smaller than the drained gap on s3 — the PR's
+/// acceptance bar, enforced by the CI `reproduce hotpath` smoke.
+pub fn boundary_table(scale: Scale) -> Result<(Table, f64, f64)> {
+    let mut t = Table::new(
+        "Hot path — epoch boundary: drained vs pipelined scheduling \
+         (threaded fetcher, item-steal, credit-bounded, 3 epochs)",
+        &[
+            "storage",
+            "mode",
+            "total s",
+            "mean gap ms",
+            "max gap ms",
+            "seam idle ms",
+            "plans",
+        ],
+    );
+    let mut s3_drained_gap = f64::NAN;
+    let mut s3_pipelined_gap = f64::NAN;
+    for storage in STEAL_PROFILES {
+        for pipelined in [false, true] {
+            let spec = boundary_spec(storage, pipelined, scale);
+            let rig = rig::build(&spec)?;
+            let t0 = Instant::now();
+            let mut gaps: Vec<f64> = Vec::new();
+            let mut last_batch_at: Option<Instant> = None;
+            for epoch in 0..BOUNDARY_EPOCHS {
+                let mut it = rig.dataloader.epoch(epoch);
+                let mut first = true;
+                loop {
+                    let Some(b) = it.next() else { break };
+                    if first {
+                        if let Some(prev) = last_batch_at {
+                            gaps.push(prev.elapsed().as_secs_f64());
+                        }
+                        first = false;
+                    }
+                    last_batch_at = Some(Instant::now());
+                    b.recycle();
+                }
+                if it.reorder_high_water() > TAIL_CREDIT {
+                    anyhow::bail!(
+                        "cross-epoch reorder-buffer regression: {storage} \
+                         pipelined={pipelined} reached {} with \
+                         consumer_credit={TAIL_CREDIT}",
+                        it.reorder_high_water()
+                    );
+                }
+            }
+            let total_s = t0.elapsed().as_secs_f64();
+            if gaps.is_empty() {
+                anyhow::bail!(
+                    "boundary cell {storage}/pipelined={pipelined} measured \
+                     no epoch seams"
+                );
+            }
+            let mean_gap = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let max_gap = gaps.iter().cloned().fold(f64::MIN, f64::max);
+            let idle = rig.dataloader.seam_idle().as_secs_f64();
+            let plans = rig.dataloader.plans_published();
+            if storage == "s3" {
+                if pipelined {
+                    s3_pipelined_gap = mean_gap;
+                } else {
+                    s3_drained_gap = mean_gap;
+                }
+            }
+            t.row(&[
+                storage.to_string(),
+                if pipelined { "pipelined" } else { "drained" }.to_string(),
+                num(total_s, 2),
+                num(mean_gap * 1e3, 2),
+                num(max_gap * 1e3, 2),
+                num(idle * 1e3, 1),
+                plans.to_string(),
+            ]);
+        }
+    }
+    if !(s3_pipelined_gap < s3_drained_gap) {
+        anyhow::bail!(
+            "epoch-boundary regression: pipelined inter-epoch gap \
+             {:.2} ms is not strictly smaller than the drained gap \
+             {:.2} ms on the s3 profile",
+            s3_pipelined_gap * 1e3,
+            s3_drained_gap * 1e3,
+        );
+    }
+    Ok((t, s3_drained_gap, s3_pipelined_gap))
+}
+
 fn pinned_spec(pinned: bool, scale: Scale) -> RigSpec {
     let mut spec = RigSpec::quick("mem", scale.latency);
     spec.items = scale.items(192);
@@ -393,6 +503,14 @@ pub fn hotpath(scale: Scale) -> Result<()> {
          item-steal {:.1} ms (reorder buffer ≤ {TAIL_CREDIT} everywhere)",
         batch_p99 * 1e3,
         item_p99 * 1e3,
+    );
+    let (boundary, drained_gap, pipelined_gap) = boundary_table(scale)?;
+    emit("hotpath", &boundary)?;
+    println!(
+        "  s3 inter-epoch gap: drained {:.2} ms vs pipelined {:.2} ms \
+         (persistent workers, epoch_pipeline=1)",
+        drained_gap * 1e3,
+        pipelined_gap * 1e3,
     );
     let (pin, pageable_ms, pinned_ms) = pinned_table(scale)?;
     emit("hotpath", &pin)?;

@@ -49,6 +49,10 @@ pub struct RigSpec {
     pub steal_items: bool,
     /// reorder-buffer bound in batches (0 = unbounded)
     pub consumer_credit: usize,
+    /// epochs published ahead of the consumer (0 = legacy drain):
+    /// persistent workers start the next epoch's batches while the
+    /// current tail delivers
+    pub epoch_pipeline: usize,
     /// page-locked staging: implies the spawn start method (torch's
     /// rule), and with an arena the slabs themselves are pinned
     pub pin_memory: bool,
@@ -82,6 +86,7 @@ impl RigSpec {
             work_stealing: false,
             steal_items: false,
             consumer_credit: 0,
+            epoch_pipeline: 0,
             pin_memory: false,
             lazy_init: true,
             runtime: gil::Runtime::Python,
@@ -214,6 +219,7 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
         work_stealing: spec.work_stealing,
         steal_items: spec.steal_items,
         consumer_credit: spec.consumer_credit,
+        epoch_pipeline: spec.epoch_pipeline,
         pin_memory: spec.pin_memory,
         // pinning needs CUDA init, which fork forbids (torch rule)
         start_method: if spec.pin_memory {

@@ -15,6 +15,7 @@
 //! work_stealing = true      # shared batch injector instead of round-robin
 //! steal_items = true        # idle workers fill stragglers' tail items
 //! consumer_credit = 8       # reorder-buffer bound in batches (0 = unbounded)
+//! epoch_pipeline = 1        # epochs published ahead of the consumer (0 = drain)
 //! cache_bytes = 2147483648  # varnish cache capacity (0 = no cache)
 //! cache_policy = lru        # varnish eviction policy: lru | 2q | s3fifo
 //! trainer = torch
@@ -149,6 +150,7 @@ impl ExperimentConfig {
             "work_stealing" => self.loader.work_stealing = value.parse()?,
             "steal_items" => self.loader.steal_items = value.parse()?,
             "consumer_credit" => self.loader.consumer_credit = value.parse()?,
+            "epoch_pipeline" => self.loader.epoch_pipeline = value.parse()?,
             "pin_memory" => self.loader.pin_memory = value.parse()?,
             "start_method" => {
                 self.loader.start_method = match value {
@@ -267,6 +269,15 @@ mod tests {
         assert_eq!(cfg.loader.consumer_credit, 6);
         assert!(cfg.set("steal_items", "2").is_err());
         assert!(cfg.set("consumer_credit", "x").is_err());
+    }
+
+    #[test]
+    fn epoch_pipeline_knob_parses() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.loader.epoch_pipeline, 0);
+        cfg.apply_text("epoch_pipeline = 2\n").unwrap();
+        assert_eq!(cfg.loader.epoch_pipeline, 2);
+        assert!(cfg.set("epoch_pipeline", "deep").is_err());
     }
 
     #[test]

@@ -73,6 +73,9 @@ struct SlabState {
     /// checkout generation: bumped on every install, snapshotted by the
     /// builder, fused into the claim words above
     generation: AtomicU64,
+    /// sampler epoch of the current checkout (diagnostics: a stale fill
+    /// across an epoch seam names both sides)
+    epoch: AtomicUsize,
     /// slot count of the current checkout (0 = not checked out)
     n: AtomicUsize,
     /// bytes per slot of the current checkout
@@ -91,6 +94,7 @@ impl SlabState {
             filled: AtomicUsize::new(0),
             raw_bytes: AtomicU64::new(0),
             generation: AtomicU64::new(0),
+            epoch: AtomicUsize::new(0),
             n: AtomicUsize::new(0),
             per: AtomicUsize::new(0),
             pixels: AtomicPtr::new(std::ptr::null_mut()),
@@ -102,7 +106,8 @@ impl SlabState {
 
     /// Publish write windows into `buf` for an `n`-item batch. Runs with
     /// exclusive access (checkout path, before any filler exists).
-    fn install(&self, buf: &mut SlabBuf, n: usize, per: usize) {
+    fn install(&self, buf: &mut SlabBuf, n: usize, per: usize, epoch: usize) {
+        self.epoch.store(epoch, Ordering::Relaxed);
         let gen = self.generation.fetch_add(1, Ordering::Relaxed) + 1;
         let unclaimed = gen.wrapping_mul(2);
         for c in self.claimed.iter() {
@@ -256,6 +261,23 @@ impl BatchArena {
     /// allocation): the builder and the batch it produces both keep a
     /// handle for the recycle leg.
     pub fn checkout(self: Arc<Self>, id: usize, n: usize) -> BatchBuilder {
+        self.checkout_tagged(id, id, 0, n)
+    }
+
+    /// [`BatchArena::checkout`] for the generation-tagged batch stream
+    /// (cross-epoch pipelined loader): `id` is the consumer-visible
+    /// per-epoch batch id, `seq` the continuous global dispatch
+    /// sequence, and `epoch` the sampler epoch — the slab's claim-word
+    /// generation plus the recorded epoch make an epoch-N straggler's
+    /// stale fill into an epoch-N+1 re-checkout a clean per-batch error
+    /// that names both sides of the seam.
+    pub fn checkout_tagged(
+        self: Arc<Self>,
+        id: usize,
+        seq: usize,
+        epoch: usize,
+        n: usize,
+    ) -> BatchBuilder {
         self.stats.checkouts.fetch_add(1, Ordering::Relaxed);
         let (state, buf) = {
             let mut pool = self.pool.lock().unwrap();
@@ -293,7 +315,7 @@ impl BatchArena {
         buf.pixels.resize(n * self.per, 0);
         buf.labels.resize(n, 0);
         buf.indices.resize(n, 0);
-        state.install(&mut buf, n, self.per);
+        state.install(&mut buf, n, self.per, epoch);
         *state.owned.lock().unwrap() = Some(buf);
         let generation = state.generation.load(Ordering::Relaxed);
         BatchBuilder {
@@ -301,6 +323,8 @@ impl BatchArena {
             state,
             generation,
             id,
+            seq,
+            epoch,
             n,
             primary: true,
         }
@@ -352,6 +376,11 @@ pub struct BatchBuilder {
     /// checkout generation this builder belongs to (see SlabState)
     generation: u64,
     id: usize,
+    /// global dispatch sequence of this checkout (== `id` for untagged
+    /// checkouts)
+    seq: usize,
+    /// sampler epoch of this checkout
+    epoch: usize,
     n: usize,
     primary: bool,
 }
@@ -363,6 +392,8 @@ impl Clone for BatchBuilder {
             state: self.state.clone(),
             generation: self.generation,
             id: self.id,
+            seq: self.seq,
+            epoch: self.epoch,
             n: self.n,
             primary: false,
         }
@@ -372,6 +403,16 @@ impl Clone for BatchBuilder {
 impl BatchBuilder {
     pub fn id(&self) -> usize {
         self.id
+    }
+
+    /// Global dispatch sequence number of this checkout.
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    /// Sampler epoch this checkout belongs to.
+    pub fn epoch(&self) -> usize {
+        self.epoch
     }
 
     /// Item count of this batch.
@@ -409,7 +450,13 @@ impl BatchBuilder {
             Ok(_) => {}
             Err(cur) if cur == unclaimed + 1 => bail!("slot {pos} filled twice"),
             Err(_) => {
-                bail!("stale builder: slab was re-checked out for another batch")
+                bail!(
+                    "stale builder (batch {}, epoch {}): slab was re-checked \
+                     out for another batch (now epoch {})",
+                    self.id,
+                    self.epoch,
+                    st.epoch.load(Ordering::Relaxed)
+                )
             }
         }
         let per = st.per.load(Ordering::Relaxed);

@@ -28,15 +28,16 @@
 //! registers each in-progress batch so *other* workers' idle threads
 //! can claim its tail items.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{bail, Result};
 
 use super::arena::{BatchArena, BatchBuilder};
 use super::collate::{restore_order, Batch};
-use super::sampler::{BatchInjector, ItemClaim, ItemTask};
+use super::sampler::{BatchInjector, BatchTicket, ItemClaim, ItemTask};
 use crate::asyncrt;
 use crate::dataset::{copy_sample_into, Dataset, Sample};
 use crate::gil::Gil;
@@ -51,9 +52,12 @@ pub struct FetchCtx {
 }
 
 impl FetchCtx {
-    fn get_one(&self, batch_id: usize, index: usize) -> Result<Sample> {
+    fn get_one(&self, batch_id: usize, epoch: usize, index: usize) -> Result<Sample> {
         let t0 = self.recorder.now();
-        let s = self.dataset.get_item(index, &self.gil);
+        // the epoch travels with the call: under cross-epoch pipelining
+        // items of two adjacent epochs are in flight at once, so the
+        // dataset's global set_epoch state cannot disambiguate them
+        let s = self.dataset.get_item_at(index, epoch, &self.gil);
         self.recorder.record(
             names::GET_ITEM,
             self.worker_id,
@@ -71,12 +75,13 @@ impl FetchCtx {
         &self,
         builder: &BatchBuilder,
         batch_id: usize,
+        epoch: usize,
         pos: usize,
         index: usize,
     ) -> Result<()> {
         let t0 = self.recorder.now();
         let res = builder.fill(pos, index, |out| {
-            self.dataset.get_item_into(index, &self.gil, out)
+            self.dataset.get_item_into_at(index, epoch, &self.gil, out)
         });
         self.recorder.record(
             names::GET_ITEM,
@@ -90,11 +95,15 @@ impl FetchCtx {
 
     /// Execute one [`ItemClaim`]: decode the claimed item into its slot
     /// and report the outcome. This is the unit both wave-slice jobs and
-    /// cross-worker item thieves run.
+    /// cross-worker item thieves run — the task carries its epoch, so a
+    /// thief filling a next-epoch batch decodes with the right seed.
     pub fn run_claim(&self, claim: ItemClaim) {
+        let task = claim.task();
+        let (batch_id, epoch) = (task.batch_id(), task.epoch());
         let res = self.fill_one(
             claim.task().builder(),
-            claim.task().batch_id(),
+            batch_id,
+            epoch,
             claim.pos(),
             claim.index(),
         );
@@ -103,8 +112,13 @@ impl FetchCtx {
 }
 
 /// Sequential in-batch fetch (vanilla torch).
-pub fn fetch_vanilla(ctx: &FetchCtx, batch_id: usize, indices: &[usize]) -> Result<Vec<Sample>> {
-    indices.iter().map(|&i| ctx.get_one(batch_id, i)).collect()
+pub fn fetch_vanilla(
+    ctx: &FetchCtx,
+    epoch: usize,
+    batch_id: usize,
+    indices: &[usize],
+) -> Result<Vec<Sample>> {
+    indices.iter().map(|&i| ctx.get_one(batch_id, epoch, i)).collect()
 }
 
 /// Sequential fused fetch: assemble the batch in its arena slab with no
@@ -112,14 +126,15 @@ pub fn fetch_vanilla(ctx: &FetchCtx, batch_id: usize, indices: &[usize]) -> Resu
 pub fn fetch_vanilla_fused(
     ctx: &FetchCtx,
     arena: &Arc<BatchArena>,
-    batch_id: usize,
-    indices: &[usize],
+    ticket: &BatchTicket,
 ) -> Result<Batch> {
-    let builder = arena.clone().checkout(batch_id, indices.len());
-    for (pos, &index) in indices.iter().enumerate() {
+    let builder = arena
+        .clone()
+        .checkout_tagged(ticket.id, ticket.seq, ticket.epoch, ticket.indices.len());
+    for (pos, &index) in ticket.indices.iter().enumerate() {
         // on error the builder drops here and the slab returns to the
         // pool (the worker surfaces the error per batch)
-        ctx.fill_one(&builder, batch_id, pos, index)?;
+        ctx.fill_one(&builder, ticket.id, ticket.epoch, pos, index)?;
     }
     builder.finish()
 }
@@ -140,13 +155,18 @@ struct WaveEntry {
 fn wave_entries(
     ctx: &FetchCtx,
     arena: &Arc<BatchArena>,
-    work: &[(usize, Vec<usize>)],
+    work: &[BatchTicket],
     registry: Option<&BatchInjector>,
 ) -> Vec<WaveEntry> {
     work.iter()
-        .map(|(id, idxs)| {
-            let builder = arena.clone().checkout(*id, idxs.len());
-            let task = ItemTask::new(*id, ctx.worker_id, builder.clone(), idxs.clone());
+        .map(|ticket| {
+            let builder = arena.clone().checkout_tagged(
+                ticket.id,
+                ticket.seq,
+                ticket.epoch,
+                ticket.indices.len(),
+            );
+            let task = ItemTask::new(ticket, ctx.worker_id, builder.clone());
             if let Some(inj) = registry {
                 inj.register(task.clone());
             }
@@ -157,7 +177,8 @@ fn wave_entries(
 
 /// Settle every batch of the wave in order: wait until no fill is
 /// outstanding, withdraw it from the steal registry, then publish
-/// (finish) or fail it.
+/// (finish) or fail it. Results are keyed by global **seq** (the
+/// reorder-buffer key — unique across epochs, unlike the batch id).
 fn settle_wave(
     entries: Vec<WaveEntry>,
     registry: Option<&BatchInjector>,
@@ -167,18 +188,54 @@ fn settle_wave(
         .map(|WaveEntry { builder, task }| {
             let err = task.wait_settled();
             if let Some(inj) = registry {
-                inj.unregister(task.batch_id());
+                inj.unregister(task.seq());
             }
-            let id = task.batch_id();
+            let seq = task.seq();
             match err {
-                None => (id, builder.finish()),
+                None => (seq, builder.finish()),
                 Some(e) => {
                     drop(builder); // recover the slab
-                    (id, Err(e))
+                    (seq, Err(e))
                 }
             }
         })
         .collect()
+}
+
+/// Run a wave's fill phase with panic containment around the slab
+/// lifecycle: if `fill` unwinds (e.g. the fetch pool lost its last
+/// thread mid-submit), every still-unclaimed slot is claimed and
+/// failed — so [`settle_wave`] cannot hang on slots no thread will
+/// ever fill — and the wave *settles* (waiting out every in-flight
+/// sibling/thief fill) before any builder drops. Only then is the
+/// panic resumed. Without this, unwinding would drop the primary
+/// builders and recycle slabs while concurrent fillers are still
+/// writing into them — a silent cross-batch pixel race once the slab
+/// is re-checked out.
+fn fill_wave_contained<F: FnOnce()>(
+    tasks: &[Arc<ItemTask>],
+    entries: Vec<WaveEntry>,
+    registry: Option<&BatchInjector>,
+    fill: F,
+) -> Vec<(usize, Result<Batch>)> {
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(fill));
+    if outcome.is_err() {
+        for task in tasks {
+            while let Some(claim) = ItemTask::claim(task) {
+                claim.finish(Err(anyhow::anyhow!(
+                    "wave aborted: worker panicked mid-fill"
+                )));
+            }
+        }
+    }
+    let results = settle_wave(entries, registry);
+    match outcome {
+        Ok(()) => results,
+        // the caller's panic containment (run_worker) turns this into
+        // per-batch tombstones; the settled results are dropped, which
+        // is safe — their slabs are fully published or recovered
+        Err(p) => std::panic::resume_unwind(p),
+    }
 }
 
 /// Sequential fused wave over claim cursors — the vanilla engine's
@@ -189,16 +246,18 @@ fn settle_wave(
 pub fn fill_wave_sequential(
     ctx: &Arc<FetchCtx>,
     arena: &Arc<BatchArena>,
-    work: &[(usize, Vec<usize>)],
+    work: &[BatchTicket],
     registry: Option<&BatchInjector>,
 ) -> Vec<(usize, Result<Batch>)> {
     let entries = wave_entries(ctx, arena, work, registry);
-    for entry in &entries {
-        while let Some(claim) = ItemTask::claim(&entry.task) {
-            ctx.run_claim(claim);
+    let tasks: Vec<Arc<ItemTask>> = entries.iter().map(|e| e.task.clone()).collect();
+    fill_wave_contained(&tasks, entries, registry, || {
+        for task in &tasks {
+            while let Some(claim) = ItemTask::claim(task) {
+                ctx.run_claim(claim);
+            }
         }
-    }
-    settle_wave(entries, registry)
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -210,19 +269,110 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// Sentinel depth marking a queue whose thread died (panicked job).
 const DEAD: usize = usize::MAX;
 
+/// Shared state behind one [`ThreadPool`].
+struct PoolShared {
+    /// per-thread job queues (affinity at submit time; any idle thread
+    /// may *take over* another queue's jobs — see the worker loop)
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    /// per-queue load: jobs queued or running; `DEAD` = thread gone
+    depth: Vec<AtomicUsize>,
+    /// parking lot for idle threads (also orders the submit-notify
+    /// handshake: notify runs under this lock *after* the push, so an
+    /// idle thread that saw empty queues cannot miss the wakeup)
+    park: Mutex<bool>, // = shutdown flag
+    cv: Condvar,
+}
+
+impl PoolShared {
+    /// Pop the front of queue `i`.
+    fn pop(&self, i: usize) -> Option<Job> {
+        self.queues[i].lock().unwrap().pop_front()
+    }
+
+    /// Take over a queued job from the most-loaded *other* queue — a
+    /// job parked behind a dead-slow (or dead) sibling gets drained by
+    /// whoever is idle instead of waiting the straggler out. Returns the
+    /// source queue index alongside the job for depth re-accounting.
+    /// Allocation-free: this runs on every idle poll of the hot path.
+    fn takeover(&self, me: usize) -> Option<(usize, Job)> {
+        let n = self.queues.len();
+        // most-loaded live sibling first
+        let mut best: Option<(usize, usize)> = None;
+        for i in (0..n).filter(|&i| i != me) {
+            let d = self.depth[i].load(Ordering::Relaxed);
+            if d == DEAD || d == 0 {
+                continue;
+            }
+            if best.is_none_or(|(bd, _)| d > bd) {
+                best = Some((d, i));
+            }
+        }
+        if let Some((_, i)) = best {
+            if let Some(job) = self.pop(i) {
+                return Some((i, job));
+            }
+        }
+        // fallback sweep: dead queues (their gauge is the sentinel, but
+        // their leftovers still need draining) and load-gauge races
+        for i in (0..n).filter(|&i| i != me) {
+            if let Some(job) = self.pop(i) {
+                return Some((i, job));
+            }
+        }
+        None
+    }
+}
+
+/// Depth bookkeeping for one running job; marks the queue `DEAD` if the
+/// job panics (the thread unwinds and exits — submit skips the queue
+/// from then on, and siblings take over whatever was left queued
+/// behind the panic). If the *last* live thread dies, every queued job
+/// is dropped so wave reassembly fails cleanly instead of hanging on
+/// jobs no thread will ever run.
+struct RunGuard<'a> {
+    shared: &'a PoolShared,
+    i: usize,
+    done: bool,
+}
+
+impl Drop for RunGuard<'_> {
+    fn drop(&mut self) {
+        if self.done {
+            self.shared.depth[self.i].fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        // panicking job: this thread is about to die
+        self.shared.depth[self.i].store(DEAD, Ordering::Relaxed);
+        let all_dead = self
+            .shared
+            .depth
+            .iter()
+            .all(|d| d.load(Ordering::Relaxed) == DEAD);
+        if all_dead {
+            for q in &self.shared.queues {
+                q.lock().unwrap().clear(); // drop orphaned jobs
+            }
+        }
+        self.shared.cv.notify_all(); // siblings: come take over my queue
+    }
+}
+
 /// Persistent in-worker thread pool (`ThreadPoolExecutor` analogue).
 ///
 /// Each thread owns its private job queue; `submit` places a job on the
 /// **least-loaded live queue** (per-queue depth counters count queued +
 /// running jobs), so no job is parked behind a p99-slow storage fetch
 /// while sibling threads idle — the pool is work-conserving at submit
-/// time. Ties rotate, a large `num_fetch_workers` never serializes on
-/// one shared `Mutex<Receiver>` (the old funnel), and a queue whose
-/// thread died is marked dead and skipped forever (failover preserved).
+/// time. It is also work-conserving *after* submit: an idle thread
+/// whose own queue is empty **takes over** queued jobs from its
+/// most-loaded sibling, so a job that landed behind a fetch that turned
+/// slow (or behind a panic-killed thread) still completes as soon as
+/// any thread frees up. Ties rotate, a large `num_fetch_workers` never
+/// serializes on one shared `Mutex<Receiver>` funnel (queues have
+/// per-thread locks), and a queue whose thread died is skipped by
+/// submit while its leftovers drain through takeover.
 pub struct ThreadPool {
-    txs: Vec<mpsc::Sender<Job>>,
-    /// per-queue load: jobs queued or running; `DEAD` = thread gone
-    depth: Arc<Vec<AtomicUsize>>,
+    shared: Arc<PoolShared>,
     next: AtomicUsize,
     threads: Vec<std::thread::JoinHandle<()>>,
     size: usize,
@@ -231,52 +381,38 @@ pub struct ThreadPool {
 impl ThreadPool {
     pub fn new(size: usize, name: &str) -> ThreadPool {
         let size = size.max(1);
-        let depth: Arc<Vec<AtomicUsize>> =
-            Arc::new((0..size).map(|_| AtomicUsize::new(0)).collect());
-        let mut txs = Vec::with_capacity(size);
+        let shared = Arc::new(PoolShared {
+            queues: (0..size).map(|_| Mutex::new(VecDeque::new())).collect(),
+            depth: (0..size).map(|_| AtomicUsize::new(0)).collect(),
+            park: Mutex::new(false),
+            cv: Condvar::new(),
+        });
         let mut threads = Vec::with_capacity(size);
         for i in 0..size {
-            let (tx, rx) = mpsc::channel::<Job>();
-            txs.push(tx);
-            let depth = depth.clone();
+            let shared = shared.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("{name}-fetch{i}"))
-                    .spawn(move || {
-                        while let Ok(job) = rx.recv() {
-                            job();
-                            // after, not before: a thread busy on a slow
-                            // fetch must keep reading as loaded. A panic
-                            // in job() skips this — the queue then fails
-                            // sends and is marked DEAD by the submitter.
-                            depth[i].fetch_sub(1, Ordering::Relaxed);
-                        }
-                    })
+                    .spawn(move || pool_worker(&shared, i))
                     .expect("spawn fetch thread"),
             );
         }
-        ThreadPool {
-            txs,
-            depth,
-            next: AtomicUsize::new(0),
-            threads,
-            size,
-        }
+        ThreadPool { shared, next: AtomicUsize::new(0), threads, size }
     }
 
     pub fn size(&self) -> usize {
         self.size
     }
 
-    pub fn submit(&self, mut job: Job) {
-        let n = self.txs.len();
+    pub fn submit(&self, job: Job) {
+        let n = self.size;
         let rot = self.next.fetch_add(1, Ordering::Relaxed);
-        loop {
+        let i = loop {
             // least-loaded live queue, rotating tie-break
             let mut best: Option<(usize, usize)> = None;
             for k in 0..n {
                 let i = (rot + k) % n;
-                let d = self.depth[i].load(Ordering::Relaxed);
+                let d = self.shared.depth[i].load(Ordering::Relaxed);
                 if d == DEAD {
                     continue;
                 }
@@ -287,14 +423,93 @@ impl ThreadPool {
             let Some((_, i)) = best else {
                 panic!("every fetch pool thread died");
             };
-            self.depth[i].fetch_add(1, Ordering::Relaxed);
-            match self.txs[i].send(job) {
-                Ok(()) => return,
-                Err(mpsc::SendError(j)) => {
-                    // thread gone: mark the queue dead, try the next-best
-                    self.depth[i].store(DEAD, Ordering::Relaxed);
-                    job = j;
+            // claim a load slot without ever incrementing the DEAD
+            // sentinel — the thread may have died between the scan and
+            // here, and a blind fetch_add would wrap the sentinel back
+            // to a live-looking depth (resurrecting the queue past the
+            // all-dead orphan sweep). On a lost race, re-scan.
+            let claimed = self.shared.depth[i]
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                    if v == DEAD {
+                        None
+                    } else {
+                        Some(v + 1)
+                    }
+                })
+                .is_ok();
+            if claimed {
+                break i;
+            }
+        };
+        self.shared.queues[i].lock().unwrap().push_back(job);
+        // re-check after the push: if the last live thread died while we
+        // were placing the job, nobody will ever run it — drop the
+        // orphans and fail loudly (the queue-lock handoff makes the DEAD
+        // marks visible here), exactly like the all-dead scan above
+        if self
+            .shared
+            .depth
+            .iter()
+            .all(|d| d.load(Ordering::Relaxed) == DEAD)
+        {
+            for q in &self.shared.queues {
+                q.lock().unwrap().clear();
+            }
+            panic!("every fetch pool thread died");
+        }
+        // notify under the park lock: pairs with the scan-then-wait in
+        // pool_worker so the push above is never missed
+        drop(self.shared.park.lock().unwrap());
+        self.shared.cv.notify_all();
+    }
+}
+
+fn pool_worker(shared: &PoolShared, i: usize) {
+    loop {
+        // own queue first (submit affinity), then take over the
+        // most-loaded sibling's backlog
+        let claimed = match shared.pop(i) {
+            Some(job) => Some(job),
+            None => shared.takeover(i).map(|(src, job)| {
+                // the job now runs here: move its load accounting (a
+                // dead source keeps its DEAD sentinel)
+                let d = &shared.depth[src];
+                let _ = d.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                    if v != DEAD && v > 0 {
+                        Some(v - 1)
+                    } else {
+                        None
+                    }
+                });
+                shared.depth[i].fetch_add(1, Ordering::Relaxed);
+                job
+            }),
+        };
+        match claimed {
+            Some(job) => {
+                let mut guard = RunGuard { shared, i, done: false };
+                job(); // a panic here unwinds through RunGuard
+                guard.done = true;
+                drop(guard);
+            }
+            None => {
+                let st = shared.park.lock().unwrap();
+                // re-check under the park lock: a push that raced the
+                // scan above is visible here, and a later one must take
+                // this lock in `submit` before notifying — which blocks
+                // until `wait` releases it, so the wakeup cannot be
+                // missed
+                let any = shared
+                    .queues
+                    .iter()
+                    .any(|q| !q.lock().unwrap().is_empty());
+                if any {
+                    continue;
                 }
+                if *st {
+                    return; // shutdown, queues drained
+                }
+                let _unused = shared.cv.wait(st).unwrap();
             }
         }
     }
@@ -302,7 +517,8 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.txs.clear(); // hang up every per-thread queue
+        *self.shared.park.lock().unwrap() = true;
+        self.shared.cv.notify_all();
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -310,26 +526,26 @@ impl Drop for ThreadPool {
 }
 
 /// Parallel fetch of one *or several* batches through the worker's
-/// thread pool. `work` is a list of (batch_id, indices); with batch
-/// disassembly the worker passes several batches, and all their items
-/// are fetched in one wave (the paper's `batch_pool`). Returns each
-/// batch's samples in request order.
+/// thread pool. `work` is a list of tickets; with batch disassembly the
+/// worker passes several batches, and all their items are fetched in
+/// one wave (the paper's `batch_pool`). Returns each batch's samples in
+/// request order, aligned with `work`.
 pub fn fetch_threaded(
     ctx: &Arc<FetchCtx>,
     pool: &ThreadPool,
-    work: &[(usize, Vec<usize>)],
-) -> Result<Vec<(usize, Vec<Sample>)>> {
+    work: &[BatchTicket],
+) -> Result<Vec<Vec<Sample>>> {
     // disassemble: flat list of (batch_pos, item_pos, dataset_index)
     let (otx, orx) = mpsc::channel::<(usize, usize, Result<Sample>)>();
     let mut total = 0usize;
-    for (bpos, (batch_id, indices)) in work.iter().enumerate() {
-        for (ipos, &index) in indices.iter().enumerate() {
+    for (bpos, ticket) in work.iter().enumerate() {
+        for (ipos, &index) in ticket.indices.iter().enumerate() {
             let ctx = ctx.clone();
             let otx = otx.clone();
-            let batch_id = *batch_id;
+            let (batch_id, epoch) = (ticket.id, ticket.epoch);
             total += 1;
             pool.submit(Box::new(move || {
-                let out = ctx.get_one(batch_id, index);
+                let out = ctx.get_one(batch_id, epoch, index);
                 let _ = otx.send((bpos, ipos, out));
             }));
         }
@@ -349,8 +565,8 @@ pub fn fetch_threaded(
     }
     let mut out = Vec::with_capacity(work.len());
     for (bpos, fetched) in per_batch.into_iter().enumerate() {
-        let n = work[bpos].1.len();
-        out.push((work[bpos].0, restore_order(n, fetched)));
+        let n = work[bpos].indices.len();
+        out.push(restore_order(n, fetched));
     }
     Ok(out)
 }
@@ -363,7 +579,7 @@ pub fn fetch_threaded_fused(
     ctx: &Arc<FetchCtx>,
     pool: &ThreadPool,
     arena: &Arc<BatchArena>,
-    work: &[(usize, Vec<usize>)],
+    work: &[BatchTicket],
 ) -> Vec<(usize, Result<Batch>)> {
     fetch_threaded_fused_tasks(ctx, pool, arena, work, None)
 }
@@ -377,7 +593,7 @@ pub fn fetch_threaded_fused_tasks(
     ctx: &Arc<FetchCtx>,
     pool: &ThreadPool,
     arena: &Arc<BatchArena>,
-    work: &[(usize, Vec<usize>)],
+    work: &[BatchTicket],
     registry: Option<&BatchInjector>,
 ) -> Vec<(usize, Result<Batch>)> {
     let entries = wave_entries(ctx, arena, work, registry);
@@ -387,23 +603,24 @@ pub fn fetch_threaded_fused_tasks(
     // worker thread itself takes one slice, so only size-1 go to the
     // pool when the wave is small.
     let slices = pool.size().min(total).saturating_sub(1);
-    for _ in 0..slices {
-        let tasks = tasks.clone();
-        let ctx = ctx.clone();
-        pool.submit(Box::new(move || {
-            for task in &tasks {
-                while let Some(claim) = ItemTask::claim(task) {
-                    ctx.run_claim(claim);
+    fill_wave_contained(&tasks, entries, registry, || {
+        for _ in 0..slices {
+            let tasks = tasks.clone();
+            let ctx = ctx.clone();
+            pool.submit(Box::new(move || {
+                for task in &tasks {
+                    while let Some(claim) = ItemTask::claim(task) {
+                        ctx.run_claim(claim);
+                    }
                 }
-            }
-        }));
-    }
-    for task in &tasks {
-        while let Some(claim) = ItemTask::claim(task) {
-            ctx.run_claim(claim);
+            }));
         }
-    }
-    settle_wave(entries, registry)
+        for task in &tasks {
+            while let Some(claim) = ItemTask::claim(task) {
+                ctx.run_claim(claim);
+            }
+        }
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -416,6 +633,7 @@ pub fn fetch_async(
     ctx: &Arc<FetchCtx>,
     rt: &Arc<asyncrt::Runtime>,
     sem: &Arc<asyncrt::Semaphore>,
+    epoch: usize,
     batch_id: usize,
     indices: &[usize],
 ) -> Result<Vec<Sample>> {
@@ -428,7 +646,7 @@ pub fn fetch_async(
             rt.spawn(async move {
                 let _permit = sem.acquire().await;
                 let t0 = ctx.recorder.now();
-                let s = ctx.dataset.get_item_async(index, &ctx.gil).await;
+                let s = ctx.dataset.get_item_async_at(index, epoch, &ctx.gil).await;
                 ctx.recorder.record(
                     names::GET_ITEM,
                     ctx.worker_id,
@@ -451,20 +669,21 @@ pub fn fetch_async(
 /// One async claim execution: overlap the raw-byte wait on the event
 /// loop, then decode straight into the slab slot (datasets with
 /// [`Dataset::supports_raw`]; others fall back to `get_item_async` plus
-/// one copy into the slot).
+/// one copy into the slot). The task's epoch tag rides into the decode.
 async fn run_claim_async(ctx: &FetchCtx, claim: ItemClaim) {
     let task = claim.task().clone();
-    let (pos, index, batch_id) = (claim.pos(), claim.index(), task.batch_id());
+    let (pos, index) = (claim.pos(), claim.index());
+    let (batch_id, epoch) = (task.batch_id(), task.epoch());
     let t0 = ctx.recorder.now();
     let res = if ctx.dataset.supports_raw() {
         match ctx.dataset.get_raw_async(index).await {
             Ok(raw) => task.builder().fill(pos, index, |out| {
-                ctx.dataset.process_raw_into(index, &raw, &ctx.gil, out)
+                ctx.dataset.process_raw_into_at(index, epoch, &raw, &ctx.gil, out)
             }),
             Err(e) => Err(e),
         }
     } else {
-        match ctx.dataset.get_item_async(index, &ctx.gil).await {
+        match ctx.dataset.get_item_async_at(index, epoch, &ctx.gil).await {
             Ok(s) => task.builder().fill(pos, index, |out| copy_sample_into(&s, out)),
             Err(e) => Err(e),
         }
@@ -486,10 +705,9 @@ pub fn fetch_async_fused(
     rt: &Arc<asyncrt::Runtime>,
     sem: &Arc<asyncrt::Semaphore>,
     arena: &Arc<BatchArena>,
-    batch_id: usize,
-    indices: &[usize],
+    ticket: BatchTicket,
 ) -> Result<Batch> {
-    let work = [(batch_id, indices.to_vec())];
+    let work = [ticket];
     fetch_async_fused_tasks(ctx, rt, sem, arena, &work, None)
         .pop()
         .expect("one batch in, one result out")
@@ -506,31 +724,32 @@ pub fn fetch_async_fused_tasks(
     rt: &Arc<asyncrt::Runtime>,
     sem: &Arc<asyncrt::Semaphore>,
     arena: &Arc<BatchArena>,
-    work: &[(usize, Vec<usize>)],
+    work: &[BatchTicket],
     registry: Option<&BatchInjector>,
 ) -> Vec<(usize, Result<Batch>)> {
     let entries = wave_entries(ctx, arena, work, registry);
     let tasks: Vec<Arc<ItemTask>> = entries.iter().map(|e| e.task.clone()).collect();
     let total: usize = tasks.iter().map(|t| t.len()).sum();
     let loops = sem.available().max(1).min(total.max(1));
-    let handles: Vec<_> = (0..loops)
-        .map(|_| {
-            let ctx = ctx.clone();
-            let tasks = tasks.clone();
-            rt.spawn(async move {
-                for task in &tasks {
-                    while let Some(claim) = ItemTask::claim(task) {
-                        run_claim_async(&ctx, claim).await;
+    fill_wave_contained(&tasks, entries, registry, || {
+        let handles: Vec<_> = (0..loops)
+            .map(|_| {
+                let ctx = ctx.clone();
+                let tasks = tasks.clone();
+                rt.spawn(async move {
+                    for task in &tasks {
+                        while let Some(claim) = ItemTask::claim(task) {
+                            run_claim_async(&ctx, claim).await;
+                        }
                     }
-                }
+                })
             })
-        })
-        .collect();
-    // join_all completes only after every loop future finished — all
-    // *locally* claimed slots are filled; wait_settled in settle_wave
-    // covers slots claimed by thieves on other workers
-    asyncrt::block_on(asyncrt::join_all(handles));
-    settle_wave(entries, registry)
+            .collect();
+        // join_all completes only after every loop future finished — all
+        // *locally* claimed slots are filled; wait_settled in settle_wave
+        // covers slots claimed by thieves on other workers
+        asyncrt::block_on(asyncrt::join_all(handles));
+    })
 }
 
 #[cfg(test)]
@@ -566,6 +785,10 @@ mod tests {
         (0..n).collect()
     }
 
+    fn ticket(id: usize, idxs: Vec<usize>) -> BatchTicket {
+        BatchTicket::solo(id, idxs)
+    }
+
     fn arena_for(ctx: &FetchCtx, batch: usize) -> Arc<BatchArena> {
         BatchArena::new(ctx.dataset.crop(), batch, 4)
     }
@@ -573,20 +796,31 @@ mod tests {
     #[test]
     fn vanilla_order_and_spans() {
         let ctx = ctx_on(false, 6);
-        let samples = fetch_vanilla(&ctx, 0, &indices(6)).unwrap();
+        let samples = fetch_vanilla(&ctx, 0, 0, &indices(6)).unwrap();
         assert_eq!(samples.iter().map(|s| s.index).collect::<Vec<_>>(), indices(6));
         assert_eq!(ctx.recorder.durations(names::GET_ITEM).len(), 6);
+    }
+
+    #[test]
+    fn vanilla_epoch_tag_steers_augmentation() {
+        // the per-call epoch must override the dataset's global state
+        let ctx = ctx_on(false, 4);
+        let e0 = fetch_vanilla(&ctx, 0, 0, &[1]).unwrap();
+        let e1 = fetch_vanilla(&ctx, 1, 0, &[1]).unwrap();
+        let e0b = fetch_vanilla(&ctx, 0, 0, &[1]).unwrap();
+        assert_ne!(e0[0].crop.data, e1[0].crop.data);
+        assert_eq!(e0[0].crop.data, e0b[0].crop.data);
     }
 
     #[test]
     fn threaded_restores_order() {
         let ctx = ctx_on(true, 8);
         let pool = ThreadPool::new(8, "t");
-        let work = vec![(0usize, indices(8))];
+        let work = vec![ticket(0, indices(8))];
         let out = fetch_threaded(&ctx, &pool, &work).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(
-            out[0].1.iter().map(|s| s.index).collect::<Vec<_>>(),
+            out[0].iter().map(|s| s.index).collect::<Vec<_>>(),
             indices(8)
         );
     }
@@ -595,13 +829,13 @@ mod tests {
     fn threaded_beats_vanilla_on_latency() {
         let ctx = ctx_on(true, 8);
         let t0 = Instant::now();
-        fetch_vanilla(&ctx, 0, &indices(8)).unwrap();
+        fetch_vanilla(&ctx, 0, 0, &indices(8)).unwrap();
         let seq = t0.elapsed();
 
         let ctx2 = ctx_on(true, 8);
         let pool = ThreadPool::new(8, "t");
         let t0 = Instant::now();
-        fetch_threaded(&ctx2, &pool, &[(0, indices(8))]).unwrap();
+        fetch_threaded(&ctx2, &pool, &[ticket(0, indices(8))]).unwrap();
         let par = t0.elapsed();
         assert!(
             par < seq / 2,
@@ -613,11 +847,10 @@ mod tests {
     fn threaded_multi_batch_disassembly() {
         let ctx = ctx_on(false, 12);
         let pool = ThreadPool::new(4, "t");
-        let work = vec![(3usize, indices(6)), (4usize, (6..12).collect())];
+        let work = vec![ticket(3, indices(6)), ticket(4, (6..12).collect())];
         let out = fetch_threaded(&ctx, &pool, &work).unwrap();
-        assert_eq!(out[0].0, 3);
-        assert_eq!(out[1].0, 4);
-        assert_eq!(out[1].1.iter().map(|s| s.index).collect::<Vec<_>>(), (6..12).collect::<Vec<_>>());
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[1].iter().map(|s| s.index).collect::<Vec<_>>(), (6..12).collect::<Vec<_>>());
     }
 
     #[test]
@@ -626,7 +859,7 @@ mod tests {
         let rt = asyncrt::Runtime::new(1);
         let sem = asyncrt::Semaphore::new(16);
         let t0 = Instant::now();
-        let out = fetch_async(&ctx, &rt, &sem, 0, &indices(8)).unwrap();
+        let out = fetch_async(&ctx, &rt, &sem, 0, 0, &indices(8)).unwrap();
         let wall = t0.elapsed().as_secs_f64();
         assert_eq!(out.iter().map(|s| s.index).collect::<Vec<_>>(), indices(8));
         // must be clearly faster than the 8-item sequential sum
@@ -639,7 +872,7 @@ mod tests {
         let ctx = ctx_on(true, 6);
         let rt = asyncrt::Runtime::new(1);
         let sem = asyncrt::Semaphore::new(1); // degenerate: sequential
-        let out = fetch_async(&ctx, &rt, &sem, 0, &indices(4)).unwrap();
+        let out = fetch_async(&ctx, &rt, &sem, 0, 0, &indices(4)).unwrap();
         assert_eq!(out.len(), 4);
     }
 
@@ -663,11 +896,11 @@ mod tests {
     fn pool_submit_fails_over_past_a_dead_thread() {
         let pool = ThreadPool::new(2, "dead");
         pool.submit(Box::new(|| panic!("deliberate: kill this pool thread")));
-        // Jobs sent to the dying queue before its receiver drops are
-        // destroyed with it, so don't race the unwind on a fixed sleep:
-        // keep submitting small rounds until 8 jobs have actually run —
-        // once the dead queue disconnects, submit fails over and every
-        // round completes in full.
+        // Don't race the unwind on a fixed sleep: keep submitting small
+        // rounds until 8 jobs have actually run. Once the dead queue is
+        // marked, submit places everything on the live thread — and any
+        // job that landed on the dying queue first is *taken over* by
+        // the survivor, so every round completes in full.
         let deadline = Instant::now() + std::time::Duration::from_secs(10);
         let mut ran = 0usize;
         while ran < 8 {
@@ -683,10 +916,50 @@ mod tests {
                 }));
             }
             drop(tx);
-            // rx.iter() ends once both jobs ran or were destroyed with
-            // the dying queue (dropping their senders either way)
             ran += rx.iter().count();
         }
+    }
+
+    #[test]
+    fn pool_idle_thread_takes_over_a_stuck_siblings_queue() {
+        // the ROADMAP queue-takeover item: a job already queued behind a
+        // fetch that turned dead-slow must complete as soon as any other
+        // thread frees up — not wait the straggler out.
+        let pool = ThreadPool::new(2, "tko");
+        // occupy both threads with blocking jobs we control
+        let (stuck_tx, stuck_rx) = mpsc::channel::<()>();
+        let (brief_tx, brief_rx) = mpsc::channel::<()>();
+        pool.submit(Box::new(move || {
+            let _ = stuck_rx.recv(); // the dead-slow fetch
+        }));
+        pool.submit(Box::new(move || {
+            let _ = brief_rx.recv(); // a normal fetch, released below
+        }));
+        // both threads now run a blocker (depth 1 each), so these two
+        // probes land one per queue — one of them is necessarily queued
+        // behind the stuck fetch
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        for _ in 0..2 {
+            let done_tx = done_tx.clone();
+            pool.submit(Box::new(move || {
+                let _ = done_tx.send(());
+            }));
+        }
+        drop(done_tx);
+        // release only the brief job: its thread goes idle and must
+        // drain BOTH probes — its own queue's and, via takeover, the one
+        // parked behind the stuck fetch
+        brief_tx.send(()).unwrap();
+        for _ in 0..2 {
+            assert!(
+                done_rx
+                    .recv_timeout(std::time::Duration::from_secs(10))
+                    .is_ok(),
+                "a probe queued behind the stuck fetch never ran while a \
+                 sibling thread sat idle"
+            );
+        }
+        stuck_tx.send(()).unwrap(); // unstick for clean drop
     }
 
     #[test]
@@ -745,9 +1018,9 @@ mod tests {
     fn fused_vanilla_matches_legacy_bytes() {
         let ctx = ctx_on(false, 8);
         let arena = arena_for(&ctx, 8);
-        let samples = fetch_vanilla(&ctx, 0, &indices(8)).unwrap();
+        let samples = fetch_vanilla(&ctx, 0, 0, &indices(8)).unwrap();
         let legacy = crate::dataloader::collate::collate(0, samples).unwrap();
-        let fused = fetch_vanilla_fused(&ctx, &arena, 0, &indices(8)).unwrap();
+        let fused = fetch_vanilla_fused(&ctx, &arena, &ticket(0, indices(8))).unwrap();
         assert_eq!(legacy.images, fused.images);
         assert_eq!(legacy.labels, fused.labels);
         assert_eq!(legacy.indices, fused.indices);
@@ -759,7 +1032,7 @@ mod tests {
         let ctx = ctx_on(true, 12);
         let pool = ThreadPool::new(6, "tf");
         let arena = arena_for(&ctx, 6);
-        let work = vec![(0usize, indices(6)), (1usize, (6..12).collect())];
+        let work = vec![ticket(0, indices(6)), ticket(1, (6..12).collect())];
         let out = fetch_threaded_fused(&ctx, &pool, &arena, &work);
         assert_eq!(out.len(), 2);
         let b0 = out[0].1.as_ref().unwrap();
@@ -768,7 +1041,7 @@ mod tests {
         assert_eq!(b1.indices, (6..12).collect::<Vec<_>>());
         // equivalence with the legacy copy path
         let legacy = {
-            let samples = fetch_vanilla(&ctx, 0, &indices(6)).unwrap();
+            let samples = fetch_vanilla(&ctx, 0, 0, &indices(6)).unwrap();
             crate::dataloader::collate::collate(0, samples).unwrap()
         };
         assert_eq!(legacy.images, b0.images);
@@ -782,8 +1055,8 @@ mod tests {
         let sem = asyncrt::Semaphore::new(16);
         let arena = arena_for(&ctx, 8);
         let fused =
-            fetch_async_fused(&ctx, &rt, &sem, &arena, 0, &indices(8)).unwrap();
-        let samples = fetch_vanilla(&ctx, 0, &indices(8)).unwrap();
+            fetch_async_fused(&ctx, &rt, &sem, &arena, ticket(0, indices(8))).unwrap();
+        let samples = fetch_vanilla(&ctx, 0, 0, &indices(8)).unwrap();
         let legacy = crate::dataloader::collate::collate(0, samples).unwrap();
         assert_eq!(legacy.images, fused.images);
         assert_eq!(legacy.labels, fused.labels);
@@ -807,11 +1080,11 @@ mod tests {
             recorder: Recorder::new(),
         });
         let arena = arena_for(&ctx, 4);
-        assert!(fetch_vanilla_fused(&ctx, &arena, 0, &indices(4)).is_err());
+        assert!(fetch_vanilla_fused(&ctx, &arena, &ticket(0, indices(4))).is_err());
         let s = arena.stats();
         assert_eq!(s.recycled, 1, "{s:?}");
         // the recovered slab serves the next (healthy) batch
-        let ok = fetch_vanilla_fused(&ctx, &arena, 1, &[0, 1, 3]).unwrap();
+        let ok = fetch_vanilla_fused(&ctx, &arena, &ticket(1, vec![0, 1, 3])).unwrap();
         assert_eq!(ok.len(), 3);
         assert_eq!(arena.stats().reused, 1);
     }
@@ -833,7 +1106,7 @@ mod tests {
         });
         let pool = ThreadPool::new(4, "pf");
         let arena = arena_for(&ctx, 4);
-        let work = vec![(0usize, indices(4)), (1usize, (4..8).collect())];
+        let work = vec![ticket(0, indices(4)), ticket(1, (4..8).collect())];
         let out = fetch_threaded_fused(&ctx, &pool, &arena, &work);
         assert!(out[0].1.is_err());
         let b1 = out[1].1.as_ref().unwrap();

@@ -48,6 +48,58 @@ impl Sampler {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Generation-tagged batch tickets
+// ---------------------------------------------------------------------------
+
+/// One batch of the dispatch stream, generation-tagged with its epoch.
+///
+/// Since PR 5 the dispatch layer runs a **continuous stream across
+/// epochs**: `seq` is the global dispatch sequence number (epoch N+1's
+/// first batch follows epoch N's last), which is what the
+/// [`CreditGate`], the consumer's reorder buffer, and the arena
+/// checkout key on. `epoch` is the sampler epoch (the augmentation seed
+/// travels with the item loads), and `id` is the batch's position
+/// *within* its epoch — the consumer-visible `Batch::id`.
+#[derive(Debug, Clone)]
+pub struct BatchTicket {
+    /// global dispatch sequence, continuous across epochs
+    pub seq: usize,
+    /// sampler epoch this batch belongs to
+    pub epoch: usize,
+    /// batch id within the epoch (consumer-visible)
+    pub id: usize,
+    /// dataset indices of the batch's items, in request order
+    pub indices: Vec<usize>,
+}
+
+impl BatchTicket {
+    /// A single-epoch ticket whose `seq` equals its `id` (tests and the
+    /// inline loader, where no cross-epoch stream exists).
+    pub fn solo(id: usize, indices: Vec<usize>) -> BatchTicket {
+        BatchTicket { seq: id, epoch: 0, id, indices }
+    }
+
+    /// Tag one epoch's batch plan onto the continuous stream starting
+    /// at `base_seq`.
+    pub fn plan(
+        epoch: usize,
+        base_seq: usize,
+        batches: Vec<Vec<usize>>,
+    ) -> Vec<BatchTicket> {
+        batches
+            .into_iter()
+            .enumerate()
+            .map(|(id, indices)| BatchTicket {
+                seq: base_seq + id,
+                epoch,
+                id,
+                indices,
+            })
+            .collect()
+    }
+}
+
 /// Chunk an item order into batch index lists.
 pub fn batches(order: &[usize], batch_size: usize, drop_last: bool) -> Vec<Vec<usize>> {
     assert!(batch_size > 0);
@@ -179,6 +231,13 @@ struct TaskState {
 /// subsequent `finish()` sound — same role the channel/join played for
 /// the in-worker fetchers).
 pub struct ItemTask {
+    /// global dispatch sequence (unique across epochs — the registry
+    /// identity; two epochs' in-progress batches coexist under
+    /// pipelining, so the per-epoch id cannot be the key)
+    seq: usize,
+    /// sampler epoch — fillers pass it to the epoch-tagged dataset loads
+    epoch: usize,
+    /// batch id within the epoch (telemetry / `Batch::id`)
     batch_id: usize,
     owner: u32,
     /// passive handle on the batch's slab (the owner keeps the primary)
@@ -189,17 +248,14 @@ pub struct ItemTask {
 }
 
 impl ItemTask {
-    pub fn new(
-        batch_id: usize,
-        owner: u32,
-        builder: BatchBuilder,
-        indices: Vec<usize>,
-    ) -> Arc<ItemTask> {
+    pub fn new(ticket: &BatchTicket, owner: u32, builder: BatchBuilder) -> Arc<ItemTask> {
         Arc::new(ItemTask {
-            batch_id,
+            seq: ticket.seq,
+            epoch: ticket.epoch,
+            batch_id: ticket.id,
             owner,
             builder,
-            indices,
+            indices: ticket.indices.clone(),
             state: Mutex::new(TaskState { claimed: 0, done: 0, error: None }),
             cv: Condvar::new(),
         })
@@ -207,6 +263,16 @@ impl ItemTask {
 
     pub fn batch_id(&self) -> usize {
         self.batch_id
+    }
+
+    /// Global dispatch sequence of this batch.
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    /// Sampler epoch of this batch (fillers decode with this tag).
+    pub fn epoch(&self) -> usize {
+        self.epoch
     }
 
     /// Worker id of the batch's owner (the publisher).
@@ -349,11 +415,12 @@ impl Drop for ItemClaim {
 /// Result of a credit-gated grab from the injector.
 pub enum Claimed {
     /// Admitted batches to work on (≥ 1).
-    Work(Vec<(usize, Vec<usize>)>),
-    /// The queue head (this id) exists but is outside the credit
+    Work(Vec<BatchTicket>),
+    /// The queue head (this seq) exists but is outside the credit
     /// window — park on the gate or steal items meanwhile.
     Blocked(usize),
-    /// The epoch's batch queue is drained.
+    /// The published batch stream is drained (the next epoch's plan, if
+    /// any, has not been published yet).
     Drained,
 }
 
@@ -361,36 +428,52 @@ pub enum Claimed {
 /// pops the globally-next batch when it goes idle, so one slow batch
 /// never pins the batches behind it to a busy worker (in-order delivery
 /// is preserved by the consumer's reorder buffer, exactly as with
-/// static assignment). With `steal_items` it also tracks the in-progress
-/// batches whose unclaimed tail items idle workers may fill in place.
+/// static assignment). The queue is a **continuous stream**: the
+/// epoch-pipelined planner publishes each epoch's tickets onto it, so
+/// epoch N+1's head follows epoch N's tail with no drain barrier. With
+/// `steal_items` it also tracks the in-progress batches whose unclaimed
+/// tail items idle workers may fill in place.
 pub struct BatchInjector {
-    queue: Mutex<VecDeque<(usize, Vec<usize>)>>,
-    /// in-progress item tasks, registered in pop order (≈ batch id
-    /// order, so thieves help the batch the consumer wants soonest)
+    queue: Mutex<VecDeque<BatchTicket>>,
+    /// in-progress item tasks, registered in pop order (≈ seq order, so
+    /// thieves help the batch the consumer wants soonest)
     active: Mutex<Vec<Arc<ItemTask>>>,
     /// items filled by a worker other than the batch's owner
     item_steals: AtomicU64,
 }
 
+impl Default for BatchInjector {
+    fn default() -> Self {
+        BatchInjector::new()
+    }
+}
+
 impl BatchInjector {
-    /// Build from an epoch's batch plan; batch ids are assigned in plan
-    /// order (the same ids static assignment would use).
-    pub fn new(batches: Vec<Vec<usize>>) -> BatchInjector {
+    /// An empty injector; epoch plans arrive through
+    /// [`BatchInjector::publish`].
+    pub fn new() -> BatchInjector {
         BatchInjector {
-            queue: Mutex::new(batches.into_iter().enumerate().collect()),
+            queue: Mutex::new(VecDeque::new()),
             active: Mutex::new(Vec::new()),
             item_steals: AtomicU64::new(0),
         }
     }
 
-    /// Steal the next batch; `None` once the epoch is drained.
-    pub fn steal(&self) -> Option<(usize, Vec<usize>)> {
+    /// Append one epoch's tickets to the stream (publication order is
+    /// seq order — the planner publishes epochs in sequence).
+    pub fn publish(&self, tickets: Vec<BatchTicket>) {
+        self.queue.lock().unwrap().extend(tickets);
+    }
+
+    /// Steal the next batch; `None` once the published stream is
+    /// drained.
+    pub fn steal(&self) -> Option<BatchTicket> {
         self.queue.lock().unwrap().pop_front()
     }
 
     /// Steal up to `k` consecutive batches in one grab (batch
     /// disassembly pulls a whole wave at once).
-    pub fn steal_group(&self, k: usize) -> Vec<(usize, Vec<usize>)> {
+    pub fn steal_group(&self, k: usize) -> Vec<BatchTicket> {
         let mut q = self.queue.lock().unwrap();
         let take = k.max(1).min(q.len());
         q.drain(..take).collect()
@@ -412,9 +495,10 @@ impl BatchInjector {
         self.active.lock().unwrap().push(task);
     }
 
-    /// Withdraw a finished/failed batch from the steal registry.
-    pub fn unregister(&self, batch_id: usize) {
-        self.active.lock().unwrap().retain(|t| t.batch_id() != batch_id);
+    /// Withdraw a finished/failed batch from the steal registry, by its
+    /// global seq (unique across epochs; the per-epoch id is not).
+    pub fn unregister(&self, seq: usize) {
+        self.active.lock().unwrap().retain(|t| t.seq() != seq);
     }
 
     /// Steal one unclaimed item from the oldest in-progress batch that
@@ -444,15 +528,17 @@ impl BatchInjector {
     }
 }
 
-/// Pop the admitted prefix (up to `k` batches) off a batch queue —
+/// Pop the admitted prefix (up to `k` batches) off a ticket queue —
 /// the one credit-window grab shared by the injector and the static
-/// per-worker deques, so the two dispatch modes cannot diverge.
+/// per-worker deques, so the two dispatch modes cannot diverge. The
+/// gate admits by global seq, so the window rolls straight across an
+/// epoch seam when the next epoch's tickets are already published.
 pub fn take_admitted(
-    q: &mut VecDeque<(usize, Vec<usize>)>,
+    q: &mut VecDeque<BatchTicket>,
     k: usize,
     gate: &CreditGate,
 ) -> Claimed {
-    let Some(&(head, _)) = q.front() else {
+    let Some(head) = q.front().map(|t| t.seq) else {
         return Claimed::Drained;
     };
     if !gate.admits(head) {
@@ -460,24 +546,10 @@ pub fn take_admitted(
     }
     let mut take = 1;
     let max = k.max(1).min(q.len());
-    while take < max && gate.admits(q[take].0) {
+    while take < max && gate.admits(q[take].seq) {
         take += 1;
     }
     Claimed::Work(q.drain(..take).collect())
-}
-
-/// Round-robin assignment of (batch_id, indices) to workers — torch
-/// hands batch k to worker `k % num_workers`.
-pub fn assign_round_robin(
-    batches: Vec<Vec<usize>>,
-    num_workers: usize,
-) -> Vec<Vec<(usize, Vec<usize>)>> {
-    let w = num_workers.max(1);
-    let mut per_worker: Vec<Vec<(usize, Vec<usize>)>> = vec![Vec::new(); w];
-    for (id, idxs) in batches.into_iter().enumerate() {
-        per_worker[id % w].push((id, idxs));
-    }
-    per_worker
 }
 
 #[cfg(test)]
@@ -518,40 +590,59 @@ mod tests {
         assert_eq!(batches(&order, 4, true).len(), 2);
     }
 
+    fn published(epoch: usize, base: usize, items: usize, bs: usize) -> BatchInjector {
+        let inj = BatchInjector::new();
+        inj.publish(BatchTicket::plan(
+            epoch,
+            base,
+            batches(&(0..items).collect::<Vec<_>>(), bs, false),
+        ));
+        inj
+    }
+
     #[test]
     fn injector_steals_in_plan_order_exactly_once() {
-        let inj = BatchInjector::new(batches(&(0..20).collect::<Vec<_>>(), 4, false));
+        let inj = published(0, 0, 20, 4);
         assert_eq!(inj.remaining(), 5);
         let first = inj.steal().unwrap();
-        assert_eq!(first.0, 0);
-        assert_eq!(first.1, vec![0, 1, 2, 3]);
+        assert_eq!((first.seq, first.id, first.epoch), (0, 0, 0));
+        assert_eq!(first.indices, vec![0, 1, 2, 3]);
         let group = inj.steal_group(3);
-        assert_eq!(
-            group.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
-            vec![1, 2, 3]
-        );
+        assert_eq!(group.iter().map(|t| t.seq).collect::<Vec<_>>(), vec![1, 2, 3]);
         let tail = inj.steal_group(10); // clamped to what's left
         assert_eq!(tail.len(), 1);
-        assert_eq!(tail[0].0, 4);
+        assert_eq!(tail[0].seq, 4);
         assert!(inj.steal().is_none());
         assert_eq!(inj.remaining(), 0);
     }
 
     #[test]
+    fn published_epochs_form_one_continuous_stream() {
+        // epoch 1's tickets follow epoch 0's on the same queue: seqs are
+        // continuous, per-epoch ids restart, epochs tag each ticket
+        let inj = published(0, 0, 8, 4);
+        inj.publish(BatchTicket::plan(
+            1,
+            2,
+            batches(&(0..8).collect::<Vec<_>>(), 4, false),
+        ));
+        let all = inj.steal_group(10);
+        assert_eq!(all.iter().map(|t| t.seq).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(all.iter().map(|t| t.id).collect::<Vec<_>>(), vec![0, 1, 0, 1]);
+        assert_eq!(all.iter().map(|t| t.epoch).collect::<Vec<_>>(), vec![0, 0, 1, 1]);
+    }
+
+    #[test]
     fn injector_concurrent_steals_partition_the_epoch() {
         use std::sync::Arc;
-        let inj = Arc::new(BatchInjector::new(batches(
-            &(0..64).collect::<Vec<_>>(),
-            2,
-            false,
-        )));
+        let inj = Arc::new(published(0, 0, 64, 2));
         let mut handles = Vec::new();
         for _ in 0..4 {
             let inj = inj.clone();
             handles.push(std::thread::spawn(move || {
                 let mut got = Vec::new();
-                while let Some((id, _)) = inj.steal() {
-                    got.push(id);
+                while let Some(t) = inj.steal() {
+                    got.push(t.seq);
                 }
                 got
             }));
@@ -560,21 +651,6 @@ mod tests {
             handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
         all.sort_unstable();
         assert_eq!(all, (0..32).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn round_robin_covers_all_batches() {
-        let b = batches(&(0..20).collect::<Vec<_>>(), 4, false);
-        let assigned = assign_round_robin(b, 3);
-        assert_eq!(assigned.len(), 3);
-        let mut ids: Vec<usize> = assigned
-            .iter()
-            .flat_map(|v| v.iter().map(|(id, _)| *id))
-            .collect();
-        ids.sort_unstable();
-        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
-        // worker 0 gets 0, 3; worker 1 gets 1, 4; worker 2 gets 2
-        assert_eq!(assigned[0].iter().map(|(i, _)| *i).collect::<Vec<_>>(), vec![0, 3]);
     }
 
     #[test]
@@ -617,26 +693,48 @@ mod tests {
 
     #[test]
     fn credit_gated_grab_respects_window() {
-        let inj = BatchInjector::new(batches(&(0..20).collect::<Vec<_>>(), 4, false));
+        let inj = published(0, 0, 20, 4);
         let gate = CreditGate::new(2);
-        // window [0, 2): only batches 0 and 1 admitted
+        // window [0, 2): only seqs 0 and 1 admitted
         match inj.steal_group_admitted(10, &gate) {
             Claimed::Work(w) => {
-                assert_eq!(w.iter().map(|(id, _)| *id).collect::<Vec<_>>(), vec![0, 1]);
+                assert_eq!(w.iter().map(|t| t.seq).collect::<Vec<_>>(), vec![0, 1]);
             }
             _ => panic!("expected work"),
         }
         match inj.steal_group_admitted(10, &gate) {
-            Claimed::Blocked(id) => assert_eq!(id, 2),
+            Claimed::Blocked(seq) => assert_eq!(seq, 2),
             _ => panic!("expected blocked"),
         }
         gate.advance(3); // window [3, 5)
         match inj.steal_group_admitted(1, &gate) {
-            Claimed::Work(w) => assert_eq!(w[0].0, 2),
+            Claimed::Work(w) => assert_eq!(w[0].seq, 2),
             _ => panic!("expected work"),
         }
         inj.steal_group(10);
         assert!(matches!(inj.steal_group_admitted(1, &gate), Claimed::Drained));
+    }
+
+    #[test]
+    fn credit_window_rolls_across_the_epoch_seam() {
+        // two published epochs, credit 3: the admitted prefix may span
+        // the seam — epoch 0's tail and epoch 1's head in one grab
+        let inj = published(0, 0, 8, 4); // seqs 0, 1
+        inj.publish(BatchTicket::plan(
+            1,
+            2,
+            batches(&(0..8).collect::<Vec<_>>(), 4, false),
+        )); // seqs 2, 3
+        let gate = CreditGate::new(3);
+        gate.advance(1); // window [1, 4)
+        inj.steal_group(1); // seq 0 taken elsewhere
+        match inj.steal_group_admitted(10, &gate) {
+            Claimed::Work(w) => {
+                assert_eq!(w.iter().map(|t| t.seq).collect::<Vec<_>>(), vec![1, 2, 3]);
+                assert_eq!(w.iter().map(|t| t.epoch).collect::<Vec<_>>(), vec![0, 1, 1]);
+            }
+            _ => panic!("expected a cross-seam grab"),
+        }
     }
 
     mod item_tasks {
@@ -649,7 +747,8 @@ mod tests {
             let id = owner as usize;
             let arena = BatchArena::new(2, n, 2);
             let b = arena.checkout(id, n);
-            let t = ItemTask::new(id, owner, b.clone(), (10..10 + n).collect());
+            let ticket = BatchTicket::solo(id, (10..10 + n).collect());
+            let t = ItemTask::new(&ticket, owner, b.clone());
             (b, t)
         }
 
@@ -716,7 +815,7 @@ mod tests {
 
         #[test]
         fn injector_registry_steals_from_oldest_and_counts() {
-            let inj = BatchInjector::new(Vec::new());
+            let inj = BatchInjector::new();
             let (_b0, t0) = task_of(2, 0);
             let (_b1, t1) = task_of(2, 1);
             inj.register(t0.clone());
@@ -732,7 +831,7 @@ mod tests {
             // does not count
             fill_claim(inj.steal_item(1).unwrap());
             assert_eq!(inj.item_steal_count(), 2);
-            inj.unregister(t0.batch_id());
+            inj.unregister(t0.seq());
             assert_eq!(inj.active_tasks(), 1);
             fill_claim(inj.steal_item(0).unwrap());
             assert_eq!(inj.item_steal_count(), 3);

@@ -1,31 +1,44 @@
 //! Worker "processes" (Fig 3/4 of the paper): each worker pulls batch
-//! work from its [`WorkSource`] — a pre-split static assignment (torch
-//! round-robin) or the shared work-stealing injector — fetches batches
-//! via the configured fetcher strategy, assembles them (legacy collate
-//! copy, or fused straight into an arena slab), and pushes finished
-//! batches into the bounded data queue.
+//! work from its [`WorkSource`] — a shared per-worker static deque
+//! (torch round-robin) or the shared work-stealing injector — fetches
+//! batches via the configured fetcher strategy, assembles them (legacy
+//! collate copy, or fused straight into an arena slab), and pushes
+//! finished batches into the bounded data queue.
 //!
 //! A worker is an OS thread standing in for a CPython worker process:
 //! it owns its own [`Gil`] (decode/augment serialize within the worker,
 //! never across workers) and pays the configured process start-up cost
 //! (`fork` vs `spawn`) before doing any work.
 //!
+//! Since PR 5 workers are **persistent across epochs**: spawned once
+//! per `Dataloader`, they pull [`BatchTicket`]s off a continuous
+//! generation-tagged stream. When the published stream runs dry a
+//! worker does not exit — it asks the loader's [`Planner`] for more
+//! work, which (with `epoch_pipeline > 0`) publishes the *next* epoch's
+//! plan right there, so the fetch pipeline never goes cold at the
+//! boundary; with `epoch_pipeline = 0` (legacy drain) the worker parks
+//! until the consumer requests the next epoch.
+//!
 //! Two tail-taming behaviors (PR 4):
 //!
 //! * every acquisition goes through the epoch's [`CreditGate`]: a batch
-//!   is only *started* while its id is within `consumer_credit` of the
-//!   consumer's in-order cursor, bounding the reorder buffer;
+//!   is only *started* while its seq is within `consumer_credit` of the
+//!   consumer's in-order cursor, bounding the reorder buffer — the gate
+//!   works on global seqs, so the window rolls straight across epoch
+//!   seams;
 //! * with `steal_items` (work-stealing dispatch + arena), a worker that
-//!   cannot start a new batch — credit-blocked or epoch drained — claims
-//!   *unclaimed tail items* of siblings' in-progress batches and decodes
-//!   them straight into the owners' slabs instead of idling.
+//!   cannot start a new batch — credit-blocked or out of published
+//!   tickets — claims *unclaimed tail items* of siblings' in-progress
+//!   batches and decodes them straight into the owners' slabs instead
+//!   of idling.
 //!
 //! Per-batch failures (corrupt object, ragged/empty collate) are
 //! surfaced on stderr and skipped — one bad batch never aborts the
 //! process or the epoch.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::SyncSender;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::anyhow;
@@ -37,8 +50,8 @@ use crate::dataloader::fetch::{
     fetch_async, fetch_async_fused_tasks, fetch_threaded, fetch_threaded_fused_tasks,
     fetch_vanilla, fetch_vanilla_fused, fill_wave_sequential, FetchCtx, ThreadPool,
 };
-use crate::dataloader::sampler::{self, BatchInjector, Claimed, CreditGate};
-use crate::dataloader::{DataloaderConfig, FetchImpl};
+use crate::dataloader::sampler::{self, BatchInjector, BatchTicket, Claimed, CreditGate};
+use crate::dataloader::{DataloaderConfig, FetchImpl, Planner};
 use crate::dataset::Dataset;
 use crate::gil::Gil;
 use crate::telemetry::{names, Recorder};
@@ -50,29 +63,37 @@ const STEAL_PARK: Duration = Duration::from_millis(1);
 /// What a worker pushes into the data queue: a finished batch, or a
 /// tombstone for a batch that failed (so the in-order consumer can
 /// advance past the gap immediately instead of buffering the rest of
-/// the epoch waiting for an id that will never arrive).
+/// the epoch waiting for a seq that will never arrive). Both are keyed
+/// by the **global dispatch seq** — unique across epochs, unlike the
+/// per-epoch batch id.
 pub enum WorkerMsg {
-    Batch(Batch),
-    /// batch `id` failed in this worker (already logged to stderr)
-    Failed(usize),
+    Batch { seq: usize, batch: Batch },
+    /// the batch at `seq` failed in this worker (already logged)
+    Failed { seq: usize },
 }
+
+/// A per-worker static assignment queue, shared with the planner (which
+/// appends each published epoch's round-robin share to it).
+pub type StaticQueue = Arc<Mutex<VecDeque<BatchTicket>>>;
 
 /// Where a worker's batches come from.
 pub enum WorkSource {
-    /// Pre-split per-worker assignment (torch's static round-robin).
-    /// A deque so each wave pops from the front in O(wave), not O(rest).
-    Static(std::collections::VecDeque<(usize, Vec<usize>)>),
+    /// Shared per-worker deque (torch's static round-robin split); the
+    /// planner pushes, the worker pops front in seq order.
+    Static(StaticQueue),
     /// Shared injector queue — this worker steals the globally-next
     /// batch whenever it goes idle (`work_stealing` knob).
     Stealing(Arc<BatchInjector>),
 }
 
 impl WorkSource {
-    /// Credit-gated wave acquisition: up to `k` batches whose ids the
+    /// Credit-gated wave acquisition: up to `k` batches whose seqs the
     /// gate admits.
     fn next_group(&mut self, k: usize, gate: &CreditGate) -> Claimed {
         match self {
-            WorkSource::Static(list) => sampler::take_admitted(list, k, gate),
+            WorkSource::Static(q) => {
+                sampler::take_admitted(&mut q.lock().unwrap(), k, gate)
+            }
             WorkSource::Stealing(inj) => inj.steal_group_admitted(k, gate),
         }
     }
@@ -87,9 +108,14 @@ impl WorkSource {
 
 /// Spawn one worker thread over its work source. `spawn_delay` is paid
 /// *inside* the thread before any fetching (the interpreter start-up of
-/// a `spawn`-method process, or ~0 for `fork`).
+/// a `spawn`-method process, or ~0 for `fork`). With a [`Planner`] the
+/// worker is persistent: it survives stream droughts and exits only on
+/// planner shutdown or a dead consumer; without one (unit tests) it
+/// exits when its source drains. Crate-internal: the `Planner` in the
+/// signature is a loader implementation detail (`Dataloader::epoch` is
+/// the public entry point).
 #[allow(clippy::too_many_arguments)]
-pub fn spawn_worker(
+pub(crate) fn spawn_worker(
     worker_id: u32,
     dataset: Arc<dyn Dataset>,
     recorder: Arc<Recorder>,
@@ -97,6 +123,7 @@ pub fn spawn_worker(
     source: WorkSource,
     arena: Option<Arc<BatchArena>>,
     gate: Arc<CreditGate>,
+    planner: Option<Arc<Planner>>,
     out: SyncSender<WorkerMsg>,
     spawn_delay: std::time::Duration,
 ) -> std::thread::JoinHandle<()> {
@@ -108,12 +135,15 @@ pub fn spawn_worker(
                 std::thread::sleep(spawn_delay);
             }
             recorder.record(names::WORKER_SPAWN, worker_id, -1, t0, recorder.now());
-            run_worker(worker_id, dataset, recorder, cfg, source, arena, gate, out);
+            run_worker(
+                worker_id, dataset, recorder, cfg, source, arena, gate, planner, out,
+            );
         })
         .expect("spawn dataloader worker")
 }
 
-/// Per-impl fetch machinery, built once per worker.
+/// Per-impl fetch machinery, built once per worker (and reused across
+/// every epoch the worker serves).
 enum Engine {
     Vanilla,
     Threaded(ThreadPool),
@@ -129,6 +159,7 @@ fn run_worker(
     mut source: WorkSource,
     arena: Option<Arc<BatchArena>>,
     gate: Arc<CreditGate>,
+    planner: Option<Arc<Planner>>,
     out: SyncSender<WorkerMsg>,
 ) {
     let gil = Gil::new(cfg.runtime, cfg.python_tax);
@@ -162,6 +193,8 @@ fn run_worker(
     // siblings' in-progress batches) and the arena (whose per-slot claim
     // bits make concurrent in-place fill safe)
     let steal_items = cfg.steal_items && arena.is_some() && source.injector().is_some();
+    // publications this worker has observed (see Planner::wait_for_work)
+    let mut seen_plans = 0usize;
 
     loop {
         let work = match source.next_group(group, &gate) {
@@ -182,19 +215,30 @@ fn run_worker(
                 continue;
             }
             Claimed::Drained => {
-                // end of epoch: drain any stealable tail items before
-                // exiting (the last batches are exactly the stragglers)
+                // the published stream ran dry: drain any stealable tail
+                // items (the last batches are exactly the stragglers),
+                // then ask the planner for the next epoch's plan — under
+                // `epoch_pipeline` it is published right here, keeping
+                // this worker warm across the seam; in legacy drain mode
+                // the worker parks until the consumer attaches the next
+                // epoch. Without a planner (unit tests) the drought is
+                // final: exit.
                 if steal_items && steal_one_item(&ctx, &source) {
                     continue;
                 }
-                return;
+                let Some(planner) = planner.as_ref() else { return };
+                let park = if steal_items { Some(STEAL_PARK) } else { None };
+                if !planner.wait_for_work(&mut seen_plans, park) {
+                    return;
+                }
+                continue;
             }
         };
         let t0 = recorder.now();
         // Panic containment: a panic anywhere in the wave (e.g. the
         // fetch pool losing its last thread) must still produce one
-        // message per claimed batch id — under `consumer_credit` the
-        // siblings are parked until these ids deliver, so a silently
+        // message per claimed seq — under `consumer_credit` the
+        // siblings are parked until these seqs deliver, so a silently
         // vanished wave would hang the whole epoch, not just lose data.
         // Unwinding drops the wave's builders (slabs recover) and any
         // held ItemClaims (reported as abandoned to their tasks).
@@ -208,31 +252,36 @@ fn run_worker(
                 // settle_wave never ran, and stale tasks would otherwise
                 // hand thieves slots into recovered slabs all epoch
                 if let Some(inj) = source.injector() {
-                    for (id, _) in &work {
-                        inj.unregister(*id);
+                    for t in &work {
+                        inj.unregister(t.seq);
                     }
                 }
                 work.iter()
-                    .map(|(id, _)| (*id, Err(anyhow!("worker panicked mid-wave"))))
+                    .map(|t| (t.seq, Err(anyhow!("worker panicked mid-wave"))))
                     .collect()
             }
         };
-        for (batch_id, res) in results {
+        for (seq, res) in results {
             let msg = match res {
                 Ok(batch) => {
                     recorder.record(
                         names::BATCH_INFLIGHT,
                         worker_id,
-                        batch_id as i64,
+                        batch.id as i64,
                         t0,
                         recorder.now(),
                     );
-                    WorkerMsg::Batch(batch)
+                    WorkerMsg::Batch { seq, batch }
                 }
                 Err(e) => {
                     // the per-batch error path: log, tombstone, move on
-                    eprintln!("worker {worker_id} batch {batch_id}: {e:#}");
-                    WorkerMsg::Failed(batch_id)
+                    let tag = work
+                        .iter()
+                        .find(|t| t.seq == seq)
+                        .map(|t| format!("epoch {} batch {}", t.epoch, t.id))
+                        .unwrap_or_else(|| format!("seq {seq}"));
+                    eprintln!("worker {worker_id} {tag}: {e:#}");
+                    WorkerMsg::Failed { seq }
                 }
             };
             if out.send(msg).is_err() {
@@ -243,7 +292,8 @@ fn run_worker(
 }
 
 /// One wave of fetching/assembly for the engine × arena combination —
-/// the body `run_worker` wraps in panic containment.
+/// the body `run_worker` wraps in panic containment. Results are keyed
+/// by global seq.
 fn run_wave(
     engine: &Engine,
     arena: &Option<Arc<BatchArena>>,
@@ -251,7 +301,7 @@ fn run_wave(
     gil: &Arc<Gil>,
     source: &WorkSource,
     steal_items: bool,
-    work: &[(usize, Vec<usize>)],
+    work: &[BatchTicket],
 ) -> Vec<(usize, anyhow::Result<Batch>)> {
     match (engine, arena) {
         // ---- fused zero-alloc paths (arena attached) -----------------
@@ -267,9 +317,7 @@ fn run_wave(
                 )
             } else {
                 work.iter()
-                    .map(|(id, idxs)| {
-                        (*id, fetch_vanilla_fused(ctx, arena, *id, idxs))
-                    })
+                    .map(|t| (t.seq, fetch_vanilla_fused(ctx, arena, t)))
                     .collect()
             }
         }
@@ -297,31 +345,32 @@ fn run_wave(
         // ---- legacy copying paths ------------------------------------
         (Engine::Vanilla, None) => work
             .iter()
-            .map(|(id, idxs)| {
-                let res = fetch_vanilla(ctx, *id, idxs)
-                    .and_then(|samples| gil.cpu(|| collate(*id, samples)));
-                (*id, res)
+            .map(|t| {
+                let res = fetch_vanilla(ctx, t.epoch, t.id, &t.indices)
+                    .and_then(|samples| gil.cpu(|| collate(t.id, samples)));
+                (t.seq, res)
             })
             .collect(),
         (Engine::Threaded(pool), None) => match fetch_threaded(ctx, pool, work) {
-            Ok(fetched) => fetched
-                .into_iter()
-                .map(|(id, samples)| (id, gil.cpu(|| collate(id, samples))))
+            Ok(fetched) => work
+                .iter()
+                .zip(fetched)
+                .map(|(t, samples)| (t.seq, gil.cpu(|| collate(t.id, samples))))
                 .collect(),
             Err(e) => {
-                // whole-wave failure: report it once per batch id
+                // whole-wave failure: report it once per batch seq
                 let msg = format!("{e:#}");
                 work.iter()
-                    .map(|(id, _)| (*id, Err(anyhow!("fetch wave failed: {msg}"))))
+                    .map(|t| (t.seq, Err(anyhow!("fetch wave failed: {msg}"))))
                     .collect()
             }
         },
         (Engine::Asyncio(rt, sem), None) => work
             .iter()
-            .map(|(id, idxs)| {
-                let res = fetch_async(ctx, rt, sem, *id, idxs)
-                    .and_then(|samples| gil.cpu(|| collate(*id, samples)));
-                (*id, res)
+            .map(|t| {
+                let res = fetch_async(ctx, rt, sem, t.epoch, t.id, &t.indices)
+                    .and_then(|samples| gil.cpu(|| collate(t.id, samples)));
+                (t.seq, res)
             })
             .collect(),
     }
@@ -358,11 +407,19 @@ mod tests {
         ))
     }
 
+    fn static_q(assignments: Vec<(usize, Vec<usize>)>) -> WorkSource {
+        let q: VecDeque<BatchTicket> = assignments
+            .into_iter()
+            .map(|(id, idxs)| BatchTicket::solo(id, idxs))
+            .collect();
+        WorkSource::Static(Arc::new(Mutex::new(q)))
+    }
+
     fn batches_of(rx: mpsc::Receiver<WorkerMsg>) -> Vec<Batch> {
         rx.iter()
             .filter_map(|m| match m {
-                WorkerMsg::Batch(b) => Some(b),
-                WorkerMsg::Failed(_) => None,
+                WorkerMsg::Batch { batch, .. } => Some(batch),
+                WorkerMsg::Failed { .. } => None,
             })
             .collect()
     }
@@ -382,9 +439,10 @@ mod tests {
             ds(16),
             Recorder::new(),
             Arc::new(cfg),
-            WorkSource::Static(assignments.into()),
+            static_q(assignments),
             arena,
             CreditGate::new(0),
+            None,
             tx,
             std::time::Duration::ZERO,
         );
@@ -445,9 +503,10 @@ mod tests {
             ds(16),
             Recorder::new(),
             Arc::new(DataloaderConfig { batch_size: 2, ..Default::default() }),
-            WorkSource::Static((0..8).map(|i| (i, vec![i, i + 1])).collect()),
+            static_q((0..8).map(|i| (i, vec![i, i + 1])).collect()),
             None,
             CreditGate::new(0),
+            None,
             tx,
             std::time::Duration::ZERO,
         );
@@ -466,15 +525,16 @@ mod tests {
             ds(16),
             Recorder::new(),
             Arc::new(DataloaderConfig { batch_size: 2, ..Default::default() }),
-            WorkSource::Static((0..4).map(|i| (i, vec![2 * i, 2 * i + 1])).collect()),
+            static_q((0..4).map(|i| (i, vec![2 * i, 2 * i + 1])).collect()),
             None,
             gate.clone(),
+            None,
             tx,
             std::time::Duration::ZERO,
         );
         let mut got = Vec::new();
         for expect in 0..4usize {
-            let WorkerMsg::Batch(b) = rx.recv().unwrap() else {
+            let WorkerMsg::Batch { batch: b, .. } = rx.recv().unwrap() else {
                 panic!("batch {expect} failed");
             };
             assert_eq!(b.id, expect);
@@ -510,7 +570,8 @@ mod tests {
     #[test]
     fn stealing_workers_cover_the_epoch_between_them() {
         let plan: Vec<Vec<usize>> = (0..8).map(|b| vec![2 * b, 2 * b + 1]).collect();
-        let inj = Arc::new(BatchInjector::new(plan));
+        let inj = Arc::new(BatchInjector::new());
+        inj.publish(BatchTicket::plan(0, 0, plan));
         let (tx, rx) = mpsc::sync_channel(64);
         let cfg = Arc::new(DataloaderConfig { batch_size: 2, ..Default::default() });
         let dataset = ds(16);
@@ -522,6 +583,7 @@ mod tests {
             WorkSource::Stealing(inj.clone()),
             None,
             CreditGate::new(0),
+            None,
             tx.clone(),
             std::time::Duration::ZERO,
         );
@@ -533,6 +595,7 @@ mod tests {
             WorkSource::Stealing(inj),
             None,
             CreditGate::new(0),
+            None,
             tx,
             std::time::Duration::ZERO,
         );
@@ -553,7 +616,8 @@ mod tests {
         // two item-steal workers over one injector: full coverage, every
         // batch published exactly once by its owner
         let plan: Vec<Vec<usize>> = (0..6).map(|b| vec![2 * b, 2 * b + 1]).collect();
-        let inj = Arc::new(BatchInjector::new(plan));
+        let inj = Arc::new(BatchInjector::new());
+        inj.publish(BatchTicket::plan(0, 0, plan));
         let (tx, rx) = mpsc::sync_channel(64);
         let cfg = Arc::new(DataloaderConfig {
             batch_size: 2,
@@ -571,6 +635,7 @@ mod tests {
             WorkSource::Stealing(inj.clone()),
             Some(arena.clone()),
             CreditGate::new(0),
+            None,
             tx.clone(),
             std::time::Duration::ZERO,
         );
@@ -582,6 +647,7 @@ mod tests {
             WorkSource::Stealing(inj.clone()),
             Some(arena),
             CreditGate::new(0),
+            None,
             tx,
             std::time::Duration::ZERO,
         );
@@ -613,11 +679,10 @@ mod tests {
                 dataset.clone(),
                 Recorder::new(),
                 Arc::new(DataloaderConfig { batch_size: 4, ..Default::default() }),
-                WorkSource::Static(
-                    vec![(0, vec![0, 1, 2, 3]), (1, vec![4, 5, 6, 7])].into(),
-                ),
+                static_q(vec![(0, vec![0, 1, 2, 3]), (1, vec![4, 5, 6, 7])]),
                 arena,
                 CreditGate::new(0),
+                None,
                 tx,
                 std::time::Duration::ZERO,
             );
@@ -626,10 +691,10 @@ mod tests {
             // batch 0 failed (corrupt item) and was tombstoned so the
             // consumer can advance; batch 1 delivered
             assert_eq!(msgs.len(), 2);
-            assert!(matches!(msgs[0], WorkerMsg::Failed(0)));
+            assert!(matches!(msgs[0], WorkerMsg::Failed { seq: 0 }));
             match &msgs[1] {
-                WorkerMsg::Batch(b) => assert_eq!(b.id, 1),
-                WorkerMsg::Failed(id) => panic!("batch 1 failed too: {id}"),
+                WorkerMsg::Batch { batch, .. } => assert_eq!(batch.id, 1),
+                WorkerMsg::Failed { seq } => panic!("batch 1 failed too: {seq}"),
             }
         }
     }

@@ -89,6 +89,75 @@ pub trait Dataset: Send + Sync {
     /// layer (`crate::prefetch`) fetch ahead of demand. Default: ignore.
     fn hint_epoch_order(&self, _epoch: usize, _order: &[usize]) {}
 
+    /// Cross-epoch variant of [`Dataset::hint_epoch_order`]: the *next*
+    /// epoch's access order, published while the current epoch's tail is
+    /// still draining (the epoch-pipelined loader fires this at plan
+    /// publication time). Storage-backed datasets forward it to
+    /// `ObjectStore::hint_order_append`, which *extends* the prefetch
+    /// horizon instead of resetting it — the engine keeps finishing the
+    /// current epoch's readahead and rolls straight into the next.
+    /// Default: treat it like a fresh epoch hint.
+    fn hint_epoch_order_next(&self, epoch: usize, order: &[usize]) {
+        self.hint_epoch_order(epoch, order);
+    }
+
+    // ---- epoch-tagged loads (cross-epoch pipelining, PR 5) -----------
+
+    /// Whether this dataset honors the epoch tag on the `*_at` loads
+    /// below. The epoch-pipelined loader keeps items of two adjacent
+    /// epochs in flight at once, which is only deterministic when the
+    /// augmentation epoch travels with each call — a dataset that
+    /// relies on global [`Dataset::set_epoch`] state must report
+    /// `false` (the default), and the loader then falls back to drained
+    /// boundaries instead of silently mis-seeding the pipelined head.
+    fn supports_epoch_tagged(&self) -> bool {
+        false
+    }
+
+    /// Epoch-tagged `__getitem__`: like [`Dataset::get_item`], but the
+    /// augmentation epoch travels *with the call* instead of through the
+    /// global [`Dataset::set_epoch`] state. The epoch-pipelined loader
+    /// keeps items of two adjacent epochs in flight at once, so the
+    /// global epoch cannot disambiguate them. The default ignores the
+    /// tag (correct only for drained, one-epoch-at-a-time loaders);
+    /// epoch-aware datasets override it.
+    fn get_item_at(&self, index: usize, _epoch: usize, gil: &Gil) -> Result<Sample> {
+        self.get_item(index, gil)
+    }
+
+    /// Epoch-tagged async variant of [`Dataset::get_item_at`].
+    fn get_item_async_at<'a>(
+        &'a self,
+        index: usize,
+        _epoch: usize,
+        gil: &'a Gil,
+    ) -> BoxFut<'a, Result<Sample>> {
+        self.get_item_async(index, gil)
+    }
+
+    /// Epoch-tagged variant of [`Dataset::get_item_into`].
+    fn get_item_into_at(
+        &self,
+        index: usize,
+        _epoch: usize,
+        gil: &Gil,
+        out: &mut [u8],
+    ) -> Result<ItemMeta> {
+        self.get_item_into(index, gil, out)
+    }
+
+    /// Epoch-tagged variant of [`Dataset::process_raw_into`].
+    fn process_raw_into_at(
+        &self,
+        index: usize,
+        _epoch: usize,
+        raw: &[u8],
+        gil: &Gil,
+        out: &mut [u8],
+    ) -> Result<ItemMeta> {
+        self.process_raw_into(index, raw, gil, out)
+    }
+
     /// Output crop side (informs collate shapes).
     fn crop(&self) -> usize;
 
@@ -185,8 +254,13 @@ impl ImageFolderDataset {
     }
 
     /// decode + augment under the caller's GIL (CPU-bound section).
-    fn process(&self, index: usize, raw: &[u8], gil: &Gil) -> Result<(U8Tensor, u16)> {
-        let epoch = self.epoch.load(Ordering::Relaxed);
+    fn process(
+        &self,
+        index: usize,
+        epoch: usize,
+        raw: &[u8],
+        gil: &Gil,
+    ) -> Result<(U8Tensor, u16)> {
         gil.cpu(|| {
             let img = SimgImage::decode(raw)?;
             let crop = self.augment.apply_u8(&img, epoch, index);
@@ -200,13 +274,21 @@ impl Dataset for ImageFolderDataset {
         self.keys.len()
     }
 
+    fn supports_epoch_tagged(&self) -> bool {
+        true
+    }
+
     fn get_item(&self, index: usize, gil: &Gil) -> Result<Sample> {
+        self.get_item_at(index, self.epoch.load(Ordering::Relaxed), gil)
+    }
+
+    fn get_item_at(&self, index: usize, epoch: usize, gil: &Gil) -> Result<Sample> {
         let key = &self.keys[index];
         let t0 = Instant::now();
         let raw = gil.io(|| self.store.get(key))?;
         let fetch_time = t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
-        let (crop, label) = self.process(index, &raw, gil)?;
+        let (crop, label) = self.process(index, epoch, &raw, gil)?;
         Ok(Sample {
             index,
             label,
@@ -218,13 +300,22 @@ impl Dataset for ImageFolderDataset {
     }
 
     fn get_item_async<'a>(&'a self, index: usize, gil: &'a Gil) -> BoxFut<'a, Result<Sample>> {
+        self.get_item_async_at(index, self.epoch.load(Ordering::Relaxed), gil)
+    }
+
+    fn get_item_async_at<'a>(
+        &'a self,
+        index: usize,
+        epoch: usize,
+        gil: &'a Gil,
+    ) -> BoxFut<'a, Result<Sample>> {
         Box::pin(async move {
             let key = &self.keys[index];
             let t0 = Instant::now();
             let raw = self.store.get_async(key).await?;
             let fetch_time = t0.elapsed().as_secs_f64();
             let t1 = Instant::now();
-            let (crop, label) = self.process(index, &raw, gil)?;
+            let (crop, label) = self.process(index, epoch, &raw, gil)?;
             Ok(Sample {
                 index,
                 label,
@@ -248,11 +339,29 @@ impl Dataset for ImageFolderDataset {
         self.store.hint_order(epoch, &keys);
     }
 
+    fn hint_epoch_order_next(&self, epoch: usize, order: &[usize]) {
+        let keys: Vec<String> = order
+            .iter()
+            .filter_map(|&i| self.keys.get(i).cloned())
+            .collect();
+        self.store.hint_order_append(epoch, &keys);
+    }
+
     fn crop(&self) -> usize {
         self.augment.cfg.crop
     }
 
     fn get_item_into(&self, index: usize, gil: &Gil, out: &mut [u8]) -> Result<ItemMeta> {
+        self.get_item_into_at(index, self.epoch.load(Ordering::Relaxed), gil, out)
+    }
+
+    fn get_item_into_at(
+        &self,
+        index: usize,
+        epoch: usize,
+        gil: &Gil,
+        out: &mut [u8],
+    ) -> Result<ItemMeta> {
         let key = &self.keys[index];
         if self.use_get_into {
             // zero-copy read: storage writes straight into this thread's
@@ -263,11 +372,11 @@ impl Dataset for ImageFolderDataset {
                 let n = gil.io(|| {
                     crate::storage::get_into_vec(&*self.store, key, &mut buf)
                 })?;
-                self.process_raw_into(index, &buf[..n], gil, out)
+                self.process_raw_into_at(index, epoch, &buf[..n], gil, out)
             });
         }
         let raw = gil.io(|| self.store.get(key))?;
-        self.process_raw_into(index, &raw, gil, out)
+        self.process_raw_into_at(index, epoch, &raw, gil, out)
     }
 
     fn supports_raw(&self) -> bool {
@@ -285,6 +394,17 @@ impl Dataset for ImageFolderDataset {
         gil: &Gil,
         out: &mut [u8],
     ) -> Result<ItemMeta> {
+        self.process_raw_into_at(index, self.epoch.load(Ordering::Relaxed), raw, gil, out)
+    }
+
+    fn process_raw_into_at(
+        &self,
+        index: usize,
+        epoch: usize,
+        raw: &[u8],
+        gil: &Gil,
+        out: &mut [u8],
+    ) -> Result<ItemMeta> {
         // a mis-sized slot is a per-batch error, not a worker panic
         // (apply_u8_into asserts the same invariant)
         let want = self.crop() * self.crop() * 3;
@@ -294,7 +414,6 @@ impl Dataset for ImageFolderDataset {
                 out.len()
             );
         }
-        let epoch = self.epoch.load(Ordering::Relaxed);
         gil.cpu(|| {
             // zero-copy parse off the storage bytes, augment straight
             // into the arena slot: no decode buffer, no crop tensor
@@ -417,6 +536,11 @@ mod tests {
         let w = Wrap(tiny_dataset(3, 16));
         let gil = Gil::native();
         assert!(!w.supports_raw());
+        // a set_epoch-style wrapper must not advertise epoch-tagged
+        // loads (the pipelined loader gates on this); the built-in
+        // dataset does
+        assert!(!w.supports_epoch_tagged());
+        assert!(w.0.supports_epoch_tagged());
         let mut slot = vec![0u8; 16 * 16 * 3];
         let meta = w.get_item_into(1, &gil, &mut slot).unwrap();
         let s = w.get_item(1, &gil).unwrap();

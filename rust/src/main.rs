@@ -139,6 +139,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         work_stealing: cfg.loader.work_stealing,
         steal_items: cfg.loader.steal_items,
         consumer_credit: cfg.loader.consumer_credit,
+        epoch_pipeline: cfg.loader.epoch_pipeline,
         // the rig pairs pinning with the spawn start method itself
         // (torch's rule), so pass the raw knob — `pin_memory=true`
         // must pin, not silently no-op under the default fork
@@ -244,6 +245,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         work_stealing: false,
         steal_items: false,
         consumer_credit: 0,
+        epoch_pipeline: 0,
         pin_memory: false,
         lazy_init: true,
         runtime: cdl::gil::Runtime::Native,

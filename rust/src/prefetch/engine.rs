@@ -112,10 +112,17 @@ pub(super) struct State {
     pub inflight: HashSet<String>,
     /// speculation queue: (sampler position, tiebreak seq, key)
     pub queue: BinaryHeap<Reverse<(usize, u64, String)>>,
-    /// key → position in the current epoch's sampler order
-    pub pos_of: HashMap<String, usize>,
-    /// consumer position in the sampler order
+    /// key → positions in the hinted horizon, ascending. With a single
+    /// epoch hinted each key has one position; when the epoch-pipelined
+    /// loader *appends* the next epoch's order (`hint_order_append`) a
+    /// key briefly carries one position per hinted epoch — positions
+    /// already passed by the cursor are pruned on the next append.
+    pub pos_of: HashMap<String, Vec<usize>>,
+    /// consumer position in the hinted horizon (continuous across
+    /// appended epochs; reset by a fresh `hint_order`)
     pub cursor: usize,
+    /// total positions hinted so far — the next append starts here
+    pub horizon: usize,
     /// demand misses currently paying warm-tier latency
     pub pending_demand: usize,
     pub seq: u64,
@@ -131,6 +138,7 @@ impl State {
             queue: BinaryHeap::new(),
             pos_of: HashMap::new(),
             cursor: 0,
+            horizon: 0,
             pending_demand: 0,
             seq: 0,
             shutdown: false,
@@ -286,8 +294,9 @@ mod tests {
         for &(pos, key) in items {
             st.seq += 1;
             let seq = st.seq;
-            st.pos_of.insert(key.to_string(), pos);
+            st.pos_of.entry(key.to_string()).or_default().push(pos);
             st.queue.push(Reverse((pos, seq, key.to_string())));
+            st.horizon = st.horizon.max(pos + 1);
         }
     }
 

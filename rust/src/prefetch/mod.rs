@@ -204,17 +204,42 @@ impl PrefetchStore {
     }
 
     /// Advance the sampler cursor for a demanded key (wakes the
-    /// scheduler so the readahead window slides forward).
-    fn advance_cursor(st: &mut engine::State, key: &str) {
-        if let Some(&pos) = st.pos_of.get(key) {
-            if pos >= st.cursor {
-                st.cursor = pos + 1;
+    /// scheduler so the readahead window slides forward). With a
+    /// pipelined horizon a key can appear once per hinted epoch; the
+    /// cursor moves toward just past the *earliest position not yet
+    /// passed* — the one this demand access corresponds to. Each
+    /// advance is **clamped to one readahead window**: a straggling
+    /// out-of-order demand whose own-epoch position was already passed
+    /// would otherwise match its *next-epoch* position and catapult the
+    /// cursor across the seam, mass-staling the current tail's
+    /// readahead. Clamping (rather than refusing) keeps progress
+    /// monotone — every demand at or past the cursor moves it, so a
+    /// demand burst wider than the window can never freeze it; the
+    /// cursor just converges over the next few demands.
+    fn advance_cursor(st: &mut engine::State, key: &str, depth: usize) {
+        if let Some(positions) = st.pos_of.get(key) {
+            if let Some(&pos) = positions.iter().find(|&&p| p >= st.cursor) {
+                st.cursor = (pos + 1).min(st.cursor + depth.max(1));
             }
         }
     }
 
     fn served(&self, data: &Bytes) {
         self.shared.counters.bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Append `keys` to the speculation horizon at the next free
+    /// positions (position space is continuous across appended epochs).
+    fn extend_horizon(st: &mut engine::State, keys: &[String]) {
+        let base = st.horizon;
+        for (i, key) in keys.iter().enumerate() {
+            let pos = base + i;
+            st.pos_of.entry(key.clone()).or_default().push(pos);
+            st.seq += 1;
+            let seq = st.seq;
+            st.queue.push(std::cmp::Reverse((pos, seq, key.clone())));
+        }
+        st.horizon = base + keys.len();
     }
 }
 
@@ -242,7 +267,7 @@ impl ObjectStore for PrefetchStore {
         let recorder = sh.recorder();
 
         let mut st = sh.state.lock().unwrap();
-        Self::advance_cursor(&mut st, key);
+        Self::advance_cursor(&mut st, key, sh.cfg.depth);
         if let Some(hit) = st.hot.get(key) {
             sh.counters.hot_hits.fetch_add(1, Ordering::Relaxed);
             drop(st);
@@ -293,7 +318,7 @@ impl ObjectStore for PrefetchStore {
             sh.counters.gets.fetch_add(1, Ordering::Relaxed);
             {
                 let mut st = sh.state.lock().unwrap();
-                Self::advance_cursor(&mut st, key);
+                Self::advance_cursor(&mut st, key, sh.cfg.depth);
             }
             sh.cv.notify_all();
 
@@ -361,7 +386,7 @@ impl ObjectStore for PrefetchStore {
         sh.counters.gets.fetch_add(1, Ordering::Relaxed);
 
         let mut st = sh.state.lock().unwrap();
-        Self::advance_cursor(&mut st, key);
+        Self::advance_cursor(&mut st, key, sh.cfg.depth);
         // hot hit (or an in-flight speculative fetch about to become
         // one): serve by copy-out of the tier's shared Bytes
         let hit = if let Some(hit) = st.hot.get(key) {
@@ -389,10 +414,11 @@ impl ObjectStore for PrefetchStore {
             }
             return Ok(n);
         }
-        // demand miss: delegate straight down into the caller's buffer.
-        // No hot-tier fill (that would need an owned copy — the exact
-        // allocation this path removes); the speculative engine and the
-        // `get` path remain the tier's admission routes.
+        // demand miss: delegate straight down into the caller's buffer,
+        // then admit the object into the hot tier from the borrowed
+        // slice (the tier copies once for itself; the caller's scratch
+        // stays caller-owned). Size probes transfer nothing and admit
+        // nothing.
         sh.counters.demand_misses.fetch_add(1, Ordering::Relaxed);
         st.pending_demand += 1; // preempts speculative issuance
         drop(st);
@@ -402,17 +428,19 @@ impl ObjectStore for PrefetchStore {
         if let Ok(n) = &res {
             if *n <= out.len() {
                 sh.counters.bytes.fetch_add(*n as u64, Ordering::Relaxed);
+                let mut st = sh.state.lock().unwrap();
+                st.hot.insert(key, Bytes::new(out[..*n].to_vec()));
             }
         }
         res
     }
 
     fn native_get_into(&self) -> bool {
-        // deliberately NOT forwarded (like `VarnishCache`): demand
-        // misses on the `get_into` path skip hot-tier admission, so a
-        // dataset steered through it would only ever warm the tier via
-        // speculation. The `get` path keeps demand admission.
-        false
+        // forwarded since the `get_into` miss path now admits from the
+        // caller's borrowed slice: a dir-backed stack keeps the
+        // zero-copy pread read *and* warms the hot tier on demand, not
+        // only via speculation.
+        self.shared.inner.native_get_into()
     }
 
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
@@ -453,20 +481,31 @@ impl ObjectStore for PrefetchStore {
         {
             let mut st = self.shared.state.lock().unwrap();
             st.cursor = 0;
+            st.horizon = 0;
             st.pos_of.clear();
             st.queue.clear();
-            for (pos, key) in keys.iter().enumerate() {
-                st.pos_of.insert(key.clone(), pos);
-                st.seq += 1;
-                let seq = st.seq;
-                st.queue
-                    .push(std::cmp::Reverse((pos, seq, key.clone())));
-            }
+            Self::extend_horizon(&mut st, keys);
         }
         self.shared.cv.notify_all();
         // forward down the stack (harmless for plain stores, lets a
         // nested prefetch layer see the order too)
         self.shared.inner.hint_order(epoch, keys);
+    }
+
+    fn hint_order_append(&self, epoch: usize, keys: &[String]) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            // prune positions the consumer has already passed so the
+            // per-key lists stay O(epochs in flight), not O(all epochs)
+            let cursor = st.cursor;
+            st.pos_of.retain(|_, positions| {
+                positions.retain(|&p| p >= cursor);
+                !positions.is_empty()
+            });
+            Self::extend_horizon(&mut st, keys);
+        }
+        self.shared.cv.notify_all();
+        self.shared.inner.hint_order_append(epoch, keys);
     }
 }
 
@@ -645,6 +684,87 @@ mod tests {
         assert_eq!(t.rows.len(), 2);
         assert!(t.rows[0][0].starts_with("hot"));
         assert!(t.rows[1][0].starts_with("warm"));
+    }
+
+    #[test]
+    fn hint_order_append_extends_the_horizon_across_epochs() {
+        // epoch 0 hinted, partially consumed; appending epoch 1's order
+        // must extend the position space past epoch 0's tail — not
+        // reset the cursor or drop the tail
+        let p = PrefetchStore::new(
+            corpus(8, 64),
+            PrefetchConfig { depth: 6, ..Default::default() },
+        );
+        p.hint_order(0, &order(8));
+        assert!(wait_until(2000, || p.counters().completed >= 6));
+        // consume the first half of epoch 0: cursor lands on 4
+        for i in 0..4 {
+            p.get(&key(i)).unwrap();
+        }
+        // next epoch's order arrives while epoch 0 is still in flight
+        // (reversed, so every key holds a different position per epoch)
+        let mut next: Vec<String> = order(8);
+        next.reverse();
+        p.hint_order_append(1, &next);
+        {
+            let st = p.shared.state.lock().unwrap();
+            assert_eq!(st.horizon, 16, "appended epoch must extend positions");
+            assert_eq!(st.cursor, 4, "append must not reset the cursor");
+            // key 7 keeps its un-passed epoch-0 position and gains its
+            // epoch-1 one; key 0's passed position is pruned
+            assert_eq!(st.pos_of[&key(7)], vec![7, 8]);
+            assert_eq!(st.pos_of[&key(0)], vec![15]);
+        }
+        // the rolling window now reaches epoch 0's tail keys — wait for
+        // them, then drain both epochs entirely from the hot tier
+        assert!(
+            wait_until(2000, || p.counters().completed >= 8),
+            "horizon did not extend: {:?}",
+            p.counters()
+        );
+        for i in 4..8 {
+            p.get(&key(i)).unwrap();
+        }
+        for k in &next {
+            p.get(k).unwrap();
+        }
+        let c = p.counters();
+        assert_eq!(c.gets, 16, "{c:?}");
+        assert_eq!(c.demand_misses, 0, "append reset the engine: {c:?}");
+    }
+
+    #[test]
+    fn get_into_miss_admits_from_borrowed_slice() {
+        let p = PrefetchStore::new(corpus(2, 100), PrefetchConfig::default());
+        let mut buf = vec![0u8; 128];
+        assert_eq!(p.get_into(&key(0), &mut buf).unwrap(), 100);
+        // the miss populated the hot tier from the caller's scratch:
+        // the next lookup is a hit
+        assert_eq!(p.get_into(&key(0), &mut buf).unwrap(), 100);
+        let c = p.counters();
+        assert_eq!(c.demand_misses, 1, "{c:?}");
+        assert_eq!(c.hot_hits, 1, "{c:?}");
+        // size probes (too-small buffer) admit nothing
+        let mut tiny = vec![0u8; 4];
+        assert_eq!(p.get_into(&key(1), &mut tiny).unwrap(), 100);
+        assert!(!p.shared.state.lock().unwrap().hot.contains(&key(1)));
+    }
+
+    #[test]
+    fn native_get_into_forwards_from_the_inner_store() {
+        // shared-Bytes backing (MemStore): no native path, so the
+        // facade reports none either; the admission change makes
+        // forwarding safe for stores that do have one (DirStore)
+        let p = PrefetchStore::new(corpus(1, 10), PrefetchConfig::default());
+        assert!(!p.native_get_into());
+        let root = std::env::temp_dir()
+            .join(format!("cdl-prefetch-native-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let dir = Arc::new(crate::storage::DirStore::open(&root).unwrap());
+        dir.put("k", vec![5u8; 32]).unwrap();
+        let p = PrefetchStore::new(dir, PrefetchConfig::default());
+        assert_eq!(p.native_get_into(), cfg!(unix));
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

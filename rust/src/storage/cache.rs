@@ -77,6 +77,17 @@ impl VarnishCache {
     fn fill(&self, key: &str, data: Bytes) {
         self.core.lock().unwrap().insert(key, data);
     }
+
+    /// Borrow-based admission: cache `data` without taking ownership of
+    /// the caller's buffer (the cache makes its own copy). This is the
+    /// admission route for the zero-copy `get_into` path, whose callers
+    /// read into reused scratch buffers they cannot hand over — before
+    /// this API, scratch-path misses bypassed the cache entirely and a
+    /// `get_into`-routed dataset could never warm it. The copy happens
+    /// once per *admission* (miss), not per read; hits stay copy-out.
+    pub fn admit(&self, key: &str, data: &[u8]) {
+        self.fill(key, Bytes::new(data.to_vec()));
+    }
 }
 
 impl ObjectStore for VarnishCache {
@@ -115,24 +126,25 @@ impl ObjectStore for VarnishCache {
             }
             return Ok(n);
         }
-        // miss: delegate straight down — no cache fill (filling would
-        // need an owned copy of the caller's buffer, re-adding exactly
-        // the allocation this path removes). The `get` path remains the
-        // admission route.
+        // miss: delegate down into the caller's buffer, then admit the
+        // object from the borrowed slice (the cache copies once for
+        // itself; the caller's scratch is untouched and never owned).
+        // Size probes (buffer too small) transfer nothing and admit
+        // nothing — the grow-and-retry pass pays the fill.
         let n = self.inner.get_into(key, out)?;
         if n <= out.len() {
             self.stats.record_get(n as u64);
+            self.admit(key, &out[..n]);
         }
         Ok(n)
     }
 
     fn native_get_into(&self) -> bool {
-        // deliberately NOT forwarded: advertising the inner store's
-        // native path would steer datasets through `get_into`, whose
-        // misses bypass admission — the cache would never warm. Routing
-        // reads through `get` keeps admission; hits are shared-Bytes
-        // serves either way.
-        false
+        // forwarded since admission works on the `get_into` miss path
+        // too (`VarnishCache::admit`): a dir-backed stack keeps its
+        // zero-copy pread reads *and* still warms the cache, so hits
+        // skip the file read entirely on the next epoch.
+        self.inner.native_get_into()
     }
 
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
@@ -154,6 +166,10 @@ impl ObjectStore for VarnishCache {
 
     fn hint_order(&self, epoch: usize, keys: &[String]) {
         self.inner.hint_order(epoch, keys)
+    }
+
+    fn hint_order_append(&self, epoch: usize, keys: &[String]) {
+        self.inner.hint_order_append(epoch, keys)
     }
 
     fn label(&self) -> String {
@@ -264,6 +280,63 @@ mod tests {
         c.get("big").unwrap();
         assert_eq!(c.stats().hits, 0);
         assert_eq!(c.cached_bytes(), 0);
+    }
+
+    #[test]
+    fn get_into_miss_admits_from_borrowed_slice() {
+        let c = VarnishCache::new(backing(2, 100), 1000);
+        let mut buf = vec![0u8; 128];
+        assert_eq!(c.get_into("k0", &mut buf).unwrap(), 100);
+        // the miss admitted the object from the caller's scratch: the
+        // next read — via either path — is a hit
+        assert_eq!(c.cached_bytes(), 100);
+        let before = c.stats().hits;
+        assert_eq!(c.get_into("k0", &mut buf).unwrap(), 100);
+        c.get("k0").unwrap();
+        assert_eq!(c.stats().hits, before + 2);
+        // a size probe (too-small buffer) transfers nothing and admits
+        // nothing
+        let mut tiny = vec![0u8; 8];
+        assert_eq!(c.get_into("k1", &mut tiny).unwrap(), 100);
+        assert_eq!(c.cached_bytes(), 100);
+        c.audit().unwrap();
+    }
+
+    #[test]
+    fn admit_api_populates_without_ownership() {
+        let c = VarnishCache::new(backing(1, 10), 1000);
+        let scratch = vec![7u8; 64];
+        c.admit("kx", &scratch[..32]);
+        drop(scratch); // cache owns its own copy
+        assert_eq!(c.cached_bytes(), 32);
+        assert!(c.contains("kx"));
+    }
+
+    #[test]
+    fn native_get_into_forwards_from_the_inner_store() {
+        // MemStore backing: no native scratch path → the facade reports
+        // none; a DirStore backing forwards true (on unix), since the
+        // admission change means routing reads through get_into no
+        // longer starves the cache
+        let c = VarnishCache::new(backing(1, 10), 100);
+        assert!(!c.native_get_into());
+        let root = std::env::temp_dir()
+            .join(format!("cdl-varnish-native-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let dir = Arc::new(crate::storage::DirStore::open(&root).unwrap());
+        dir.put("k", vec![5u8; 32]).unwrap();
+        let c = VarnishCache::new(dir, 1000);
+        assert_eq!(c.native_get_into(), cfg!(unix));
+        if cfg!(unix) {
+            // end to end: a scratch read admits, the repeat is a hit
+            let mut buf = vec![0u8; 64];
+            assert_eq!(c.get_into("k", &mut buf).unwrap(), 32);
+            assert!(buf[..32].iter().all(|&b| b == 5));
+            assert_eq!(c.cached_bytes(), 32);
+            assert_eq!(c.get_into("k", &mut buf).unwrap(), 32);
+            assert_eq!(c.stats().hits, 1);
+        }
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

@@ -22,8 +22,12 @@ use super::{Bytes, ObjectStore, StatCounters, StoreStats};
 
 /// Max cached open handles; beyond it the cache is cleared wholesale
 /// (simple, and a dataset re-walks its keys every epoch anyway, so the
-/// hot set repopulates in one pass).
-const MAX_HANDLES: usize = 4096;
+/// hot set repopulates in one pass). Kept well below the common Linux
+/// default soft `RLIMIT_NOFILE` of 1024 — the loader's fetch threads,
+/// the prefetch runtime, and the process' own fds all share that
+/// budget, and blowing it turns every subsequent cold-key open into
+/// EMFILE mid-epoch.
+const MAX_HANDLES: usize = 512;
 
 pub struct DirStore {
     root: PathBuf,

@@ -111,6 +111,18 @@ pub trait ObjectStore: Send + Sync {
     /// inner store, and plain stores ignore it (the default).
     fn hint_order(&self, _epoch: usize, _keys: &[String]) {}
 
+    /// Cross-epoch hint: the *next* epoch's key order, published while
+    /// the current epoch is still being consumed (the epoch-pipelined
+    /// loader fires this at plan-publication time). Prefetching stores
+    /// *extend* their readahead horizon — positions continue past the
+    /// current epoch's, so the engine rolls across the boundary without
+    /// dropping the current tail — instead of resetting it like
+    /// [`ObjectStore::hint_order`]. Wrapper stores forward it; plain
+    /// stores treat it as a fresh hint (the default), which ignores it.
+    fn hint_order_append(&self, epoch: usize, keys: &[String]) {
+        self.hint_order(epoch, keys)
+    }
+
     /// Human label for reports ("s3", "scratch", ...).
     fn label(&self) -> String;
 

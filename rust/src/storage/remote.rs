@@ -260,6 +260,10 @@ impl ObjectStore for SimRemoteStore {
         self.inner.hint_order(epoch, keys)
     }
 
+    fn hint_order_append(&self, epoch: usize, keys: &[String]) {
+        self.inner.hint_order_append(epoch, keys)
+    }
+
     fn label(&self) -> String {
         self.profile.name.to_string()
     }

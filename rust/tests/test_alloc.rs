@@ -10,20 +10,26 @@
 //! thread and stays immune to the parallel test harness.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use cdl::data::augment::{Augment, AugmentConfig};
 use cdl::data::simg::SimgRef;
 use cdl::data::synth::{generate_corpus, CorpusSpec};
-use cdl::dataloader::BatchArena;
+use cdl::dataloader::{BatchArena, Dataloader, DataloaderConfig};
 use cdl::dataset::{Dataset, ImageFolderDataset, ItemMeta};
 use cdl::gil::Gil;
 use cdl::storage::{Bytes, DirStore, MemStore, ObjectStore};
 use cdl::util::alloc;
 
 #[test]
-fn arena_assembly_is_zero_alloc_in_steady_state() {
+fn arena_assembly_is_zero_alloc_in_steady_state_across_epoch_seams() {
     const B: usize = 16;
     const CROP: usize = 24;
+    // 6 batches per simulated epoch: the measured window below spans
+    // three epoch boundaries, so the generation-tagged re-checkout
+    // (epoch bump + claim-word reset) is proven allocation-free too —
+    // persistent workers re-cross seams with the same slabs forever
+    const PER_EPOCH: usize = 6;
     let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
     let (keys, _) = generate_corpus(&store, &CorpusSpec::tiny(B)).unwrap();
     // raw object bytes resident (the storage layer shares Arcs, so the
@@ -32,32 +38,34 @@ fn arena_assembly_is_zero_alloc_in_steady_state() {
     let aug = Augment::new(AugmentConfig { crop: CROP, ..Default::default() });
     let arena = BatchArena::new(CROP, B, 2);
 
-    let run_batch = |id: usize| {
-        let builder = arena.clone().checkout(id, B);
+    let run_batch = |seq: usize| {
+        let (epoch, id) = (seq / PER_EPOCH, seq % PER_EPOCH);
+        let builder = arena.clone().checkout_tagged(id, seq, epoch, B);
         for pos in 0..B {
             let raw = &raws[pos];
             builder
                 .fill(pos, pos, |out| {
                     let img = SimgRef::parse(&raw[..])?;
-                    aug.apply_u8_into(&img, id, pos, out);
+                    aug.apply_u8_into(&img, epoch, pos, out);
                     Ok(ItemMeta { label: img.label, raw_bytes: raw.len() })
                 })
                 .unwrap();
         }
         let batch = builder.finish().unwrap();
+        assert_eq!(batch.id, id);
         assert_eq!(batch.len(), B);
         assert_eq!(batch.images.data.len(), B * CROP * CROP * 3);
         batch.recycle();
     };
 
     // warm-up: first slab allocation, CRC tables, column-LUT scratch
-    for id in 0..3 {
-        run_batch(id);
+    for seq in 0..3 {
+        run_batch(seq);
     }
 
     let before = alloc::thread_counters();
-    for id in 3..19 {
-        run_batch(id);
+    for seq in 3..19 {
+        run_batch(seq); // crosses the seams at seq 6, 12, and 18
     }
     let delta = alloc::thread_counters().since(before);
 
@@ -77,6 +85,65 @@ fn arena_assembly_is_zero_alloc_in_steady_state() {
     assert_eq!(stats.checkouts, 19, "{stats:?}");
     assert_eq!(stats.fresh, 1, "{stats:?}");
     assert_eq!(stats.reused, 18, "{stats:?}");
+}
+
+#[test]
+fn steady_state_epoch_attach_skips_pipeline_setup_allocs() {
+    // persistent workers: the first `epoch()` builds the whole pipeline
+    // (bounded channel, planner, dispatch queues, worker bookkeeping);
+    // a steady-state `epoch()` only publishes the next plan. The
+    // consumer-thread allocation bill must reflect that — no per-epoch
+    // channel/thread setup is tolerated.
+    if alloc::counters().allocs == 0 {
+        return; // counting allocator not installed (--no-default-features)
+    }
+    let mk = || {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+        generate_corpus(&store, &CorpusSpec::tiny(8)).unwrap();
+        let ds: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
+            store,
+            AugmentConfig { crop: 16, ..Default::default() },
+        ));
+        Dataloader::new(
+            ds,
+            DataloaderConfig {
+                batch_size: 4,
+                num_workers: 8,
+                spawn_cost_override: Some(Duration::ZERO),
+                ..Default::default()
+            },
+            cdl::telemetry::Recorder::new(),
+        )
+    };
+
+    // cold: pipeline construction + plan publication
+    let cold_dl = mk();
+    let before = alloc::thread_counters();
+    let cold_iter = cold_dl.epoch(0);
+    let cold = alloc::thread_counters().since(before).allocs;
+    drop(cold_iter);
+
+    // steady: two full epochs warm the persistent pipeline, then the
+    // attach for epoch 2 is plan-only
+    let dl = mk();
+    for epoch in 0..2 {
+        for b in dl.epoch(epoch) {
+            b.recycle();
+        }
+    }
+    let before = alloc::thread_counters();
+    let steady_iter = dl.epoch(2);
+    let steady = alloc::thread_counters().since(before).allocs;
+    drop(steady_iter);
+
+    // the cold attach additionally pays the channel + per-worker queue
+    // + planner construction, so any steady-state attach that re-does
+    // pipeline setup shows up as steady ≥ cold
+    assert!(
+        steady < cold,
+        "steady-state epoch attach allocated {steady} (cold setup: {cold}) — \
+         per-epoch pipeline setup has crept back in"
+    );
 }
 
 #[cfg(unix)]

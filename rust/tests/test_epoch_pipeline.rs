@@ -1,0 +1,290 @@
+//! Cross-epoch pipelining correctness (PR 5): pipelined
+//! (`epoch_pipeline = 1`) multi-epoch runs are **byte-identical** to
+//! legacy drained runs for every fetcher × dispatch mode under the
+//! shuffled sampler; the consumer-credit bound holds *through* the
+//! epoch seam (the reorder high-water counts early next-epoch
+//! arrivals); and an epoch-N straggler holding a stale arena builder
+//! can never scribble on an epoch-N+1 slab.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cdl::data::synth::{generate_corpus, CorpusSpec};
+use cdl::data::AugmentConfig;
+use cdl::dataloader::{Batch, BatchArena, Dataloader, DataloaderConfig, FetchImpl};
+use cdl::dataset::{Dataset, ImageFolderDataset, ItemMeta};
+use cdl::storage::{Bytes, MemStore, ObjectStore, StoreStats};
+use cdl::telemetry::Recorder;
+
+const ITEMS: usize = 37; // not a multiple of the batch size: partial tail
+const BATCH: usize = 8;
+const EPOCHS: usize = 3;
+
+fn dataset() -> Arc<dyn Dataset> {
+    let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+    generate_corpus(&mem, &CorpusSpec::tiny(ITEMS)).unwrap();
+    Arc::new(ImageFolderDataset::new(
+        mem,
+        AugmentConfig { crop: 16, ..Default::default() },
+    ))
+}
+
+/// (work_stealing, steal_items) per dispatch mode.
+const DISPATCH: [(bool, bool); 3] = [(false, false), (true, false), (true, true)];
+
+fn loader(
+    ds: &Arc<dyn Dataset>,
+    fetch: FetchImpl,
+    (work_stealing, steal_items): (bool, bool),
+    epoch_pipeline: usize,
+) -> Dataloader {
+    Dataloader::new(
+        ds.clone(),
+        DataloaderConfig {
+            batch_size: BATCH,
+            num_workers: 3,
+            fetch_impl: fetch,
+            num_fetch_workers: 4,
+            arena_slabs: 12,
+            work_stealing,
+            steal_items,
+            consumer_credit: 3,
+            epoch_pipeline,
+            spawn_cost_override: Some(Duration::ZERO),
+            ..Default::default()
+        },
+        Recorder::new(),
+    )
+}
+
+fn assert_batches_identical(drained: &[Batch], pipelined: &[Batch], ctx: &str) {
+    assert_eq!(drained.len(), pipelined.len(), "{ctx}: batch count");
+    for (a, b) in drained.iter().zip(pipelined.iter()) {
+        assert_eq!(a.id, b.id, "{ctx}");
+        assert_eq!(a.images.shape, b.images.shape, "{ctx}: batch {}", a.id);
+        assert_eq!(a.images.data, b.images.data, "{ctx}: batch {} bytes", a.id);
+        assert_eq!(a.labels, b.labels, "{ctx}: batch {}", a.id);
+        assert_eq!(a.indices, b.indices, "{ctx}: batch {}", a.id);
+        assert_eq!(a.raw_bytes, b.raw_bytes, "{ctx}: batch {}", a.id);
+    }
+}
+
+#[test]
+fn pipelined_multi_epoch_runs_are_byte_identical_to_drained() {
+    // shuffled sampler (the default) × every fetcher × every dispatch
+    // mode: the same persistent loader run for three epochs must emit
+    // the exact same batches whether the boundary drains or pipelines —
+    // the epoch tag travels with every item load, so a worker decoding
+    // epoch N+1's head while N's tail delivers uses N+1's augment seed
+    let ds = dataset();
+    for fetch in FetchImpl::all() {
+        for dispatch in DISPATCH {
+            let drained = loader(&ds, fetch, dispatch, 0);
+            let pipelined = loader(&ds, fetch, dispatch, 1);
+            for epoch in 0..EPOCHS {
+                let a: Vec<Batch> = drained.epoch(epoch).collect();
+                let b: Vec<Batch> = pipelined.epoch(epoch).collect();
+                assert_eq!(a.last().unwrap().len(), ITEMS % BATCH); // partial tail
+                assert_batches_identical(
+                    &a,
+                    &b,
+                    &format!("{} {dispatch:?} epoch {epoch}", fetch.label()),
+                );
+                for batch in a.into_iter().chain(b) {
+                    batch.recycle();
+                }
+            }
+            // the pipelined loader actually ran ahead of the consumer:
+            // a drained worker pre-publishes epoch EPOCHS's plan (the
+            // publication is asynchronous, so poll briefly)
+            let deadline = std::time::Instant::now() + Duration::from_secs(5);
+            while pipelined.plans_published() <= EPOCHS
+                && std::time::Instant::now() < deadline
+            {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            assert!(
+                pipelined.plans_published() > EPOCHS,
+                "{}: no plan was pre-published (pipelining never engaged)",
+                fetch.label()
+            );
+            assert_eq!(drained.plans_published(), EPOCHS, "{}", fetch.label());
+        }
+    }
+}
+
+/// Store wrapper that stalls chosen keys — an adversarial straggler
+/// schedule for the cross-epoch credit stress below.
+struct StragglerStore {
+    inner: Arc<dyn ObjectStore>,
+    every: usize,
+    delay: Duration,
+    slow_keys: Vec<String>,
+}
+
+impl StragglerStore {
+    fn new(inner: Arc<dyn ObjectStore>, every: usize, delay: Duration) -> StragglerStore {
+        let slow_keys = inner.keys().into_iter().step_by(every).collect();
+        StragglerStore { inner, every, delay, slow_keys }
+    }
+}
+
+impl ObjectStore for StragglerStore {
+    fn get(&self, key: &str) -> anyhow::Result<Bytes> {
+        if self.slow_keys.iter().any(|k| k == key) {
+            std::thread::sleep(self.delay);
+        }
+        self.inner.get(key)
+    }
+
+    fn put(&self, key: &str, data: Vec<u8>) -> anyhow::Result<()> {
+        self.inner.put(key, data)
+    }
+
+    fn keys(&self) -> Vec<String> {
+        self.inner.keys()
+    }
+
+    fn label(&self) -> String {
+        format!("straggler(1/{} × {:?})", self.every, self.delay)
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.inner.stats()
+    }
+}
+
+#[test]
+fn reorder_buffer_respects_credit_through_the_epoch_seam() {
+    // credit 2, pipelining on: epoch N+1's head batches may finish
+    // while N's straggling tail still delivers, but the through-seam
+    // reorder buffer (which counts those early arrivals) must never
+    // exceed the credit — the gate window is in global seqs
+    const CREDIT: usize = 2;
+    let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+    generate_corpus(&mem, &CorpusSpec::tiny(ITEMS)).unwrap();
+    let slow: Arc<dyn ObjectStore> =
+        Arc::new(StragglerStore::new(mem, 7, Duration::from_millis(20)));
+    let ds: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
+        slow,
+        AugmentConfig { crop: 16, ..Default::default() },
+    ));
+    for fetch in FetchImpl::all() {
+        for dispatch in DISPATCH {
+            let dl = Dataloader::new(
+                ds.clone(),
+                DataloaderConfig {
+                    batch_size: BATCH,
+                    num_workers: 3,
+                    fetch_impl: fetch,
+                    num_fetch_workers: 4,
+                    arena_slabs: 10,
+                    work_stealing: dispatch.0,
+                    steal_items: dispatch.1,
+                    consumer_credit: CREDIT,
+                    epoch_pipeline: 1,
+                    spawn_cost_override: Some(Duration::ZERO),
+                    ..Default::default()
+                },
+                Recorder::new(),
+            );
+            for epoch in 0..EPOCHS {
+                let ctx = format!("{} {dispatch:?} epoch {epoch}", fetch.label());
+                let mut it = dl.epoch(epoch);
+                let mut ids = Vec::new();
+                let mut seen = Vec::new();
+                for b in it.by_ref() {
+                    ids.push(b.id);
+                    seen.extend(b.indices.iter().copied());
+                    b.recycle();
+                }
+                let hwm = it.reorder_high_water();
+                drop(it);
+                assert_eq!(ids, (0..5).collect::<Vec<_>>(), "{ctx}");
+                seen.sort_unstable();
+                assert_eq!(seen, (0..ITEMS).collect::<Vec<_>>(), "{ctx}");
+                assert!(
+                    hwm <= CREDIT,
+                    "{ctx}: through-seam reorder hwm {hwm} > credit {CREDIT}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn epoch_n_straggler_cannot_fill_an_epoch_n1_slab() {
+    // the generation-tagged claim words: a builder clone left over from
+    // epoch N (a straggling thief) must fail cleanly — naming both
+    // epochs — once its slab has been recycled into epoch N+1, and the
+    // new batch's bytes must be untouched
+    let arena = BatchArena::new(4, 2, 2);
+    let epoch0 = arena.clone().checkout_tagged(0, 0, 0, 2);
+    let straggler = epoch0.clone();
+    for pos in 0..2 {
+        epoch0
+            .fill(pos, pos, |out| {
+                out.fill(1);
+                Ok(ItemMeta { label: 0, raw_bytes: 1 })
+            })
+            .unwrap();
+    }
+    epoch0.finish().unwrap().recycle();
+
+    // same slab, next epoch (seq continues on the global stream)
+    let epoch1 = arena.clone().checkout_tagged(0, 5, 1, 2);
+    assert_eq!(epoch1.epoch(), 1);
+    assert_eq!(epoch1.seq(), 5);
+    let err = straggler
+        .fill(0, 9, |out| {
+            out.fill(0xEE);
+            Ok(ItemMeta { label: 0, raw_bytes: 1 })
+        })
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("stale builder"), "{msg}");
+    assert!(msg.contains("epoch 0"), "{msg}");
+    assert!(msg.contains("epoch 1"), "{msg}");
+
+    for pos in 0..2 {
+        epoch1
+            .fill(pos, 10 + pos, |out| {
+                out.fill(7);
+                Ok(ItemMeta { label: 1, raw_bytes: 2 })
+            })
+            .unwrap();
+    }
+    let batch = epoch1.finish().unwrap();
+    assert!(
+        batch.images.data.iter().all(|&v| v == 7),
+        "epoch-0 straggler scribbled on the epoch-1 slab"
+    );
+}
+
+#[test]
+fn pipelined_loader_over_prefetch_store_spans_epochs() {
+    // rig-level: prefetch engine + epoch pipelining — the horizon
+    // handoff (hint_order_append at plan publication) must keep the
+    // engine serving demand across the seam, with every item of every
+    // epoch delivered exactly once
+    let mut spec = cdl::bench::rig::RigSpec::quick("s3", 0.02);
+    spec.items = 48;
+    spec.batch_size = 8;
+    spec.num_workers = 3;
+    spec.fetch_impl = FetchImpl::Threaded;
+    spec.prefetch_depth = 24;
+    spec.arena_slabs = 12;
+    spec.work_stealing = true;
+    spec.steal_items = true;
+    spec.consumer_credit = 4;
+    spec.epoch_pipeline = 1;
+    let rig = cdl::bench::rig::build(&spec).unwrap();
+    for epoch in 0..EPOCHS {
+        let (_, _, n) = cdl::bench::rig::drain_numbered_epoch(&rig, epoch);
+        assert_eq!(n, 6, "epoch {epoch}");
+    }
+    let p = rig.prefetch.as_ref().unwrap();
+    let c = p.counters();
+    assert_eq!(c.gets, (48 * EPOCHS) as u64, "{c:?}");
+    assert!(c.issued > 0, "engine never speculated: {c:?}");
+}

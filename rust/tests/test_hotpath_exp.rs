@@ -20,7 +20,7 @@
 //! high-water or allocation regression).
 
 use cdl::bench::exp_hotpath::{
-    assembly_table, get_into_table, pinned_table, tail_table,
+    assembly_table, boundary_table, get_into_table, pinned_table, tail_table,
 };
 use cdl::bench::Scale;
 
@@ -71,6 +71,16 @@ fn hotpath_experiment_acceptance() {
         "item-steal p99 {item_p99:.4}s regressed vs batch-steal \
          {batch_p99:.4}s on ceph_os (ceiling {tail_ceiling}x)"
     );
+
+    // ---- epoch boundary: pipelined gap < drained gap on s3 ----------
+    // boundary_table itself bails if the pipelined inter-epoch gap is
+    // not strictly smaller than the drained one on the s3 profile, and
+    // if any cell's through-the-seam reorder high-water exceeds the
+    // credit, so both bars are enforced just by running it.
+    let (t, drained_gap, pipelined_gap) = boundary_table(scale).unwrap();
+    assert_eq!(t.rows.len(), 6);
+    assert!(drained_gap > 0.0 && pipelined_gap > 0.0);
+    assert!(pipelined_gap < drained_gap);
 
     // ---- pinned slabs: transfers strictly faster than pageable ------
     // the transfer model is sleep-based (400µs + b/6GBps pageable vs

@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use cdl::dataloader::collate::restore_order;
-use cdl::dataloader::sampler::{assign_round_robin, batches, Sampler};
+use cdl::dataloader::sampler::{batches, BatchTicket, Sampler};
 use cdl::simnet::Link;
 use cdl::storage::{MemStore, ObjectStore, VarnishCache};
 use cdl::util::prop::{check, gen, shrink_vec};
@@ -49,38 +49,49 @@ fn prop_batching_partitions_order() {
 }
 
 #[test]
-fn prop_round_robin_routing_complete_and_balanced() {
+fn prop_ticket_stream_continuous_and_round_robin_balanced() {
     check(
-        "round-robin covers all batches, balanced ±1",
+        "ticketed epochs form a continuous stream; id % w routing balanced ±1",
         |rng| {
             let n_batches = rng.below(200);
             let workers = rng.range(1, 16);
             (n_batches, workers)
         },
         |&(n_batches, workers)| {
-            let plan: Vec<Vec<usize>> =
-                (0..n_batches).map(|i| vec![i]).collect();
-            let assigned = assign_round_robin(plan, workers);
-            let mut ids: Vec<usize> = assigned
-                .iter()
-                .flat_map(|w| w.iter().map(|(id, _)| *id))
-                .collect();
-            ids.sort_unstable();
-            if ids != (0..n_batches).collect::<Vec<_>>() {
-                return Err("batch ids lost or duplicated".into());
+            let plan = |_e: usize| -> Vec<Vec<usize>> {
+                (0..n_batches).map(|i| vec![i]).collect()
+            };
+            let e0 = BatchTicket::plan(0, 0, plan(0));
+            let e1 = BatchTicket::plan(1, e0.len(), plan(1));
+            // global seqs are continuous across the epoch seam
+            let seqs: Vec<usize> = e0.iter().chain(&e1).map(|t| t.seq).collect();
+            if seqs != (0..2 * n_batches).collect::<Vec<_>>() {
+                return Err("seqs not continuous across the seam".into());
             }
-            let counts: Vec<usize> = assigned.iter().map(|w| w.len()).collect();
-            let (min, max) = (
-                counts.iter().min().copied().unwrap_or(0),
-                counts.iter().max().copied().unwrap_or(0),
-            );
-            if max - min > 1 {
-                return Err(format!("unbalanced: {counts:?}"));
+            // per-epoch ids restart at 0 and cover the plan; epoch tags
+            // ride every ticket
+            for (e, tickets) in [(0usize, &e0), (1, &e1)] {
+                let ids: Vec<usize> = tickets.iter().map(|t| t.id).collect();
+                if ids != (0..n_batches).collect::<Vec<_>>() {
+                    return Err(format!("epoch {e}: ids lost or duplicated"));
+                }
+                if tickets.iter().any(|t| t.epoch != e) {
+                    return Err(format!("epoch {e}: wrong epoch tag"));
+                }
             }
-            // worker k's batches ≡ k (mod workers): torch routing
-            for (w, lst) in assigned.iter().enumerate() {
-                if lst.iter().any(|(id, _)| id % assigned.len() != w) {
-                    return Err(format!("worker {w} got foreign batch"));
+            // the static sink routes ticket id → worker id % w (torch's
+            // rule, per epoch): balanced ±1
+            if workers > 0 && n_batches > 0 {
+                let mut counts = vec![0usize; workers];
+                for t in &e0 {
+                    counts[t.id % workers] += 1;
+                }
+                let (min, max) = (
+                    counts.iter().min().copied().unwrap_or(0),
+                    counts.iter().max().copied().unwrap_or(0),
+                );
+                if max - min > 1 {
+                    return Err(format!("unbalanced: {counts:?}"));
                 }
             }
             Ok(())
