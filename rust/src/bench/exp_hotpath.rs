@@ -34,6 +34,7 @@
 //!   get_into row must report **0 allocs/read** in steady state (the
 //!   run fails otherwise, when the counting allocator is installed).
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -42,7 +43,9 @@ use anyhow::Result;
 use super::rig::{self, RigSpec};
 use super::{emit, Scale};
 use crate::dataloader::FetchImpl;
+use crate::dataset::Dataset;
 use crate::storage::{DirStore, ObjectStore};
+use crate::telemetry::baseline;
 use crate::util::alloc;
 use crate::util::stats;
 use crate::util::table::{num, Table};
@@ -54,6 +57,18 @@ const STEAL_PROFILES: [&str; 3] = ["s3", "ceph_os", "gluster_fs"];
 pub const TAIL_CREDIT: usize = 6;
 /// Epochs per epoch-boundary cell (gaps are measured at the seams).
 pub const BOUNDARY_EPOCHS: usize = 3;
+/// Storage profiles in the stall-attribution table ("mem" anchors the
+/// no-latency end of the spectrum).
+const STALL_PROFILES: [&str; 4] = ["mem", "s3", "ceph_os", "gluster_fs"];
+/// Gate metrics where bigger numbers are better (everything else is a
+/// latency/count where smaller wins).
+const HIGHER_IS_BETTER: &[&str] = &["assembly.vanilla.speedup"];
+/// Default relative tolerance for a freshly written baseline: the gate
+/// exists to catch order-of-magnitude breakage, not runner jitter.
+pub const BASELINE_TOLERANCE: f64 = 1.0;
+/// Default absolute slack (metric units) so near-zero baselines do not
+/// turn noise into failures.
+pub const BASELINE_SLACK: f64 = 2.0;
 
 /// One measured epoch of a built rig: per-batch consumer latencies,
 /// wall seconds, allocation-counter delta, and the tail-taming gauges.
@@ -280,6 +295,7 @@ pub fn boundary_table(scale: Scale) -> Result<(Table, f64, f64)> {
             "mean gap ms",
             "max gap ms",
             "seam idle ms",
+            "idle/worker ms",
             "plans",
         ],
     );
@@ -325,6 +341,17 @@ pub fn boundary_table(scale: Scale) -> Result<(Table, f64, f64)> {
             let mean_gap = gaps.iter().sum::<f64>() / gaps.len() as f64;
             let max_gap = gaps.iter().cloned().fold(f64::MIN, f64::max);
             let idle = rig.dataloader.seam_idle().as_secs_f64();
+            let per_worker: Vec<String> = rig
+                .dataloader
+                .seam_idle_per_worker()
+                .iter()
+                .map(|d| format!("{:.1}", d.as_secs_f64() * 1e3))
+                .collect();
+            let per_worker = if per_worker.is_empty() {
+                "-".to_string()
+            } else {
+                per_worker.join("/")
+            };
             let plans = rig.dataloader.plans_published();
             if storage == "s3" {
                 if pipelined {
@@ -340,6 +367,7 @@ pub fn boundary_table(scale: Scale) -> Result<(Table, f64, f64)> {
                 num(mean_gap * 1e3, 2),
                 num(max_gap * 1e3, 2),
                 num(idle * 1e3, 1),
+                per_worker,
                 plans.to_string(),
             ]);
         }
@@ -486,10 +514,62 @@ pub fn get_into_table(scale: Scale) -> Result<(Table, f64)> {
     Ok((t, into_allocs_per_read))
 }
 
-/// Experiment entry point (id "hotpath"): fused assembly sweep,
-/// dispatch-tail comparison, pinned-slab transfer delta, and the
-/// DirStore zero-copy read path.
-pub fn hotpath(scale: Scale) -> Result<()> {
+/// Stall attribution: split one steady-state epoch's time into the
+/// lanes the telemetry plane now meters — storage wait and decode
+/// (summed across fetch threads, so they can exceed the wall clock),
+/// consumer credit-block time, and reorder-buffer hold — per storage
+/// profile under item-steal dispatch. "mem" anchors the zero-latency
+/// end; the high-latency profiles show the wait moving into the
+/// storage lane instead of the consumer.
+pub fn stall_table(scale: Scale) -> Result<Table> {
+    let mut t = Table::new(
+        "Hot path — stall attribution: where the epoch's time goes \
+         (threaded fetcher, item-steal, per storage profile)",
+        &[
+            "storage",
+            "wall s",
+            "storage ms (Σ)",
+            "decode ms (Σ)",
+            "credit-blk ms",
+            "reorder-hold ms",
+            "batches",
+        ],
+    );
+    for storage in STALL_PROFILES {
+        let spec = tail_spec(storage, Dispatch::ItemSteal, scale);
+        let rig = rig::build(&spec)?;
+        let m = measure_epoch(&rig, 0);
+        if m.latencies.is_empty() {
+            anyhow::bail!("stall cell {storage} delivered no batches");
+        }
+        let ds = rig.dataloader.dataset();
+        let (storage_wait, decode) = ds.lane_times().unwrap_or_default();
+        let credit = rig.dataloader.credit_blocked();
+        let hold = rig.dataloader.reorder_hold();
+        t.row(&[
+            storage.to_string(),
+            num(m.epoch_s, 2),
+            num(storage_wait.as_secs_f64() * 1e3, 1),
+            num(decode.as_secs_f64() * 1e3, 1),
+            num(credit.as_secs_f64() * 1e3, 1),
+            num(hold.as_secs_f64() * 1e3, 1),
+            m.latencies.len().to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Insert a gate metric, skipping non-finite values (a NaN would both
+/// corrupt the JSON baseline and be meaningless to band-check).
+fn put(m: &mut BTreeMap<String, f64>, name: &str, v: f64) {
+    if v.is_finite() {
+        m.insert(name.to_string(), v);
+    }
+}
+
+/// Run every hotpath table, print the headlines, and return the flat
+/// gate-metric map consumed by the `--baseline` write/check paths.
+pub fn collect(scale: Scale) -> Result<BTreeMap<String, f64>> {
     let (assembly, vanilla_speedup) = assembly_table(scale)?;
     emit("hotpath", &assembly)?;
     println!(
@@ -512,6 +592,8 @@ pub fn hotpath(scale: Scale) -> Result<()> {
         drained_gap * 1e3,
         pipelined_gap * 1e3,
     );
+    let stalls = stall_table(scale)?;
+    emit("hotpath", &stalls)?;
     let (pin, pageable_ms, pinned_ms) = pinned_table(scale)?;
     emit("hotpath", &pin)?;
     println!(
@@ -523,6 +605,59 @@ pub fn hotpath(scale: Scale) -> Result<()> {
     println!(
         "  DirStore get_into steady state: {into_allocs:.0} allocs/read"
     );
+    let mut m = BTreeMap::new();
+    put(&mut m, "assembly.vanilla.speedup", vanilla_speedup);
+    put(&mut m, "tail.ceph_os.batch_steal_p99_ms", batch_p99 * 1e3);
+    put(&mut m, "tail.ceph_os.item_steal_p99_ms", item_p99 * 1e3);
+    put(&mut m, "boundary.s3.drained_gap_ms", drained_gap * 1e3);
+    put(&mut m, "boundary.s3.pipelined_gap_ms", pipelined_gap * 1e3);
+    put(&mut m, "pinned.pageable_ms", pageable_ms);
+    put(&mut m, "pinned.pinned_ms", pinned_ms);
+    put(&mut m, "get_into.allocs_per_read", into_allocs);
+    Ok(m)
+}
+
+/// Experiment entry point (id "hotpath"): fused assembly sweep,
+/// dispatch-tail comparison, epoch-boundary seams, stall attribution,
+/// pinned-slab transfer delta, and the DirStore zero-copy read path.
+pub fn hotpath(scale: Scale) -> Result<()> {
+    collect(scale).map(|_| ())
+}
+
+/// `cdl reproduce hotpath --baseline <path> [--check]`: run the full
+/// experiment, then either write the gate metrics as a fresh baseline
+/// file or compare against the committed one and fail on any metric
+/// outside its tolerance band (the CI gate).
+pub fn run_with_baseline(scale: Scale, path: &str, check: bool) -> Result<()> {
+    let metrics = collect(scale)?;
+    if check {
+        let out = baseline::check(path, &metrics)?;
+        for note in &out.notes {
+            println!("  baseline note: {note}");
+        }
+        if !out.passed() {
+            for r in &out.regressions {
+                println!("  baseline REGRESSION: {r}");
+            }
+            anyhow::bail!(
+                "hotpath baseline gate failed: {} regression(s) vs {path}",
+                out.regressions.len()
+            );
+        }
+        println!(
+            "  baseline gate passed: {} metric(s) within band of {path}",
+            out.checked
+        );
+    } else {
+        baseline::write(
+            path,
+            &metrics,
+            HIGHER_IS_BETTER,
+            BASELINE_TOLERANCE,
+            BASELINE_SLACK,
+        )?;
+        println!("  baseline written: {} metric(s) -> {path}", metrics.len());
+    }
     Ok(())
 }
 

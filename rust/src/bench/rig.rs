@@ -18,6 +18,7 @@ use crate::storage::{
 };
 use crate::telemetry::Recorder;
 use crate::trainer::{self, TrainReport, TrainerConfig, TrainerKind};
+use crate::util::json::Json;
 
 /// Everything one experiment run needs.
 #[derive(Debug, Clone)]
@@ -61,6 +62,9 @@ pub struct RigSpec {
     pub trainer: TrainerKind,
     pub epochs: usize,
     pub seed: u64,
+    /// span-ring capacity per recorder shard group (0 = telemetry
+    /// default; long traces raise it so the ring doesn't wrap)
+    pub span_capacity: usize,
 }
 
 impl RigSpec {
@@ -93,6 +97,7 @@ impl RigSpec {
             trainer: TrainerKind::Torch,
             epochs: 1,
             seed: 7,
+            span_capacity: 0,
         }
     }
 
@@ -196,7 +201,11 @@ pub fn build_store(spec: &RigSpec) -> Result<StorageStack> {
 
 /// Build the full rig.
 pub fn build(spec: &RigSpec) -> Result<Rig> {
-    let recorder = Recorder::new();
+    let recorder = if spec.span_capacity > 0 {
+        Recorder::with_capacity(spec.span_capacity)
+    } else {
+        Recorder::new()
+    };
     let StorageStack { store, remote, cache, prefetch, corpus_bytes } =
         build_store(spec)?;
     if let Some(p) = &prefetch {
@@ -284,6 +293,65 @@ pub fn drain_numbered_epoch(rig: &Rig, epoch: usize) -> (f64, u64, usize) {
     (t0.elapsed().as_secs_f64(), bytes, n)
 }
 
+/// Snapshot the whole observability plane after `epoch`: absorb every
+/// scattered pipeline signal — stall lanes, seam idle (aggregate and
+/// per worker), arena/prefetch/cache counters, allocator totals, span
+/// accounting — into the recorder's metrics hub, then render one
+/// `{"epoch": N, "metrics": {...}}` object (a `--metrics` JSONL line).
+/// Values are cumulative since rig construction; diff consecutive
+/// lines for per-epoch movement.
+pub fn metrics_snapshot(rig: &Rig, epoch: usize) -> Json {
+    let hub = rig.recorder.metrics();
+    let dl = &rig.dataloader;
+    hub.set("loader.credit_blocked_ns", dl.credit_blocked().as_nanos() as u64);
+    hub.set("loader.reorder_hold_ns", dl.reorder_hold().as_nanos() as u64);
+    hub.set("loader.item_steals", dl.item_steals());
+    hub.set("loader.plans_published", dl.plans_published() as u64);
+    hub.set("planner.seam_idle_ns", dl.seam_idle().as_nanos() as u64);
+    for (i, d) in dl.seam_idle_per_worker().iter().enumerate() {
+        hub.set(&format!("planner.seam_idle_ns.w{i}"), d.as_nanos() as u64);
+    }
+    if let Some((storage, decode)) = dl.dataset().lane_times() {
+        hub.set("dataset.storage_wait_ns", storage.as_nanos() as u64);
+        hub.set("dataset.decode_ns", decode.as_nanos() as u64);
+    }
+    if let Some(arena) = dl.arena() {
+        let s = arena.stats();
+        hub.set("arena.checkouts", s.checkouts);
+        hub.set("arena.reused", s.reused);
+        hub.set("arena.fresh", s.fresh);
+        hub.set("arena.recycled", s.recycled);
+        hub.set("arena.discarded", s.discarded);
+    }
+    if let Some(p) = &rig.prefetch {
+        let c = p.counters();
+        hub.set("prefetch.gets", c.gets);
+        hub.set("prefetch.hot_hits", c.hot_hits);
+        hub.set("prefetch.inflight_hits", c.inflight_hits);
+        hub.set("prefetch.demand_misses", c.demand_misses);
+        hub.set("prefetch.issued", c.issued);
+        hub.set("prefetch.completed", c.completed);
+        hub.set("prefetch.stale", c.stale);
+    }
+    if let Some(cache) = &rig.cache {
+        let s = cache.tier_stats();
+        hub.set("cache.hits", s.hits);
+        hub.set("cache.misses", s.misses);
+        hub.set("cache.evictions", s.evictions);
+        hub.set("cache.ghost_promotions", s.ghost_promotions);
+        hub.set("cache.bytes", s.bytes);
+    }
+    let a = crate::util::alloc::counters();
+    hub.set("alloc.allocs", a.allocs);
+    hub.set("alloc.frees", a.frees);
+    hub.set("alloc.bytes", a.bytes);
+    hub.set("spans.recorded", rig.recorder.len() as u64);
+    hub.set("spans.dropped", rig.recorder.dropped());
+    let mut doc = Json::obj();
+    doc.set("epoch", epoch as u64).set("metrics", hub.snapshot());
+    doc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -352,6 +420,31 @@ mod tests {
         let s = rig.dataloader.arena().unwrap().stats();
         assert_eq!(s.checkouts, 8, "{s:?}");
         assert!(s.reused >= 4, "{s:?}");
+    }
+
+    #[test]
+    fn metrics_snapshot_covers_the_plane() {
+        let mut spec = RigSpec::quick("mem", 0.1);
+        spec.items = 32;
+        spec.batch_size = 8;
+        spec.arena_slabs = 8;
+        spec.work_stealing = true;
+        let rig = build(&spec).unwrap();
+        drain_epoch(&rig);
+        let snap = metrics_snapshot(&rig, 0);
+        assert_eq!(snap.at(&["epoch"]).and_then(|j| j.as_usize()), Some(0));
+        let m = |k: &str| {
+            snap.at(&["metrics", k])
+                .and_then(|j| j.as_f64())
+                .unwrap_or_else(|| panic!("missing metric {k}"))
+        };
+        assert_eq!(m("arena.checkouts"), 4.0);
+        assert_eq!(m("loader.plans_published"), 1.0);
+        assert!(m("dataset.decode_ns") > 0.0);
+        assert!(m("spans.recorded") > 0.0);
+        // round-trips through the hand-rolled JSON
+        let text = snap.to_string();
+        assert!(crate::util::json::parse(&text).is_ok());
     }
 
     #[test]

@@ -54,6 +54,9 @@ pub struct ExperimentConfig {
     /// "sim" or "xla"
     pub device: String,
     pub artifacts_dir: String,
+    /// telemetry span-ring capacity (0 = default; raise for long
+    /// `--trace` runs so the lock-free ring doesn't wrap)
+    pub span_capacity: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -72,6 +75,7 @@ impl Default for ExperimentConfig {
             trainer: TrainerConfig::torch(1),
             device: "sim".into(),
             artifacts_dir: "artifacts".into(),
+            span_capacity: 0,
         }
     }
 }
@@ -186,6 +190,7 @@ impl ExperimentConfig {
             "gpu_stats_monitor" => self.trainer.gpu_stats_monitor = value.parse()?,
             "device" => self.device = value.to_string(),
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "span_capacity" => self.span_capacity = value.parse()?,
             _ => bail!("unknown config key {key}"),
         }
         Ok(())
@@ -278,6 +283,15 @@ mod tests {
         cfg.apply_text("epoch_pipeline = 2\n").unwrap();
         assert_eq!(cfg.loader.epoch_pipeline, 2);
         assert!(cfg.set("epoch_pipeline", "deep").is_err());
+    }
+
+    #[test]
+    fn span_capacity_knob_parses() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.span_capacity, 0);
+        cfg.apply_text("span_capacity = 262144\n").unwrap();
+        assert_eq!(cfg.span_capacity, 262_144);
+        assert!(cfg.set("span_capacity", "big").is_err());
     }
 
     #[test]

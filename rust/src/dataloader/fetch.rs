@@ -58,10 +58,12 @@ impl FetchCtx {
         // items of two adjacent epochs are in flight at once, so the
         // dataset's global set_epoch state cannot disambiguate them
         let s = self.dataset.get_item_at(index, epoch, &self.gil);
-        self.recorder.record(
+        self.recorder.record_tagged(
             names::GET_ITEM,
             self.worker_id,
             batch_id as i64,
+            epoch as i64,
+            -1,
             t0,
             self.recorder.now(),
         );
@@ -83,10 +85,12 @@ impl FetchCtx {
         let res = builder.fill(pos, index, |out| {
             self.dataset.get_item_into_at(index, epoch, &self.gil, out)
         });
-        self.recorder.record(
+        self.recorder.record_tagged(
             names::GET_ITEM,
             self.worker_id,
             batch_id as i64,
+            epoch as i64,
+            -1,
             t0,
             self.recorder.now(),
         );
@@ -647,10 +651,12 @@ pub fn fetch_async(
                 let _permit = sem.acquire().await;
                 let t0 = ctx.recorder.now();
                 let s = ctx.dataset.get_item_async_at(index, epoch, &ctx.gil).await;
-                ctx.recorder.record(
+                ctx.recorder.record_tagged(
                     names::GET_ITEM,
                     ctx.worker_id,
                     batch_id as i64,
+                    epoch as i64,
+                    -1,
                     t0,
                     ctx.recorder.now(),
                 );
@@ -688,10 +694,12 @@ async fn run_claim_async(ctx: &FetchCtx, claim: ItemClaim) {
             Err(e) => Err(e),
         }
     };
-    ctx.recorder.record(
+    ctx.recorder.record_tagged(
         names::GET_ITEM,
         ctx.worker_id,
         batch_id as i64,
+        epoch as i64,
+        -1,
         t0,
         ctx.recorder.now(),
     );

@@ -313,15 +313,26 @@ pub(crate) struct Planner {
     /// cumulative time workers spent parked waiting for a plan (ns) —
     /// the "idle at the seam" gauge the epoch-boundary table reports
     seam_idle_ns: AtomicU64,
+    /// the same idle, attributed per worker id (who pays the seam?)
+    seam_idle_by_worker: Vec<AtomicU64>,
+    /// plan computation/publication shows up as `plan_publish` spans on
+    /// the planner track of the Chrome trace
+    recorder: Arc<Recorder>,
 }
 
 impl Planner {
-    fn new(dataset: Arc<dyn Dataset>, cfg: Arc<DataloaderConfig>, sink: PlanSink) -> Planner {
+    fn new(
+        dataset: Arc<dyn Dataset>,
+        cfg: Arc<DataloaderConfig>,
+        sink: PlanSink,
+        recorder: Arc<Recorder>,
+    ) -> Planner {
         let pipeline_depth = if dataset.supports_epoch_tagged() {
             cfg.epoch_pipeline
         } else {
             0
         };
+        let workers = cfg.num_workers.max(1);
         Planner {
             dataset,
             cfg,
@@ -335,6 +346,8 @@ impl Planner {
             }),
             cv: Condvar::new(),
             seam_idle_ns: AtomicU64::new(0),
+            seam_idle_by_worker: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            recorder,
         }
     }
 
@@ -343,6 +356,7 @@ impl Planner {
     /// pipelining is before the previous epoch finished — so the
     /// prefetch engine's horizon is primed before the boundary.
     fn publish_locked(&self, st: &mut PlanState, epoch: usize) -> PlanMeta {
+        let t0 = self.recorder.now();
         let (order, plan) = epoch_plan(&self.cfg, &self.dataset, epoch);
         if st.plans.is_empty() {
             // first plan of this pipeline generation: fresh horizon
@@ -357,6 +371,15 @@ impl Planner {
         st.plans.push(meta);
         self.sink.publish(BatchTicket::plan(epoch, meta.base, plan));
         self.cv.notify_all();
+        self.recorder.record_tagged(
+            names::PLAN_PUBLISH,
+            crate::telemetry::PLANNER_WORKER,
+            -1,
+            epoch as i64,
+            meta.base as i64,
+            t0,
+            self.recorder.now(),
+        );
         meta
     }
 
@@ -393,8 +416,14 @@ impl Planner {
     /// `park` timeout it returns true on expiry too, so item-stealing
     /// workers can re-poll their registries. `seen` tracks how many
     /// publications this worker has observed, so it parks instead of
-    /// spinning on a stream it already drained.
-    pub(crate) fn wait_for_work(&self, seen: &mut usize, park: Option<Duration>) -> bool {
+    /// spinning on a stream it already drained. `worker` attributes any
+    /// park time to that worker's seam-idle lane.
+    pub(crate) fn wait_for_work(
+        &self,
+        worker: u32,
+        seen: &mut usize,
+        park: Option<Duration>,
+    ) -> bool {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.shutdown {
@@ -414,6 +443,11 @@ impl Planner {
                 *seen = st.plans.len();
                 return true;
             }
+            if park == Some(Duration::ZERO) {
+                // non-blocking probe (item-stealing workers park on the
+                // injector condvar instead)
+                return true;
+            }
             let t0 = Instant::now();
             let timed_out = match park {
                 Some(d) => {
@@ -426,11 +460,21 @@ impl Planner {
                     false
                 }
             };
-            self.seam_idle_ns
-                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.add_seam_idle(worker, t0.elapsed());
             if timed_out {
                 return true;
             }
+        }
+    }
+
+    /// Attribute idle time at the seam to `worker` (also counted in the
+    /// aggregate gauge). Called by `wait_for_work` and by item-stealing
+    /// workers that park on the injector condvar instead.
+    pub(crate) fn add_seam_idle(&self, worker: u32, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        self.seam_idle_ns.fetch_add(ns, Ordering::Relaxed);
+        if let Some(cell) = self.seam_idle_by_worker.get(worker as usize) {
+            cell.fetch_add(ns, Ordering::Relaxed);
         }
     }
 
@@ -451,6 +495,13 @@ impl Planner {
     fn seam_idle(&self) -> Duration {
         Duration::from_nanos(self.seam_idle_ns.load(Ordering::Relaxed))
     }
+
+    fn seam_idle_per_worker(&self) -> Vec<Duration> {
+        self.seam_idle_by_worker
+            .iter()
+            .map(|ns| Duration::from_nanos(ns.load(Ordering::Relaxed)))
+            .collect()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -463,8 +514,10 @@ impl Planner {
 /// tail delivers).
 struct ConsumerState {
     rx: Receiver<WorkerMsg>,
-    /// reorder buffer: out-of-order arrivals by seq, `None` = tombstone
-    pending: HashMap<usize, Option<Batch>>,
+    /// reorder buffer: out-of-order arrivals by seq with their arrival
+    /// time on the recorder clock (feeds the reorder-hold stall lane),
+    /// `None` = failure tombstone
+    pending: HashMap<usize, (f64, Option<Batch>)>,
     /// next seq to deliver in order
     next_seq: usize,
 }
@@ -495,6 +548,9 @@ pub(crate) struct PipeCore {
     gate: Arc<CreditGate>,
     injector: Option<Arc<BatchInjector>>,
     ctl: Mutex<PipeCtl>,
+    /// cumulative time finished batches sat in the reorder buffer
+    /// waiting for an earlier seq (the reorder-hold stall lane)
+    reorder_hold_ns: AtomicU64,
 }
 
 /// Join every thread of the pipeline. Callers must have dropped the
@@ -648,6 +704,45 @@ impl Dataloader {
             .map_or(0, |core| core.planner.plans_published())
     }
 
+    /// [`Dataloader::seam_idle`], attributed per worker id.
+    pub fn seam_idle_per_worker(&self) -> Vec<Duration> {
+        self.pipeline
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map_or_else(Vec::new, |core| core.planner.seam_idle_per_worker())
+    }
+
+    /// Cumulative time workers spent blocked on (or parked around) the
+    /// consumer-credit window — the credit-blocked stall lane.
+    pub fn credit_blocked(&self) -> Duration {
+        self.pipeline
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map_or(Duration::ZERO, |core| core.gate.blocked())
+    }
+
+    /// Cumulative time finished batches waited in the reorder buffer
+    /// for an earlier seq — the reorder-hold stall lane.
+    pub fn reorder_hold(&self) -> Duration {
+        self.pipeline.lock().unwrap().as_ref().map_or(Duration::ZERO, |core| {
+            Duration::from_nanos(core.reorder_hold_ns.load(Ordering::Relaxed))
+        })
+    }
+
+    /// Items filled by non-owner workers across the current pipeline
+    /// generation (see [`EpochIter::item_steals`] for the per-epoch
+    /// delta).
+    pub fn item_steals(&self) -> u64 {
+        self.pipeline
+            .lock()
+            .unwrap()
+            .as_ref()
+            .and_then(|core| core.injector.as_ref().map(|inj| inj.item_steal_count()))
+            .unwrap_or(0)
+    }
+
     fn build_pipeline(&self) -> Arc<PipeCore> {
         let w = self.cfg.num_workers;
         let (tx, rx) =
@@ -671,15 +766,23 @@ impl Dataloader {
                     queues.into_iter().map(WorkSource::Static).collect(),
                 )
             };
+        if let Some(inj) = &injector {
+            // wake item-stealing workers parked on the injector condvar
+            // whenever the credit window moves (or the gate closes)
+            let hook = inj.clone();
+            gate.set_waker(Arc::new(move || hook.bump()));
+        }
         let planner = Arc::new(Planner::new(
             self.dataset.clone(),
             self.cfg.clone(),
             sink,
+            self.recorder.clone(),
         ));
         Arc::new(PipeCore {
             planner,
             gate,
             injector,
+            reorder_hold_ns: AtomicU64::new(0),
             ctl: Mutex::new(PipeCtl {
                 consumer: Some(ConsumerState {
                     rx,
@@ -765,6 +868,12 @@ impl Dataloader {
         // legacy global-epoch state for datasets without epoch-tagged
         // loads; the built-in dataset ignores it on the hot path
         self.dataset.set_epoch(epoch);
+
+        // mark the seam on the consumer track: a zero-width instant the
+        // Chrome-trace exporter renders as a global marker
+        let seam = self.recorder.now();
+        self.recorder
+            .record_tagged(names::EPOCH_SEAM, 0, -1, epoch as i64, -1, seam, seam);
 
         if self.cfg.num_workers == 0 {
             // torch num_workers=0: load inline in the consumer
@@ -946,10 +1055,12 @@ impl EpochIter {
             };
             match res {
                 Ok(batch) => {
-                    self.recorder.record(
+                    self.recorder.record_tagged(
                         names::BATCH_INFLIGHT,
                         0,
                         batch.id as i64,
+                        ticket.epoch as i64,
+                        ticket.seq as i64,
                         t0,
                         self.recorder.now(),
                     );
@@ -976,10 +1087,12 @@ impl EpochIter {
             let secs = batch.tensor_bytes() as f64 / 12.0e9 + 50e-6;
             std::thread::sleep(Duration::from_secs_f64(secs));
             batch.pinned = true;
-            self.recorder.record(
+            self.recorder.record_tagged(
                 names::PIN_MEMORY,
                 0,
                 batch.id as i64,
+                self.epoch as i64,
+                -1,
                 t0,
                 self.recorder.now(),
             );
@@ -996,7 +1109,15 @@ impl Iterator for EpochIter {
 
         if self.inline_plan.is_some() {
             let b = self.next_inline()?;
-            self.recorder.record(names::GET_BATCH, 0, b.id as i64, t0, self.recorder.now());
+            self.recorder.record_tagged(
+                names::GET_BATCH,
+                0,
+                b.id as i64,
+                self.epoch as i64,
+                -1,
+                t0,
+                self.recorder.now(),
+            );
             return Some(self.pin(b));
         }
 
@@ -1023,21 +1144,34 @@ impl Iterator for EpochIter {
                 return None;
             }
             match consumer.pending.remove(&consumer.next_seq) {
-                Some(Some(b)) => {
+                Some((arrived, Some(b))) => {
+                    let seq = consumer.next_seq;
                     consumer.next_seq += 1;
                     // publish the new cursor: credit-blocked workers may
                     // now start the next batch of the window
                     gate.advance(consumer.next_seq);
-                    self.recorder.record(
+                    let now = self.recorder.now();
+                    // reorder-hold stall lane: how long this batch sat
+                    // buffered waiting for an earlier seq to deliver
+                    let hold = now - arrived;
+                    if hold > 0.0 {
+                        if let Some(core) = &self.core {
+                            core.reorder_hold_ns
+                                .fetch_add((hold * 1e9) as u64, Ordering::Relaxed);
+                        }
+                    }
+                    self.recorder.record_tagged(
                         names::GET_BATCH,
                         0,
                         b.id as i64,
+                        self.epoch as i64,
+                        seq as i64,
                         t0,
-                        self.recorder.now(),
+                        now,
                     );
                     return Some(self.pin(b));
                 }
-                Some(None) => {
+                Some((_, None)) => {
                     // failure tombstone: the worker already logged it —
                     // advance past the gap and keep delivering
                     consumer.next_seq += 1;
@@ -1048,11 +1182,11 @@ impl Iterator for EpochIter {
             }
             match consumer.rx.recv() {
                 Ok(WorkerMsg::Batch { seq, batch }) => {
-                    consumer.pending.insert(seq, Some(batch));
+                    consumer.pending.insert(seq, (self.recorder.now(), Some(batch)));
                     self.reorder_hwm = self.reorder_hwm.max(consumer.pending.len());
                 }
                 Ok(WorkerMsg::Failed { seq }) => {
-                    consumer.pending.insert(seq, None);
+                    consumer.pending.insert(seq, (self.recorder.now(), None));
                     self.reorder_hwm = self.reorder_hwm.max(consumer.pending.len());
                 }
                 Err(_) => {

@@ -139,6 +139,13 @@ pub struct CreditGate {
     credit: usize,
     state: Mutex<GateState>,
     cv: Condvar,
+    /// total time workers spent blocked on the credit window (the
+    /// "credit-blocked" stall lane of the telemetry plane)
+    blocked_ns: AtomicU64,
+    /// extra wake hook fired on every cursor advance/close — lets
+    /// item-stealing workers park on the injector's condvar and still
+    /// wake the instant the credit window moves
+    waker: Mutex<Option<Arc<dyn Fn() + Send + Sync>>>,
 }
 
 impl CreditGate {
@@ -147,12 +154,40 @@ impl CreditGate {
             credit,
             state: Mutex::new(GateState { cursor: 0, closed: false }),
             cv: Condvar::new(),
+            blocked_ns: AtomicU64::new(0),
+            waker: Mutex::new(None),
         })
     }
 
     /// The configured credit (0 = unbounded).
     pub fn credit(&self) -> usize {
         self.credit
+    }
+
+    /// Install the extra wake hook (setup-time only).
+    pub fn set_waker(&self, waker: Arc<dyn Fn() + Send + Sync>) {
+        *self.waker.lock().unwrap() = Some(waker);
+    }
+
+    fn wake(&self) {
+        self.cv.notify_all();
+        let waker = self.waker.lock().unwrap().clone();
+        if let Some(w) = waker {
+            w();
+        }
+    }
+
+    /// Cumulative time workers spent parked on (or around) the credit
+    /// window.
+    pub fn blocked(&self) -> Duration {
+        Duration::from_nanos(self.blocked_ns.load(Ordering::Relaxed))
+    }
+
+    /// Attribute externally measured park time to the credit-blocked
+    /// lane (item-stealing workers park on the injector condvar, not the
+    /// gate's own).
+    pub fn note_blocked(&self, d: Duration) {
+        self.blocked_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
     }
 
     fn admits_locked(&self, st: &GateState, id: usize) -> bool {
@@ -171,22 +206,25 @@ impl CreditGate {
         if cursor > st.cursor {
             st.cursor = cursor;
             drop(st);
-            self.cv.notify_all();
+            self.wake();
         }
     }
 
     /// Consumer gone / epoch torn down: open the gate permanently.
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
-        self.cv.notify_all();
+        self.wake();
     }
 
     /// Block until batch `id` is admitted.
     pub fn wait_admit(&self, id: usize) {
+        let t0 = std::time::Instant::now();
         let mut st = self.state.lock().unwrap();
         while !self.admits_locked(&st, id) {
             st = self.cv.wait(st).unwrap();
         }
+        drop(st);
+        self.note_blocked(t0.elapsed());
     }
 
     /// Block until batch `id` is admitted or `timeout` elapses; returns
@@ -195,16 +233,21 @@ impl CreditGate {
     ///
     /// [`wait_admit`]: CreditGate::wait_admit
     pub fn wait_admit_timeout(&self, id: usize, timeout: Duration) -> bool {
+        let t0 = std::time::Instant::now();
         let mut st = self.state.lock().unwrap();
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = t0 + timeout;
         while !self.admits_locked(&st, id) {
             let now = std::time::Instant::now();
             if now >= deadline {
+                drop(st);
+                self.note_blocked(t0.elapsed());
                 return false;
             }
             let (guard, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
             st = guard;
         }
+        drop(st);
+        self.note_blocked(t0.elapsed());
         true
     }
 }
@@ -440,6 +483,11 @@ pub struct BatchInjector {
     active: Mutex<Vec<Arc<ItemTask>>>,
     /// items filled by a worker other than the batch's owner
     item_steals: AtomicU64,
+    /// bumped whenever new work may have appeared (ticket publication,
+    /// task registration, or an external wake such as a credit advance);
+    /// idle workers park on the paired condvar instead of polling
+    work_seq: Mutex<u64>,
+    work_cv: Condvar,
 }
 
 impl Default for BatchInjector {
@@ -456,6 +504,8 @@ impl BatchInjector {
             queue: Mutex::new(VecDeque::new()),
             active: Mutex::new(Vec::new()),
             item_steals: AtomicU64::new(0),
+            work_seq: Mutex::new(0),
+            work_cv: Condvar::new(),
         }
     }
 
@@ -463,6 +513,43 @@ impl BatchInjector {
     /// seq order — the planner publishes epochs in sequence).
     pub fn publish(&self, tickets: Vec<BatchTicket>) {
         self.queue.lock().unwrap().extend(tickets);
+        self.bump();
+    }
+
+    /// Signal parked workers that the work horizon may have moved.
+    /// Fired by [`publish`]/[`register`] and wired as the
+    /// [`CreditGate`]'s extra waker so a credit advance also lands here.
+    ///
+    /// [`publish`]: BatchInjector::publish
+    /// [`register`]: BatchInjector::register
+    pub fn bump(&self) {
+        *self.work_seq.lock().unwrap() += 1;
+        self.work_cv.notify_all();
+    }
+
+    /// Current work-signal version; grab it *before* probing for work,
+    /// then hand it to [`BatchInjector::wait_version`] — any signal in
+    /// between returns immediately (no lost wakeups).
+    pub fn work_version(&self) -> u64 {
+        *self.work_seq.lock().unwrap()
+    }
+
+    /// Park until the work signal moves past `seen` or `timeout`
+    /// elapses; returns whether it moved. Replaces the old 1 kHz
+    /// `STEAL_PARK` polling — the timeout is only a crash-safety
+    /// fallback, not the wake path.
+    pub fn wait_version(&self, seen: u64, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut seq = self.work_seq.lock().unwrap();
+        while *seq == seen {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.work_cv.wait_timeout(seq, deadline - now).unwrap();
+            seq = guard;
+        }
+        true
     }
 
     /// Steal the next batch; `None` once the published stream is
@@ -493,6 +580,7 @@ impl BatchInjector {
     /// Publish an in-progress batch for item-level stealing.
     pub fn register(&self, task: Arc<ItemTask>) {
         self.active.lock().unwrap().push(task);
+        self.bump();
     }
 
     /// Withdraw a finished/failed batch from the steal registry, by its
@@ -735,6 +823,53 @@ mod tests {
             }
             _ => panic!("expected a cross-seam grab"),
         }
+    }
+
+    #[test]
+    fn gate_accumulates_blocked_time() {
+        let gate = CreditGate::new(1);
+        assert_eq!(gate.blocked(), Duration::ZERO);
+        assert!(!gate.wait_admit_timeout(5, Duration::from_millis(8)));
+        assert!(gate.blocked() >= Duration::from_millis(8));
+        gate.note_blocked(Duration::from_millis(2));
+        assert!(gate.blocked() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn injector_signal_wakes_parked_worker_without_polling() {
+        let inj = Arc::new(BatchInjector::new());
+        // publication before the version grab → no wait at all
+        let seen = inj.work_version();
+        inj.publish(BatchTicket::plan(0, 0, vec![vec![0, 1]]));
+        assert!(inj.wait_version(seen, Duration::from_secs(5)));
+        // nothing new → times out
+        let seen = inj.work_version();
+        assert!(!inj.wait_version(seen, Duration::from_millis(5)));
+        // a bump from another thread wakes the parked waiter promptly
+        let seen = inj.work_version();
+        let inj2 = inj.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            inj2.bump();
+        });
+        let t0 = std::time::Instant::now();
+        assert!(inj.wait_version(seen, Duration::from_secs(30)));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn gate_waker_routes_credit_advances_to_the_injector() {
+        let inj = Arc::new(BatchInjector::new());
+        let gate = CreditGate::new(2);
+        let hook = inj.clone();
+        gate.set_waker(Arc::new(move || hook.bump()));
+        let seen = inj.work_version();
+        gate.advance(3);
+        assert!(inj.wait_version(seen, Duration::from_millis(1)));
+        let seen = inj.work_version();
+        gate.close();
+        assert!(inj.wait_version(seen, Duration::from_millis(1)));
     }
 
     mod item_tasks {

@@ -39,7 +39,7 @@
 use std::collections::VecDeque;
 use std::sync::mpsc::SyncSender;
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
 
@@ -56,9 +56,13 @@ use crate::dataset::Dataset;
 use crate::gil::Gil;
 use crate::telemetry::{names, Recorder};
 
-/// How long a blocked worker parks on the credit gate between item-steal
-/// attempts (it is woken early on every consumer delivery).
-const STEAL_PARK: Duration = Duration::from_millis(1);
+/// Fallback park bound for an idle item-stealing worker. The worker
+/// parks on the injector's work condvar and is woken the moment new
+/// work appears — a steal-task registration, a plan publication, or a
+/// credit advance (the gate's waker hook bumps the same condvar) — so
+/// this timeout only bounds the stall after a *lost* edge, replacing
+/// the old 1 kHz `STEAL_PARK` polling loop.
+const STEAL_FALLBACK_PARK: Duration = Duration::from_millis(50);
 
 /// What a worker pushes into the data queue: a finished batch, or a
 /// tombstone for a batch that failed (so the in-order consumer can
@@ -202,12 +206,21 @@ fn run_worker(
             Claimed::Blocked(head) => {
                 // can't start a new batch yet: help a straggler instead
                 // of idling, else park until the consumer catches up. A
-                // stealing worker re-polls (new tail items may appear);
-                // a non-stealing one has nothing to do but wait, so it
-                // blocks outright (advance()/close() wake it).
+                // stealing worker parks on the injector condvar (new
+                // steal tasks and credit advances both signal it); a
+                // non-stealing one has nothing to do but wait, so it
+                // blocks on the gate outright (advance()/close() wake
+                // it). Either wait books into the credit-blocked lane.
                 if steal_items {
-                    if !steal_one_item(&ctx, &source) {
-                        gate.wait_admit_timeout(head, STEAL_PARK);
+                    let inj =
+                        source.injector().expect("steal_items implies injector");
+                    // version-grab *before* the probes: any signal after
+                    // this point cancels the park instead of being lost
+                    let cur = inj.work_version();
+                    if !steal_one_item(&ctx, &source) && !gate.admits(head) {
+                        let t0 = Instant::now();
+                        inj.wait_version(cur, STEAL_FALLBACK_PARK);
+                        gate.note_blocked(t0.elapsed());
                     }
                 } else {
                     gate.wait_admit(head);
@@ -223,12 +236,37 @@ fn run_worker(
                 // the worker parks until the consumer attaches the next
                 // epoch. Without a planner (unit tests) the drought is
                 // final: exit.
-                if steal_items && steal_one_item(&ctx, &source) {
+                if steal_items {
+                    let inj =
+                        source.injector().expect("steal_items implies injector");
+                    let cur = inj.work_version();
+                    if steal_one_item(&ctx, &source) {
+                        continue;
+                    }
+                    let Some(planner) = planner.as_ref() else { return };
+                    let before = seen_plans;
+                    // non-blocking probe: publishes a pipelined plan or
+                    // observes a fresh one without holding the worker on
+                    // the planner condvar
+                    if !planner.wait_for_work(
+                        worker_id,
+                        &mut seen_plans,
+                        Some(Duration::ZERO),
+                    ) {
+                        return;
+                    }
+                    if seen_plans > before {
+                        continue;
+                    }
+                    // nothing stealable and no new plan: park on the
+                    // injector condvar and book the wait as seam idle
+                    let t0 = Instant::now();
+                    inj.wait_version(cur, STEAL_FALLBACK_PARK);
+                    planner.add_seam_idle(worker_id, t0.elapsed());
                     continue;
                 }
                 let Some(planner) = planner.as_ref() else { return };
-                let park = if steal_items { Some(STEAL_PARK) } else { None };
-                if !planner.wait_for_work(&mut seen_plans, park) {
+                if !planner.wait_for_work(worker_id, &mut seen_plans, None) {
                     return;
                 }
                 continue;
@@ -264,10 +302,16 @@ fn run_worker(
         for (seq, res) in results {
             let msg = match res {
                 Ok(batch) => {
-                    recorder.record(
+                    let epoch = work
+                        .iter()
+                        .find(|t| t.seq == seq)
+                        .map_or(-1, |t| t.epoch as i64);
+                    recorder.record_tagged(
                         names::BATCH_INFLIGHT,
                         worker_id,
                         batch.id as i64,
+                        epoch,
+                        seq as i64,
                         t0,
                         recorder.now(),
                     );

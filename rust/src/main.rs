@@ -102,6 +102,8 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     let p = Args::new("cdl run", "run one training experiment from a config")
         .opt("config", "", "config file (key = value)")
         .opt("set", "", "comma-separated overrides k=v,k=v")
+        .opt("trace", "", "write a Chrome trace_event JSON (Perfetto-loadable)")
+        .opt("metrics", "", "write per-epoch metrics snapshots (JSONL)")
         .parse(argv)?;
     let mut cfg = if p.get("config").is_empty() {
         ExperimentConfig::default()
@@ -149,8 +151,23 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         trainer: cfg.trainer.kind,
         epochs: cfg.trainer.epochs,
         seed: cfg.seed,
+        span_capacity: cfg.span_capacity,
     };
-    let (report, rig) = cdl::bench::rig::run(&spec)?;
+    let rig = cdl::bench::rig::build(&spec)?;
+    let metrics_path = p.get("metrics").to_string();
+    let mut metric_lines: Vec<String> = Vec::new();
+    let mut on_epoch_end =
+        |epoch: usize| {
+            metric_lines
+                .push(cdl::bench::rig::metrics_snapshot(&rig, epoch).to_string());
+        };
+    let report = trainer::train_observed(
+        &rig.dataloader,
+        &rig.device,
+        &rig.trainer_cfg,
+        rig.recorder.clone(),
+        if metrics_path.is_empty() { None } else { Some(&mut on_epoch_end) },
+    )?;
     println!("{}", report.summary());
     if let Some(a) = rig.dataloader.arena() {
         let s = a.stats();
@@ -177,12 +194,33 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             100.0 * c.hit_ratio(),
         );
     }
+    if !metrics_path.is_empty() {
+        std::fs::write(&metrics_path, metric_lines.join("\n") + "\n")?;
+        println!("metrics: {} epoch snapshots -> {metrics_path}", metric_lines.len());
+    }
+    let trace_path = p.get("trace");
+    if !trace_path.is_empty() {
+        let spans = rig.recorder.snapshot();
+        let doc = cdl::telemetry::chrome::chrome_trace(&spans);
+        std::fs::write(trace_path, doc.to_string() + "\n")?;
+        println!(
+            "trace: {} spans ({} dropped) -> {trace_path}",
+            spans.len(),
+            rig.recorder.dropped()
+        );
+    }
     Ok(())
 }
 
 fn cmd_reproduce(argv: &[String]) -> Result<()> {
     let p = Args::new("cdl reproduce", "regenerate a paper table/figure")
         .opt("scale", "quick", "quick | paper | <items multiplier>")
+        .opt(
+            "baseline",
+            "",
+            "hotpath only: baseline JSON to write (or check against)",
+        )
+        .flag("check", "with --baseline: compare instead of write, fail on regression")
         .parse(argv)?;
     let Some(exp) = p.positional.first() else {
         bail!("which experiment? one of {:?} or 'all'", bench::ALL_EXPERIMENTS);
@@ -192,6 +230,16 @@ fn cmd_reproduce(argv: &[String]) -> Result<()> {
         "paper" => Scale::paper(),
         s => Scale { items: s.parse()?, ..Scale::quick() },
     };
+    if !p.get("baseline").is_empty() {
+        if exp.as_str() != "hotpath" {
+            bail!("--baseline is only wired for the hotpath experiment");
+        }
+        return bench::exp_hotpath::run_with_baseline(
+            scale,
+            p.get("baseline"),
+            p.flag("check"),
+        );
+    }
     bench::run_experiment(exp, scale)
 }
 
@@ -252,6 +300,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         trainer: trainer::TrainerKind::Torch,
         epochs: 1,
         seed: 7,
+        span_capacity: 0,
     };
     let store = cdl::bench::rig::build_store(&spec)?.store;
     let ds: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(

@@ -1,0 +1,204 @@
+//! CI-gated bench baselines: persist a `BENCH_*.json` snapshot of the
+//! hotpath metrics in-repo and fail CI when a run regresses beyond a
+//! tolerance band.
+//!
+//! File schema (pretty-printed, human-editable):
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "metrics": { "boundary.s3.pipelined_gap_ms": 120.0, ... },
+//!   "higher_is_better": ["assembly.vanilla.speedup"],
+//!   "tolerance": { "default": 0.75, "get_into.allocs_per_read": 0.0 },
+//!   "slack": { "default": 2.0, "get_into.allocs_per_read": 0.0 }
+//! }
+//! ```
+//!
+//! A metric regresses when `current > base * (1 + tol) + slack` (or the
+//! mirrored bound for `higher_is_better` metrics). Tolerances are wide
+//! by design — the gate catches order-of-magnitude breakage (a lost
+//! fast path, an alloc leak), not CI-runner jitter. `slack` is an
+//! absolute floor in the metric's own unit so near-zero baselines don't
+//! turn noise into failures.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+pub const SCHEMA: u64 = 1;
+
+/// Result of comparing a run against a baseline file.
+#[derive(Debug, Default)]
+pub struct BaselineOutcome {
+    /// metrics compared against the baseline
+    pub checked: usize,
+    /// human-readable regression descriptions (empty = gate passes)
+    pub regressions: Vec<String>,
+    /// non-fatal observations (new metrics, large improvements)
+    pub notes: Vec<String>,
+}
+
+impl BaselineOutcome {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+/// Write `metrics` as a fresh baseline file with the given default
+/// tolerance band. Existing per-metric tolerance/slack edits are *not*
+/// preserved — refresh deliberately, then re-tune the bands.
+pub fn write(
+    path: &str,
+    metrics: &BTreeMap<String, f64>,
+    higher_is_better: &[&str],
+    default_tolerance: f64,
+    default_slack: f64,
+) -> Result<()> {
+    let mut m = Json::obj();
+    for (k, v) in metrics {
+        m.set(k, *v);
+    }
+    let mut tol = Json::obj();
+    tol.set("default", default_tolerance);
+    let mut slack = Json::obj();
+    slack.set("default", default_slack);
+    let mut doc = Json::obj();
+    doc.set("schema", SCHEMA)
+        .set("metrics", m)
+        .set("higher_is_better", higher_is_better.to_vec())
+        .set("tolerance", tol)
+        .set("slack", slack);
+    std::fs::write(path, doc.pretty() + "\n")
+        .with_context(|| format!("write baseline {path}"))?;
+    Ok(())
+}
+
+fn band(doc: &Json, table: &str, name: &str, fallback: f64) -> f64 {
+    doc.at(&[table, name])
+        .or_else(|| doc.at(&[table, "default"]))
+        .and_then(|j| j.as_f64())
+        .unwrap_or(fallback)
+}
+
+/// Compare `current` against the baseline at `path`.
+pub fn check(path: &str, current: &BTreeMap<String, f64>) -> Result<BaselineOutcome> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read baseline {path}"))?;
+    let doc = json::parse(&text).with_context(|| format!("parse baseline {path}"))?;
+    let schema = doc.get("schema").and_then(|j| j.as_f64()).unwrap_or(0.0) as u64;
+    if schema != SCHEMA {
+        bail!("baseline {path} has schema {schema}, expected {SCHEMA}");
+    }
+    let Some(base) = doc.get("metrics").and_then(|j| j.as_obj()) else {
+        bail!("baseline {path} has no metrics object");
+    };
+    let hib: Vec<&str> = doc
+        .get("higher_is_better")
+        .and_then(|j| j.as_arr())
+        .map(|a| a.iter().filter_map(|j| j.as_str()).collect())
+        .unwrap_or_default();
+    let mut out = BaselineOutcome::default();
+    for (name, bval) in base {
+        let Some(b) = bval.as_f64() else { continue };
+        let Some(&cur) = current.get(name) else {
+            out.regressions
+                .push(format!("{name}: present in baseline but missing from this run"));
+            continue;
+        };
+        out.checked += 1;
+        let tol = band(&doc, "tolerance", name, 0.5);
+        let slack = band(&doc, "slack", name, 0.0);
+        if hib.contains(&name.as_str()) {
+            let floor = b * (1.0 - tol) - slack;
+            if cur < floor {
+                out.regressions.push(format!(
+                    "{name}: {cur:.3} below baseline {b:.3} (floor {floor:.3}, tol {tol:.2}, slack {slack:.2})"
+                ));
+            } else if cur > b * (1.0 + tol) + slack {
+                out.notes.push(format!(
+                    "{name}: {cur:.3} well above baseline {b:.3} — consider refreshing"
+                ));
+            }
+        } else {
+            let ceil = b * (1.0 + tol) + slack;
+            if cur > ceil {
+                out.regressions.push(format!(
+                    "{name}: {cur:.3} above baseline {b:.3} (ceiling {ceil:.3}, tol {tol:.2}, slack {slack:.2})"
+                ));
+            } else if b > 0.0 && cur < b * (1.0 - tol) - slack {
+                out.notes.push(format!(
+                    "{name}: {cur:.3} well below baseline {b:.3} — consider refreshing"
+                ));
+            }
+        }
+    }
+    for name in current.keys() {
+        if !base.contains_key(name) {
+            out.notes.push(format!("{name}: new metric, not gated yet"));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("cdl-baseline-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    fn metrics(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn roundtrip_within_band_passes() {
+        let path = tmp("ok.json");
+        let base = metrics(&[("a.ms", 100.0), ("b.count", 0.0)]);
+        write(&path, &base, &[], 0.5, 1.0).unwrap();
+        let cur = metrics(&[("a.ms", 130.0), ("b.count", 0.0)]);
+        let out = check(&path, &cur).unwrap();
+        assert!(out.passed(), "{:?}", out.regressions);
+        assert_eq!(out.checked, 2);
+    }
+
+    #[test]
+    fn regression_beyond_band_fails() {
+        let path = tmp("regress.json");
+        write(&path, &metrics(&[("a.ms", 100.0)]), &[], 0.5, 1.0).unwrap();
+        let out = check(&path, &metrics(&[("a.ms", 200.0)])).unwrap();
+        assert!(!out.passed());
+        assert!(out.regressions[0].contains("a.ms"));
+    }
+
+    #[test]
+    fn zero_baseline_gates_hard_without_slack() {
+        let path = tmp("zero.json");
+        write(&path, &metrics(&[("allocs", 0.0)]), &[], 0.5, 0.0).unwrap();
+        assert!(check(&path, &metrics(&[("allocs", 1.0)])).unwrap().regressions.len() == 1);
+        assert!(check(&path, &metrics(&[("allocs", 0.0)])).unwrap().passed());
+    }
+
+    #[test]
+    fn higher_is_better_mirrors_the_band() {
+        let path = tmp("hib.json");
+        write(&path, &metrics(&[("speedup", 2.0)]), &["speedup"], 0.5, 0.0).unwrap();
+        assert!(check(&path, &metrics(&[("speedup", 1.5)])).unwrap().passed());
+        assert!(!check(&path, &metrics(&[("speedup", 0.5)])).unwrap().passed());
+    }
+
+    #[test]
+    fn missing_and_new_metrics_are_reported() {
+        let path = tmp("drift.json");
+        write(&path, &metrics(&[("gone.ms", 5.0)]), &[], 0.5, 0.0).unwrap();
+        let out = check(&path, &metrics(&[("fresh.ms", 5.0)])).unwrap();
+        assert!(!out.passed());
+        assert!(out.regressions[0].contains("gone.ms"));
+        assert!(out.notes.iter().any(|n| n.contains("fresh.ms")));
+    }
+}

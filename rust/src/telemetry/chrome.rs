@@ -1,0 +1,165 @@
+//! Chrome `trace_event` export: turn a recorder snapshot into a JSON
+//! document loadable in Perfetto / `chrome://tracing`.
+//!
+//! Spans are laid out on named tracks — `consumer` (tid 0), `planner`
+//! (tid 1), `prefetch` (tid 2) and one `worker N` track per worker
+//! (tid 10+N) — as `ph:"X"` duration events with `(batch, epoch, seq)`
+//! in `args`. Epoch seams ([`names::EPOCH_SEAM`]) become global instant
+//! events (`ph:"i"`, `s:"g"`), so the cross-epoch pipeline's overlap is
+//! visible at a glance. Timestamps are recorder seconds scaled to the
+//! format's microseconds.
+
+use std::collections::BTreeSet;
+
+use super::{names, Span};
+use crate::util::json::Json;
+
+/// Synthetic pid for the single-process trace.
+const PID: u64 = 1;
+
+const TID_CONSUMER: u64 = 0;
+const TID_PLANNER: u64 = 1;
+const TID_PREFETCH: u64 = 2;
+const TID_WORKER_BASE: u64 = 10;
+
+/// Track assignment: consumer-side lanes by name, planner/prefetch by
+/// name, everything else (`batch_inflight`, `get_item`, `worker_spawn`)
+/// on its recording worker's track.
+fn tid(span: &Span) -> u64 {
+    match span.name {
+        names::GET_BATCH
+        | names::PIN_MEMORY
+        | names::TO_DEVICE
+        | names::TRAIN_BATCH
+        | names::OPTIMIZER_STEP
+        | names::EPOCH_SEAM
+        | names::ADVANCE
+        | names::PRERUN
+        | names::NEXT_DATA
+        | names::PREP_TRAINING
+        | names::POSTRUN => TID_CONSUMER,
+        names::PLAN_PUBLISH => TID_PLANNER,
+        names::PREFETCH_FETCH | names::PREFETCH_WAIT => TID_PREFETCH,
+        _ => TID_WORKER_BASE + span.worker as u64,
+    }
+}
+
+fn track_name(tid: u64) -> String {
+    match tid {
+        TID_CONSUMER => "consumer".to_string(),
+        TID_PLANNER => "planner".to_string(),
+        TID_PREFETCH => "prefetch".to_string(),
+        t => format!("worker {}", t - TID_WORKER_BASE),
+    }
+}
+
+fn metadata(name: &str, tid: Option<u64>, label: &str) -> Json {
+    let mut args = Json::obj();
+    args.set("name", label);
+    let mut ev = Json::obj();
+    ev.set("args", args).set("name", name).set("ph", "M").set("pid", PID);
+    if let Some(t) = tid {
+        ev.set("tid", t);
+    }
+    ev
+}
+
+/// Render spans (a [`super::Recorder::snapshot`]) as a Chrome
+/// `trace_event` document.
+pub fn chrome_trace(spans: &[Span]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    events.push(metadata("process_name", None, "cdl"));
+    let tids: BTreeSet<u64> = spans.iter().map(tid).collect();
+    for t in &tids {
+        events.push(metadata("thread_name", Some(*t), &track_name(*t)));
+        // order tracks consumer → planner → prefetch → workers
+        let mut args = Json::obj();
+        args.set("sort_index", *t);
+        let mut ev = Json::obj();
+        ev.set("args", args)
+            .set("name", "thread_sort_index")
+            .set("ph", "M")
+            .set("pid", PID)
+            .set("tid", *t);
+        events.push(ev);
+    }
+    for s in spans {
+        let mut args = Json::obj();
+        args.set("batch", s.batch).set("epoch", s.epoch).set("seq", s.seq);
+        let mut ev = Json::obj();
+        ev.set("args", args)
+            .set("name", s.name)
+            .set("pid", PID)
+            .set("tid", tid(s))
+            .set("ts", (s.t0 * 1e6).round());
+        if s.name == names::EPOCH_SEAM {
+            ev.set("ph", "i").set("s", "g");
+        } else {
+            ev.set("ph", "X").set("dur", (s.duration().max(0.0) * 1e6).round());
+        }
+        events.push(ev);
+    }
+    let mut doc = Json::obj();
+    doc.set("displayTimeUnit", "ms").set("traceEvents", Json::Arr(events));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn span(name: &'static str, worker: u32, batch: i64, epoch: i64, seq: i64, t0: f64, t1: f64) -> Span {
+        Span { name, worker, batch, epoch, seq, t0, t1 }
+    }
+
+    #[test]
+    fn tracks_are_named_and_events_typed() {
+        let spans = vec![
+            span(names::PLAN_PUBLISH, u32::MAX - 1, -1, 0, 0, 0.0, 0.001),
+            span(names::BATCH_INFLIGHT, 2, 5, 0, 5, 0.01, 0.03),
+            span(names::GET_BATCH, 0, 5, 0, 5, 0.02, 0.031),
+            span(names::EPOCH_SEAM, 0, -1, 1, -1, 0.05, 0.05),
+        ];
+        let doc = chrome_trace(&spans);
+        let text = doc.to_string();
+        let parsed = json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process_name + 3 tracks × 2 metadata + 4 span events
+        assert_eq!(events.len(), 11);
+        let names_of = |ph: &str| -> Vec<&str> {
+            events
+                .iter()
+                .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some(ph))
+                .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+                .collect()
+        };
+        assert_eq!(names_of("X"), vec!["plan_publish", "batch_inflight", "get_batch"]);
+        assert_eq!(names_of("i"), vec!["epoch_seam"]);
+        let labels: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("thread_name"))
+            .filter_map(|e| e.at(&["args", "name"]).and_then(|n| n.as_str()))
+            .collect();
+        assert_eq!(labels, vec!["consumer", "planner", "worker 2"]);
+    }
+
+    #[test]
+    fn golden_duration_event() {
+        let spans = vec![span(names::GET_ITEM, 1, 7, 2, 19, 0.5, 0.75)];
+        let doc = chrome_trace(&spans);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // keys sort as args,dur,name,ph,pid,tid,ts — stable golden form
+        assert_eq!(
+            events.last().unwrap().to_string(),
+            r#"{"args":{"batch":7,"epoch":2,"seq":19},"dur":250000,"name":"get_item","ph":"X","pid":1,"tid":11,"ts":500000}"#
+        );
+    }
+
+    #[test]
+    fn empty_snapshot_still_parses() {
+        let doc = chrome_trace(&[]);
+        let parsed = json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("traceEvents").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

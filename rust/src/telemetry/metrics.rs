@@ -1,0 +1,157 @@
+//! `MetricsHub` — one registry of named atomic counters/gauges.
+//!
+//! The pipeline used to scatter its health signals across ad-hoc
+//! accessors (`reorder_high_water`, `item_steals`, planner seam idle,
+//! CreditGate block time, cache tier stats, prefetch hit counters,
+//! allocator counters). The hub absorbs them into a single namespace so
+//! one `snapshot()` renders the whole plane as structured JSON
+//! (`cdl run --metrics out.jsonl` streams one snapshot per epoch).
+//!
+//! Registration (`metric()`) takes a Mutex and may allocate — do it at
+//! setup and cache the returned `Arc<Metric>`; updating a metric is a
+//! single relaxed atomic op and is safe inside the zero-alloc window.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// One named counter/gauge: a plain atomic u64 (counts or nanoseconds).
+#[derive(Debug, Default)]
+pub struct Metric {
+    bits: AtomicU64,
+}
+
+impl Metric {
+    pub fn add(&self, v: u64) {
+        self.bits.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Accumulate a duration in nanoseconds.
+    pub fn add_duration(&self, d: Duration) {
+        self.add(d.as_nanos() as u64);
+    }
+
+    pub fn set(&self, v: u64) {
+        self.bits.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise-only gauge (high-water marks).
+    pub fn set_max(&self, v: u64) {
+        self.bits.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.bits.load(Ordering::Relaxed)
+    }
+}
+
+/// Registry of named metrics. Cheap to update, locked only to register
+/// or snapshot.
+#[derive(Debug, Default)]
+pub struct MetricsHub {
+    registry: Mutex<BTreeMap<String, Arc<Metric>>>,
+}
+
+impl MetricsHub {
+    pub fn new() -> MetricsHub {
+        MetricsHub::default()
+    }
+
+    /// Get-or-register the metric named `name`. Cache the handle for
+    /// hot-path use.
+    pub fn metric(&self, name: &str) -> Arc<Metric> {
+        let mut reg = self.registry.lock().unwrap();
+        if let Some(m) = reg.get(name) {
+            return m.clone();
+        }
+        let m = Arc::new(Metric::default());
+        reg.insert(name.to_string(), m.clone());
+        m
+    }
+
+    /// Convenience: set a gauge by name (registers it if new). Not for
+    /// hot paths — takes the registry lock.
+    pub fn set(&self, name: &str, v: u64) {
+        self.metric(name).set(v);
+    }
+
+    /// Convenience: bump a counter by name (registers it if new).
+    pub fn add(&self, name: &str, v: u64) {
+        self.metric(name).add(v);
+    }
+
+    /// Current value of `name`, 0 if never registered.
+    pub fn get(&self, name: &str) -> u64 {
+        self.registry
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|m| m.get())
+            .unwrap_or(0)
+    }
+
+    /// All registered metric names (sorted).
+    pub fn names(&self) -> Vec<String> {
+        self.registry.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Structured snapshot of every registered metric: a JSON object
+    /// with sorted keys (deterministic for golden files).
+    pub fn snapshot(&self) -> Json {
+        let reg = self.registry.lock().unwrap();
+        let mut obj = Json::obj();
+        for (name, m) in reg.iter() {
+            obj.set(name, m.get());
+        }
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_update_snapshot() {
+        let hub = MetricsHub::new();
+        let steals = hub.metric("loader.item_steals");
+        steals.add(3);
+        steals.inc();
+        hub.set("reorder.high_water", 6);
+        hub.metric("planner.seam_idle_ns").add_duration(Duration::from_micros(1500));
+        assert_eq!(hub.get("loader.item_steals"), 4);
+        assert_eq!(hub.get("reorder.high_water"), 6);
+        assert_eq!(hub.get("planner.seam_idle_ns"), 1_500_000);
+        assert_eq!(hub.get("never.registered"), 0);
+        let snap = hub.snapshot();
+        assert_eq!(snap.at(&["loader.item_steals"]).and_then(|j| j.as_usize()), Some(4));
+    }
+
+    #[test]
+    fn metric_handles_are_shared() {
+        let hub = MetricsHub::new();
+        let a = hub.metric("x");
+        let b = hub.metric("x");
+        a.add(2);
+        b.add(5);
+        assert_eq!(hub.get("x"), 7);
+        assert_eq!(hub.names(), vec!["x".to_string()]);
+    }
+
+    #[test]
+    fn set_max_is_a_high_water_mark() {
+        let hub = MetricsHub::new();
+        let m = hub.metric("hwm");
+        m.set_max(4);
+        m.set_max(2);
+        m.set_max(9);
+        assert_eq!(m.get(), 9);
+    }
+}

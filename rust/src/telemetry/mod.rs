@@ -1,0 +1,184 @@
+//! Telemetry plane — the "Measured activities" lane of the paper's Fig 1,
+//! rebuilt as an always-on observability subsystem.
+//!
+//! Every instrumented activity (`get_batch`, `get_item`,
+//! `training_batch_to_device`, `run_training_batch`, the Lightning lanes,
+//! worker spawns…) is recorded as a [`Span`] with worker id, batch id, the
+//! owning ticket's `(epoch, seq)` tags and a start/end pair on a shared
+//! monotonic clock. Reports derive medians (Fig 14), timelines
+//! (Fig 2/17/19), fade-in/out histograms (Fig 23) and the Table 3
+//! GPU-utilization aggregates from the same recorder.
+//!
+//! The plane has four parts:
+//!
+//! * [`ring`] (re-exported here) — the lock-free [`Recorder`]: sharded
+//!   fixed-capacity ring buffers with claim-index writes. No Mutex, no
+//!   allocation after construction, cheap enough to leave enabled during
+//!   the zero-alloc steady state (`tests/test_alloc.rs` asserts this).
+//! * [`metrics`] — the unified [`MetricsHub`]: one registry of named
+//!   atomic counters/gauges absorbing the scattered pipeline signals
+//!   (reorder high-water, item steals, seam idle, credit-block time,
+//!   cache/prefetch/arena/alloc stats), snapshotted per epoch as JSON.
+//! * [`chrome`] — Chrome `trace_event` export (`cdl run --trace out.json`,
+//!   loadable in Perfetto) with planner/worker/consumer named tracks and
+//!   epoch seams as instant events.
+//! * [`baseline`] — CI-gated bench baselines (`cdl reproduce hotpath
+//!   --baseline BENCH_hotpath.json --check`).
+
+pub mod baseline;
+pub mod chrome;
+mod metrics;
+mod ring;
+
+pub use metrics::{Metric, MetricsHub};
+pub use ring::{Recorder, Span, DEFAULT_SPAN_CAPACITY};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::stats;
+
+/// Standard span names (the paper's measurement points).
+pub mod names {
+    pub const GET_BATCH: &str = "get_batch"; // next_data wait
+    pub const BATCH_INFLIGHT: &str = "batch_inflight"; // fetch start → queued
+    pub const GET_ITEM: &str = "get_item"; // Dataset __getitem__
+    pub const TO_DEVICE: &str = "training_batch_to_device";
+    pub const TRAIN_BATCH: &str = "run_training_batch";
+    pub const OPTIMIZER_STEP: &str = "optimizer_step";
+    pub const WORKER_SPAWN: &str = "worker_spawn";
+    pub const PIN_MEMORY: &str = "pin_memory";
+    /// background GET issued by the prefetch engine
+    pub const PREFETCH_FETCH: &str = "prefetch_fetch";
+    /// demand lookup that waited on an in-flight prefetch
+    pub const PREFETCH_WAIT: &str = "prefetch_wait";
+    /// planner computed + published one epoch plan
+    pub const PLAN_PUBLISH: &str = "plan_publish";
+    /// instant marker: the consumer crossed an epoch boundary
+    pub const EPOCH_SEAM: &str = "epoch_seam";
+    // Lightning lanes (Fig 17)
+    pub const ADVANCE: &str = "advance";
+    pub const PRERUN: &str = "prerun";
+    pub const NEXT_DATA: &str = "next_data";
+    pub const PREP_TRAINING: &str = "prep_training";
+    pub const POSTRUN: &str = "postrun";
+}
+
+/// Synthetic worker id used for planner-thread spans (the planner runs
+/// on whichever worker crosses the seam first, so a stable synthetic id
+/// keeps its spans on one named track).
+pub const PLANNER_WORKER: u32 = u32::MAX - 1;
+
+// ---------------------------------------------------------------------------
+// GPU utilization sampling (Table 3 metrics)
+// ---------------------------------------------------------------------------
+
+/// Shared gauges exported by the simulated device.
+#[derive(Debug, Default)]
+pub struct DeviceGauges {
+    /// busy-compute flag ⇒ util sample in percent ×100 (0 if idle)
+    pub util_x100: AtomicU64,
+    /// memory utilization in percent ×100
+    pub mem_x100: AtomicU64,
+}
+
+/// One 10 Hz utilization sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UtilSample {
+    pub t: f64,
+    pub util: f64,
+    pub mem: f64,
+}
+
+/// Sidecar sampler thread at `hz` (paper: 10 Hz).
+pub struct UtilSampler {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<Vec<UtilSample>>>,
+}
+
+impl UtilSampler {
+    pub fn start(rec: Arc<Recorder>, gauges: Arc<DeviceGauges>, hz: f64) -> UtilSampler {
+        let stop = Arc::new(AtomicBool::new(false));
+        let st = stop.clone();
+        let period = std::time::Duration::from_secs_f64(1.0 / hz);
+        let handle = std::thread::Builder::new()
+            .name("util-sampler".into())
+            .spawn(move || {
+                let mut samples = Vec::new();
+                while !st.load(Ordering::Relaxed) {
+                    samples.push(UtilSample {
+                        t: rec.now(),
+                        util: gauges.util_x100.load(Ordering::Relaxed) as f64 / 100.0,
+                        mem: gauges.mem_x100.load(Ordering::Relaxed) as f64 / 100.0,
+                    });
+                    std::thread::sleep(period);
+                }
+                samples
+            })
+            .expect("spawn util sampler");
+        UtilSampler { stop, handle: Some(handle) }
+    }
+
+    pub fn stop(mut self) -> Vec<UtilSample> {
+        self.stop.store(true, Ordering::Relaxed);
+        self.handle.take().map(|h| h.join().unwrap()).unwrap_or_default()
+    }
+}
+
+/// Table 3 aggregate: (util=0 %, mean util>0 %, mem=0 %, mean mem>0 %).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UtilAggregate {
+    pub util_zero_pct: f64,
+    pub util_nonzero_mean: f64,
+    pub mem_zero_pct: f64,
+    pub mem_nonzero_mean: f64,
+}
+
+pub fn aggregate_util(samples: &[UtilSample]) -> UtilAggregate {
+    let agg = |vals: Vec<f64>| -> (f64, f64) {
+        if vals.is_empty() {
+            return (f64::NAN, f64::NAN);
+        }
+        let zero = vals.iter().filter(|v| **v <= 0.0).count();
+        let nonzero: Vec<f64> = vals.iter().copied().filter(|v| *v > 0.0).collect();
+        (
+            100.0 * zero as f64 / vals.len() as f64,
+            stats::mean(&nonzero),
+        )
+    };
+    let (uz, um) = agg(samples.iter().map(|s| s.util).collect());
+    let (mz, mm) = agg(samples.iter().map(|s| s.mem).collect());
+    UtilAggregate {
+        util_zero_pct: uz,
+        util_nonzero_mean: um,
+        mem_zero_pct: mz,
+        mem_nonzero_mean: mm,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn util_sampler_and_aggregate() {
+        let rec = Recorder::new();
+        let gauges = Arc::new(DeviceGauges::default());
+        let sampler = UtilSampler::start(rec, gauges.clone(), 100.0);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        gauges.util_x100.store(7200, Ordering::Relaxed);
+        gauges.mem_x100.store(4000, Ordering::Relaxed);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let samples = sampler.stop();
+        assert!(samples.len() >= 5);
+        let agg = aggregate_util(&samples);
+        assert!(agg.util_zero_pct > 10.0 && agg.util_zero_pct < 90.0);
+        assert!((agg.util_nonzero_mean - 72.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn aggregate_empty_is_nan() {
+        let a = aggregate_util(&[]);
+        assert!(a.util_zero_pct.is_nan());
+    }
+}

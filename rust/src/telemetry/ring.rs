@@ -1,0 +1,480 @@
+//! Lock-free span recording: sharded fixed-capacity ring buffers with
+//! claim-index writes and seqlock-style slot stamps.
+//!
+//! The old recorder was a contended `Mutex<Vec<Span>>` that had to stay
+//! disabled on the zero-alloc hot path; this one is cheap enough to
+//! leave on. One `record` is a relaxed `fetch_add` (ticket claim), one
+//! CAS (slot claim), a 64-byte volatile write and a release store — no
+//! Mutex, no heap allocation after construction.
+//!
+//! Concurrency protocol, per shard:
+//!
+//! * a writer claims a monotonically increasing ticket `i` via
+//!   `fetch_add` on the shard cursor; its slot is `i % capacity`;
+//! * the slot stamp encodes state: `0` = never written, `2k+1` = write
+//!   of ticket `k` in progress, `2k+2` = ticket `k` stable. The writer
+//!   CASes the current (even, older) stamp to `2i+1`, writes the
+//!   payload, then publishes `2i+2` with a release store;
+//! * if the stamp is odd (a lapped writer is still mid-write) or the CAS
+//!   fails, the span is **dropped** — counted in [`Recorder::dropped`] —
+//!   instead of torn;
+//! * a reader accepts a slot only if the stamp reads the same stable
+//!   ticket before *and* after the payload copy (seqlock read), so a
+//!   snapshot taken concurrently with writers never observes torn spans.
+//!
+//! Threads are spread over shards by a thread-local shard hint (const
+//! initialised — no lazy TLS allocation), so concurrent workers do not
+//! contend on one cursor cache line.
+
+use std::cell::{Cell, UnsafeCell};
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::metrics::MetricsHub;
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// One recorded activity interval on the recorder clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub name: &'static str,
+    pub worker: u32,
+    pub batch: i64,
+    /// epoch of the owning ticket (-1 when not epoch-scoped)
+    pub epoch: i64,
+    /// global pipeline sequence of the owning ticket (-1 when unknown)
+    pub seq: i64,
+    /// start/end seconds on the recorder clock
+    pub t0: f64,
+    pub t1: f64,
+}
+
+impl Span {
+    pub fn duration(&self) -> f64 {
+        self.t1 - self.t0
+    }
+}
+
+/// Fixed-size payload stored in a ring slot (one cache line).
+#[derive(Clone, Copy)]
+struct SpanData {
+    name: &'static str,
+    worker: u32,
+    batch: i64,
+    epoch: i64,
+    seq: i64,
+    t0: f64,
+    t1: f64,
+}
+
+const EMPTY: SpanData =
+    SpanData { name: "", worker: 0, batch: 0, epoch: 0, seq: 0, t0: 0.0, t1: 0.0 };
+
+#[inline]
+fn wip(ticket: u64) -> u64 {
+    2 * ticket + 1
+}
+
+#[inline]
+fn stable(ticket: u64) -> u64 {
+    2 * ticket + 2
+}
+
+struct Slot {
+    stamp: AtomicU64,
+    data: UnsafeCell<SpanData>,
+}
+
+// Safety: `data` is only written between a successful claim CAS on
+// `stamp` (odd, "in progress") and the release store of the stable
+// stamp; readers validate the stamp before and after the volatile copy
+// and discard torn reads.
+unsafe impl Sync for Slot {}
+
+struct Shard {
+    cursor: AtomicU64,
+    dropped: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl Shard {
+    fn with_slots(n: usize) -> Shard {
+        let slots: Vec<Slot> = (0..n)
+            .map(|_| Slot { stamp: AtomicU64::new(0), data: UnsafeCell::new(EMPTY) })
+            .collect();
+        Shard {
+            cursor: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            slots: slots.into_boxed_slice(),
+        }
+    }
+
+    fn push(&self, d: SpanData) {
+        let cap = self.slots.len() as u64;
+        let ticket = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(ticket % cap) as usize];
+        let cur = slot.stamp.load(Ordering::Relaxed);
+        // odd = a lapped writer is still inside this slot; >= our wip =
+        // an even faster lap already claimed past us. Either way the
+        // ring has wrapped a full capacity mid-write: drop, never tear.
+        if cur % 2 == 1
+            || cur >= wip(ticket)
+            || slot
+                .stamp
+                .compare_exchange(cur, wip(ticket), Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+        {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        unsafe { std::ptr::write_volatile(slot.data.get(), d) };
+        slot.stamp.store(stable(ticket), Ordering::Release);
+    }
+
+    fn collect(&self, out: &mut Vec<Span>) {
+        let cap = self.slots.len() as u64;
+        let n = self.cursor.load(Ordering::Acquire);
+        for ticket in n.saturating_sub(cap)..n {
+            let slot = &self.slots[(ticket % cap) as usize];
+            if slot.stamp.load(Ordering::Acquire) != stable(ticket) {
+                continue;
+            }
+            let d = unsafe { std::ptr::read_volatile(slot.data.get()) };
+            fence(Ordering::Acquire);
+            if slot.stamp.load(Ordering::Relaxed) != stable(ticket) {
+                continue; // overwritten mid-copy: discard the torn read
+            }
+            out.push(Span {
+                name: d.name,
+                worker: d.worker,
+                batch: d.batch,
+                epoch: d.epoch,
+                seq: d.seq,
+                t0: d.t0,
+                t1: d.t1,
+            });
+        }
+    }
+
+    fn retained(&self) -> usize {
+        let n = self.cursor.load(Ordering::Relaxed);
+        let dropped = self.dropped.load(Ordering::Relaxed);
+        (n.min(self.slots.len() as u64).saturating_sub(dropped.min(n))) as usize
+    }
+
+    fn reset(&self) {
+        self.cursor.store(0, Ordering::Relaxed);
+        self.dropped.store(0, Ordering::Relaxed);
+        for slot in self.slots.iter() {
+            slot.stamp.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Total spans retained across all shards by default (override with the
+/// `CDL_SPAN_CAPACITY` env var or the `span_capacity` config knob).
+pub const DEFAULT_SPAN_CAPACITY: usize = 65_536;
+
+const SHARDS: usize = 8;
+
+std::thread_local! {
+    // const-init Cell: no lazy TLS initialisation, no allocation, no
+    // destructor — safe to touch inside the zero-alloc window.
+    static SHARD_HINT: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+fn shard_hint() -> usize {
+    SHARD_HINT.with(|c| {
+        let mut v = c.get();
+        if v == usize::MAX {
+            v = NEXT_SHARD.fetch_add(1, Ordering::Relaxed);
+            c.set(v);
+        }
+        v
+    })
+}
+
+/// Thread-safe lock-free span recorder with a shared origin clock and
+/// the process-wide [`MetricsHub`] attached.
+pub struct Recorder {
+    origin: Instant,
+    enabled: AtomicBool,
+    shards: Box<[Shard]>,
+    metrics: MetricsHub,
+}
+
+impl Recorder {
+    pub fn new() -> Arc<Recorder> {
+        let cap = std::env::var("CDL_SPAN_CAPACITY")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(DEFAULT_SPAN_CAPACITY);
+        Recorder::with_capacity(cap)
+    }
+
+    /// `capacity` = total retained spans across all shards, rounded up
+    /// to a shard multiple; the ring overwrites the oldest spans once
+    /// full. 0 selects [`DEFAULT_SPAN_CAPACITY`].
+    pub fn with_capacity(capacity: usize) -> Arc<Recorder> {
+        let capacity = if capacity == 0 { DEFAULT_SPAN_CAPACITY } else { capacity };
+        let per_shard = capacity.max(SHARDS).div_ceil(SHARDS);
+        let shards: Vec<Shard> = (0..SHARDS).map(|_| Shard::with_slots(per_shard)).collect();
+        Arc::new(Recorder {
+            origin: Instant::now(),
+            enabled: AtomicBool::new(true),
+            shards: shards.into_boxed_slice(),
+            metrics: MetricsHub::new(),
+        })
+    }
+
+    /// Seconds since recorder creation.
+    pub fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+
+    /// The unified metrics registry riding on this recorder: everything
+    /// holding the recorder can publish counters without extra plumbing.
+    pub fn metrics(&self) -> &MetricsHub {
+        &self.metrics
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, name: &'static str, worker: u32, batch: i64, t0: f64, t1: f64) {
+        self.record_tagged(name, worker, batch, -1, -1, t0, t1);
+    }
+
+    /// Record a span carrying the owning ticket's `(epoch, seq)` so the
+    /// cross-epoch ticket stream stays attributable end to end.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_tagged(
+        &self,
+        name: &'static str,
+        worker: u32,
+        batch: i64,
+        epoch: i64,
+        seq: i64,
+        t0: f64,
+        t1: f64,
+    ) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let shard = &self.shards[shard_hint() % self.shards.len()];
+        shard.push(SpanData { name, worker, batch, epoch, seq, t0, t1 });
+    }
+
+    /// Time a closure as a span.
+    pub fn time<T>(
+        &self,
+        name: &'static str,
+        worker: u32,
+        batch: i64,
+        f: impl FnOnce() -> T,
+    ) -> T {
+        let t0 = self.now();
+        let out = f();
+        self.record(name, worker, batch, t0, self.now());
+        out
+    }
+
+    /// Retained span count (approximate while writers are active).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.retained()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans discarded because the ring lapped a writer mid-write.
+    pub fn dropped(&self) -> u64 {
+        self.shards.iter().map(|s| s.dropped.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total ring capacity in spans.
+    pub fn capacity(&self) -> usize {
+        self.shards.iter().map(|s| s.slots.len()).sum()
+    }
+
+    /// Snapshot all retained spans (sorted by start time). Safe against
+    /// concurrent writers: torn slots are skipped, never mangled.
+    pub fn snapshot(&self) -> Vec<Span> {
+        let mut v = Vec::with_capacity(self.len());
+        for shard in self.shards.iter() {
+            shard.collect(&mut v);
+        }
+        v.sort_by(|a, b| a.t0.total_cmp(&b.t0));
+        v
+    }
+
+    /// Reset all rings. Callers must be quiescent (no concurrent
+    /// `record`), as with any ring restart.
+    pub fn clear(&self) {
+        for shard in self.shards.iter() {
+            shard.reset();
+        }
+    }
+
+    /// Durations of all spans with the given name.
+    pub fn durations(&self, name: &str) -> Vec<f64> {
+        self.snapshot()
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| s.duration())
+            .collect()
+    }
+
+    pub fn median(&self, name: &str) -> f64 {
+        stats::median(&self.durations(name))
+    }
+
+    /// Per-name summary table (Fig 14-style medians).
+    pub fn summary_table(&self, title: &str) -> Table {
+        use std::collections::BTreeMap;
+        let mut by_name: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+        for s in self.snapshot() {
+            by_name.entry(s.name).or_default().push(s.duration());
+        }
+        let mut t = Table::new(
+            title,
+            &["span", "count", "median_s", "mean_s", "p90_s", "max_s"],
+        );
+        for (name, durs) in by_name {
+            let s = stats::Summary::of(&durs);
+            t.row(&[
+                name.to_string(),
+                s.count.to_string(),
+                format!("{:.4}", s.p50),
+                format!("{:.4}", s.mean),
+                format!("{:.4}", s.p90),
+                format!("{:.4}", s.max),
+            ]);
+        }
+        t
+    }
+
+    /// CSV export of the raw timeline (Fig 2 / Fig 17 data).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("name,worker,batch,epoch,seq,t0,t1,duration\n");
+        for s in self.snapshot() {
+            out.push_str(&format!(
+                "{},{},{},{},{},{:.6},{:.6},{:.6}\n",
+                s.name,
+                s.worker,
+                s.batch,
+                s.epoch,
+                s.seq,
+                s.t0,
+                s.t1,
+                s.duration()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::names;
+    use super::*;
+
+    #[test]
+    fn record_and_median() {
+        let r = Recorder::new();
+        r.record(names::GET_ITEM, 0, 1, 0.0, 0.1);
+        r.record(names::GET_ITEM, 1, 1, 0.0, 0.3);
+        r.record(names::GET_ITEM, 2, 2, 0.0, 0.2);
+        assert_eq!(r.len(), 3);
+        assert!((r.median(names::GET_ITEM) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_closure() {
+        let r = Recorder::new();
+        let out = r.time(names::TRAIN_BATCH, 0, 0, || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            5
+        });
+        assert_eq!(out, 5);
+        let d = r.durations(names::TRAIN_BATCH);
+        assert_eq!(d.len(), 1);
+        assert!(d[0] >= 0.009);
+    }
+
+    #[test]
+    fn disabled_recorder_drops_spans() {
+        let r = Recorder::new();
+        r.set_enabled(false);
+        r.record("x", 0, 0, 0.0, 1.0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn csv_has_rows() {
+        let r = Recorder::new();
+        r.record(names::GET_BATCH, 0, 0, 0.1, 0.4);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("name,worker"));
+        assert!(csv.contains("get_batch,0,0"));
+    }
+
+    #[test]
+    fn summary_table_renders() {
+        let r = Recorder::new();
+        r.record(names::GET_BATCH, 0, 0, 0.0, 0.5);
+        r.record(names::TO_DEVICE, 0, 0, 0.5, 0.6);
+        let t = r.summary_table("spans");
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn tags_travel_with_the_span() {
+        let r = Recorder::new();
+        r.record_tagged(names::BATCH_INFLIGHT, 3, 17, 2, 41, 1.0, 1.5);
+        let spans = r.snapshot();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].epoch, 2);
+        assert_eq!(spans[0].seq, 41);
+        // untagged records default to -1/-1
+        r.record(names::GET_BATCH, 0, 0, 2.0, 2.1);
+        let spans = r.snapshot();
+        assert_eq!(spans[1].epoch, -1);
+        assert_eq!(spans[1].seq, -1);
+        assert!(r.to_csv().contains("batch_inflight,3,17,2,41"));
+    }
+
+    #[test]
+    fn wraparound_keeps_the_newest_spans() {
+        let r = Recorder::with_capacity(64); // 8 slots per shard
+        for i in 0..1000 {
+            r.record("w", 0, i, i as f64, i as f64 + 0.5);
+        }
+        let spans = r.snapshot();
+        assert!(!spans.is_empty());
+        assert!(spans.len() <= r.capacity());
+        // single-threaded writers never tear, so nothing is dropped and
+        // the retained window is the newest batch ids
+        assert_eq!(r.dropped(), 0);
+        assert!(spans.iter().all(|s| s.batch >= 1000 - r.capacity() as i64));
+        assert!(spans.iter().any(|s| s.batch == 999));
+    }
+
+    #[test]
+    fn clear_resets_the_rings() {
+        let r = Recorder::with_capacity(64);
+        for i in 0..100 {
+            r.record("w", 0, i, 0.0, 1.0);
+        }
+        r.clear();
+        assert!(r.is_empty());
+        r.record("w", 0, 7, 0.0, 1.0);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.snapshot()[0].batch, 7);
+    }
+}

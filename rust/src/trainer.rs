@@ -158,6 +158,19 @@ pub fn train(
     cfg: &TrainerConfig,
     recorder: Arc<Recorder>,
 ) -> Result<TrainReport> {
+    train_observed(dl, device, cfg, recorder, None)
+}
+
+/// [`train`] with an epoch-end hook: `on_epoch_end(epoch)` fires after
+/// each epoch's batches drain (`cdl run --metrics` snapshots the
+/// metrics hub here — one JSON line per epoch).
+pub fn train_observed(
+    dl: &Dataloader,
+    device: &Device,
+    cfg: &TrainerConfig,
+    recorder: Arc<Recorder>,
+    mut on_epoch_end: Option<&mut dyn FnMut(usize)>,
+) -> Result<TrainReport> {
     let sampler = UtilSampler::start(recorder.clone(), device.gauges(), 10.0);
     let t_start = recorder.now();
     let mut images = 0u64;
@@ -244,6 +257,9 @@ pub fn train(
                 }
             }
             step += 1;
+        }
+        if let Some(hook) = on_epoch_end.as_mut() {
+            hook(epoch);
         }
     }
 

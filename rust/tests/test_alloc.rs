@@ -146,6 +146,32 @@ fn steady_state_epoch_attach_skips_pipeline_setup_allocs() {
     );
 }
 
+#[test]
+fn span_recording_and_metric_updates_are_zero_alloc() {
+    // the telemetry plane must be cheap enough to leave on inside the
+    // zero-alloc steady state: one record_tagged is a ticket fetch_add,
+    // a claim CAS and a fixed-size volatile write into a preallocated
+    // ring; updating a cached Metric handle is one relaxed fetch_add —
+    // no Mutex, no heap traffic, through full ring wraparound
+    let rec = cdl::telemetry::Recorder::with_capacity(1024);
+    let steals = rec.metrics().metric("loader.item_steals");
+    // warm-up: TLS shard hint + first lap of the ring
+    for i in 0..2048i64 {
+        rec.record_tagged(cdl::telemetry::names::GET_ITEM, 1, i, 0, i, 0.0, 0.5);
+    }
+    let before = alloc::thread_counters();
+    for i in 0..4096i64 {
+        let t0 = rec.now();
+        rec.record_tagged(cdl::telemetry::names::GET_ITEM, 1, i, 1, i, t0, t0 + 0.001);
+        steals.add(1);
+    }
+    let delta = alloc::thread_counters().since(before);
+    assert_eq!(delta.allocs, 0, "steady-state span recording allocated: {delta:?}");
+    assert_eq!(delta.frees, 0, "steady-state span recording freed: {delta:?}");
+    assert_eq!(steals.get(), 4096);
+    assert!(rec.len() <= rec.capacity());
+}
+
 #[cfg(unix)]
 #[test]
 fn dirstore_get_into_item_path_is_zero_alloc_in_steady_state() {
