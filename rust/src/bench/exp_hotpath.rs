@@ -33,6 +33,14 @@
 //!   (pread into a reused buffer): reads/s and allocs/read; the
 //!   get_into row must report **0 allocs/read** in steady state (the
 //!   run fails otherwise, when the counting allocator is installed).
+//! * **Shard-window streaming** — per-file GETs vs tar-shard windows
+//!   ([`ShardStore`](crate::shards::ShardStore), `shard_size` samples
+//!   per request) over the same high-latency profiles, two pipelined
+//!   epochs each: batches/s, remote request counts, and window cache
+//!   hits. Delivered batches are digest-compared between the two modes
+//!   (byte identity is enforced) and the run *fails* if shard
+//!   streaming does not strictly beat per-file batches/s on s3 — the
+//!   request-amortization payoff this crate's shard path exists for.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -60,9 +68,16 @@ pub const BOUNDARY_EPOCHS: usize = 3;
 /// Storage profiles in the stall-attribution table ("mem" anchors the
 /// no-latency end of the spectrum).
 const STALL_PROFILES: [&str; 4] = ["mem", "s3", "ceph_os", "gluster_fs"];
+/// Samples per tar shard in the shard-streaming comparison.
+pub const SHARD_SIZE: usize = 24;
 /// Gate metrics where bigger numbers are better (everything else is a
 /// latency/count where smaller wins).
-const HIGHER_IS_BETTER: &[&str] = &["assembly.vanilla.speedup"];
+const HIGHER_IS_BETTER: &[&str] = &[
+    "assembly.vanilla.speedup",
+    "shard.s3.per_file_bps",
+    "shard.s3.shard_bps",
+    "shard.s3.speedup",
+];
 /// Default relative tolerance for a freshly written baseline: the gate
 /// exists to catch order-of-magnitude breakage, not runner jitter.
 pub const BASELINE_TOLERANCE: f64 = 1.0;
@@ -559,6 +574,114 @@ pub fn stall_table(scale: Scale) -> Result<Table> {
     Ok(t)
 }
 
+/// FNV-1a over delivered bytes: the digest that proves shard-window
+/// streaming and per-file loading hand the consumer identical batches.
+fn fnv(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+}
+
+/// Per-file GETs vs shard-window streaming on the high-latency
+/// profiles: the same spec, seed, and dispatch either way — the only
+/// difference is `shard_size`, which makes the remote serve
+/// [`SHARD_SIZE`]-sample tar windows (one request each) instead of one
+/// object per image. Two pipelined epochs per cell, so windows also
+/// cross an epoch seam. Every cell's delivered batches are folded into
+/// a digest and the two modes must agree **exactly** (byte identity is
+/// the contract, not an aspiration); the run additionally **fails** if
+/// shard streaming does not strictly beat per-file batches/s on s3.
+/// Returns the table plus the s3 (per-file, shard) batches/s pair.
+pub fn shard_table(scale: Scale) -> Result<(Table, f64, f64)> {
+    let mut t = Table::new(
+        "Hot path — per-file GETs vs shard-window streaming \
+         (threaded fetcher, item-steal, epoch-pipelined, 2 epochs)",
+        &[
+            "storage",
+            "mode",
+            "batches/s",
+            "total s",
+            "requests",
+            "window hits",
+        ],
+    );
+    let mut s3_per_file_bps = f64::NAN;
+    let mut s3_shard_bps = f64::NAN;
+    for storage in STEAL_PROFILES {
+        let mut per_file = (f64::NAN, 0u64); // (bps, digest)
+        for sharded in [false, true] {
+            let mut spec = tail_spec(storage, Dispatch::ItemSteal, scale);
+            // below half scale the profiles' fixed per-connection
+            // bandwidth floor swamps the first-byte latency this gate is
+            // about and both modes converge on pure transfer time
+            spec.latency_scale = spec.latency_scale.max(0.5);
+            spec.epoch_pipeline = 1;
+            // full readahead horizon in both modes (positions count
+            // items per-file and shard windows in shard mode)
+            spec.prefetch_depth = spec.items;
+            if sharded {
+                spec.shard_size = SHARD_SIZE;
+            }
+            let rig = rig::build(&spec)?;
+            let t0 = Instant::now();
+            let mut digest = 0xcbf2_9ce4_8422_2325u64;
+            let mut batches = 0usize;
+            for epoch in 0..2 {
+                for b in rig.dataloader.epoch(epoch) {
+                    fnv(&mut digest, &b.images.data);
+                    for &l in &b.labels {
+                        fnv(&mut digest, &l.to_le_bytes());
+                    }
+                    batches += 1;
+                    b.recycle();
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            if batches == 0 {
+                anyhow::bail!(
+                    "shard cell {storage}/sharded={sharded} delivered no batches"
+                );
+            }
+            let bps = batches as f64 / wall;
+            let requests = rig.remote.as_ref().map_or(0, |r| r.stats().gets);
+            let window_hits = rig.shards.as_ref().map(|s| s.window_stats().1);
+            if sharded {
+                if digest != per_file.1 {
+                    anyhow::bail!(
+                        "shard-streamed batches differ from per-file on \
+                         {storage}: digest {digest:016x} != {:016x}",
+                        per_file.1
+                    );
+                }
+                if storage == "s3" {
+                    s3_per_file_bps = per_file.0;
+                    s3_shard_bps = bps;
+                }
+            } else {
+                per_file = (bps, digest);
+            }
+            t.row(&[
+                storage.to_string(),
+                if sharded { "shard" } else { "per-file" }.to_string(),
+                num(bps, 1),
+                num(wall, 2),
+                requests.to_string(),
+                window_hits.map_or("-".to_string(), |h| h.to_string()),
+            ]);
+        }
+    }
+    let beats = s3_shard_bps > s3_per_file_bps; // NaN-safe: NaN never beats
+    if !beats {
+        anyhow::bail!(
+            "shard-streaming regression: {s3_shard_bps:.1} batches/s does \
+             not beat the per-file path's {s3_per_file_bps:.1} on the s3 \
+             profile"
+        );
+    }
+    Ok((t, s3_per_file_bps, s3_shard_bps))
+}
+
 /// Insert a gate metric, skipping non-finite values (a NaN would both
 /// corrupt the JSON baseline and be meaningless to band-check).
 fn put(m: &mut BTreeMap<String, f64>, name: &str, v: f64) {
@@ -605,6 +728,13 @@ pub fn collect(scale: Scale) -> Result<BTreeMap<String, f64>> {
     println!(
         "  DirStore get_into steady state: {into_allocs:.0} allocs/read"
     );
+    let (shard, per_file_bps, shard_bps) = shard_table(scale)?;
+    emit("hotpath", &shard)?;
+    println!(
+        "  s3 shard-window streaming: {shard_bps:.1} batches/s vs \
+         {per_file_bps:.1} per-file ({:.2}x, byte-identical)",
+        shard_bps / per_file_bps
+    );
     let mut m = BTreeMap::new();
     put(&mut m, "assembly.vanilla.speedup", vanilla_speedup);
     put(&mut m, "tail.ceph_os.batch_steal_p99_ms", batch_p99 * 1e3);
@@ -614,12 +744,16 @@ pub fn collect(scale: Scale) -> Result<BTreeMap<String, f64>> {
     put(&mut m, "pinned.pageable_ms", pageable_ms);
     put(&mut m, "pinned.pinned_ms", pinned_ms);
     put(&mut m, "get_into.allocs_per_read", into_allocs);
+    put(&mut m, "shard.s3.per_file_bps", per_file_bps);
+    put(&mut m, "shard.s3.shard_bps", shard_bps);
+    put(&mut m, "shard.s3.speedup", shard_bps / per_file_bps);
     Ok(m)
 }
 
 /// Experiment entry point (id "hotpath"): fused assembly sweep,
 /// dispatch-tail comparison, epoch-boundary seams, stall attribution,
-/// pinned-slab transfer delta, and the DirStore zero-copy read path.
+/// pinned-slab transfer delta, the DirStore zero-copy read path, and
+/// the per-file vs shard-window streaming gate.
 pub fn hotpath(scale: Scale) -> Result<()> {
     collect(scale).map(|_| ())
 }

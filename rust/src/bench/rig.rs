@@ -9,10 +9,11 @@ use anyhow::{bail, Result};
 use crate::data::synth::{generate_corpus, CorpusSpec};
 use crate::data::AugmentConfig;
 use crate::dataloader::{Dataloader, DataloaderConfig, FetchImpl};
-use crate::dataset::{Dataset, ImageFolderDataset};
+use crate::dataset::{Dataset, ImageFolderDataset, ShardDataset};
 use crate::device::Device;
 use crate::gil;
 use crate::prefetch::{CachePolicy, PrefetchConfig, PrefetchStore};
+use crate::shards::{pack_shards, ShardManifest, ShardStore};
 use crate::storage::{
     MemStore, ObjectStore, RemoteProfile, SimRemoteStore, VarnishCache,
 };
@@ -25,6 +26,13 @@ use crate::util::json::Json;
 pub struct RigSpec {
     pub storage: &'static str,
     pub latency_scale: f64,
+    /// samples per tar shard (0 = per-file objects): the remote serves
+    /// packed tars, read through window-granular fetches — one request
+    /// amortized over `shard_size` samples
+    pub shard_size: usize,
+    /// two-level shard shuffle (seeded shard order + intra-shard
+    /// reservoir) overriding the loader's sampler
+    pub shard_shuffle: bool,
     pub cache_bytes: u64,
     /// varnish cache eviction policy (lru | 2q | s3fifo)
     pub cache_policy: CachePolicy,
@@ -73,6 +81,8 @@ impl RigSpec {
         RigSpec {
             storage,
             latency_scale,
+            shard_size: 0,
+            shard_shuffle: false,
             cache_bytes: 0,
             cache_policy: CachePolicy::Lru,
             items: 192,
@@ -131,6 +141,7 @@ pub struct Rig {
     pub remote: Option<Arc<SimRemoteStore>>,
     pub cache: Option<Arc<VarnishCache>>,
     pub prefetch: Option<Arc<PrefetchStore>>,
+    pub shards: Option<Arc<ShardStore>>,
     pub corpus_bytes: u64,
 }
 
@@ -142,14 +153,16 @@ pub struct StorageStack {
     pub remote: Option<Arc<SimRemoteStore>>,
     pub cache: Option<Arc<VarnishCache>>,
     pub prefetch: Option<Arc<PrefetchStore>>,
+    /// shard-window facade at the top of the stack (`shard_size > 0`)
+    pub shards: Option<Arc<ShardStore>>,
     pub corpus_bytes: u64,
 }
 
 /// Build the storage stack for a spec.
 pub fn build_store(spec: &RigSpec) -> Result<StorageStack> {
-    let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("corpus"));
+    let corpus: Arc<dyn ObjectStore> = Arc::new(MemStore::new("corpus"));
     let (_, total) = generate_corpus(
-        &mem,
+        &corpus,
         &CorpusSpec {
             items: spec.items,
             classes: 512,
@@ -158,6 +171,17 @@ pub fn build_store(spec: &RigSpec) -> Result<StorageStack> {
             seed: spec.seed,
         },
     )?;
+    // shard mode: the backing store (and so the simulated remote) holds
+    // packed tar shards instead of per-file objects; the manifest
+    // remembers every sample's exact placement for the facade on top
+    let (mem, manifest): (Arc<dyn ObjectStore>, Option<ShardManifest>) =
+        if spec.shard_size > 0 {
+            let packed: Arc<dyn ObjectStore> = Arc::new(MemStore::new("shards"));
+            let m = pack_shards(&corpus, &packed, spec.shard_size)?;
+            (packed, Some(m))
+        } else {
+            (corpus, None)
+        };
     let (store, remote): (Arc<dyn ObjectStore>, Option<Arc<SimRemoteStore>>) =
         if spec.storage == "mem" {
             (mem, None)
@@ -196,7 +220,20 @@ pub fn build_store(spec: &RigSpec) -> Result<StorageStack> {
         } else {
             (store, None)
         };
-    Ok(StorageStack { store, remote, cache, prefetch, corpus_bytes: total })
+    // top of the stack in shard mode: the per-sample key space served
+    // out of resident shard windows — one request each, hints translated
+    // to shard order for the prefetch layer below
+    let (store, shards): (Arc<dyn ObjectStore>, Option<Arc<ShardStore>>) =
+        if let Some(m) = manifest {
+            // room for the windows the fetch pool + shuffle jitter keep
+            // live at once, plus the pipelined epoch seam
+            let cap = 4 + spec.num_fetch_workers / 4;
+            let s = Arc::new(ShardStore::new(store, m, cap));
+            (s.clone() as Arc<dyn ObjectStore>, Some(s))
+        } else {
+            (store, None)
+        };
+    Ok(StorageStack { store, remote, cache, prefetch, shards, corpus_bytes: total })
 }
 
 /// Build the full rig.
@@ -206,15 +243,25 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
     } else {
         Recorder::new()
     };
-    let StorageStack { store, remote, cache, prefetch, corpus_bytes } =
+    let StorageStack { store, remote, cache, prefetch, shards, corpus_bytes } =
         build_store(spec)?;
     if let Some(p) = &prefetch {
         p.set_recorder(recorder.clone());
     }
-    let dataset: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(
-        store.clone(),
-        AugmentConfig { crop: spec.crop, seed: spec.seed, ..Default::default() },
-    ));
+    let augment_cfg =
+        AugmentConfig { crop: spec.crop, seed: spec.seed, ..Default::default() };
+    // same augment config either way: per-sample bytes are a function of
+    // (seed, epoch, index) only, so shard and per-file rigs with the
+    // same spec deliver byte-identical samples
+    let dataset: Arc<dyn Dataset> = if let Some(s) = &shards {
+        let mut ds = ShardDataset::new(s.clone(), augment_cfg);
+        if spec.shard_shuffle {
+            ds = ds.with_shuffle(spec.seed);
+        }
+        Arc::new(ds)
+    } else {
+        Arc::new(ImageFolderDataset::new(store.clone(), augment_cfg))
+    };
     let loader_cfg = DataloaderConfig {
         batch_size: spec.batch_size,
         num_workers: spec.num_workers,
@@ -257,6 +304,7 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
         remote,
         cache,
         prefetch,
+        shards,
         corpus_bytes,
     })
 }
@@ -332,6 +380,13 @@ pub fn metrics_snapshot(rig: &Rig, epoch: usize) -> Json {
         hub.set("prefetch.issued", c.issued);
         hub.set("prefetch.completed", c.completed);
         hub.set("prefetch.stale", c.stale);
+    }
+    if let Some(s) = &rig.shards {
+        let (fetches, hits, waits, evictions) = s.window_stats();
+        hub.set("shards.window_fetches", fetches);
+        hub.set("shards.window_hits", hits);
+        hub.set("shards.window_waits", waits);
+        hub.set("shards.window_evictions", evictions);
     }
     if let Some(cache) = &rig.cache {
         let s = cache.tier_stats();
@@ -445,6 +500,53 @@ mod tests {
         // round-trips through the hand-rolled JSON
         let text = snap.to_string();
         assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn shard_rig_attaches_and_matches_per_file_bytes() {
+        let mut spec = RigSpec::quick("s3", 0.02);
+        spec.items = 24;
+        spec.batch_size = 8;
+        spec.prefetch_depth = 4; // depth counts *shards* in shard mode
+        let mut sharded = spec.clone();
+        sharded.shard_size = 6;
+        let per_file = build(&spec).unwrap();
+        let rig = build(&sharded).unwrap();
+        assert!(rig.shards.is_some());
+        assert!(rig.store.label().starts_with("shards(prefetch("));
+        // identical batch sequence, byte for byte
+        let mut batches = Vec::new();
+        for b in per_file.dataloader.epoch(0) {
+            batches.push((b.images.data.clone(), b.labels.clone()));
+            b.recycle();
+        }
+        for (i, b) in rig.dataloader.epoch(0).enumerate() {
+            assert_eq!(b.images.data, batches[i].0, "batch {i}");
+            assert_eq!(b.labels, batches[i].1);
+            b.recycle();
+        }
+        let s = rig.shards.as_ref().unwrap();
+        let (fetches, hits, _, _) = s.window_stats();
+        assert_eq!(fetches, 4, "one request per shard window");
+        assert!(hits >= 20 - 4, "samples served out of resident windows");
+    }
+
+    #[test]
+    fn shard_shuffle_rig_delivers_every_sample() {
+        let mut spec = RigSpec::quick("mem", 0.1);
+        spec.items = 32;
+        spec.batch_size = 8;
+        spec.shard_size = 8;
+        spec.shard_shuffle = true;
+        let rig = build(&spec).unwrap();
+        let mut seen = vec![0usize; 32];
+        for b in rig.dataloader.epoch(0) {
+            for &i in &b.indices {
+                seen[i] += 1;
+            }
+            b.recycle();
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
     }
 
     #[test]

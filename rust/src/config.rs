@@ -4,6 +4,8 @@
 //! Example (`configs/s3_threaded.cfg`):
 //! ```text
 //! storage = s3
+//! shard_size = 64           # samples per tar shard (0 = per-file objects)
+//! shard_shuffle = true      # two-level shuffle: shard order + reservoir
 //! items = 512
 //! batch_size = 64
 //! num_workers = 4
@@ -39,6 +41,14 @@ pub struct ExperimentConfig {
     /// storage profile name (s3, scratch, ceph_os, ceph_fs, gluster_fs,
     /// colab_s3, mem)
     pub storage: String,
+    /// samples per tar shard (0 = per-file objects, no shard layer):
+    /// with shards, the remote serves packed tars and the loader reads
+    /// them through window-granular ranged fetches
+    pub shard_size: usize,
+    /// two-level shard shuffle (seeded shard order + intra-shard
+    /// reservoir) instead of the loader's global sampler; only
+    /// meaningful with `shard_size > 0`
+    pub shard_shuffle: bool,
     /// Varnish cache capacity in bytes (0 = no cache)
     pub cache_bytes: u64,
     /// Varnish cache eviction policy (lru | 2q | s3fifo)
@@ -63,6 +73,8 @@ impl Default for ExperimentConfig {
     fn default() -> Self {
         ExperimentConfig {
             storage: "s3".into(),
+            shard_size: 0,
+            shard_shuffle: false,
             cache_bytes: 0,
             cache_policy: CachePolicy::Lru,
             items: 256,
@@ -117,6 +129,8 @@ impl ExperimentConfig {
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
             "storage" => self.storage = value.to_string(),
+            "shard_size" => self.shard_size = value.parse()?,
+            "shard_shuffle" => self.shard_shuffle = value.parse()?,
             "cache_bytes" => self.cache_bytes = value.parse()?,
             "cache_policy" => {
                 self.cache_policy = match CachePolicy::by_name(value) {
@@ -283,6 +297,18 @@ mod tests {
         cfg.apply_text("epoch_pipeline = 2\n").unwrap();
         assert_eq!(cfg.loader.epoch_pipeline, 2);
         assert!(cfg.set("epoch_pipeline", "deep").is_err());
+    }
+
+    #[test]
+    fn shard_knobs_parse() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.shard_size, 0);
+        assert!(!cfg.shard_shuffle);
+        cfg.apply_text("shard_size = 64\nshard_shuffle = true\n").unwrap();
+        assert_eq!(cfg.shard_size, 64);
+        assert!(cfg.shard_shuffle);
+        assert!(cfg.set("shard_size", "many").is_err());
+        assert!(cfg.set("shard_shuffle", "2").is_err());
     }
 
     #[test]

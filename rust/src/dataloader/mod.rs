@@ -238,17 +238,24 @@ impl DataloaderConfig {
 /// Sampler selection + order + batch chunking for one epoch — the one
 /// place the shuffle/seed/drop_last policy lives, shared by the
 /// planner (worker mode) and the inline `num_workers = 0` loader.
+///
+/// A dataset that needs a storage-aware visit order (the shard dataset's
+/// two-level shuffle, which keeps samples of one shard window together)
+/// supplies it through [`Dataset::epoch_order`]; otherwise the generic
+/// sampler decides.
 fn epoch_plan(
     cfg: &DataloaderConfig,
     dataset: &Arc<dyn Dataset>,
     epoch: usize,
 ) -> (Vec<usize>, Vec<Vec<usize>>) {
-    let sampler = if cfg.shuffle {
-        Sampler::Random { seed: cfg.seed }
-    } else {
-        Sampler::Sequential
-    };
-    let order = sampler.order(dataset.len(), epoch);
+    let order = dataset.epoch_order(epoch).unwrap_or_else(|| {
+        let sampler = if cfg.shuffle {
+            Sampler::Random { seed: cfg.seed }
+        } else {
+            Sampler::Sequential
+        };
+        sampler.order(dataset.len(), epoch)
+    });
     let plan = sampler::batches(&order, cfg.batch_size, cfg.drop_last);
     (order, plan)
 }

@@ -8,6 +8,9 @@
 //! is exactly what the fetcher-parallelism results hinge on.
 
 pub mod pool;
+pub mod shard;
+
+pub use shard::ShardDataset;
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -88,6 +91,19 @@ pub trait Dataset: Send + Sync {
     /// their store (`ObjectStore::hint_order`), which lets a prefetch
     /// layer (`crate::prefetch`) fetch ahead of demand. Default: ignore.
     fn hint_epoch_order(&self, _epoch: usize, _order: &[usize]) {}
+
+    /// Storage-aware epoch visit order: a dataset that knows how its
+    /// samples are laid out can override the loader's generic sampler
+    /// with its own (seeded, deterministic) permutation — the shard
+    /// dataset uses this for its two-level shuffle, which randomizes the
+    /// shard visit order but keeps samples of one shard window close
+    /// together so each window is fetched once per epoch. Returning
+    /// `None` (the default) defers to the loader's sampler
+    /// (`shuffle`/`seed` config). The returned order must be a
+    /// permutation of `0..len()`.
+    fn epoch_order(&self, _epoch: usize) -> Option<Vec<usize>> {
+        None
+    }
 
     /// Cross-epoch variant of [`Dataset::hint_epoch_order`]: the *next*
     /// epoch's access order, published while the current epoch's tail is

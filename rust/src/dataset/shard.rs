@@ -1,0 +1,314 @@
+//! [`ShardDataset`] — the map-style dataset over a
+//! [`crate::shards::ShardStore`]: same index → sample mapping (and
+//! therefore the same augmentation stream) as an
+//! [`super::ImageFolderDataset`] over the source corpus, but every load
+//! decodes straight out of a borrowed shard window instead of paying a
+//! per-image storage request.
+//!
+//! Two shuffle levels replace the loader's generic sampler when enabled
+//! ([`ShardDataset::with_shuffle`], surfaced through
+//! [`super::Dataset::epoch_order`]): a seeded permutation of the *shard*
+//! visit order, then a WebDataset-style reservoir over the shard-ordered
+//! sample stream. Randomization happens mostly *within* a sliding window
+//! of a few shards, so each window is fetched once per epoch instead of
+//! being re-faulted from all over the visit order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::data::simg::SimgRef;
+use crate::data::{Augment, AugmentConfig, SimgImage};
+use crate::gil::Gil;
+use crate::shards::ShardStore;
+use crate::storage::BoxFut;
+use crate::util::rng::Rng;
+
+use super::{Dataset, ItemMeta, LaneTimes, Sample};
+
+/// Map-style dataset over packed shards.
+pub struct ShardDataset {
+    store: Arc<ShardStore>,
+    augment: Augment,
+    epoch: AtomicUsize,
+    /// `Some(seed)` enables the two-level shard shuffle; `None` defers
+    /// order selection to the loader's sampler
+    shuffle_seed: Option<u64>,
+    /// intra-shard reservoir size (level two of the shuffle)
+    reservoir: usize,
+    lanes: LaneTimes,
+}
+
+impl ShardDataset {
+    pub fn new(store: Arc<ShardStore>, augment_cfg: AugmentConfig) -> ShardDataset {
+        // default reservoir: one shard's worth of samples — enough to
+        // mix adjacent windows without tearing shard locality apart
+        let reservoir = store.manifest().members(0).len().max(1);
+        ShardDataset {
+            store,
+            augment: Augment::new(augment_cfg),
+            epoch: AtomicUsize::new(0),
+            shuffle_seed: None,
+            reservoir,
+            lanes: LaneTimes::default(),
+        }
+    }
+
+    /// Enable the two-level shuffle (seeded shard order + intra-shard
+    /// reservoir). With it on, [`Dataset::epoch_order`] overrides the
+    /// loader's sampler.
+    pub fn with_shuffle(mut self, seed: u64) -> ShardDataset {
+        self.shuffle_seed = Some(seed);
+        self
+    }
+
+    /// Override the reservoir size (level two of the shuffle).
+    pub fn with_reservoir(mut self, n: usize) -> ShardDataset {
+        self.reservoir = n.max(1);
+        self
+    }
+
+    pub fn store(&self) -> &Arc<ShardStore> {
+        &self.store
+    }
+}
+
+impl Dataset for ShardDataset {
+    fn len(&self) -> usize {
+        self.store.manifest().n_samples()
+    }
+
+    fn supports_epoch_tagged(&self) -> bool {
+        true
+    }
+
+    fn get_item(&self, index: usize, gil: &Gil) -> Result<Sample> {
+        self.get_item_at(index, self.epoch.load(Ordering::Relaxed), gil)
+    }
+
+    fn get_item_at(&self, index: usize, epoch: usize, gil: &Gil) -> Result<Sample> {
+        let t0 = Instant::now();
+        let (win, off, len) = gil.io(|| self.store.sample_window_at(index))?;
+        let fetch = t0.elapsed();
+        self.lanes.add_storage(fetch);
+        let t1 = Instant::now();
+        let (crop, label) = gil.cpu(|| {
+            let img = SimgImage::decode(&win[off..off + len])?;
+            let crop = self.augment.apply_u8(&img, epoch, index);
+            Ok((crop, img.label))
+        })?;
+        let decode = t1.elapsed();
+        self.lanes.add_decode(decode);
+        Ok(Sample {
+            index,
+            label,
+            crop,
+            raw_bytes: len,
+            fetch_time: fetch.as_secs_f64(),
+            decode_time: decode.as_secs_f64(),
+        })
+    }
+
+    fn get_item_async<'a>(&'a self, index: usize, gil: &'a Gil) -> BoxFut<'a, Result<Sample>> {
+        self.get_item_async_at(index, self.epoch.load(Ordering::Relaxed), gil)
+    }
+
+    fn get_item_async_at<'a>(
+        &'a self,
+        index: usize,
+        epoch: usize,
+        gil: &'a Gil,
+    ) -> BoxFut<'a, Result<Sample>> {
+        // window fetches resolve synchronously (single-flight, usually a
+        // resident hit once the prefetch hint has run ahead); wrapping
+        // the blocking path keeps the asyncio fetcher byte-identical
+        Box::pin(async move { self.get_item_at(index, epoch, gil) })
+    }
+
+    fn set_epoch(&self, epoch: usize) {
+        self.epoch.store(epoch, Ordering::Relaxed);
+    }
+
+    fn epoch_order(&self, epoch: usize) -> Option<Vec<usize>> {
+        let seed = self.shuffle_seed?;
+        let m = self.store.manifest();
+        let mut rng =
+            Rng::new(seed ^ (epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        // level one: visit shards in a fresh seeded order each epoch
+        let shard_order = rng.permutation(m.n_shards());
+        // level two: reservoir over the shard-ordered sample stream —
+        // every sample is emitted exactly once, displaced by at most
+        // ~reservoir positions from its shard run
+        let cap = self.reservoir;
+        let mut out = Vec::with_capacity(m.n_samples());
+        let mut buf: Vec<usize> = Vec::with_capacity(cap);
+        for si in shard_order {
+            for i in m.members(si) {
+                if buf.len() < cap {
+                    buf.push(i);
+                } else {
+                    let j = rng.below(cap);
+                    out.push(std::mem::replace(&mut buf[j], i));
+                }
+            }
+        }
+        rng.shuffle(&mut buf);
+        out.extend(buf);
+        Some(out)
+    }
+
+    fn hint_epoch_order(&self, epoch: usize, order: &[usize]) {
+        // sample order → deduped shard-window order, forwarded down the
+        // stack so the prefetch engine pulls whole windows ahead
+        self.store.hint_sample_indices(epoch, order, false);
+    }
+
+    fn hint_epoch_order_next(&self, epoch: usize, order: &[usize]) {
+        self.store.hint_sample_indices(epoch, order, true);
+    }
+
+    fn crop(&self) -> usize {
+        self.augment.cfg.crop
+    }
+
+    fn get_item_into(&self, index: usize, gil: &Gil, out: &mut [u8]) -> Result<ItemMeta> {
+        self.get_item_into_at(index, self.epoch.load(Ordering::Relaxed), gil, out)
+    }
+
+    fn get_item_into_at(
+        &self,
+        index: usize,
+        epoch: usize,
+        gil: &Gil,
+        out: &mut [u8],
+    ) -> Result<ItemMeta> {
+        let want = self.crop() * self.crop() * 3;
+        if out.len() != want {
+            anyhow::bail!(
+                "item {index}: slot holds {} bytes, crop needs {want}",
+                out.len()
+            );
+        }
+        let t0 = Instant::now();
+        // borrow the resident window (Arc bump, no copy) ...
+        let (win, off, len) = gil.io(|| self.store.sample_window_at(index))?;
+        self.lanes.add_storage(t0.elapsed());
+        let t1 = Instant::now();
+        let res = gil.cpu(|| {
+            // ... and decode straight out of it into the arena slot
+            let img = SimgRef::parse(&win[off..off + len])?;
+            self.augment.apply_u8_into(&img, epoch, index, out);
+            Ok(ItemMeta { label: img.label, raw_bytes: len })
+        });
+        self.lanes.add_decode(t1.elapsed());
+        res
+    }
+
+    fn lane_times(&self) -> Option<(Duration, Duration)> {
+        Some((
+            Duration::from_nanos(self.lanes.storage_ns.load(Ordering::Relaxed)),
+            Duration::from_nanos(self.lanes.decode_ns.load(Ordering::Relaxed)),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_corpus, CorpusSpec};
+    use crate::dataset::ImageFolderDataset;
+    use crate::shards::pack_shards;
+    use crate::storage::{MemStore, ObjectStore};
+
+    fn pair(items: usize, shard_size: usize) -> (ImageFolderDataset, ShardDataset) {
+        let src: Arc<dyn ObjectStore> = Arc::new(MemStore::new("src"));
+        generate_corpus(&src, &CorpusSpec::tiny(items)).unwrap();
+        let dst: Arc<dyn ObjectStore> = Arc::new(MemStore::new("dst"));
+        let manifest = pack_shards(&src, &dst, shard_size).unwrap();
+        let cfg = AugmentConfig { crop: 16, ..Default::default() };
+        let per_file = ImageFolderDataset::new(src, cfg.clone());
+        let sharded = ShardDataset::new(
+            Arc::new(ShardStore::new(dst, manifest, 2)),
+            cfg,
+        );
+        (per_file, sharded)
+    }
+
+    #[test]
+    fn matches_per_file_dataset_byte_for_byte() {
+        let (pf, sd) = pair(10, 4);
+        assert_eq!(pf.len(), sd.len());
+        let gil = Gil::native();
+        for epoch in [0usize, 3] {
+            for index in 0..sd.len() {
+                let a = pf.get_item_at(index, epoch, &gil).unwrap();
+                let b = sd.get_item_at(index, epoch, &gil).unwrap();
+                assert_eq!(a.crop.data, b.crop.data, "epoch {epoch} index {index}");
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.raw_bytes, b.raw_bytes);
+                // fused path too
+                let mut slot = vec![0u8; 16 * 16 * 3];
+                let meta = sd.get_item_into_at(index, epoch, &gil, &mut slot).unwrap();
+                assert_eq!(a.crop.data, slot);
+                assert_eq!(a.label, meta.label);
+            }
+        }
+        let (storage, decode) = sd.lane_times().unwrap();
+        assert!(storage >= Duration::ZERO && decode > Duration::ZERO);
+    }
+
+    #[test]
+    fn async_path_agrees_with_sync() {
+        let (_, sd) = pair(6, 3);
+        let gil = Gil::native();
+        let a = sd.get_item_at(2, 1, &gil).unwrap();
+        let b = crate::asyncrt::block_on(sd.get_item_async_at(2, 1, &gil)).unwrap();
+        assert_eq!(a.crop.data, b.crop.data);
+    }
+
+    #[test]
+    fn epoch_order_off_by_default_on_when_shuffled() {
+        let (_, sd) = pair(12, 4);
+        assert!(sd.epoch_order(0).is_none());
+        let sd = sd.with_shuffle(7);
+        let o0 = sd.epoch_order(0).unwrap();
+        // a permutation of 0..len, deterministic, epoch-dependent
+        let mut seen = vec![false; 12];
+        for &i in &o0 {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+        assert_eq!(o0, sd.epoch_order(0).unwrap());
+        assert_ne!(o0, sd.epoch_order(1).unwrap());
+    }
+
+    #[test]
+    fn two_level_shuffle_keeps_shard_locality() {
+        // with a reservoir of one shard, the distinct-shard sequence of
+        // the visit order (deduped consecutively) must stay close to the
+        // shard count — each window is faulted once, maybe twice, per
+        // epoch rather than being re-entered from all over the order
+        let (_, sd) = pair(64, 8);
+        let sd = sd.with_shuffle(11);
+        let m_shards = sd.store().manifest().n_shards();
+        for epoch in 0..3 {
+            let order = sd.epoch_order(epoch).unwrap();
+            let mut runs = 0usize;
+            let mut prev = usize::MAX;
+            for &i in &order {
+                let s = sd.store().manifest().shard_of(i);
+                if s != prev {
+                    runs += 1;
+                    prev = s;
+                }
+            }
+            assert!(
+                runs <= 4 * m_shards,
+                "epoch {epoch}: {runs} shard runs for {m_shards} shards — locality lost"
+            );
+        }
+    }
+}

@@ -124,6 +124,8 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     let spec = cdl::bench::rig::RigSpec {
         storage: Box::leak(cfg.storage.clone().into_boxed_str()),
         latency_scale: cfg.latency_scale,
+        shard_size: cfg.shard_size,
+        shard_shuffle: cfg.shard_shuffle,
         cache_bytes: cfg.cache_bytes,
         cache_policy: cfg.cache_policy,
         items: cfg.items,
@@ -272,6 +274,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let spec = cdl::bench::rig::RigSpec {
         storage: Box::leak(p.get("storage").to_string().into_boxed_str()),
         latency_scale: 0.25,
+        shard_size: 0,
+        shard_shuffle: false,
         cache_bytes: 0,
         cache_policy: cdl::prefetch::CachePolicy::Lru,
         items: p.usize("items")?,

@@ -435,6 +435,52 @@ impl ObjectStore for PrefetchStore {
         res
     }
 
+    fn get_range_into(&self, key: &str, offset: u64, out: &mut [u8]) -> Result<usize> {
+        // the shard-window path: speculative whole-object fetches land
+        // in the hot tier via `hint_order`, and a ranged demand read of
+        // a resident (or in-flight) object is served by slicing the
+        // tier's shared Bytes — no warm-tier round trip. A true miss
+        // delegates the range straight down; the partial bytes are NOT
+        // admitted (a range under the full-object key would poison
+        // later full reads).
+        let sh = &self.shared;
+        sh.counters.gets.fetch_add(1, Ordering::Relaxed);
+        let mut st = sh.state.lock().unwrap();
+        Self::advance_cursor(&mut st, key, sh.cfg.depth);
+        let hit = if let Some(hit) = st.hot.get(key) {
+            sh.counters.hot_hits.fetch_add(1, Ordering::Relaxed);
+            Some(hit)
+        } else if st.inflight.contains(key) {
+            while st.inflight.contains(key) && !st.shutdown {
+                st = sh.cv.wait(st).unwrap();
+            }
+            let hit = st.hot.peek(key);
+            if hit.is_some() {
+                sh.counters.inflight_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            hit
+        } else {
+            None
+        };
+        if let Some(hit) = hit {
+            drop(st);
+            sh.cv.notify_all(); // cursor moved: window may slide
+            let n = crate::storage::range_from_bytes(&hit, key, offset, out)?;
+            sh.counters.bytes.fetch_add(n as u64, Ordering::Relaxed);
+            return Ok(n);
+        }
+        sh.counters.demand_misses.fetch_add(1, Ordering::Relaxed);
+        st.pending_demand += 1; // preempts speculative issuance
+        drop(st);
+        let guard = DemandGuard { sh };
+        let res = sh.inner.get_range_into(key, offset, out);
+        drop(guard); // reopen the speculation gate (+ notify)
+        if let Ok(n) = &res {
+            sh.counters.bytes.fetch_add(*n as u64, Ordering::Relaxed);
+        }
+        res
+    }
+
     fn native_get_into(&self) -> bool {
         // forwarded since the `get_into` miss path now admits from the
         // caller's borrowed slice: a dir-backed stack keeps the
@@ -748,6 +794,31 @@ mod tests {
         let mut tiny = vec![0u8; 4];
         assert_eq!(p.get_into(&key(1), &mut tiny).unwrap(), 100);
         assert!(!p.shared.state.lock().unwrap().hot.contains(&key(1)));
+    }
+
+    #[test]
+    fn ranged_read_slices_the_hot_tier_without_warm_round_trips() {
+        let p = PrefetchStore::new(
+            corpus(4, 100),
+            PrefetchConfig { depth: 4, ..Default::default() },
+        );
+        p.hint_order(0, &order(4));
+        assert!(wait_until(2000, || p.counters().completed >= 4));
+        let warm_gets_before = p.report().warm.gets;
+        let mut out = vec![0u8; 10];
+        assert_eq!(p.get_range_into(&key(1), 20, &mut out).unwrap(), 10);
+        assert!(out.iter().all(|&b| b == 1), "wrong window bytes: {out:?}");
+        assert_eq!(
+            p.report().warm.gets,
+            warm_gets_before,
+            "resident ranged read paid a warm-tier round trip"
+        );
+        assert_eq!(p.counters().hot_hits, 1);
+        // a miss delegates the range down without admitting the partial
+        let p = PrefetchStore::new(corpus(2, 100), PrefetchConfig::default());
+        assert_eq!(p.get_range_into(&key(0), 50, &mut out).unwrap(), 10);
+        assert_eq!(p.counters().demand_misses, 1);
+        assert!(!p.shared.state.lock().unwrap().hot.contains(&key(0)));
     }
 
     #[test]

@@ -1,4 +1,12 @@
-//! Shard-based loading — the §A.5 comparison systems.
+//! Shard-based loading.
+//!
+//! The first-class path (`store`) plugs shards straight into the main
+//! dataloader: [`pack_shards`] records every sample's byte placement and
+//! [`ShardStore`] serves the original per-sample key space out of shard
+//! *windows* fetched one request each — see `crate::dataset::ShardDataset`
+//! for the loader-facing half.
+//!
+//! The §A.5 comparison systems live alongside it:
 //!
 //! * [`WebDatasetLoader`]: data lives in tar *shards*; an epoch streams
 //!   each shard (one remote request per shard, sequential bandwidth) and
@@ -7,11 +15,13 @@
 //! * [`FastAiLoader`]: `untar_data` downloads the full tar once to local
 //!   scratch, unpacks, and all epochs read locally.
 //!
-//! Both yield the same decoded/augmented samples as the map-style
+//! All of them yield the same decoded/augmented samples as the map-style
 //! dataset, so epoch runtimes are directly comparable (Fig 22).
 
+pub mod store;
 pub mod tar;
 
+pub use store::{pack_shards, ShardLoc, ShardManifest, ShardStore};
 pub use tar::{read_tar, write_tar, TarEntry, TarStream};
 
 use std::sync::Arc;

@@ -14,43 +14,82 @@
 use std::collections::HashMap;
 use std::fs::File;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use super::{Bytes, ObjectStore, StatCounters, StoreStats};
+use super::{Bytes, CachePolicy, EvictCore, ObjectStore, StatCounters, StoreStats};
 
-/// Max cached open handles; beyond it the cache is cleared wholesale
-/// (simple, and a dataset re-walks its keys every epoch anyway, so the
-/// hot set repopulates in one pass). Kept well below the common Linux
-/// default soft `RLIMIT_NOFILE` of 1024 — the loader's fetch threads,
-/// the prefetch runtime, and the process' own fds all share that
-/// budget, and blowing it turns every subsequent cold-key open into
-/// EMFILE mid-epoch.
+/// Max cached open handles; beyond it the **least-recently-used**
+/// handle is closed (an earlier version cleared the whole cache at the
+/// cap, so any working set above it re-opened every key each cycle and
+/// broke the zero-alloc read steady state). Kept well below the common
+/// Linux default soft `RLIMIT_NOFILE` of 1024 — the loader's fetch
+/// threads, the prefetch runtime, and the process' own fds all share
+/// that budget, and blowing it turns every subsequent cold-key open
+/// into EMFILE mid-epoch.
 const MAX_HANDLES: usize = 512;
+
+/// The fd cache: an [`EvictCore`] LRU tracks recency and picks victims
+/// (each entry charged one byte of a shared token payload, so capacity
+/// in bytes == capacity in handles and no per-insert allocation), while
+/// a side map holds the actual handles in lockstep — dropped via the
+/// victim keys [`EvictCore::insert_evicting`] reports.
+struct FdCache {
+    lru: EvictCore,
+    files: HashMap<String, (Arc<File>, u64)>,
+    /// shared 1-byte payload; cloning it is an `Arc` bump, not an alloc
+    token: Bytes,
+    /// victim-key scratch, reused across inserts
+    evicted: Vec<String>,
+}
 
 pub struct DirStore {
     root: PathBuf,
     stats: StatCounters,
     /// per-key open handle + object size, for the pread fast path
-    handles: RwLock<HashMap<String, (Arc<File>, u64)>>,
+    handles: Mutex<FdCache>,
 }
 
 impl DirStore {
     /// Open (creating if needed) a directory store.
     pub fn open(root: impl AsRef<Path>) -> Result<DirStore> {
+        DirStore::with_handle_cap(root, MAX_HANDLES)
+    }
+
+    /// [`DirStore::open`] with an explicit fd-cache capacity — lets the
+    /// regression tests drive working sets past the cap without opening
+    /// hundreds of real files.
+    pub fn with_handle_cap(root: impl AsRef<Path>, cap: usize) -> Result<DirStore> {
         let root = root.as_ref().to_path_buf();
         std::fs::create_dir_all(&root)
             .with_context(|| format!("create {root:?}"))?;
         Ok(DirStore {
             root,
             stats: StatCounters::default(),
-            handles: RwLock::new(HashMap::new()),
+            handles: Mutex::new(FdCache {
+                lru: EvictCore::new(CachePolicy::Lru, cap.max(1) as u64),
+                files: HashMap::new(),
+                token: Bytes::new(vec![0u8]),
+                evicted: Vec::new(),
+            }),
         })
     }
 
     pub fn root(&self) -> &Path {
         &self.root
+    }
+
+    /// Currently cached open handles.
+    pub fn cached_handles(&self) -> usize {
+        self.handles.lock().unwrap().lru.len()
+    }
+
+    /// Cumulative single-handle evictions (LRU victims at the cap) —
+    /// the wholesale-clear regression test asserts these stay
+    /// one-at-a-time while the resident count holds at the cap.
+    pub fn handle_evictions(&self) -> u64 {
+        self.handles.lock().unwrap().lru.stats().evictions
     }
 
     fn path_for(&self, key: &str) -> PathBuf {
@@ -60,20 +99,28 @@ impl DirStore {
 
     /// Cached (handle, size) for `key`, opening and stat'ing on first
     /// use. The cold path allocates (path buffer, map entry); every
-    /// later call is a read-lock + map lookup + `Arc` bump.
+    /// later call is a lock + map lookup + LRU touch + `Arc` bump, with
+    /// no heap traffic.
     fn handle(&self, key: &str) -> Result<(Arc<File>, u64)> {
-        if let Some((f, len)) = self.handles.read().unwrap().get(key) {
-            return Ok((f.clone(), *len));
+        {
+            let mut cache = self.handles.lock().unwrap();
+            if cache.lru.peek(key).is_some() {
+                let (f, len) = cache.files.get(key).expect("fd cache in lockstep");
+                return Ok((f.clone(), *len));
+            }
         }
+        // open outside the lock: a slow open must not stall cache hits
         let path = self.path_for(key);
         let f = File::open(&path).with_context(|| format!("open {key}"))?;
         let len = f.metadata().with_context(|| format!("stat {key}"))?.len();
         let f = Arc::new(f);
-        let mut map = self.handles.write().unwrap();
-        if map.len() >= MAX_HANDLES {
-            map.clear();
+        let mut cache = self.handles.lock().unwrap();
+        let FdCache { lru, files, token, evicted } = &mut *cache;
+        lru.insert_evicting(key, token.clone(), evicted);
+        for k in evicted.drain(..) {
+            files.remove(&k); // closes the victim's fd (last Arc aside)
         }
-        map.insert(key.to_string(), (f.clone(), len));
+        files.insert(key.to_string(), (f.clone(), len));
         Ok((f, len))
     }
 }
@@ -111,6 +158,21 @@ impl ObjectStore for DirStore {
         Ok(n)
     }
 
+    #[cfg(unix)]
+    fn get_range_into(&self, key: &str, offset: u64, out: &mut [u8]) -> Result<usize> {
+        use std::os::unix::fs::FileExt;
+        let (f, len) = self.handle(key)?;
+        anyhow::ensure!(
+            offset <= len,
+            "range offset {offset} past end of {key} ({len} bytes)"
+        );
+        let n = out.len().min((len - offset) as usize);
+        f.read_exact_at(&mut out[..n], offset)
+            .with_context(|| format!("pread {key} at {offset}"))?;
+        self.stats.record_get(n as u64);
+        Ok(n)
+    }
+
     fn native_get_into(&self) -> bool {
         cfg!(unix)
     }
@@ -122,7 +184,9 @@ impl ObjectStore for DirStore {
         }
         std::fs::write(&path, data).with_context(|| format!("write {key}"))?;
         // the cached handle (and its stat'd size) may now be stale
-        self.handles.write().unwrap().remove(key);
+        let mut cache = self.handles.lock().unwrap();
+        cache.lru.remove(key);
+        cache.files.remove(key);
         Ok(())
     }
 
@@ -216,6 +280,54 @@ mod tests {
         let mut small = vec![0xAAu8; 8];
         assert_eq!(s.get_into("cls/a.simg", &mut small).unwrap(), 64);
         assert!(small.iter().all(|&b| b == 0xAA));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn fd_cache_evicts_lru_one_at_a_time_not_wholesale() {
+        let d = tmpdir("lru");
+        let s = DirStore::with_handle_cap(&d, 4).unwrap();
+        for i in 0..6 {
+            s.put(&format!("k{i}"), vec![i as u8; 16]).unwrap();
+        }
+        let mut buf = vec![0u8; 32];
+        // fill the cache to its cap
+        for i in 0..4 {
+            s.get_into(&format!("k{i}"), &mut buf).unwrap();
+        }
+        assert_eq!(s.cached_handles(), 4);
+        assert_eq!(s.handle_evictions(), 0);
+        // keep k2/k3 hot, then stream the cold tail past the cap: each
+        // cold open must evict exactly one LRU victim, never clear the
+        // cache, and never touch the hot pair
+        s.get_into("k2", &mut buf).unwrap();
+        s.get_into("k3", &mut buf).unwrap();
+        s.get_into("k4", &mut buf).unwrap(); // evicts k0
+        s.get_into("k5", &mut buf).unwrap(); // evicts k1
+        assert_eq!(s.cached_handles(), 4, "cache collapsed below the cap");
+        assert_eq!(s.handle_evictions(), 2, "evictions not one-at-a-time");
+        // the hot pair survived: re-reading them evicts nothing further
+        s.get_into("k2", &mut buf).unwrap();
+        s.get_into("k3", &mut buf).unwrap();
+        assert_eq!(s.handle_evictions(), 2, "hot handles were thrashed");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn get_range_into_preads_at_offset() {
+        let d = tmpdir("range");
+        let s = DirStore::open(&d).unwrap();
+        s.put("obj", (0u8..200).collect()).unwrap();
+        let mut out = vec![0u8; 50];
+        assert_eq!(s.get_range_into("obj", 100, &mut out).unwrap(), 50);
+        assert_eq!(out, (100u8..150).collect::<Vec<_>>());
+        // short tail read and out-of-bounds offset
+        assert_eq!(s.get_range_into("obj", 180, &mut out).unwrap(), 20);
+        assert_eq!(out[..20], (180u8..200).collect::<Vec<_>>()[..]);
+        assert!(s.get_range_into("obj", 201, &mut out).is_err());
+        assert!(s.get_range_into("ghost", 0, &mut out).is_err());
         let _ = std::fs::remove_dir_all(&d);
     }
 

@@ -155,6 +155,10 @@ pub struct EvictCore {
     insertions: u64,
     evictions: u64,
     ghost_promotions: u64,
+    /// when set, keys losing residency are pushed onto `evicted_keys`
+    /// (see [`EvictCore::insert_evicting`])
+    track_evicted: bool,
+    evicted_keys: Vec<String>,
 }
 
 impl EvictCore {
@@ -172,6 +176,8 @@ impl EvictCore {
             insertions: 0,
             evictions: 0,
             ghost_promotions: 0,
+            track_evicted: false,
+            evicted_keys: Vec::new(),
         }
     }
 
@@ -289,6 +295,27 @@ impl EvictCore {
         self.map.insert(key.to_string(), i);
         self.push_front(i, queue);
         self.evict_to_fit()
+    }
+
+    /// Like [`EvictCore::insert`], but appends the key of every entry
+    /// that **lost residency** during the insert (evicted outright or
+    /// demoted to the ghost list) onto `evicted`. Facades that keep a
+    /// side table alongside the core — the [`super::DirStore`] fd cache
+    /// maps each resident key to an open file handle — need the victim
+    /// identities, not just the count, to drop their side entries in
+    /// lockstep. Victim keys that leave the map entirely are *moved*
+    /// into `evicted`, so the non-ghost path stays allocation-free.
+    pub fn insert_evicting(
+        &mut self,
+        key: &str,
+        data: Bytes,
+        evicted: &mut Vec<String>,
+    ) -> u64 {
+        self.track_evicted = true;
+        let n = self.insert(key, data);
+        self.track_evicted = false;
+        evicted.append(&mut self.evicted_keys);
+        n
     }
 
     /// Forget `key` entirely (resident or ghost); returns whether an
@@ -543,11 +570,19 @@ impl EvictCore {
         self.slab[i].data = Bytes::new(Vec::new());
         if to_ghost {
             self.slab[i].freq = 0;
+            if self.track_evicted {
+                let key = self.slab[i].key.clone();
+                self.evicted_keys.push(key);
+            }
             self.push_front(i, QueueId::Ghost);
         } else {
             let key = std::mem::take(&mut self.slab[i].key);
             self.map.remove(&key);
             self.free.push(i);
+            if self.track_evicted {
+                // move, don't clone: the key's allocation is reused
+                self.evicted_keys.push(key);
+            }
         }
     }
 
@@ -706,6 +741,36 @@ mod tests {
         assert_eq!(c.stats().evictions, 1);
         c.insert("a", blob(100, 3));
         assert_eq!(c.stats().ghost_promotions, 0);
+        c.audit().unwrap();
+    }
+
+    #[test]
+    fn insert_evicting_reports_victim_keys() {
+        // LRU: victims leave the map entirely and are moved out
+        let mut c = EvictCore::new(CachePolicy::Lru, 200);
+        let mut gone = Vec::new();
+        c.insert_evicting("a", blob(100, 0), &mut gone);
+        c.insert_evicting("b", blob(100, 1), &mut gone);
+        assert!(gone.is_empty());
+        let n = c.insert_evicting("c", blob(100, 2), &mut gone);
+        assert_eq!(n, 1);
+        assert_eq!(gone, vec!["a"]);
+        // ghosting policies report demotions too (residency is lost even
+        // though the key is still remembered)
+        let mut c = EvictCore::new(CachePolicy::TwoQ, 200);
+        let mut gone = Vec::new();
+        c.insert_evicting("a", blob(100, 0), &mut gone);
+        c.insert_evicting("b", blob(100, 1), &mut gone);
+        c.insert_evicting("c", blob(100, 2), &mut gone);
+        assert_eq!(gone, vec!["a"]);
+        assert_eq!(c.ghost_keys(), vec!["a"]);
+        // plain insert in between must not leak tracked keys later
+        let mut c = EvictCore::new(CachePolicy::Lru, 100);
+        c.insert("x", blob(100, 0));
+        c.insert("y", blob(100, 1)); // evicts x, untracked
+        let mut gone = Vec::new();
+        c.insert_evicting("z", blob(100, 2), &mut gone);
+        assert_eq!(gone, vec!["y"]);
         c.audit().unwrap();
     }
 

@@ -47,6 +47,15 @@ impl ObjectStore for MemStore {
         Ok(v)
     }
 
+    fn get_range_into(&self, key: &str, offset: u64, out: &mut [u8]) -> Result<usize> {
+        let map = self.map.read().unwrap();
+        let v = map.get(key).ok_or_else(|| anyhow!("no such key: {key}"))?;
+        let n = super::range_from_bytes(v, key, offset, out)?;
+        // account only the bytes that moved, not the whole object
+        self.stats.record_get(n as u64);
+        Ok(n)
+    }
+
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
         self.map
             .write()

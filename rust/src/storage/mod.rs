@@ -80,6 +80,23 @@ pub trait ObjectStore: Send + Sync {
         Ok(n)
     }
 
+    /// Ranged read: fetch `out.len()` bytes of `key` starting at byte
+    /// `offset`, returning the number of bytes actually read —
+    /// `min(out.len(), size - offset)`, i.e. short only when the range
+    /// runs past the end of the object. An `offset` beyond the object is
+    /// an error. This is the shard-window surface: one ranged read per
+    /// tar shard amortizes a remote's first-byte latency over every
+    /// sample inside the window, instead of paying it per image.
+    ///
+    /// The default falls back to [`ObjectStore::get`] plus one copy of
+    /// the requested range, so every store works; [`DirStore`] preads at
+    /// the offset natively and [`SimRemoteStore`] charges one latency
+    /// draw plus bandwidth over the *range* (not the whole object).
+    fn get_range_into(&self, key: &str, offset: u64, out: &mut [u8]) -> Result<usize> {
+        let data = self.get(key)?;
+        range_from_bytes(&data, key, offset, out)
+    }
+
     /// Whether this store (or, for facades, the store at the bottom of
     /// the stack) implements [`ObjectStore::get_into`] natively — i.e.
     /// reading into a caller buffer is *cheaper* than [`ObjectStore::get`],
@@ -130,6 +147,25 @@ pub trait ObjectStore: Send + Sync {
     fn stats(&self) -> StoreStats {
         StoreStats::default()
     }
+}
+
+/// Shared helper for the [`ObjectStore::get_range_into`] contract when
+/// the whole object is already in hand: copy the in-range slice into
+/// `out`, erroring on an out-of-bounds `offset`.
+pub fn range_from_bytes(
+    data: &[u8],
+    key: &str,
+    offset: u64,
+    out: &mut [u8],
+) -> Result<usize> {
+    let len = data.len() as u64;
+    anyhow::ensure!(
+        offset <= len,
+        "range offset {offset} past end of {key} ({len} bytes)"
+    );
+    let n = out.len().min((len - offset) as usize);
+    out[..n].copy_from_slice(&data[offset as usize..offset as usize + n]);
+    Ok(n)
 }
 
 /// Drive [`ObjectStore::get_into`] against a growable scratch buffer:
@@ -239,6 +275,23 @@ mod tests {
         assert!(small.iter().all(|&b| b == 9));
         assert!(store.get_into("ghost", &mut big).is_err());
         assert!(!store.native_get_into());
+    }
+
+    #[test]
+    fn default_get_range_into_reads_the_requested_window() {
+        let store = MemStore::new("m");
+        store.put("k", (0u8..100).collect()).unwrap();
+        let mut out = vec![0u8; 10];
+        // interior range
+        assert_eq!(store.get_range_into("k", 30, &mut out).unwrap(), 10);
+        assert_eq!(out, (30u8..40).collect::<Vec<_>>());
+        // tail range comes back short, not erroring
+        assert_eq!(store.get_range_into("k", 95, &mut out).unwrap(), 5);
+        assert_eq!(out[..5], (95u8..100).collect::<Vec<_>>()[..]);
+        // offset at the very end reads zero bytes; past it errors
+        assert_eq!(store.get_range_into("k", 100, &mut out).unwrap(), 0);
+        assert!(store.get_range_into("k", 101, &mut out).is_err());
+        assert!(store.get_range_into("ghost", 0, &mut out).is_err());
     }
 
     #[test]

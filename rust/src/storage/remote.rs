@@ -239,6 +239,19 @@ impl ObjectStore for SimRemoteStore {
         Ok(n)
     }
 
+    fn get_range_into(&self, key: &str, offset: u64, out: &mut [u8]) -> Result<usize> {
+        // one connection, one first-byte latency draw, bandwidth charged
+        // over the *range* — this is what makes a single shard-window
+        // read amortize the round trip over hundreds of samples instead
+        // of paying it once per image
+        let _permit = asyncrt::block_on(self.conns.acquire());
+        let n = self.inner.get_range_into(key, offset, out)?;
+        let service = self.plan(n as u64);
+        std::thread::sleep(service);
+        self.record(n as u64, service);
+        Ok(n)
+    }
+
     fn native_get_into(&self) -> bool {
         self.inner.native_get_into()
     }
@@ -325,6 +338,19 @@ mod tests {
             "no overlap: wall {:?} vs sum {seq_estimate}",
             t0.elapsed()
         );
+    }
+
+    #[test]
+    fn ranged_read_pays_one_latency_over_the_range() {
+        let s = mk(RemoteProfile::s3().scaled(0.1));
+        let mut out = vec![0u8; 4 * 1024];
+        let t0 = Instant::now();
+        assert_eq!(s.get_range_into("k", 8 * 1024, &mut out).unwrap(), 4 * 1024);
+        assert!(t0.elapsed() >= Duration::from_millis(2), "{:?}", t0.elapsed());
+        // exactly one request, charged only the range bytes
+        assert_eq!(s.stats().gets, 1);
+        assert_eq!(s.stats().bytes as usize, 4 * 1024);
+        assert!(s.get_range_into("k", 200 * 1024, &mut out).is_err());
     }
 
     #[test]

@@ -174,6 +174,70 @@ fn span_recording_and_metric_updates_are_zero_alloc() {
 
 #[cfg(unix)]
 #[test]
+fn dirstore_fd_cache_holds_zero_alloc_reads_past_the_handle_cap() {
+    // regression for the wholesale-clear bug: with a working set larger
+    // than the handle cap, the old cache cleared *everything* at the
+    // cap, so even the hottest keys re-opened (and re-allocated) every
+    // cycle. Under LRU eviction the hot subset stays resident — its
+    // reads stay allocation-free — while only the cold tail churns, one
+    // victim at a time.
+    const CAP: usize = 8;
+    const HOT: usize = 6; // < CAP: must never be evicted
+    const COLD: usize = 6; // HOT + COLD > CAP: the cache is over-subscribed
+    let root = std::env::temp_dir().join(format!(
+        "cdl-alloc-fdcache-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let store = DirStore::with_handle_cap(&root, CAP).unwrap();
+    // pre-build the key strings so the measured loop touches no format!
+    let keys: Vec<String> = (0..HOT + COLD).map(|i| format!("k{i:02}")).collect();
+    for (i, k) in keys.iter().enumerate() {
+        store.put(k, vec![i as u8; 256]).unwrap();
+    }
+    let mut buf = vec![0u8; 512];
+
+    // warm-up: populate handles, settle the LRU order
+    for cycle in 0..3 {
+        for k in &keys[..HOT] {
+            store.get_into(k, &mut buf).unwrap();
+        }
+        store.get_into(&keys[HOT + cycle % COLD], &mut buf).unwrap();
+    }
+
+    let evictions_before = store.handle_evictions();
+    let mut hot_allocs = 0u64;
+    let mut cold_opens = 0u64;
+    for cycle in 3..9 {
+        // the hot subset must be pure cache hits: no opens, no allocs
+        let before = alloc::thread_counters();
+        for k in &keys[..HOT] {
+            store.get_into(k, &mut buf).unwrap();
+        }
+        hot_allocs += alloc::thread_counters().since(before).allocs;
+        // one cold key past the cap: evicts exactly one LRU victim
+        store.get_into(&keys[HOT + cycle % COLD], &mut buf).unwrap();
+        cold_opens += 1;
+        assert_eq!(
+            store.cached_handles(),
+            CAP,
+            "fd cache collapsed below the cap (wholesale clear is back)"
+        );
+    }
+    assert_eq!(
+        hot_allocs, 0,
+        "hot-key reads allocated with the working set over the cap"
+    );
+    assert_eq!(
+        store.handle_evictions() - evictions_before,
+        cold_opens,
+        "evictions not one-per-cold-open"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[cfg(unix)]
+#[test]
 fn dirstore_get_into_item_path_is_zero_alloc_in_steady_state() {
     // the full per-item read path over real files: cached-handle pread
     // into the thread's raw scratch, zero-copy SIMG parse, augment into
