@@ -41,6 +41,16 @@
 //!   (byte identity is enforced) and the run *fails* if shard
 //!   streaming does not strictly beat per-file batches/s on s3 — the
 //!   request-amortization payoff this crate's shard path exists for.
+//! * **Batched submission** — per-call reads (a pool of sync threads,
+//!   each looping `get_into`, the pre-ring fetcher shape) vs one thread
+//!   driving the same reads through an [`IoRing`] in wave-sized batches
+//!   with hundreds of requests in flight, over the high-latency
+//!   profiles: batches/s, p50/p99 wave latency, and the in-flight
+//!   high-water mark. Per-slot digests must agree exactly between the
+//!   two modes, and the run *fails* on s3 if batched submission does
+//!   not strictly beat per-call or if the ring's in-flight high-water
+//!   mark never exceeds the per-call path's thread count — the
+//!   depth-beyond-threads decoupling the ring exists for.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -52,7 +62,10 @@ use super::rig::{self, RigSpec};
 use super::{emit, Scale};
 use crate::dataloader::FetchImpl;
 use crate::dataset::Dataset;
-use crate::storage::{DirStore, ObjectStore};
+use crate::storage::{
+    get_into_vec, DirStore, IoRing, MemStore, ObjectStore, ReadOp, RemoteProfile,
+    SimRemoteStore,
+};
 use crate::telemetry::baseline;
 use crate::util::alloc;
 use crate::util::stats;
@@ -70,6 +83,13 @@ pub const BOUNDARY_EPOCHS: usize = 3;
 const STALL_PROFILES: [&str; 4] = ["mem", "s3", "ceph_os", "gluster_fs"];
 /// Samples per tar shard in the shard-streaming comparison.
 pub const SHARD_SIZE: usize = 24;
+/// Reads per submitted wave in the batched-submission comparison.
+pub const IO_BATCH: usize = 32;
+/// Sync threads in the per-call arm (the pre-ring fetcher shape) — and
+/// the in-flight bar the ring's high-water mark must clear on s3.
+pub const IO_THREADS: usize = 4;
+/// Ring depth for the batched arm: hundreds in flight from one thread.
+pub const IO_DEPTH: usize = 256;
 /// Gate metrics where bigger numbers are better (everything else is a
 /// latency/count where smaller wins).
 const HIGHER_IS_BETTER: &[&str] = &[
@@ -77,6 +97,10 @@ const HIGHER_IS_BETTER: &[&str] = &[
     "shard.s3.per_file_bps",
     "shard.s3.shard_bps",
     "shard.s3.speedup",
+    "io.s3.per_call_bps",
+    "io.s3.batched_bps",
+    "io.s3.speedup",
+    "io.s3.inflight_hwm",
 ];
 /// Default relative tolerance for a freshly written baseline: the gate
 /// exists to catch order-of-magnitude breakage, not runner jitter.
@@ -682,6 +706,188 @@ pub fn shard_table(scale: Scale) -> Result<(Table, f64, f64)> {
     Ok((t, s3_per_file_bps, s3_shard_bps))
 }
 
+/// FNV-1a digest of one delivered object (per-slot byte-identity).
+fn fnv_digest(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv(&mut h, bytes);
+    h
+}
+
+/// Per-call reads vs batched ring submission at the store level: the
+/// same corpus and latency profile, read once by [`IO_THREADS`] sync
+/// threads looping `get_into` (one request in flight per thread — the
+/// pre-ring fetcher shape) and once by a single thread submitting
+/// [`IO_BATCH`]-read waves to an [`IoRing`] with [`IO_DEPTH`] in-flight
+/// slots. A "batch" is one wave either way, so batches/s and the wave
+/// latency percentiles compare like for like. Per-slot digests must
+/// agree exactly, and the run **fails** on s3 if batched submission
+/// does not strictly beat per-call batches/s or if the ring's in-flight
+/// high-water mark never exceeds [`IO_THREADS`] — proof the depth is
+/// decoupled from the submitting thread count. Returns the table plus
+/// the s3 (per-call bps, batched bps, in-flight hwm) triple.
+pub fn io_table(scale: Scale) -> Result<(Table, f64, f64, u64)> {
+    let mut t = Table::new(
+        "Hot path — per-call reads vs batched ring submission \
+         (whole-object GETs, one wave = one batch)",
+        &[
+            "storage",
+            "mode",
+            "batches/s",
+            "p50 wave ms",
+            "p99 wave ms",
+            "total s",
+            "in-flight hwm",
+        ],
+    );
+    // below quarter scale the profiles' shared per-connection bandwidth
+    // floor swamps the first-byte latency this gate is about, and both
+    // modes converge on pure transfer time — same guard as shard_table
+    let lat_scale = scale.latency.max(0.25);
+    let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("io-ring"));
+    let (keys, _) = crate::data::synth::generate_corpus(
+        &mem,
+        &crate::data::synth::CorpusSpec {
+            items: scale.items(128),
+            classes: 8,
+            // small objects keep first-byte latency (not bandwidth)
+            // the dominant cost, which is what the ring amortises
+            mean_bytes: 4 * 1024,
+            sigma: 0.3,
+            seed: 21,
+        },
+    )?;
+    let n_waves = keys.len().div_ceil(IO_BATCH);
+    let mut s3_per_call_bps = f64::NAN;
+    let mut s3_batched_bps = f64::NAN;
+    let mut s3_hwm = 0u64;
+    for storage in STEAL_PROFILES {
+        let Some(profile) = RemoteProfile::by_name(storage) else {
+            anyhow::bail!("unknown storage profile {storage}");
+        };
+        let profile = profile.scaled(lat_scale);
+
+        // --- per-call arm: IO_THREADS sync threads, one read at a time
+        let store: Arc<dyn ObjectStore> =
+            SimRemoteStore::new(mem.clone(), profile.clone(), 0x10AD);
+        let mut digests = vec![0u64; keys.len()];
+        let mut buckets: Vec<Vec<(&[String], &mut [u64])>> =
+            (0..IO_THREADS).map(|_| Vec::new()).collect();
+        for (w, wave) in keys
+            .chunks(IO_BATCH)
+            .zip(digests.chunks_mut(IO_BATCH))
+            .enumerate()
+        {
+            buckets[w % IO_THREADS].push(wave);
+        }
+        let mut lats: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        std::thread::scope(|s| -> Result<()> {
+            let handles: Vec<_> = buckets
+                .into_iter()
+                .map(|bucket| {
+                    let store = store.clone();
+                    s.spawn(move || -> Result<Vec<f64>> {
+                        let mut scratch: Vec<u8> = Vec::new();
+                        let mut lats = Vec::new();
+                        for (wkeys, wdig) in bucket {
+                            let tw = Instant::now();
+                            for (i, k) in wkeys.iter().enumerate() {
+                                let n = get_into_vec(&*store, k, &mut scratch)?;
+                                wdig[i] = fnv_digest(&scratch[..n]);
+                            }
+                            lats.push(tw.elapsed().as_secs_f64());
+                        }
+                        Ok(lats)
+                    })
+                })
+                .collect();
+            for h in handles {
+                lats.extend(h.join().expect("per-call io thread panicked")?);
+            }
+            Ok(())
+        })?;
+        let per_call_wall = t0.elapsed().as_secs_f64();
+        let per_call_bps = n_waves as f64 / per_call_wall;
+        let s = stats::Summary::of(&lats);
+        t.row(&[
+            storage.to_string(),
+            "per-call".to_string(),
+            num(per_call_bps, 1),
+            num(s.p50 * 1e3, 1),
+            num(s.p99 * 1e3, 1),
+            num(per_call_wall, 2),
+            IO_THREADS.to_string(),
+        ]);
+
+        // --- batched arm: one thread, wave-sized submissions, deep ring
+        let remote: Arc<dyn ObjectStore> =
+            SimRemoteStore::new(mem.clone(), profile, 0x10AD);
+        let ring = IoRing::new(remote, IO_DEPTH);
+        let mut ring_digests = vec![0u64; keys.len()];
+        let mut pool: Vec<Vec<u8>> = Vec::new();
+        let mut lats: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        for (w, chunk) in keys.chunks(IO_BATCH).enumerate() {
+            let base = w * IO_BATCH;
+            let ops = chunk
+                .iter()
+                .enumerate()
+                .map(|(i, k)| {
+                    ReadOp::whole(base + i, k.clone(), pool.pop().unwrap_or_default())
+                })
+                .collect();
+            let tw = Instant::now();
+            let mut sub = ring.submit(ops);
+            while let Some(c) = sub.next() {
+                let n = c.result?;
+                ring_digests[c.slot] = fnv_digest(&c.buf[..n]);
+                pool.push(c.buf);
+            }
+            lats.push(tw.elapsed().as_secs_f64());
+        }
+        let batched_wall = t0.elapsed().as_secs_f64();
+        let batched_bps = n_waves as f64 / batched_wall;
+        let hwm = ring.stats().inflight_hwm;
+        if ring_digests != digests {
+            anyhow::bail!(
+                "ring-batched reads differ from per-call on {storage}: \
+                 per-slot digests disagree"
+            );
+        }
+        let s = stats::Summary::of(&lats);
+        if storage == "s3" {
+            s3_per_call_bps = per_call_bps;
+            s3_batched_bps = batched_bps;
+            s3_hwm = hwm;
+        }
+        t.row(&[
+            storage.to_string(),
+            "batched".to_string(),
+            num(batched_bps, 1),
+            num(s.p50 * 1e3, 1),
+            num(s.p99 * 1e3, 1),
+            num(batched_wall, 2),
+            hwm.to_string(),
+        ]);
+    }
+    // NaN-safe: a NaN never beats, so a skipped/failed s3 cell fails too
+    if !(s3_batched_bps > s3_per_call_bps) {
+        anyhow::bail!(
+            "batched-submission regression: {s3_batched_bps:.1} batches/s \
+             does not beat the per-call path's {s3_per_call_bps:.1} on the \
+             s3 profile"
+        );
+    }
+    if s3_hwm <= IO_THREADS as u64 {
+        anyhow::bail!(
+            "ring depth not decoupled from thread count: in-flight \
+             high-water {s3_hwm} never exceeded the per-call arm's \
+             {IO_THREADS} threads on the s3 profile"
+        );
+    }
+    Ok((t, s3_per_call_bps, s3_batched_bps, s3_hwm))
+}
+
 /// Insert a gate metric, skipping non-finite values (a NaN would both
 /// corrupt the JSON baseline and be meaningless to band-check).
 fn put(m: &mut BTreeMap<String, f64>, name: &str, v: f64) {
@@ -735,6 +941,14 @@ pub fn collect(scale: Scale) -> Result<BTreeMap<String, f64>> {
          {per_file_bps:.1} per-file ({:.2}x, byte-identical)",
         shard_bps / per_file_bps
     );
+    let (io, per_call_bps, batched_bps, io_hwm) = io_table(scale)?;
+    emit("hotpath", &io)?;
+    println!(
+        "  s3 batched submission: {batched_bps:.1} batches/s vs \
+         {per_call_bps:.1} per-call ({:.2}x, in-flight high-water \
+         {io_hwm} from one thread, byte-identical)",
+        batched_bps / per_call_bps
+    );
     let mut m = BTreeMap::new();
     put(&mut m, "assembly.vanilla.speedup", vanilla_speedup);
     put(&mut m, "tail.ceph_os.batch_steal_p99_ms", batch_p99 * 1e3);
@@ -747,13 +961,18 @@ pub fn collect(scale: Scale) -> Result<BTreeMap<String, f64>> {
     put(&mut m, "shard.s3.per_file_bps", per_file_bps);
     put(&mut m, "shard.s3.shard_bps", shard_bps);
     put(&mut m, "shard.s3.speedup", shard_bps / per_file_bps);
+    put(&mut m, "io.s3.per_call_bps", per_call_bps);
+    put(&mut m, "io.s3.batched_bps", batched_bps);
+    put(&mut m, "io.s3.speedup", batched_bps / per_call_bps);
+    put(&mut m, "io.s3.inflight_hwm", io_hwm as f64);
     Ok(m)
 }
 
 /// Experiment entry point (id "hotpath"): fused assembly sweep,
 /// dispatch-tail comparison, epoch-boundary seams, stall attribution,
-/// pinned-slab transfer delta, the DirStore zero-copy read path, and
-/// the per-file vs shard-window streaming gate.
+/// pinned-slab transfer delta, the DirStore zero-copy read path, the
+/// per-file vs shard-window streaming gate, and the per-call vs
+/// batched-submission ring gate.
 pub fn hotpath(scale: Scale) -> Result<()> {
     collect(scale).map(|_| ())
 }

@@ -15,7 +15,7 @@ use crate::gil;
 use crate::prefetch::{CachePolicy, PrefetchConfig, PrefetchStore};
 use crate::shards::{pack_shards, ShardManifest, ShardStore};
 use crate::storage::{
-    MemStore, ObjectStore, RemoteProfile, SimRemoteStore, VarnishCache,
+    IoRing, MemStore, ObjectStore, RemoteProfile, SimRemoteStore, VarnishCache,
 };
 use crate::telemetry::Recorder;
 use crate::trainer::{self, TrainReport, TrainerConfig, TrainerKind};
@@ -62,6 +62,11 @@ pub struct RigSpec {
     /// persistent workers start the next epoch's batches while the
     /// current tail delivers
     pub epoch_pipeline: usize,
+    /// in-flight read budget of the batched-submission I/O ring (0 =
+    /// per-item fetch paths). Per-file rigs submit each wave's item
+    /// reads as one batch; shard rigs hang the ring below the shard
+    /// facade so concurrent window fetches multiplex on it
+    pub io_depth: usize,
     /// page-locked staging: implies the spawn start method (torch's
     /// rule), and with an arena the slabs themselves are pinned
     pub pin_memory: bool,
@@ -101,6 +106,7 @@ impl RigSpec {
             steal_items: false,
             consumer_credit: 0,
             epoch_pipeline: 0,
+            io_depth: 0,
             pin_memory: false,
             lazy_init: true,
             runtime: gil::Runtime::Python,
@@ -142,6 +148,9 @@ pub struct Rig {
     pub cache: Option<Arc<VarnishCache>>,
     pub prefetch: Option<Arc<PrefetchStore>>,
     pub shards: Option<Arc<ShardStore>>,
+    /// the batched-submission ring (`io_depth > 0`), wherever it hangs:
+    /// below the shard facade, or the loader-side wave ring
+    pub ring: Option<Arc<IoRing>>,
     pub corpus_bytes: u64,
 }
 
@@ -155,6 +164,9 @@ pub struct StorageStack {
     pub prefetch: Option<Arc<PrefetchStore>>,
     /// shard-window facade at the top of the stack (`shard_size > 0`)
     pub shards: Option<Arc<ShardStore>>,
+    /// ring under the shard facade (`shard_size > 0 && io_depth > 0`):
+    /// window fetches and prefetch speculation multiplex on it
+    pub ring: Option<Arc<IoRing>>,
     pub corpus_bytes: u64,
 }
 
@@ -223,17 +235,34 @@ pub fn build_store(spec: &RigSpec) -> Result<StorageStack> {
     // top of the stack in shard mode: the per-sample key space served
     // out of resident shard windows — one request each, hints translated
     // to shard order for the prefetch layer below
-    let (store, shards): (Arc<dyn ObjectStore>, Option<Arc<ShardStore>>) =
-        if let Some(m) = manifest {
-            // room for the windows the fetch pool + shuffle jitter keep
-            // live at once, plus the pipelined epoch seam
-            let cap = 4 + spec.num_fetch_workers / 4;
-            let s = Arc::new(ShardStore::new(store, m, cap));
-            (s.clone() as Arc<dyn ObjectStore>, Some(s))
+    let (store, shards, ring): (
+        Arc<dyn ObjectStore>,
+        Option<Arc<ShardStore>>,
+        Option<Arc<IoRing>>,
+    ) = if let Some(m) = manifest {
+        // room for the windows the fetch pool + shuffle jitter keep
+        // live at once, plus the pipelined epoch seam
+        let cap = 4 + spec.num_fetch_workers / 4;
+        let s = Arc::new(ShardStore::new(store, m, cap));
+        let ring = if spec.io_depth > 0 {
+            // the ring wraps the stack *below* the shard facade: many
+            // threads' window fetches share one submission queue, and
+            // the prefetch engine's speculation draws from the same
+            // in-flight budget
+            let ring = IoRing::new(s.inner().clone(), spec.io_depth);
+            s.set_ring(ring.clone());
+            if let Some(p) = &prefetch {
+                p.set_ring(ring.clone());
+            }
+            Some(ring)
         } else {
-            (store, None)
+            None
         };
-    Ok(StorageStack { store, remote, cache, prefetch, shards, corpus_bytes: total })
+        (s.clone() as Arc<dyn ObjectStore>, Some(s), ring)
+    } else {
+        (store, None, None)
+    };
+    Ok(StorageStack { store, remote, cache, prefetch, shards, ring, corpus_bytes: total })
 }
 
 /// Build the full rig.
@@ -243,10 +272,13 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
     } else {
         Recorder::new()
     };
-    let StorageStack { store, remote, cache, prefetch, shards, corpus_bytes } =
+    let StorageStack { store, remote, cache, prefetch, shards, ring, corpus_bytes } =
         build_store(spec)?;
     if let Some(p) = &prefetch {
         p.set_recorder(recorder.clone());
+    }
+    if let Some(r) = &ring {
+        r.set_recorder(recorder.clone());
     }
     let augment_cfg =
         AugmentConfig { crop: spec.crop, seed: spec.seed, ..Default::default() };
@@ -276,6 +308,10 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
         steal_items: spec.steal_items,
         consumer_credit: spec.consumer_credit,
         epoch_pipeline: spec.epoch_pipeline,
+        // in shard mode the ring hangs below the shard facade (wired
+        // above); the loader-side wave ring only applies when items are
+        // plain per-file objects the dataset can describe as descriptors
+        io_depth: if shards.is_some() { 0 } else { spec.io_depth },
         pin_memory: spec.pin_memory,
         // pinning needs CUDA init, which fork forbids (torch rule)
         start_method: if spec.pin_memory {
@@ -290,6 +326,14 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
         ..Default::default()
     };
     let dataloader = Dataloader::new(dataset, loader_cfg, recorder.clone());
+    // one ring per rig, wherever it hangs; the loader-side wave ring
+    // feeds the prefetch engine's speculation budget too
+    let ring = ring.or_else(|| dataloader.ring().cloned());
+    if shards.is_none() {
+        if let (Some(r), Some(p)) = (&ring, &prefetch) {
+            p.set_ring(r.clone());
+        }
+    }
     let device = Device::sim_v100(spec.batch_size, 512, recorder.clone());
     let trainer_cfg = match spec.trainer {
         TrainerKind::Torch => TrainerConfig::torch(spec.epochs),
@@ -305,6 +349,7 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
         cache,
         prefetch,
         shards,
+        ring,
         corpus_bytes,
     })
 }
@@ -387,6 +432,16 @@ pub fn metrics_snapshot(rig: &Rig, epoch: usize) -> Json {
         hub.set("shards.window_hits", hits);
         hub.set("shards.window_waits", waits);
         hub.set("shards.window_evictions", evictions);
+    }
+    if let Some(r) = &rig.ring {
+        let s = r.stats();
+        hub.set("ring.submitted", s.submitted);
+        hub.set("ring.completed", s.completed);
+        hub.set("ring.batches", s.batches);
+        hub.set("ring.queued", s.queued);
+        hub.set("ring.inflight", s.inflight);
+        hub.set("ring.inflight_hwm", s.inflight_hwm);
+        hub.set("ring.errors", s.errors);
     }
     if let Some(cache) = &rig.cache {
         let s = cache.tier_stats();
@@ -547,6 +602,66 @@ mod tests {
             b.recycle();
         }
         assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn ring_rig_matches_legacy_bytes_per_file() {
+        // io_depth on vs off, same spec otherwise: byte-identical epoch
+        let mut spec = RigSpec::quick("s3", 0.02);
+        spec.items = 24;
+        spec.batch_size = 8;
+        spec.fetch_impl = FetchImpl::Threaded;
+        spec.arena_slabs = 8;
+        let mut ringed = spec.clone();
+        ringed.io_depth = 64;
+        let legacy = build(&spec).unwrap();
+        let rig = build(&ringed).unwrap();
+        assert!(rig.ring.is_some(), "loader-side ring must attach");
+        let mut batches = Vec::new();
+        for b in legacy.dataloader.epoch(0) {
+            batches.push((b.images.data.clone(), b.labels.clone()));
+            b.recycle();
+        }
+        for (i, b) in rig.dataloader.epoch(0).enumerate() {
+            assert_eq!(b.images.data, batches[i].0, "batch {i}");
+            assert_eq!(b.labels, batches[i].1);
+            b.recycle();
+        }
+        let s = rig.ring.as_ref().unwrap().stats();
+        assert_eq!(s.submitted, 24, "{s:?}");
+        assert_eq!(s.completed, 24, "{s:?}");
+        assert_eq!(s.errors, 0, "{s:?}");
+        assert!(s.batches >= 3, "{s:?}");
+    }
+
+    #[test]
+    fn ring_rig_attaches_below_shard_facade() {
+        let mut spec = RigSpec::quick("s3", 0.02);
+        spec.items = 24;
+        spec.batch_size = 8;
+        spec.shard_size = 6;
+        spec.prefetch_depth = 4;
+        let mut ringed = spec.clone();
+        ringed.io_depth = 32;
+        let legacy = build(&spec).unwrap();
+        let rig = build(&ringed).unwrap();
+        assert!(rig.ring.is_some(), "shard-stack ring must attach");
+        // the loader side stays on the window cache: the ring serves it
+        // from below, so bytes are identical to the unringed shard rig
+        assert!(rig.dataloader.ring().is_none());
+        let mut batches = Vec::new();
+        for b in legacy.dataloader.epoch(0) {
+            batches.push((b.images.data.clone(), b.labels.clone()));
+            b.recycle();
+        }
+        for (i, b) in rig.dataloader.epoch(0).enumerate() {
+            assert_eq!(b.images.data, batches[i].0, "batch {i}");
+            assert_eq!(b.labels, batches[i].1);
+            b.recycle();
+        }
+        let s = rig.ring.as_ref().unwrap().stats();
+        assert!(s.submitted >= 4, "window fetches must ride the ring: {s:?}");
+        assert_eq!(s.errors, 0, "{s:?}");
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! steal_items = true        # idle workers fill stragglers' tail items
 //! consumer_credit = 8       # reorder-buffer bound in batches (0 = unbounded)
 //! epoch_pipeline = 1        # epochs published ahead of the consumer (0 = drain)
+//! io_depth = 256            # in-flight reads of the submission ring (0 = per-item)
 //! cache_bytes = 2147483648  # varnish cache capacity (0 = no cache)
 //! cache_policy = lru        # varnish eviction policy: lru | 2q | s3fifo
 //! trainer = torch
@@ -169,6 +170,7 @@ impl ExperimentConfig {
             "steal_items" => self.loader.steal_items = value.parse()?,
             "consumer_credit" => self.loader.consumer_credit = value.parse()?,
             "epoch_pipeline" => self.loader.epoch_pipeline = value.parse()?,
+            "io_depth" => self.loader.io_depth = value.parse()?,
             "pin_memory" => self.loader.pin_memory = value.parse()?,
             "start_method" => {
                 self.loader.start_method = match value {
@@ -297,6 +299,15 @@ mod tests {
         cfg.apply_text("epoch_pipeline = 2\n").unwrap();
         assert_eq!(cfg.loader.epoch_pipeline, 2);
         assert!(cfg.set("epoch_pipeline", "deep").is_err());
+    }
+
+    #[test]
+    fn io_depth_knob_parses() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.loader.io_depth, 0);
+        cfg.apply_text("io_depth = 256\n").unwrap();
+        assert_eq!(cfg.loader.io_depth, 256);
+        assert!(cfg.set("io_depth", "deep").is_err());
     }
 
     #[test]

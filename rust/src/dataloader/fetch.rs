@@ -41,6 +41,7 @@ use super::sampler::{BatchInjector, BatchTicket, ItemClaim, ItemTask};
 use crate::asyncrt;
 use crate::dataset::{copy_sample_into, Dataset, Sample};
 use crate::gil::Gil;
+use crate::storage::{IoRing, ReadOp};
 use crate::telemetry::{names, Recorder};
 
 /// Shared context for one worker's fetchers.
@@ -262,6 +263,112 @@ pub fn fill_wave_sequential(
             }
         }
     })
+}
+
+// ---------------------------------------------------------------------------
+// Batched-submission ring wave
+// ---------------------------------------------------------------------------
+
+/// Fused wave over the batched-submission ring: every item read of the
+/// wave is described as a [`ReadOp`] and submitted as **one batch**, so
+/// a single worker thread keeps up to `io_depth` reads in flight
+/// instead of one per fetch thread. Completions are reaped out of
+/// order and each is decoded straight into its slab slot as it lands;
+/// `(key, buf)` pairs recycle through `scratch`, so the wave performs
+/// no per-item allocation in steady state.
+///
+/// Returns `None` — before submitting anything — when the dataset
+/// cannot describe one of the wave's items as a plain ranged read
+/// ([`Dataset::raw_desc`]); the caller falls back to the per-item
+/// engines. Ring waves do not register [`ItemTask`]s: the steal
+/// cursors hand out slots in claim order, which an out-of-order reap
+/// loop cannot honor, so ring batches simply are not steal donors.
+pub fn fill_wave_ring(
+    ctx: &Arc<FetchCtx>,
+    ring: &Arc<IoRing>,
+    arena: &Arc<BatchArena>,
+    work: &[BatchTicket],
+    scratch: &mut Vec<(String, Vec<u8>)>,
+) -> Option<Vec<(usize, Result<Batch>)>> {
+    // slot = starts[b] + pos: each batch owns a contiguous slot window,
+    // so a completion finds its batch with one partition-point probe
+    let mut starts = Vec::with_capacity(work.len());
+    let mut total = 0usize;
+    for t in work {
+        starts.push(total);
+        total += t.indices.len();
+    }
+    let mut ops: Vec<ReadOp> = Vec::with_capacity(total);
+    for (b, t) in work.iter().enumerate() {
+        for (pos, &index) in t.indices.iter().enumerate() {
+            let (mut key, buf) = scratch.pop().unwrap_or_default();
+            let Some((offset, len)) = ctx.dataset.raw_desc(index, &mut key) else {
+                // undescribable item: hand every buffer back and let
+                // the caller run the legacy engine instead
+                scratch.push((key, buf));
+                for op in ops {
+                    scratch.push((op.key, op.buf));
+                }
+                return None;
+            };
+            ops.push(ReadOp::range(starts[b] + pos, key, offset, len, buf));
+        }
+    }
+    let builders: Vec<BatchBuilder> = work
+        .iter()
+        .map(|t| {
+            arena
+                .clone()
+                .checkout_tagged(t.id, t.seq, t.epoch, t.indices.len())
+        })
+        .collect();
+    let mut errs: Vec<Option<anyhow::Error>> = work.iter().map(|_| None).collect();
+    let mut sub = ring.submit(ops);
+    while let Some(comp) = sub.next() {
+        let slot = comp.slot;
+        let b = starts.partition_point(|&s| s <= slot) - 1;
+        let t = &work[b];
+        let pos = slot - starts[b];
+        let index = t.indices[pos];
+        let key = comp.key;
+        let buf = comp.buf;
+        let t0 = ctx.recorder.now();
+        let res = comp.result.and_then(|n| {
+            builders[b].fill(pos, index, |out| {
+                ctx.dataset
+                    .process_raw_into_at(index, t.epoch, &buf[..n], &ctx.gil, out)
+            })
+        });
+        ctx.recorder.record_tagged(
+            names::GET_ITEM,
+            ctx.worker_id,
+            t.id as i64,
+            t.epoch as i64,
+            -1,
+            t0,
+            ctx.recorder.now(),
+        );
+        if let Err(e) = res {
+            // first error wins; the batch fails as a unit below
+            if errs[b].is_none() {
+                errs[b] = Some(e);
+            }
+        }
+        scratch.push((key, buf));
+    }
+    let results = builders
+        .into_iter()
+        .zip(work)
+        .zip(errs)
+        .map(|((builder, t), err)| match err {
+            None => (t.seq, builder.finish()),
+            Some(e) => {
+                drop(builder); // recover the slab
+                (t.seq, Err(e))
+            }
+        })
+        .collect();
+    Some(results)
 }
 
 // ---------------------------------------------------------------------------

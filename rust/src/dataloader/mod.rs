@@ -184,6 +184,14 @@ pub struct DataloaderConfig {
     /// numbers; requesting a different epoch tears the pre-published
     /// plan down and rebuilds (correct, just not pipelined).
     pub epoch_pipeline: usize,
+    /// in-flight read budget of the batched-submission I/O ring. With
+    /// k > 0 (and a dataset whose items are plain ranged reads —
+    /// [`Dataset::raw_desc`]), the threaded/asyncio fused fetchers
+    /// submit a whole wave's item reads as **one batch** to a shared
+    /// [`crate::storage::IoRing`] and reap completions out of order, so
+    /// a single worker thread keeps up to k reads in flight instead of
+    /// one per fetch thread. 0 = legacy per-item fetch paths.
+    pub io_depth: usize,
 }
 
 impl Default for DataloaderConfig {
@@ -211,6 +219,7 @@ impl Default for DataloaderConfig {
             steal_items: false,
             consumer_credit: 0,
             epoch_pipeline: 0,
+            io_depth: 0,
         }
     }
 }
@@ -358,13 +367,33 @@ impl Planner {
         }
     }
 
-    /// Compute, hint, and publish one epoch's plan (state lock held).
-    /// The prefetch hint fires *here* — at publication, which under
-    /// pipelining is before the previous epoch finished — so the
-    /// prefetch engine's horizon is primed before the boundary.
-    fn publish_locked(&self, st: &mut PlanState, epoch: usize) -> PlanMeta {
+    /// Compute, hint, and publish one epoch's plan. The caller hands
+    /// its held state guard in; the epoch permutation — the O(dataset)
+    /// shuffle + ticket chunking — is built with the lock **released**,
+    /// then swapped in under a re-taken lock, so workers checking for
+    /// tickets and consumers attaching never stall behind the shuffle.
+    /// Publication is revalidated against the state observed at entry:
+    /// if another thread published (or the pipeline shut down) while
+    /// the lock was free, the computed plan is discarded and `None`
+    /// comes back — the caller re-reads the returned guard and decides
+    /// again. The prefetch hint fires at publication, which under
+    /// pipelining is before the previous epoch finished, so the
+    /// engine's horizon is primed before the boundary.
+    fn publish_swap<'a>(
+        &'a self,
+        st: std::sync::MutexGuard<'a, PlanState>,
+        epoch: usize,
+    ) -> (std::sync::MutexGuard<'a, PlanState>, Option<PlanMeta>) {
+        let expect_len = st.plans.len();
+        drop(st);
         let t0 = self.recorder.now();
         let (order, plan) = epoch_plan(&self.cfg, &self.dataset, epoch);
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown || st.plans.len() != expect_len {
+            // lost the publication race: the stream moved while the
+            // permutation was being built
+            return (st, None);
+        }
         if st.plans.is_empty() {
             // first plan of this pipeline generation: fresh horizon
             self.dataset.hint_epoch_order(epoch, &order);
@@ -387,7 +416,7 @@ impl Planner {
             t0,
             self.recorder.now(),
         );
-        meta
+        (st, Some(meta))
     }
 
     /// Consumer side: attach an [`EpochIter`] for `epoch`. Returns the
@@ -396,19 +425,26 @@ impl Planner {
     /// is shut down) — the caller tears down and rebuilds.
     fn attach(&self, epoch: usize) -> Option<PlanMeta> {
         let mut st = self.state.lock().unwrap();
-        if st.shutdown {
-            return None;
-        }
-        let meta = if st.attached < st.plans.len() {
-            // a worker pre-published this plan while the previous epoch
-            // drained; it must be the epoch the trainer actually wants
-            let meta = st.plans[st.attached];
-            if meta.epoch != epoch {
+        let meta = loop {
+            if st.shutdown {
                 return None;
             }
-            meta
-        } else {
-            self.publish_locked(&mut st, epoch)
+            if st.attached < st.plans.len() {
+                // a worker pre-published this plan while the previous
+                // epoch drained; it must be the epoch the trainer
+                // actually wants
+                let meta = st.plans[st.attached];
+                if meta.epoch != epoch {
+                    return None;
+                }
+                break meta;
+            }
+            let (guard, published) = self.publish_swap(st, epoch);
+            st = guard;
+            if let Some(meta) = published {
+                break meta;
+            }
+            // lost the race to a pipelining worker: re-read and retry
         };
         st.attached += 1;
         drop(st);
@@ -444,7 +480,11 @@ impl Planner {
                 // this worker (and its siblings) can start on it
                 // immediately, subject to the credit gate
                 let next = st.plans.last().unwrap().epoch + 1;
-                self.publish_locked(&mut st, next);
+                let (guard, _) = self.publish_swap(st, next);
+                st = guard;
+                // won or lost the race, the stream advanced (or shut
+                // down) while the lock was free: re-read from the top
+                continue;
             }
             if st.plans.len() > *seen {
                 *seen = st.plans.len();
@@ -609,6 +649,9 @@ pub struct Dataloader {
     recorder: Arc<Recorder>,
     /// batch-slab pool, shared by every epoch's workers (`arena_slabs`)
     arena: Option<Arc<BatchArena>>,
+    /// batched-submission I/O ring shared by every worker (`io_depth`);
+    /// None when disabled or the dataset has no ring store
+    ring: Option<Arc<crate::storage::IoRing>>,
     /// the current pipeline generation (None until the first epoch)
     pipeline: Mutex<Option<Arc<PipeCore>>>,
 }
@@ -654,11 +697,32 @@ impl Dataloader {
         } else {
             None
         };
+        let ring = if cfg.io_depth > 0 {
+            match dataset.ring_store() {
+                Some(store) => {
+                    let ring = crate::storage::IoRing::new(store, cfg.io_depth);
+                    ring.set_recorder(recorder.clone());
+                    Some(ring)
+                }
+                None => {
+                    eprintln!(
+                        "warning: io_depth={} but the dataset exposes no ring \
+                         store (Dataset::ring_store): falling back to the \
+                         per-item fetch paths",
+                        cfg.io_depth
+                    );
+                    None
+                }
+            }
+        } else {
+            None
+        };
         Dataloader {
             dataset,
             cfg: Arc::new(cfg),
             recorder,
             arena,
+            ring,
             pipeline: Mutex::new(None),
         }
     }
@@ -678,6 +742,12 @@ impl Dataloader {
     /// The batch arena, when `arena_slabs > 0` (pool stats live here).
     pub fn arena(&self) -> Option<&Arc<BatchArena>> {
         self.arena.as_ref()
+    }
+
+    /// The batched-submission I/O ring, when `io_depth > 0` and the
+    /// dataset exposes a ring store (queue-depth gauges live here).
+    pub fn ring(&self) -> Option<&Arc<crate::storage::IoRing>> {
+        self.ring.as_ref()
     }
 
     /// Number of batches per epoch.
@@ -828,6 +898,7 @@ impl Dataloader {
                 Some(core.planner.clone()),
                 args.tx.clone(),
                 Duration::ZERO, // cost already paid in the loop
+                self.ring.clone(),
             ));
         }
         core.ctl.lock().unwrap().workers.extend(handles);
@@ -855,6 +926,7 @@ impl Dataloader {
             cfg: self.cfg.clone(),
             recorder: self.recorder.clone(),
             arena: self.arena.clone(),
+            ring: self.ring.clone(),
             epoch,
             core: Some(core.clone()),
             consumer: Some(consumer),
@@ -894,6 +966,7 @@ impl Dataloader {
                 cfg: self.cfg.clone(),
                 recorder: self.recorder.clone(),
                 arena: self.arena.clone(),
+                ring: None, // inline loads stay on the direct item path
                 epoch,
                 core: None,
                 consumer: None,
@@ -942,6 +1015,7 @@ pub struct EpochIter {
     cfg: Arc<DataloaderConfig>,
     recorder: Arc<Recorder>,
     arena: Option<Arc<BatchArena>>,
+    ring: Option<Arc<crate::storage::IoRing>>,
     epoch: usize,
     core: Option<Arc<PipeCore>>,
     consumer: Option<ConsumerState>,
@@ -997,6 +1071,7 @@ impl EpochIter {
         let recorder = self.recorder.clone();
         let cfg = self.cfg.clone();
         let arena = self.arena.clone();
+        let ring = self.ring.clone();
         let gate = core.gate.clone();
         let planner = core.planner.clone();
         // start_download(): yield each worker as it is created (Fig 8
@@ -1018,6 +1093,7 @@ impl EpochIter {
                         Some(planner.clone()),
                         args.tx.clone(),
                         Duration::ZERO,
+                        ring.clone(),
                     ));
                 }
                 handles

@@ -48,12 +48,14 @@ use crate::dataloader::arena::BatchArena;
 use crate::dataloader::collate::{collate, Batch};
 use crate::dataloader::fetch::{
     fetch_async, fetch_async_fused_tasks, fetch_threaded, fetch_threaded_fused_tasks,
-    fetch_vanilla, fetch_vanilla_fused, fill_wave_sequential, FetchCtx, ThreadPool,
+    fetch_vanilla, fetch_vanilla_fused, fill_wave_ring, fill_wave_sequential, FetchCtx,
+    ThreadPool,
 };
 use crate::dataloader::sampler::{self, BatchInjector, BatchTicket, Claimed, CreditGate};
 use crate::dataloader::{DataloaderConfig, FetchImpl, Planner};
 use crate::dataset::Dataset;
 use crate::gil::Gil;
+use crate::storage::IoRing;
 use crate::telemetry::{names, Recorder};
 
 /// Fallback park bound for an idle item-stealing worker. The worker
@@ -130,6 +132,7 @@ pub(crate) fn spawn_worker(
     planner: Option<Arc<Planner>>,
     out: SyncSender<WorkerMsg>,
     spawn_delay: std::time::Duration,
+    ring: Option<Arc<IoRing>>,
 ) -> std::thread::JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("dl-worker{worker_id}"))
@@ -141,6 +144,7 @@ pub(crate) fn spawn_worker(
             recorder.record(names::WORKER_SPAWN, worker_id, -1, t0, recorder.now());
             run_worker(
                 worker_id, dataset, recorder, cfg, source, arena, gate, planner, out,
+                ring,
             );
         })
         .expect("spawn dataloader worker")
@@ -165,6 +169,7 @@ fn run_worker(
     gate: Arc<CreditGate>,
     planner: Option<Arc<Planner>>,
     out: SyncSender<WorkerMsg>,
+    ring: Option<Arc<IoRing>>,
 ) {
     let gil = Gil::new(cfg.runtime, cfg.python_tax);
     let ctx = Arc::new(FetchCtx {
@@ -199,6 +204,9 @@ fn run_worker(
     let steal_items = cfg.steal_items && arena.is_some() && source.injector().is_some();
     // publications this worker has observed (see Planner::wait_for_work)
     let mut seen_plans = 0usize;
+    // recycled (key, buf) pairs for ring waves — grows to the largest
+    // wave once, then the submission path is allocation-free
+    let mut ring_scratch: Vec<(String, Vec<u8>)> = Vec::new();
 
     loop {
         let work = match source.next_group(group, &gate) {
@@ -281,7 +289,17 @@ fn run_worker(
         // Unwinding drops the wave's builders (slabs recover) and any
         // held ItemClaims (reported as abandoned to their tasks).
         let wave = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_wave(&engine, &arena, &ctx, &gil, &source, steal_items, &work)
+            run_wave(
+                &engine,
+                &arena,
+                &ctx,
+                &gil,
+                &source,
+                steal_items,
+                &work,
+                &ring,
+                &mut ring_scratch,
+            )
         }));
         let results: Vec<(usize, anyhow::Result<Batch>)> = match wave {
             Ok(results) => results,
@@ -337,7 +355,11 @@ fn run_worker(
 
 /// One wave of fetching/assembly for the engine × arena combination —
 /// the body `run_worker` wraps in panic containment. Results are keyed
-/// by global seq.
+/// by global seq. With a ring attached, the threaded/asyncio fused
+/// arms submit the whole wave's reads as one batch first and only fall
+/// back to their per-item engines when the dataset cannot express its
+/// reads as plain descriptors.
+#[allow(clippy::too_many_arguments)]
 fn run_wave(
     engine: &Engine,
     arena: &Option<Arc<BatchArena>>,
@@ -346,6 +368,8 @@ fn run_wave(
     source: &WorkSource,
     steal_items: bool,
     work: &[BatchTicket],
+    ring: &Option<Arc<IoRing>>,
+    ring_scratch: &mut Vec<(String, Vec<u8>)>,
 ) -> Vec<(usize, anyhow::Result<Batch>)> {
     match (engine, arena) {
         // ---- fused zero-alloc paths (arena attached) -----------------
@@ -366,6 +390,13 @@ fn run_wave(
             }
         }
         (Engine::Threaded(pool), Some(arena)) => {
+            if let Some(ring) = ring {
+                if let Some(results) =
+                    fill_wave_ring(ctx, ring, arena, work, ring_scratch)
+                {
+                    return results;
+                }
+            }
             let registry = if steal_items { source.injector() } else { None };
             fetch_threaded_fused_tasks(
                 ctx,
@@ -376,6 +407,13 @@ fn run_wave(
             )
         }
         (Engine::Asyncio(rt, sem), Some(arena)) => {
+            if let Some(ring) = ring {
+                if let Some(results) =
+                    fill_wave_ring(ctx, ring, arena, work, ring_scratch)
+                {
+                    return results;
+                }
+            }
             let registry = if steal_items { source.injector() } else { None };
             fetch_async_fused_tasks(
                 ctx,
@@ -489,6 +527,7 @@ mod tests {
             None,
             tx,
             std::time::Duration::ZERO,
+            None,
         );
         let got = batches_of(rx);
         h.join().unwrap();
@@ -553,6 +592,7 @@ mod tests {
             None,
             tx,
             std::time::Duration::ZERO,
+            None,
         );
         let _first = rx.recv().unwrap();
         drop(rx);
@@ -575,6 +615,7 @@ mod tests {
             None,
             tx,
             std::time::Duration::ZERO,
+            None,
         );
         let mut got = Vec::new();
         for expect in 0..4usize {
@@ -630,6 +671,7 @@ mod tests {
             None,
             tx.clone(),
             std::time::Duration::ZERO,
+            None,
         );
         let h2 = spawn_worker(
             1,
@@ -642,6 +684,7 @@ mod tests {
             None,
             tx,
             std::time::Duration::ZERO,
+            None,
         );
         let got = batches_of(rx);
         h1.join().unwrap();
@@ -682,6 +725,7 @@ mod tests {
             None,
             tx.clone(),
             std::time::Duration::ZERO,
+            None,
         );
         let h2 = spawn_worker(
             1,
@@ -694,6 +738,7 @@ mod tests {
             None,
             tx,
             std::time::Duration::ZERO,
+            None,
         );
         let got = batches_of(rx);
         h1.join().unwrap();

@@ -226,6 +226,29 @@ pub trait Dataset: Send + Sync {
     fn lane_times(&self) -> Option<(Duration, Duration)> {
         None
     }
+
+    // ---- batched-submission ring path --------------------------------
+
+    /// Describe item `index` as a ranged read descriptor for the
+    /// batched-submission ring: write the storage key into `key`
+    /// (cleared and reused across calls, so the wave path stays
+    /// allocation-free) and return the `(offset, len)` of the raw
+    /// bytes, with `(0, 0)` meaning the whole object. The raw bytes a
+    /// descriptor reads must be exactly what
+    /// [`Dataset::process_raw_into_at`] decodes. `None` (the default)
+    /// means this dataset cannot express its reads as plain
+    /// descriptors, and fetchers fall back to the per-item engines —
+    /// the shard dataset stays on its window cache this way.
+    fn raw_desc(&self, _index: usize, _key: &mut String) -> Option<(u64, usize)> {
+        None
+    }
+
+    /// The store ring descriptors resolve against — the stack an
+    /// [`crate::storage::IoRing`] should wrap for this dataset's raw
+    /// reads. `None` (the default) disables the ring path.
+    fn ring_store(&self) -> Option<Arc<dyn ObjectStore>> {
+        None
+    }
 }
 
 thread_local! {
@@ -491,6 +514,17 @@ impl Dataset for ImageFolderDataset {
             Duration::from_nanos(self.lanes.storage_ns.load(Ordering::Relaxed)),
             Duration::from_nanos(self.lanes.decode_ns.load(Ordering::Relaxed)),
         ))
+    }
+
+    fn raw_desc(&self, index: usize, key: &mut String) -> Option<(u64, usize)> {
+        let k = self.keys.get(index)?;
+        key.clear();
+        key.push_str(k);
+        Some((0, 0)) // whole object; process_raw_into_at decodes it
+    }
+
+    fn ring_store(&self) -> Option<Arc<dyn ObjectStore>> {
+        Some(self.store.clone())
     }
 }
 

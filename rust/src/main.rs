@@ -144,6 +144,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         steal_items: cfg.loader.steal_items,
         consumer_credit: cfg.loader.consumer_credit,
         epoch_pipeline: cfg.loader.epoch_pipeline,
+        io_depth: cfg.loader.io_depth,
         // the rig pairs pinning with the spawn start method itself
         // (torch's rule), so pass the raw knob — `pin_memory=true`
         // must pin, not silently no-op under the default fork
@@ -298,6 +299,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         steal_items: false,
         consumer_credit: 0,
         epoch_pipeline: 0,
+        io_depth: 0,
         pin_memory: false,
         lazy_init: true,
         runtime: cdl::gil::Runtime::Native,

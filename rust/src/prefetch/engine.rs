@@ -26,7 +26,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::asyncrt;
-use crate::storage::ObjectStore;
+use crate::storage::{IoRing, ObjectStore};
 use crate::telemetry::{names, Recorder};
 
 use super::tier::HotTier;
@@ -158,6 +158,11 @@ pub(super) struct Shared {
     pub counters: Counters,
     pub cfg: PrefetchConfig,
     pub recorder: Mutex<Option<Arc<Recorder>>>,
+    /// when set, speculative fetches ride the shared [`IoRing`] — its
+    /// executor, `io_depth` semaphore and in-flight gauges — instead of
+    /// the engine's private runtime, so speculation and batched demand
+    /// reads draw from one submission budget
+    pub ring: Mutex<Option<Arc<IoRing>>>,
 }
 
 impl Shared {
@@ -206,29 +211,47 @@ fn pick_next(st: &mut State, shared: &Shared, aged: bool) -> Pick {
 fn issue(shared: &Arc<Shared>, rt: &asyncrt::Runtime, key: String) {
     shared.counters.issued.fetch_add(1, Ordering::Relaxed);
     let sh = shared.clone();
+    if let Some(ring) = shared.ring.lock().unwrap().clone() {
+        // ride the shared submission ring: the fetch queues behind the
+        // same `io_depth` semaphore as batched demand reads and moves
+        // the ring's in-flight gauge while it runs
+        let ring_rt = ring.runtime().clone();
+        ring_rt.spawn(async move {
+            let _depth = ring.depth_sem().acquire().await;
+            let _inflight = ring.track();
+            fetch_into_hot(sh, key).await;
+        });
+        return;
+    }
     rt.spawn(async move {
-        let recorder = sh.recorder();
-        let t0 = recorder.as_ref().map(|r| r.now());
-        let res = sh.inner.get_async(&key).await;
-        if let (Some(r), Some(t0)) = (&recorder, t0) {
-            r.record(names::PREFETCH_FETCH, ENGINE_WORKER, -1, t0, r.now());
-        }
-        let mut st = sh.state.lock().unwrap();
-        st.inflight.remove(&key);
-        match res {
-            Ok(data) => {
-                st.hot.insert(&key, data);
-                sh.counters.completed.fetch_add(1, Ordering::Relaxed);
-            }
-            Err(_) => {
-                // demand waiters fall back to their own fetch, which
-                // surfaces the error to the caller properly
-                sh.counters.errors.fetch_add(1, Ordering::Relaxed);
-            }
-        }
-        drop(st);
-        sh.cv.notify_all();
+        fetch_into_hot(sh, key).await;
     });
+}
+
+/// Body of one speculative fetch: GET through the warm tier, land the
+/// bytes in the hot tier, wake any demand waiters.
+async fn fetch_into_hot(sh: Arc<Shared>, key: String) {
+    let recorder = sh.recorder();
+    let t0 = recorder.as_ref().map(|r| r.now());
+    let res = sh.inner.get_async(&key).await;
+    if let (Some(r), Some(t0)) = (&recorder, t0) {
+        r.record(names::PREFETCH_FETCH, ENGINE_WORKER, -1, t0, r.now());
+    }
+    let mut st = sh.state.lock().unwrap();
+    st.inflight.remove(&key);
+    match res {
+        Ok(data) => {
+            st.hot.insert(&key, data);
+            sh.counters.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(_) => {
+            // demand waiters fall back to their own fetch, which
+            // surfaces the error to the caller properly
+            sh.counters.errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    drop(st);
+    sh.cv.notify_all();
 }
 
 fn scheduler_loop(shared: Arc<Shared>, rt: Arc<asyncrt::Runtime>) {
@@ -287,6 +310,7 @@ mod tests {
             counters: Counters::default(),
             cfg,
             recorder: Mutex::new(None),
+            ring: Mutex::new(None),
         }
     }
 

@@ -47,7 +47,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::asyncrt;
-use crate::storage::{BoxFut, Bytes, ObjectStore, StoreStats};
+use crate::storage::{BoxFut, Bytes, IoRing, ObjectStore, ReadOp, RingCtx, StoreStats};
 use crate::telemetry::{names, Recorder};
 use crate::util::table::Table;
 
@@ -116,6 +116,7 @@ impl PrefetchStore {
             counters: engine::Counters::default(),
             cfg: cfg.clone(),
             recorder: Mutex::new(None),
+            ring: Mutex::new(None),
         });
         let rt = asyncrt::Runtime::new(cfg.runtime_threads.max(1));
         let scheduler = engine::spawn_scheduler(shared.clone(), rt.clone());
@@ -129,6 +130,14 @@ impl PrefetchStore {
     /// Attach a span recorder (`prefetch_fetch` / `prefetch_wait`).
     pub fn set_recorder(&self, recorder: Arc<Recorder>) {
         *self.shared.recorder.lock().unwrap() = Some(recorder);
+    }
+
+    /// Route speculative fetches through a shared [`IoRing`]: the
+    /// engine's background GETs then run on the ring's executor, gated
+    /// by its `io_depth` semaphore and counted in its in-flight
+    /// gauges, instead of drawing on a private runtime budget.
+    pub fn set_ring(&self, ring: Arc<IoRing>) {
+        *self.shared.ring.lock().unwrap() = Some(ring);
     }
 
     pub fn config(&self) -> &PrefetchConfig {
@@ -487,6 +496,61 @@ impl ObjectStore for PrefetchStore {
         // zero-copy pread read *and* warms the hot tier on demand, not
         // only via speculation.
         self.shared.inner.native_get_into()
+    }
+
+    /// Ring path: serve hot-tier hits by copy immediately, delegate the
+    /// remaining descriptors down the stack as one (smaller) batch so
+    /// misses keep their concurrency. Batch completions are reaped
+    /// asynchronously, so misses do NOT raise `pending_demand` (there
+    /// is no per-op completion hook to lower it) — the ring's own
+    /// `io_depth` semaphore bounds how hard a batch can compete with
+    /// speculation. In-flight speculative fetches are likewise not
+    /// awaited (blocking a submit on the scheduler would serialize the
+    /// whole batch); the key is simply fetched again below, and the
+    /// miss bytes are not admitted here — blocking demand traffic and
+    /// speculation keep the tier warm.
+    fn submit_batch(self: Arc<Self>, ops: Vec<ReadOp>, ctx: RingCtx) {
+        let sh = &self.shared;
+        let mut misses: Vec<ReadOp> = Vec::new();
+        let mut moved = false;
+        for op in ops {
+            sh.counters.gets.fetch_add(1, Ordering::Relaxed);
+            let hit = {
+                let mut st = sh.state.lock().unwrap();
+                Self::advance_cursor(&mut st, &op.key, sh.cfg.depth);
+                moved = true;
+                st.hot.get(&op.key)
+            };
+            match hit {
+                Some(hit) => {
+                    sh.counters.hot_hits.fetch_add(1, Ordering::Relaxed);
+                    let ReadOp { slot, key, offset, len, mut buf } = op;
+                    ctx.begin();
+                    let res = if len > 0 {
+                        buf.resize(len, 0);
+                        crate::storage::range_from_bytes(&hit, &key, offset, &mut buf)
+                    } else {
+                        buf.clear();
+                        buf.extend_from_slice(&hit);
+                        Ok(hit.len())
+                    };
+                    if let Ok(n) = &res {
+                        sh.counters.bytes.fetch_add(*n as u64, Ordering::Relaxed);
+                    }
+                    ctx.complete(slot, key, buf, res);
+                }
+                None => {
+                    sh.counters.demand_misses.fetch_add(1, Ordering::Relaxed);
+                    misses.push(op);
+                }
+            }
+        }
+        if moved {
+            sh.cv.notify_all(); // cursor moved: window may slide
+        }
+        if !misses.is_empty() {
+            sh.inner.clone().submit_batch(misses, ctx);
+        }
     }
 
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {

@@ -30,7 +30,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::{bail, Context, Result};
 
 use super::tar::{write_tar, TarEntry};
-use crate::storage::{Bytes, ObjectStore, StatCounters, StoreStats};
+use crate::storage::{Bytes, IoRing, ObjectStore, StatCounters, StoreStats};
 
 const BLOCK: u64 = 512;
 
@@ -187,6 +187,10 @@ pub struct ShardStore {
     /// (stacks with a native scratch path) instead of one shared-`Bytes`
     /// `get`
     ranged_windows: bool,
+    /// when set, window fetches go through the shared submission ring:
+    /// concurrent fetches (worker demand + speculation) multiplex over
+    /// its executor instead of each occupying a blocking thread below
+    ring: Mutex<Option<Arc<IoRing>>>,
     stats: StatCounters,
     window_fetches: AtomicU64,
     window_hits: AtomicU64,
@@ -213,6 +217,7 @@ impl ShardStore {
             cv: Condvar::new(),
             window_cap: window_cap.max(1),
             ranged_windows,
+            ring: Mutex::new(None),
             stats: StatCounters::default(),
             window_fetches: AtomicU64::new(0),
             window_hits: AtomicU64::new(0),
@@ -227,6 +232,20 @@ impl ShardStore {
 
     pub fn inner(&self) -> &Arc<dyn ObjectStore> {
         &self.inner
+    }
+
+    /// Route window fetches through a shared [`IoRing`]. The ring
+    /// should wrap the same stack as `inner` (conventionally the store
+    /// below this facade) so window reads and per-sample traffic hit
+    /// identical tiers.
+    pub fn set_ring(&self, ring: Arc<IoRing>) {
+        *self.ring.lock().unwrap() = Some(ring);
+    }
+
+    fn pooled_windows(&self) -> bool {
+        // both the direct ranged path and the ring path read into an
+        // owned buffer we can recycle through the pool
+        self.ranged_windows || self.ring.lock().unwrap().is_some()
     }
 
     /// `(fetches, hits, waits, evictions)` of the window cache.
@@ -285,7 +304,7 @@ impl ShardStore {
                     self.window_evictions.fetch_add(1, Ordering::Relaxed);
                     // reclaim the buffer for the next ranged fetch if no
                     // decode still borrows it
-                    if self.ranged_windows && st.pool.len() < self.window_cap {
+                    if self.pooled_windows() && st.pool.len() < self.window_cap {
                         if let Ok(v) = Arc::try_unwrap(old) {
                             st.pool.push(v);
                         }
@@ -303,6 +322,20 @@ impl ShardStore {
         let key = &self.manifest.shard_keys[si];
         let size = self.manifest.shard_bytes[si];
         self.window_fetches.fetch_add(1, Ordering::Relaxed);
+        let ring = self.ring.lock().unwrap().clone();
+        if let Some(ring) = ring {
+            // one ranged descriptor through the submission ring — this
+            // thread blocks on its own completion, but the request
+            // itself multiplexes with every other outstanding window
+            // and speculative fetch on the ring's executor
+            let buf = recycled.unwrap_or_default();
+            let (buf, res) = ring.read_range(key, 0, size, buf);
+            let n = res?;
+            if n != size {
+                bail!("shard {key} truncated: read {n} of {size} bytes");
+            }
+            return Ok(Arc::new(buf));
+        }
         if self.ranged_windows {
             let mut buf = recycled.unwrap_or_default();
             buf.resize(size, 0);
@@ -642,6 +675,25 @@ mod tests {
                 ),
             ]
         );
+    }
+
+    #[test]
+    fn ring_routed_window_fetch_is_byte_identical() {
+        let src = corpus(9);
+        let dst: Arc<dyn ObjectStore> = Arc::new(MemStore::new("dst"));
+        let m = pack_shards(&src, &dst, 3).unwrap();
+        let st = ShardStore::new(dst.clone(), m, 2);
+        st.set_ring(crate::storage::IoRing::new(dst, 8));
+        for k in src.keys() {
+            let orig = src.get(&k).unwrap();
+            assert_eq!(&*st.get(&k).unwrap(), &*orig, "{k}");
+            let mut buf = vec![0u8; orig.len()];
+            assert_eq!(st.get_into(&k, &mut buf).unwrap(), orig.len());
+            assert_eq!(buf, *orig);
+        }
+        // 3 shards, cap 2: at least one eviction recycled a ring buffer
+        assert!(st.window_stats().0 >= 3);
+        assert!(st.window_stats().3 >= 1);
     }
 
     #[cfg(unix)]

@@ -189,6 +189,74 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_ring_reads_queue_on_the_shared_link() {
+        use std::sync::Arc;
+
+        use crate::storage::{
+            IoRing, MemStore, ObjectStore, ReadOp, RemoteProfile, SimRemoteStore,
+        };
+
+        // zero first-byte latency and a negligible per-stream time: every
+        // request's service is pure shared-NIC transfer, so queueing on
+        // the shared Link is the only thing this test can observe
+        let profile = RemoteProfile {
+            name: "nic-bound",
+            first_byte: LatencyModel::Zero,
+            per_conn_mbit_s: 80_000.0,
+            nic_mbit_s: 8.0, // 1 MiB/s shared: 16 KiB ≈ 16 ms each
+            max_conns: 64,
+        };
+        let n = 8usize;
+        let mem = Arc::new(MemStore::new("m"));
+        for i in 0..n {
+            mem.put(&format!("k{i}"), vec![i as u8; 16 * 1024]).unwrap();
+        }
+
+        // sequential arm: the link drains between reads, so each read's
+        // reservation starts on an idle link and never queues
+        let store: Arc<dyn ObjectStore> =
+            SimRemoteStore::new(mem.clone(), profile.clone(), 7);
+        let seq = IoRing::new(store, n);
+        // warm read: executor spawn-up stays off the measured reads
+        let mut sub = seq.submit(vec![ReadOp::whole(0, "k0".into(), Vec::new())]);
+        sub.next().unwrap().result.unwrap();
+        let mut seq_max = 0.0f64;
+        for i in 0..n {
+            let t0 = Instant::now();
+            let mut sub =
+                seq.submit(vec![ReadOp::whole(0, format!("k{i}"), Vec::new())]);
+            sub.next().unwrap().result.unwrap();
+            seq_max = seq_max.max(t0.elapsed().as_secs_f64());
+        }
+
+        // concurrent arm: one batch, all n arrive at once and stack up
+        // in the link's virtual-time FIFO — the last completion pays
+        // ~n transfer times even though nothing else changed
+        let store: Arc<dyn ObjectStore> = SimRemoteStore::new(mem, profile, 7);
+        let ring = IoRing::new(store, n);
+        let mut sub = ring.submit(vec![ReadOp::whole(0, "k0".into(), Vec::new())]);
+        sub.next().unwrap().result.unwrap();
+        let ops = (0..n)
+            .map(|i| ReadOp::whole(i, format!("k{i}"), Vec::new()))
+            .collect();
+        let t0 = Instant::now();
+        let mut sub = ring.submit(ops);
+        let mut conc_max = 0.0f64;
+        let mut reaped = 0;
+        while let Some(c) = sub.next() {
+            c.result.unwrap();
+            conc_max = conc_max.max(t0.elapsed().as_secs_f64());
+            reaped += 1;
+        }
+        assert_eq!(reaped, n);
+        assert!(
+            conc_max > seq_max * 3.0,
+            "no shared-link queueing: concurrent max {conc_max:.3}s vs \
+             sequential max {seq_max:.3}s over {n} reads"
+        );
+    }
+
+    #[test]
     fn service_time_takes_max() {
         let per_conn = Link::new_mbit_s(8.0); // 1 MiB/s -> 1 s for 1 MiB
         let nic = Link::new_mbit_s(8000.0); // effectively instant

@@ -18,7 +18,10 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use super::{Bytes, CachePolicy, EvictCore, ObjectStore, StatCounters, StoreStats};
+use super::{
+    Bytes, CachePolicy, EvictCore, ObjectStore, ReadOp, RingCtx, StatCounters,
+    StoreStats,
+};
 
 /// Max cached open handles; beyond it the **least-recently-used**
 /// handle is closed (an earlier version cleared the whole cache at the
@@ -175,6 +178,38 @@ impl ObjectStore for DirStore {
 
     fn native_get_into(&self) -> bool {
         cfg!(unix)
+    }
+
+    /// Native batched submission: a pread loop over the warm fd cache.
+    /// Local NVMe reads are µs-scale, so looping inside the dispatch
+    /// task is cheaper than future-per-op scaffolding; the win over the
+    /// trait default is skipping the per-op `get` Vec and path alloc —
+    /// ring batches over a warmed cache stay allocation-free.
+    #[cfg(unix)]
+    fn submit_batch(self: Arc<Self>, ops: Vec<ReadOp>, ctx: RingCtx) {
+        use std::os::unix::fs::FileExt;
+        for op in ops {
+            let ReadOp { slot, key, offset, len, mut buf } = op;
+            ctx.begin();
+            let res = (|| -> Result<usize> {
+                let (f, size) = self.handle(&key)?;
+                let (start, n) = if len > 0 {
+                    anyhow::ensure!(
+                        offset <= size,
+                        "range offset {offset} past end of {key} ({size} bytes)"
+                    );
+                    (offset, len.min((size - offset) as usize))
+                } else {
+                    (0, size as usize)
+                };
+                buf.resize(n, 0);
+                f.read_exact_at(&mut buf, start)
+                    .with_context(|| format!("pread {key}"))?;
+                self.stats.record_get(n as u64);
+                Ok(n)
+            })();
+            ctx.complete(slot, key, buf, res);
+        }
     }
 
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {

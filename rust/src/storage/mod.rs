@@ -30,12 +30,16 @@ pub mod dir;
 pub mod evict;
 pub mod mem;
 pub mod remote;
+pub mod ring;
 
 pub use cache::VarnishCache;
 pub use dir::DirStore;
 pub use evict::{CachePolicy, CoreStats, EvictCore};
 pub use mem::MemStore;
 pub use remote::{RemoteProfile, SimRemoteStore};
+pub use ring::{
+    Completion, InflightGuard, IoRing, ReadOp, RingCtx, RingSnapshot, Submission,
+};
 
 use std::future::Future;
 use std::pin::Pin;
@@ -138,6 +142,36 @@ pub trait ObjectStore: Send + Sync {
     /// stores treat it as a fresh hint (the default), which ignores it.
     fn hint_order_append(&self, epoch: usize, keys: &[String]) {
         self.hint_order(epoch, keys)
+    }
+
+    /// Batched submission: execute every [`ReadOp`] in `ops` and deliver
+    /// each through `ctx` ([`RingCtx::begin`] once on entering service,
+    /// [`RingCtx::complete`] once with the result) — the dispatch surface
+    /// behind [`IoRing`]. Runs *on the ring executor*; implementations
+    /// must never block its thread on work that needs the executor
+    /// itself.
+    ///
+    /// The default loops the blocking read paths inside the single
+    /// dispatch task — correct for any store, concurrent for none.
+    /// Stores whose requests genuinely overlap ([`SimRemoteStore`])
+    /// spawn one future per op gated on `ctx.depth()`; facades
+    /// ([`VarnishCache`], the prefetch store) serve hits inline and
+    /// delegate the miss set to their inner store's native path.
+    fn submit_batch(self: Arc<Self>, ops: Vec<ReadOp>, ctx: RingCtx) {
+        for mut op in ops {
+            ctx.begin();
+            let res = if op.len > 0 {
+                op.buf.resize(op.len, 0);
+                self.get_range_into(&op.key, op.offset, &mut op.buf)
+            } else {
+                self.get(&op.key).map(|data| {
+                    op.buf.clear();
+                    op.buf.extend_from_slice(&data);
+                    data.len()
+                })
+            };
+            ctx.complete(op.slot, op.key, op.buf, res);
+        }
     }
 
     /// Human label for reports ("s3", "scratch", ...).

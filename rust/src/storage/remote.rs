@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use super::{BoxFut, Bytes, ObjectStore, StatCounters, StoreStats};
+use super::{BoxFut, Bytes, ObjectStore, ReadOp, RingCtx, StatCounters, StoreStats};
 use crate::asyncrt;
 use crate::simnet::{Link, LatencyModel};
 use crate::util::rng::Rng;
@@ -254,6 +254,42 @@ impl ObjectStore for SimRemoteStore {
 
     fn native_get_into(&self) -> bool {
         self.inner.native_get_into()
+    }
+
+    /// Native batched submission: one future per op on the ring
+    /// executor, so every op past the `io_depth` and connection gates is
+    /// genuinely concurrent — the NIC FIFO sees the whole batch at once
+    /// and real queueing emerges, which the one-request-per-thread model
+    /// structurally hides.
+    fn submit_batch(self: Arc<Self>, ops: Vec<ReadOp>, ctx: RingCtx) {
+        for mut op in ops {
+            let this = self.clone();
+            let c = ctx.clone();
+            drop(ctx.rt().spawn(async move {
+                let _depth = c.depth().acquire().await;
+                let _conn = this.conns.acquire().await;
+                c.begin();
+                let res = if op.len > 0 {
+                    op.buf.resize(op.len, 0);
+                    this.inner.get_range_into(&op.key, op.offset, &mut op.buf)
+                } else {
+                    this.inner.get(&op.key).map(|data| {
+                        op.buf.clear();
+                        op.buf.extend_from_slice(&data);
+                        data.len()
+                    })
+                };
+                match res {
+                    Ok(n) => {
+                        let service = this.plan(n as u64);
+                        asyncrt::sleep(service).await;
+                        this.record(n as u64, service);
+                        c.complete(op.slot, op.key, op.buf, Ok(n));
+                    }
+                    Err(e) => c.complete(op.slot, op.key, op.buf, Err(e)),
+                }
+            }));
+        }
     }
 
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {

@@ -54,6 +54,8 @@ pub mod names {
     pub const PREFETCH_WAIT: &str = "prefetch_wait";
     /// planner computed + published one epoch plan
     pub const PLAN_PUBLISH: &str = "plan_publish";
+    /// one submitted I/O batch, submit → last completion reaped
+    pub const RING_BATCH: &str = "ring_batch";
     /// instant marker: the consumer crossed an epoch boundary
     pub const EPOCH_SEAM: &str = "epoch_seam";
     // Lightning lanes (Fig 17)
@@ -68,6 +70,11 @@ pub mod names {
 /// on whichever worker crosses the seam first, so a stable synthetic id
 /// keeps its spans on one named track).
 pub const PLANNER_WORKER: u32 = u32::MAX - 1;
+
+/// Synthetic worker id for I/O-ring batch spans (`names::RING_BATCH`):
+/// submissions come from many worker threads but multiplex through one
+/// ring executor, so they share one named track.
+pub const RING_WORKER: u32 = u32::MAX - 2;
 
 // ---------------------------------------------------------------------------
 // GPU utilization sampling (Table 3 metrics)

@@ -3,7 +3,9 @@
 //! full checkout → parse → augment-into → finish → recycle cycle
 //! performs **zero** heap allocations — and the `get_into` read path
 //! over a real-file `DirStore` holds the same bar end to end (pread
-//! into a reused scratch, decode straight into the slot).
+//! into a reused scratch, decode straight into the slot). The batched
+//! submission ring holds a related bar: the submitting thread's wave
+//! cost is constant, independent of how many reads the wave carries.
 //!
 //! The assertions read the *per-thread* counters of the crate's
 //! counting global allocator, so each test measures only its own
@@ -18,7 +20,7 @@ use cdl::data::synth::{generate_corpus, CorpusSpec};
 use cdl::dataloader::{BatchArena, Dataloader, DataloaderConfig};
 use cdl::dataset::{Dataset, ImageFolderDataset, ItemMeta};
 use cdl::gil::Gil;
-use cdl::storage::{Bytes, DirStore, MemStore, ObjectStore};
+use cdl::storage::{Bytes, DirStore, IoRing, MemStore, ObjectStore, ReadOp};
 use cdl::util::alloc;
 
 #[test]
@@ -143,6 +145,60 @@ fn steady_state_epoch_attach_skips_pipeline_setup_allocs() {
         steady < cold,
         "steady-state epoch attach allocated {steady} (cold setup: {cold}) — \
          per-epoch pipeline setup has crept back in"
+    );
+}
+
+#[test]
+fn ring_submission_path_allocs_are_constant_per_wave() {
+    // the batched-submission wave recycles owned (key, buf) pairs
+    // through the completion queue, so the submitting thread's
+    // steady-state bill per wave is a handful of queue-plumbing
+    // allocations (the op vector, the completion queue, the dispatch
+    // future) — *independent of how many reads the wave carries*. A
+    // per-op key or buffer allocation creeping back in shows up as
+    // ≥ OPS allocs per wave; the bound below is far under that.
+    // (Executor-side work lands on the ring thread and is invisible to
+    // this thread's counters by design — the submission path is what
+    // the fetcher's hot loop pays.)
+    const OPS: usize = 64;
+    const WAVES: u64 = 4;
+    let m = Arc::new(MemStore::new("m"));
+    for i in 0..OPS {
+        m.put(&format!("k{i:02}"), vec![i as u8; 4096]).unwrap();
+    }
+    let ring = IoRing::new(m as Arc<dyn ObjectStore>, 128);
+    // the recycled pool a ring-enabled wave fetcher keeps per worker
+    let mut pool: Vec<(String, Vec<u8>)> = (0..OPS)
+        .map(|i| (format!("k{i:02}"), Vec::with_capacity(4096)))
+        .collect();
+    let run_wave = |pool: &mut Vec<(String, Vec<u8>)>| {
+        let mut ops = Vec::with_capacity(OPS);
+        for slot in 0..OPS {
+            let (key, buf) = pool.pop().unwrap();
+            ops.push(ReadOp::whole(slot, key, buf));
+        }
+        let mut sub = ring.submit(ops);
+        while let Some(c) = sub.next() {
+            assert_eq!(c.result.unwrap(), 4096);
+            pool.push((c.key, c.buf));
+        }
+    };
+
+    // warm-up: executor spawn, buffer growth to object size
+    for _ in 0..3 {
+        run_wave(&mut pool);
+    }
+
+    let before = alloc::thread_counters();
+    for _ in 0..WAVES {
+        run_wave(&mut pool);
+    }
+    let delta = alloc::thread_counters().since(before);
+    let per_wave = delta.allocs / WAVES;
+    assert!(
+        per_wave < 16,
+        "ring submission path allocates per op again: {per_wave} \
+         allocs/wave for {OPS}-read waves ({delta:?})"
     );
 }
 
