@@ -395,11 +395,17 @@ impl Future for YieldNow {
 
 struct SemState {
     permits: usize,
+    /// permits removed while checked out: returning holders pay the
+    /// debt instead of freeing a permit (live downsizing)
+    debt: usize,
     waiters: VecDeque<Waker>,
 }
 
 /// Async counting semaphore — the `num_fetch_workers` /
-/// max-connections concurrency limiter.
+/// max-connections concurrency limiter. The budget can be resized
+/// while permits are checked out: [`Semaphore::remove_permits`] books
+/// any shortfall as debt that returning holders pay down, so shrinking
+/// never blocks and never strands a waiter.
 pub struct Semaphore {
     state: Mutex<SemState>,
 }
@@ -407,7 +413,11 @@ pub struct Semaphore {
 impl Semaphore {
     pub fn new(permits: usize) -> Arc<Semaphore> {
         Arc::new(Semaphore {
-            state: Mutex::new(SemState { permits, waiters: VecDeque::new() }),
+            state: Mutex::new(SemState {
+                permits,
+                debt: 0,
+                waiters: VecDeque::new(),
+            }),
         })
     }
 
@@ -420,8 +430,43 @@ impl Semaphore {
         Acquire { sem: self.clone() }
     }
 
+    /// Grow the budget by `n`: outstanding debt is forgiven first, the
+    /// remainder becomes available permits and wakes that many waiters.
+    pub fn add_permits(&self, n: usize) {
+        let mut wake = Vec::new();
+        {
+            let mut s = self.state.lock().unwrap();
+            let forgiven = n.min(s.debt);
+            s.debt -= forgiven;
+            let fresh = n - forgiven;
+            s.permits += fresh;
+            for _ in 0..fresh.min(s.waiters.len()) {
+                if let Some(w) = s.waiters.pop_front() {
+                    wake.push(w);
+                }
+            }
+        }
+        for w in wake {
+            w.wake();
+        }
+    }
+
+    /// Shrink the budget by `n`: takes from the available pool first;
+    /// whatever is currently checked out becomes debt, repaid as those
+    /// permits come home.
+    pub fn remove_permits(&self, n: usize) {
+        let mut s = self.state.lock().unwrap();
+        let taken = n.min(s.permits);
+        s.permits -= taken;
+        s.debt += n - taken;
+    }
+
     fn release(&self) {
         let mut s = self.state.lock().unwrap();
+        if s.debt > 0 {
+            s.debt -= 1;
+            return;
+        }
         s.permits += 1;
         if let Some(w) = s.waiters.pop_front() {
             w.wake();
@@ -685,6 +730,43 @@ mod tests {
             h.join();
         }
         assert!(peak.load(Ordering::SeqCst) <= 2);
+    }
+
+    #[test]
+    fn semaphore_resizes_with_debt() {
+        let rt = Runtime::new(1);
+        let sem = Semaphore::new(2);
+        // check both permits out
+        let p1 = rt.block_on({
+            let sem = sem.clone();
+            async move { sem.acquire().await }
+        });
+        let p2 = rt.block_on({
+            let sem = sem.clone();
+            async move { sem.acquire().await }
+        });
+        // shrink to 1 while both are held: shortfall becomes debt
+        sem.remove_permits(1);
+        assert_eq!(sem.available(), 0);
+        drop(p1); // pays the debt — no permit freed
+        assert_eq!(sem.available(), 0);
+        drop(p2); // debt clear — permit comes home
+        assert_eq!(sem.available(), 1);
+        // grow back to 3
+        sem.add_permits(2);
+        assert_eq!(sem.available(), 3);
+        // shrink below zero available: all debt
+        let p = rt.block_on({
+            let sem = sem.clone();
+            async move { sem.acquire().await }
+        });
+        sem.remove_permits(3);
+        assert_eq!(sem.available(), 0);
+        // growing forgives debt before freeing permits
+        sem.add_permits(1);
+        assert_eq!(sem.available(), 0);
+        drop(p);
+        assert_eq!(sem.available(), 1);
     }
 
     #[test]

@@ -51,6 +51,12 @@
 //!   not strictly beat per-call or if the ring's in-flight high-water
 //!   mark never exceeds the per-call path's thread count — the
 //!   depth-beyond-threads decoupling the ring exists for.
+//! * **Closed-loop autotuning** — plain defaults vs the Governor
+//!   hill-climbing the same knobs online vs a hand-tuned best, over
+//!   the high-latency profiles. The run *fails* if autotune does not
+//!   strictly beat the defaults on s3 or lands below 0.85× hand-tuned
+//!   batches/s on any profile — the table that keeps the control loop
+//!   honest.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -101,6 +107,10 @@ const HIGHER_IS_BETTER: &[&str] = &[
     "io.s3.batched_bps",
     "io.s3.speedup",
     "io.s3.inflight_hwm",
+    "autotune.s3.defaults_bps",
+    "autotune.s3.autotuned_bps",
+    "autotune.s3.speedup",
+    "autotune.min_vs_hand",
 ];
 /// Default relative tolerance for a freshly written baseline: the gate
 /// exists to catch order-of-magnitude breakage, not runner jitter.
@@ -888,6 +898,211 @@ pub fn io_table(scale: Scale) -> Result<(Table, f64, f64, u64)> {
     Ok((t, s3_per_call_bps, s3_batched_bps, s3_hwm))
 }
 
+/// One autotune-table arm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Arm {
+    /// plain defaults: shallow prefetch/io, unbounded credit, drained
+    /// seams, no item stealing — the autotuner's starting point
+    Defaults,
+    /// same starting knobs plus the Governor hill-climbing them online
+    Autotuned,
+    /// the knobs a human lands on after sweeping the tail/boundary
+    /// tables by hand
+    HandTuned,
+}
+
+impl Arm {
+    fn label(&self) -> &'static str {
+        match self {
+            Arm::Defaults => "defaults",
+            Arm::Autotuned => "autotuned",
+            Arm::HandTuned => "hand-tuned",
+        }
+    }
+}
+
+/// Tuning epochs the Governor gets before the autotuned arm is
+/// measured (warmup + one probe decision per epoch at the default
+/// settle window).
+pub const AUTOTUNE_EPOCHS: usize = 10;
+/// Steady-state epochs averaged for every arm's reported throughput.
+const AUTOTUNE_MEASURE: usize = 2;
+/// The autotuned arm must land within this fraction of hand-tuned
+/// batches/s on every profile.
+pub const AUTOTUNE_HAND_FRACTION: f64 = 0.85;
+
+/// Shared structure for all three arms: threaded fetcher over an
+/// arena, work-stealing injector, prefetch + ring layers attached —
+/// everything the Governor's knobs act on — with the *Defaults* arm's
+/// starting values.
+fn autotune_spec(storage: &'static str, scale: Scale) -> RigSpec {
+    let mut spec = RigSpec::quick(storage, scale.latency);
+    spec.items = scale.items(256);
+    spec.batch_size = STEAL_BATCH;
+    spec.num_workers = 4;
+    spec.fetch_impl = FetchImpl::Threaded;
+    spec.num_fetch_workers = STEAL_BATCH;
+    spec.arena_slabs = 16;
+    spec.work_stealing = true;
+    spec.runtime = crate::gil::Runtime::Native;
+    // the Defaults starting point: shallow everything
+    spec.consumer_credit = 0;
+    spec.steal_items = false;
+    spec.epoch_pipeline = 0;
+    spec.prefetch_depth = 8;
+    spec.io_depth = 8;
+    spec
+}
+
+/// Drain one numbered epoch, returning (batches/s, p99 batch seconds).
+fn timed_epoch(rig: &rig::Rig, epoch: usize) -> Result<(f64, f64)> {
+    let t0 = Instant::now();
+    let mut lats = Vec::new();
+    let mut it = rig.dataloader.epoch(epoch);
+    loop {
+        let tb = Instant::now();
+        let Some(b) = it.next() else { break };
+        lats.push(tb.elapsed().as_secs_f64());
+        b.recycle();
+    }
+    drop(it);
+    let wall = t0.elapsed().as_secs_f64();
+    if lats.is_empty() {
+        anyhow::bail!("autotune epoch {epoch} delivered no batches");
+    }
+    Ok((lats.len() as f64 / wall, stats::Summary::of(&lats).p99))
+}
+
+/// Measure one arm: tune (autotuned) or warm (fixed arms), then
+/// average [`AUTOTUNE_MEASURE`] steady epochs. Returns (batches/s,
+/// p99 s, final-knobs summary, probe/keep/revert summary).
+fn measure_arm(
+    storage: &'static str,
+    arm: Arm,
+    scale: Scale,
+) -> Result<(f64, f64, String, String)> {
+    let mut spec = autotune_spec(storage, scale);
+    match arm {
+        Arm::Defaults => {}
+        Arm::Autotuned => spec.autotune = true,
+        Arm::HandTuned => {
+            spec.consumer_credit = TAIL_CREDIT;
+            spec.steal_items = true;
+            spec.epoch_pipeline = 1;
+            spec.prefetch_depth = 64;
+            spec.io_depth = 64;
+        }
+    }
+    let rig = rig::build(&spec)?;
+    let mut epoch = 0usize;
+    let warm = if arm == Arm::Autotuned { AUTOTUNE_EPOCHS } else { 1 };
+    for _ in 0..warm {
+        let (_, p99) = timed_epoch(&rig, epoch)?;
+        if arm == Arm::Autotuned {
+            rig::autotune_tick_p99(&rig, epoch, p99);
+        }
+        epoch += 1;
+    }
+    // measured epochs: knobs frozen (nothing staged changes, so the
+    // seam commits are no-ops) — steady state for all three arms
+    let mut bps_sum = 0.0;
+    let mut worst_p99 = 0.0f64;
+    for _ in 0..AUTOTUNE_MEASURE {
+        let (bps, p99) = timed_epoch(&rig, epoch)?;
+        bps_sum += bps;
+        worst_p99 = worst_p99.max(p99);
+        epoch += 1;
+    }
+    let k = rig.dataloader.knobs();
+    let knobs = format!(
+        "credit={} pf={} io={} pipe={} steal={} w={}",
+        k.credit(),
+        k.prefetch_depth(),
+        k.io_depth(),
+        k.epoch_pipeline(),
+        if k.steal_items() { "on" } else { "off" },
+        k.active_workers(),
+    );
+    let probes = match &rig.autotune {
+        Some(h) => {
+            let (p, keeps, reverts) = h.lock().unwrap().governor.counts();
+            format!("{p}/{keeps}/{reverts}")
+        }
+        None => "-".to_string(),
+    };
+    Ok((bps_sum / AUTOTUNE_MEASURE as f64, worst_p99, knobs, probes))
+}
+
+/// Autotuned-from-defaults vs plain defaults vs hand-tuned-best across
+/// the high-latency profiles. The Governor starts from the Defaults
+/// arm's knobs and hill-climbs at epoch seams for [`AUTOTUNE_EPOCHS`]
+/// epochs; all arms then report the mean of [`AUTOTUNE_MEASURE`]
+/// steady epochs. **Fails** if autotune does not strictly beat the
+/// defaults on s3, or lands below [`AUTOTUNE_HAND_FRACTION`] of the
+/// hand-tuned arm's batches/s on any profile. Returns the table plus
+/// the s3 (defaults bps, autotuned bps) pair and the worst
+/// autotuned/hand-tuned ratio across profiles.
+pub fn autotune_table(scale: Scale) -> Result<(Table, f64, f64, f64)> {
+    let mut t = Table::new(
+        "Hot path — closed-loop autotuning: defaults vs Governor vs \
+         hand-tuned (threaded fetcher, arena, prefetch + ring layers)",
+        &[
+            "storage",
+            "arm",
+            "batches/s",
+            "p99 batch ms",
+            "final knobs",
+            "probes k/r",
+        ],
+    );
+    let mut s3_defaults_bps = f64::NAN;
+    let mut s3_autotuned_bps = f64::NAN;
+    let mut min_vs_hand = f64::INFINITY;
+    for storage in STEAL_PROFILES {
+        let mut defaults_bps = f64::NAN;
+        let mut autotuned_bps = f64::NAN;
+        for arm in [Arm::Defaults, Arm::Autotuned, Arm::HandTuned] {
+            let (bps, p99, knobs, probes) = measure_arm(storage, arm, scale)?;
+            match arm {
+                Arm::Defaults => defaults_bps = bps,
+                Arm::Autotuned => autotuned_bps = bps,
+                Arm::HandTuned => {
+                    let ratio = autotuned_bps / bps;
+                    if !(ratio >= AUTOTUNE_HAND_FRACTION) {
+                        anyhow::bail!(
+                            "autotune regression: {autotuned_bps:.1} batches/s \
+                             is below {AUTOTUNE_HAND_FRACTION}x the hand-tuned \
+                             arm's {bps:.1} on the {storage} profile"
+                        );
+                    }
+                    min_vs_hand = min_vs_hand.min(ratio);
+                }
+            }
+            t.row(&[
+                storage.to_string(),
+                arm.label().to_string(),
+                num(bps, 1),
+                num(p99 * 1e3, 1),
+                knobs,
+                probes,
+            ]);
+        }
+        if storage == "s3" {
+            s3_defaults_bps = defaults_bps;
+            s3_autotuned_bps = autotuned_bps;
+        }
+    }
+    // NaN-safe: a NaN never beats, so a skipped/failed s3 cell fails too
+    if !(s3_autotuned_bps > s3_defaults_bps) {
+        anyhow::bail!(
+            "autotune regression: {s3_autotuned_bps:.1} batches/s does not \
+             strictly beat the defaults arm's {s3_defaults_bps:.1} on the \
+             s3 profile"
+        );
+    }
+    Ok((t, s3_defaults_bps, s3_autotuned_bps, min_vs_hand))
+}
+
 /// Insert a gate metric, skipping non-finite values (a NaN would both
 /// corrupt the JSON baseline and be meaningless to band-check).
 fn put(m: &mut BTreeMap<String, f64>, name: &str, v: f64) {
@@ -949,6 +1164,14 @@ pub fn collect(scale: Scale) -> Result<BTreeMap<String, f64>> {
          {io_hwm} from one thread, byte-identical)",
         batched_bps / per_call_bps
     );
+    let (auto, defaults_bps, autotuned_bps, min_vs_hand) = autotune_table(scale)?;
+    emit("hotpath", &auto)?;
+    println!(
+        "  s3 autotune: {autotuned_bps:.1} batches/s from the defaults' \
+         {defaults_bps:.1} ({:.2}x, Governor only; worst profile lands at \
+         {min_vs_hand:.2}x hand-tuned)",
+        autotuned_bps / defaults_bps
+    );
     let mut m = BTreeMap::new();
     put(&mut m, "assembly.vanilla.speedup", vanilla_speedup);
     put(&mut m, "tail.ceph_os.batch_steal_p99_ms", batch_p99 * 1e3);
@@ -965,14 +1188,18 @@ pub fn collect(scale: Scale) -> Result<BTreeMap<String, f64>> {
     put(&mut m, "io.s3.batched_bps", batched_bps);
     put(&mut m, "io.s3.speedup", batched_bps / per_call_bps);
     put(&mut m, "io.s3.inflight_hwm", io_hwm as f64);
+    put(&mut m, "autotune.s3.defaults_bps", defaults_bps);
+    put(&mut m, "autotune.s3.autotuned_bps", autotuned_bps);
+    put(&mut m, "autotune.s3.speedup", autotuned_bps / defaults_bps);
+    put(&mut m, "autotune.min_vs_hand", min_vs_hand);
     Ok(m)
 }
 
 /// Experiment entry point (id "hotpath"): fused assembly sweep,
 /// dispatch-tail comparison, epoch-boundary seams, stall attribution,
 /// pinned-slab transfer delta, the DirStore zero-copy read path, the
-/// per-file vs shard-window streaming gate, and the per-call vs
-/// batched-submission ring gate.
+/// per-file vs shard-window streaming gate, the per-call vs
+/// batched-submission ring gate, and the closed-loop autotuning gate.
 pub fn hotpath(scale: Scale) -> Result<()> {
     collect(scale).map(|_| ())
 }

@@ -1,8 +1,8 @@
 //! Rig builder: assemble corpus → storage stack → dataset → dataloader →
 //! device → trainer for one experiment configuration.
 
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -12,6 +12,7 @@ use crate::dataloader::{Dataloader, DataloaderConfig, FetchImpl};
 use crate::dataset::{Dataset, ImageFolderDataset, ShardDataset};
 use crate::device::Device;
 use crate::gil;
+use crate::governor::{Governor, GovernorConfig, KnobBounds, Signals};
 use crate::prefetch::{CachePolicy, PrefetchConfig, PrefetchStore};
 use crate::shards::{pack_shards, ShardManifest, ShardStore};
 use crate::storage::{
@@ -78,6 +79,11 @@ pub struct RigSpec {
     /// span-ring capacity per recorder shard group (0 = telemetry
     /// default; long traces raise it so the ring doesn't wrap)
     pub span_capacity: usize,
+    /// closed-loop autotuning: attach a [`Governor`] that reads the
+    /// epoch's stall signals and hill-climbs the tunable knobs
+    /// (consumer_credit, prefetch_depth, io_depth, active_workers,
+    /// steal/pipeline toggles) at epoch seams
+    pub autotune: bool,
 }
 
 impl RigSpec {
@@ -114,6 +120,7 @@ impl RigSpec {
             epochs: 1,
             seed: 7,
             span_capacity: 0,
+            autotune: false,
         }
     }
 
@@ -152,6 +159,103 @@ pub struct Rig {
     /// below the shard facade, or the loader-side wave ring
     pub ring: Option<Arc<IoRing>>,
     pub corpus_bytes: u64,
+    /// the closed-loop autotuner (`autotune = true`): drive it once per
+    /// finished epoch through [`autotune_tick`]
+    pub autotune: Option<Mutex<AutotuneHarness>>,
+}
+
+/// The Governor plus the cumulative-counter snapshot it diffs against:
+/// the rig's signals are lifetime totals, the control loop wants
+/// per-epoch deltas.
+pub struct AutotuneHarness {
+    pub governor: Governor,
+    prev: AutotuneBase,
+    last_seam: Instant,
+}
+
+/// Cumulative counters at the previous epoch seam.
+#[derive(Debug, Clone, Copy, Default)]
+struct AutotuneBase {
+    credit_blocked_s: f64,
+    seam_idle_s: f64,
+    storage_wait_s: f64,
+    decode_s: f64,
+    item_steals: u64,
+    prefetch_gets: u64,
+    prefetch_hits: u64,
+    allocs: u64,
+}
+
+fn autotune_base(rig: &Rig) -> AutotuneBase {
+    let dl = &rig.dataloader;
+    let (storage_wait_s, decode_s) = dl
+        .dataset()
+        .lane_times()
+        .map_or((0.0, 0.0), |(s, d)| (s.as_secs_f64(), d.as_secs_f64()));
+    let (prefetch_gets, prefetch_hits) = rig.prefetch.as_ref().map_or((0, 0), |p| {
+        let c = p.counters();
+        (c.gets, c.hot_hits + c.inflight_hits)
+    });
+    AutotuneBase {
+        credit_blocked_s: dl.credit_blocked().as_secs_f64(),
+        seam_idle_s: dl.seam_idle().as_secs_f64(),
+        storage_wait_s,
+        decode_s,
+        item_steals: dl.item_steals(),
+        prefetch_gets,
+        prefetch_hits,
+        allocs: crate::util::alloc::counters().allocs,
+    }
+}
+
+/// Feed the Governor one finished epoch ([`autotune_tick_p99`] with the
+/// p99 guard disabled — callers that track per-batch times use that
+/// variant directly).
+pub fn autotune_tick(rig: &Rig, epoch: usize) {
+    autotune_tick_p99(rig, epoch, 0.0);
+}
+
+/// Feed the Governor one finished epoch's signals (per-epoch deltas of
+/// the cumulative plane) and let it stage at most one bounded knob
+/// change for the next seam. `p99_batch_s = 0` disables the tail guard.
+/// No-op without `autotune`.
+pub fn autotune_tick_p99(rig: &Rig, epoch: usize, p99_batch_s: f64) {
+    let Some(harness) = &rig.autotune else { return };
+    let mut h = harness.lock().unwrap();
+    let now = Instant::now();
+    let epoch_s = now.duration_since(h.last_seam).as_secs_f64();
+    h.last_seam = now;
+    let cur = autotune_base(rig);
+    let prev = h.prev;
+    h.prev = cur;
+    let dgets = cur.prefetch_gets - prev.prefetch_gets;
+    let dhits = cur.prefetch_hits - prev.prefetch_hits;
+    let prefetch_hit_ratio = if rig.prefetch.is_none() || dgets == 0 {
+        -1.0
+    } else {
+        dhits as f64 / dgets as f64
+    };
+    let (ring_inflight_hwm, ring_queued) = rig.ring.as_ref().map_or((0, 0), |r| {
+        let s = r.stats();
+        (s.inflight_hwm as usize, s.queued as usize)
+    });
+    let sig = Signals {
+        epoch,
+        batches: rig.dataloader.batches_per_epoch(),
+        epoch_s,
+        p99_batch_s,
+        credit_blocked_s: cur.credit_blocked_s - prev.credit_blocked_s,
+        seam_idle_s: cur.seam_idle_s - prev.seam_idle_s,
+        reorder_hwm: 0, // per-epoch iter stat; the p99 signal covers the tail
+        item_steals: cur.item_steals - prev.item_steals,
+        storage_wait_s: cur.storage_wait_s - prev.storage_wait_s,
+        decode_s: cur.decode_s - prev.decode_s,
+        prefetch_hit_ratio,
+        ring_inflight_hwm,
+        ring_queued,
+        allocs: cur.allocs - prev.allocs,
+    };
+    h.governor.end_epoch(&sig);
 }
 
 /// Assembled storage stack: the top-of-stack store plus handles into
@@ -328,12 +432,47 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
     let dataloader = Dataloader::new(dataset, loader_cfg, recorder.clone());
     // one ring per rig, wherever it hangs; the loader-side wave ring
     // feeds the prefetch engine's speculation budget too
+    let shard_mode = shards.is_some();
     let ring = ring.or_else(|| dataloader.ring().cloned());
-    if shards.is_none() {
+    if !shard_mode {
         if let (Some(r), Some(p)) = (&ring, &prefetch) {
             p.set_ring(r.clone());
         }
     }
+    // seam-committed knobs steer the rig-level layers too: the prefetch
+    // engine's readahead depth, and (shard mode) the stack ring the
+    // loader doesn't own — seed that knob with the ring's real depth
+    // first, since the loader config carried io_depth = 0
+    let knobs = dataloader.knobs().clone();
+    if shard_mode {
+        if let Some(r) = &ring {
+            knobs.stage_io_depth(r.io_depth());
+            knobs.commit();
+            let r = r.clone();
+            knobs.register_applier(Box::new(move |k| r.set_depth(k.io_depth())));
+        }
+    }
+    if let Some(p) = &prefetch {
+        let p = p.clone();
+        knobs.register_applier(Box::new(move |k| p.set_depth(k.prefetch_depth())));
+    }
+    let autotune = if spec.autotune {
+        let bounds = KnobBounds::derive(
+            dataloader.config(),
+            ring.is_some(),
+            prefetch.is_some(),
+            dataloader.dataset().supports_epoch_tagged(),
+        );
+        let governor = Governor::new(GovernorConfig::default(), knobs, bounds)
+            .with_recorder(recorder.clone());
+        Some(Mutex::new(AutotuneHarness {
+            governor,
+            prev: AutotuneBase::default(),
+            last_seam: Instant::now(),
+        }))
+    } else {
+        None
+    };
     let device = Device::sim_v100(spec.batch_size, 512, recorder.clone());
     let trainer_cfg = match spec.trainer {
         TrainerKind::Torch => TrainerConfig::torch(spec.epochs),
@@ -351,6 +490,7 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
         shards,
         ring,
         corpus_bytes,
+        autotune,
     })
 }
 
@@ -400,6 +540,9 @@ pub fn metrics_snapshot(rig: &Rig, epoch: usize) -> Json {
     hub.set("loader.reorder_hold_ns", dl.reorder_hold().as_nanos() as u64);
     hub.set("loader.item_steals", dl.item_steals());
     hub.set("loader.plans_published", dl.plans_published() as u64);
+    hub.set("loader.plans_revoked", dl.plans_revoked());
+    hub.set("loader.knob_commits", dl.knobs().commit_count());
+    hub.set("loader.throttled_ns", dl.knobs().throttled().as_nanos() as u64);
     hub.set("planner.seam_idle_ns", dl.seam_idle().as_nanos() as u64);
     for (i, d) in dl.seam_idle_per_worker().iter().enumerate() {
         hub.set(&format!("planner.seam_idle_ns.w{i}"), d.as_nanos() as u64);
@@ -459,6 +602,34 @@ pub fn metrics_snapshot(rig: &Rig, epoch: usize) -> Json {
     hub.set("spans.dropped", rig.recorder.dropped());
     let mut doc = Json::obj();
     doc.set("epoch", epoch as u64).set("metrics", hub.snapshot());
+    // the Governor's decision log rides the same JSONL stream: one
+    // object per control-loop decision since rig construction
+    if let Some(h) = &rig.autotune {
+        let h = h.lock().unwrap();
+        let gov = &h.governor;
+        let decisions: Vec<Json> = gov
+            .decisions()
+            .iter()
+            .map(|d| {
+                let mut j = Json::obj();
+                j.set("epoch", d.epoch as u64)
+                    .set("knob", d.knob.label())
+                    .set("action", d.action.label())
+                    .set("from", d.from as u64)
+                    .set("to", d.to as u64)
+                    .set("bps", d.bps)
+                    .set("p99_s", d.p99_s);
+                j
+            })
+            .collect();
+        let (bps, p99) = gov.baseline();
+        let mut g = Json::obj();
+        g.set("phase", gov.phase_label())
+            .set("baseline_bps", bps)
+            .set("baseline_p99_s", p99)
+            .set("decisions", decisions);
+        doc.set("governor", g);
+    }
     doc
 }
 
@@ -662,6 +833,41 @@ mod tests {
         let s = rig.ring.as_ref().unwrap().stats();
         assert!(s.submitted >= 4, "window fetches must ride the ring: {s:?}");
         assert_eq!(s.errors, 0, "{s:?}");
+    }
+
+    #[test]
+    fn autotune_rig_probes_and_commits_only_at_seams() {
+        let mut spec = RigSpec::quick("s3", 0.02);
+        spec.items = 32;
+        spec.batch_size = 8;
+        spec.arena_slabs = 12;
+        spec.work_stealing = true;
+        spec.consumer_credit = 2;
+        spec.autotune = true;
+        let rig = build(&spec).unwrap();
+        assert!(rig.autotune.is_some());
+        assert!(rig.dataloader.knobs().governed());
+        for epoch in 0..4 {
+            let (_, _, n) = drain_numbered_epoch(&rig, epoch);
+            assert_eq!(n, 4, "epoch {epoch}");
+            autotune_tick(&rig, epoch);
+        }
+        let h = rig.autotune.as_ref().unwrap().lock().unwrap();
+        let (probes, _, _) = h.governor.counts();
+        assert!(probes >= 1, "governor must have probed");
+        assert!(!h.governor.decisions().is_empty());
+        // knob values only ever move through seam commits (one per
+        // epoch() call; the shard-seed path adds none here)
+        assert_eq!(rig.dataloader.knobs().commit_count(), 4);
+        drop(h);
+        let snap = metrics_snapshot(&rig, 3);
+        assert!(snap.at(&["governor", "decisions"]).is_some());
+        assert!(
+            snap.at(&["metrics", "governor.steps"])
+                .and_then(|j| j.as_f64())
+                .unwrap_or(0.0)
+                >= 4.0
+        );
     }
 
     #[test]

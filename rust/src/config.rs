@@ -19,6 +19,7 @@
 //! consumer_credit = 8       # reorder-buffer bound in batches (0 = unbounded)
 //! epoch_pipeline = 1        # epochs published ahead of the consumer (0 = drain)
 //! io_depth = 256            # in-flight reads of the submission ring (0 = per-item)
+//! autotune = true           # Governor hill-climbs the knobs above at epoch seams
 //! cache_bytes = 2147483648  # varnish cache capacity (0 = no cache)
 //! cache_policy = lru        # varnish eviction policy: lru | 2q | s3fifo
 //! trainer = torch
@@ -68,6 +69,10 @@ pub struct ExperimentConfig {
     /// telemetry span-ring capacity (0 = default; raise for long
     /// `--trace` runs so the lock-free ring doesn't wrap)
     pub span_capacity: usize,
+    /// enable the Governor autotuner: hill-climb loader knobs
+    /// (prefetch/io depth, credit, steal, pipeline, active workers)
+    /// at epoch seams from live telemetry
+    pub autotune: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -89,6 +94,7 @@ impl Default for ExperimentConfig {
             device: "sim".into(),
             artifacts_dir: "artifacts".into(),
             span_capacity: 0,
+            autotune: false,
         }
     }
 }
@@ -207,6 +213,7 @@ impl ExperimentConfig {
             "device" => self.device = value.to_string(),
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "span_capacity" => self.span_capacity = value.parse()?,
+            "autotune" => self.autotune = value.parse()?,
             _ => bail!("unknown config key {key}"),
         }
         Ok(())
@@ -329,6 +336,15 @@ mod tests {
         cfg.apply_text("span_capacity = 262144\n").unwrap();
         assert_eq!(cfg.span_capacity, 262_144);
         assert!(cfg.set("span_capacity", "big").is_err());
+    }
+
+    #[test]
+    fn autotune_knob_parses() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(!cfg.autotune);
+        cfg.apply_text("autotune = true\n").unwrap();
+        assert!(cfg.autotune);
+        assert!(cfg.set("autotune", "yes").is_err());
     }
 
     #[test]

@@ -66,6 +66,7 @@ use std::time::{Duration, Instant};
 
 use crate::dataset::Dataset;
 use crate::gil;
+use crate::governor::TunedKnobs;
 use crate::prefetch::CachePolicy;
 use crate::telemetry::{names, Recorder};
 
@@ -289,6 +290,24 @@ impl PlanSink {
             }
         }
     }
+
+    /// Withdraw every unclaimed ticket with `seq >= min_seq` (plan
+    /// revocation); returns how many came back.
+    fn revoke(&self, min_seq: usize) -> usize {
+        match self {
+            PlanSink::Injector(inj) => inj.revoke(min_seq),
+            PlanSink::Static(queues) => {
+                let mut dropped = 0;
+                for q in queues {
+                    let mut q = q.lock().unwrap();
+                    let before = q.len();
+                    q.retain(|t| t.seq < min_seq);
+                    dropped += before - q.len();
+                }
+                dropped
+            }
+        }
+    }
 }
 
 /// One published epoch plan: its epoch number and seq range.
@@ -305,8 +324,18 @@ struct PlanState {
     plans: Vec<PlanMeta>,
     /// plans the consumer has attached an [`EpochIter`] to
     attached: usize,
-    /// next global seq to assign
+    /// next global seq to assign — monotonic for the generation's
+    /// lifetime, never rolled back by a revocation (revoked seq ranges
+    /// stay burned; the consumer fast-forwards over the gap)
     next_seq: usize,
+    /// the epoch the consumer is waiting on after a revocation, so
+    /// pipelining workers publish *it* next instead of re-predicting
+    /// the sequence that was just revoked
+    pending_request: Option<usize>,
+    /// a revocation invalidated the prefetch engine's readahead
+    /// horizon: the next publication re-seeds it with a fresh
+    /// `hint_epoch_order` instead of extending the stale one
+    fresh_hint: bool,
     shutdown: bool,
 }
 
@@ -319,11 +348,17 @@ pub(crate) struct Planner {
     dataset: Arc<dyn Dataset>,
     cfg: Arc<DataloaderConfig>,
     sink: PlanSink,
-    /// effective `epoch_pipeline`: the knob, gated to 0 for datasets
+    /// whether pipelining is allowed at all: gated off for datasets
     /// that do not honor epoch-tagged loads (pipelining two epochs'
     /// items through global `set_epoch` state would mis-seed the
-    /// pipelined head's augmentation)
-    pipeline_depth: usize,
+    /// pipelined head's augmentation). The *depth* itself is read live
+    /// from the tuned knobs on every decision, so the Governor can
+    /// raise/lower it at epoch seams.
+    pipeline_ok: bool,
+    /// live tunable knob values (epoch-seam committed)
+    knobs: Arc<TunedKnobs>,
+    /// mispredicted speculative plans unpublished instead of torn down
+    plans_revoked: AtomicU64,
     state: Mutex<PlanState>,
     cv: Condvar,
     /// cumulative time workers spent parked waiting for a plan (ns) —
@@ -341,23 +376,24 @@ impl Planner {
         dataset: Arc<dyn Dataset>,
         cfg: Arc<DataloaderConfig>,
         sink: PlanSink,
+        knobs: Arc<TunedKnobs>,
         recorder: Arc<Recorder>,
     ) -> Planner {
-        let pipeline_depth = if dataset.supports_epoch_tagged() {
-            cfg.epoch_pipeline
-        } else {
-            0
-        };
+        let pipeline_ok = dataset.supports_epoch_tagged();
         let workers = cfg.num_workers.max(1);
         Planner {
             dataset,
             cfg,
             sink,
-            pipeline_depth,
+            pipeline_ok,
+            knobs,
+            plans_revoked: AtomicU64::new(0),
             state: Mutex::new(PlanState {
                 plans: Vec::new(),
                 attached: 0,
                 next_seq: 0,
+                pending_request: None,
+                fresh_hint: false,
                 shutdown: false,
             }),
             cv: Condvar::new(),
@@ -394,13 +430,18 @@ impl Planner {
             // permutation was being built
             return (st, None);
         }
-        if st.plans.is_empty() {
-            // first plan of this pipeline generation: fresh horizon
+        if st.plans.is_empty() || st.fresh_hint {
+            // first plan of this pipeline generation — or the first
+            // after a revocation polluted the horizon: fresh start
             self.dataset.hint_epoch_order(epoch, &order);
+            st.fresh_hint = false;
         } else {
             // extend the horizon — the engine keeps finishing the
             // current epoch's readahead and rolls into this one
             self.dataset.hint_epoch_order_next(epoch, &order);
+        }
+        if st.pending_request == Some(epoch) {
+            st.pending_request = None;
         }
         let meta = PlanMeta { epoch, base: st.next_seq, n: plan.len() };
         st.next_seq += plan.len();
@@ -420,9 +461,12 @@ impl Planner {
     }
 
     /// Consumer side: attach an [`EpochIter`] for `epoch`. Returns the
-    /// plan to consume, or `None` when the pipeline cannot serve it (a
-    /// pre-published plan predicted a different epoch, or the pipeline
-    /// is shut down) — the caller tears down and rebuilds.
+    /// plan to consume, or `None` only when the pipeline is shut down —
+    /// a pre-published plan that predicted a *different* epoch is
+    /// revoked in place (its unclaimed tickets withdrawn, its seq range
+    /// burned) and the requested epoch published instead, so a
+    /// non-sequential `epoch()` request no longer costs a full worker
+    /// teardown + respawn.
     fn attach(&self, epoch: usize) -> Option<PlanMeta> {
         let mut st = self.state.lock().unwrap();
         let meta = loop {
@@ -431,11 +475,14 @@ impl Planner {
             }
             if st.attached < st.plans.len() {
                 // a worker pre-published this plan while the previous
-                // epoch drained; it must be the epoch the trainer
-                // actually wants
+                // epoch drained; usually it predicted right
                 let meta = st.plans[st.attached];
                 if meta.epoch != epoch {
-                    return None;
+                    // misprediction: unpublish every unattached plan and
+                    // ask the pipelining workers for `epoch` instead
+                    st.pending_request = Some(epoch);
+                    self.revoke_unattached(&mut st);
+                    continue;
                 }
                 break meta;
             }
@@ -451,6 +498,50 @@ impl Planner {
         // wake drained workers: the publication budget moved
         self.cv.notify_all();
         Some(meta)
+    }
+
+    /// Unpublish every plan the consumer has not attached: withdraw
+    /// their unclaimed tickets from the sink and forget their metas.
+    /// Tickets a worker already claimed run to completion and are
+    /// discarded by the consumer as stale seqs (the revoked seq range
+    /// is never reassigned). Called with the state lock held.
+    fn revoke_unattached(&self, st: &mut PlanState) {
+        let keep = st.attached;
+        if st.plans.len() <= keep {
+            return;
+        }
+        let revoke_base = st.plans[keep].base;
+        let t0 = self.recorder.now();
+        let dropped = self.sink.revoke(revoke_base);
+        let revoked = st.plans.len() - keep;
+        st.plans.truncate(keep);
+        st.fresh_hint = true;
+        self.plans_revoked.fetch_add(revoked as u64, Ordering::Relaxed);
+        self.recorder.record_tagged(
+            names::PLAN_REVOKE,
+            crate::telemetry::PLANNER_WORKER,
+            dropped as i64,
+            -1,
+            revoke_base as i64,
+            t0,
+            self.recorder.now(),
+        );
+    }
+
+    /// Live cross-epoch pipelining depth (0 when the dataset cannot
+    /// pipeline, else the seam-committed knob value).
+    fn pipeline_depth(&self) -> usize {
+        if self.pipeline_ok {
+            self.knobs.epoch_pipeline()
+        } else {
+            0
+        }
+    }
+
+    /// The loader's live tunable knobs (workers read per-acquisition
+    /// toggles — steal/parallelism — through this).
+    pub(crate) fn knobs(&self) -> &Arc<TunedKnobs> {
+        &self.knobs
     }
 
     /// Worker side: called when the published stream ran dry. Publishes
@@ -472,14 +563,18 @@ impl Planner {
             if st.shutdown {
                 return false;
             }
-            if self.pipeline_depth > 0
+            let depth = self.pipeline_depth();
+            if (depth > 0 || st.pending_request.is_some())
                 && !st.plans.is_empty()
-                && st.plans.len() < st.attached + self.pipeline_depth
+                && st.plans.len() < st.attached + depth.max(1)
             {
-                // predict the next sequential epoch and publish it now —
-                // this worker (and its siblings) can start on it
-                // immediately, subject to the credit gate
-                let next = st.plans.last().unwrap().epoch + 1;
+                // publish ahead: the consumer's explicit post-revocation
+                // request if one is pending, else the predicted next
+                // sequential epoch — this worker (and its siblings) can
+                // start on it immediately, subject to the credit gate
+                let next = st
+                    .pending_request
+                    .unwrap_or_else(|| st.plans.last().unwrap().epoch + 1);
                 let (guard, _) = self.publish_swap(st, next);
                 st = guard;
                 // won or lost the race, the stream advanced (or shut
@@ -537,6 +632,11 @@ impl Planner {
     /// Total epoch plans published by this pipeline generation.
     fn plans_published(&self) -> usize {
         self.state.lock().unwrap().plans.len()
+    }
+
+    /// Mispredicted speculative plans revoked (instead of torn down).
+    fn plans_revoked_count(&self) -> u64 {
+        self.plans_revoked.load(Ordering::Relaxed)
     }
 
     fn seam_idle(&self) -> Duration {
@@ -652,6 +752,11 @@ pub struct Dataloader {
     /// batched-submission I/O ring shared by every worker (`io_depth`);
     /// None when disabled or the dataset has no ring store
     ring: Option<Arc<crate::storage::IoRing>>,
+    /// live tunable knob values, seeded from `cfg`. The Governor (or
+    /// any caller) *stages* new values at will; they go live only when
+    /// `epoch()` commits them at the seam, so mid-epoch behavior —
+    /// byte identity, zero-alloc steady state — is never disturbed.
+    knobs: Arc<TunedKnobs>,
     /// the current pipeline generation (None until the first epoch)
     pipeline: Mutex<Option<Arc<PipeCore>>>,
 }
@@ -717,12 +822,19 @@ impl Dataloader {
         } else {
             None
         };
+        let knobs = TunedKnobs::from_config(&cfg);
+        if let Some(ring) = &ring {
+            // seam-committed io_depth lands in the ring's semaphore
+            let ring = ring.clone();
+            knobs.register_applier(Box::new(move |k| ring.set_depth(k.io_depth())));
+        }
         Dataloader {
             dataset,
             cfg: Arc::new(cfg),
             recorder,
             arena,
             ring,
+            knobs,
             pipeline: Mutex::new(None),
         }
     }
@@ -748,6 +860,23 @@ impl Dataloader {
     /// dataset exposes a ring store (queue-depth gauges live here).
     pub fn ring(&self) -> Option<&Arc<crate::storage::IoRing>> {
         self.ring.as_ref()
+    }
+
+    /// The loader's live tunable knobs. Stage values anytime (the
+    /// Governor does); they commit — and propagate to the credit gate,
+    /// I/O ring, and workers — at the next `epoch()` seam.
+    pub fn knobs(&self) -> &Arc<TunedKnobs> {
+        &self.knobs
+    }
+
+    /// Mispredicted speculative epoch plans revoked in place (instead
+    /// of a full pipeline teardown) by the current generation.
+    pub fn plans_revoked(&self) -> u64 {
+        self.pipeline
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map_or(0, |core| core.planner.plans_revoked_count())
     }
 
     /// Number of batches per epoch.
@@ -849,10 +978,19 @@ impl Dataloader {
             let hook = inj.clone();
             gate.set_waker(Arc::new(move || hook.bump()));
         }
+        // seam-committed consumer_credit lands in this generation's
+        // gate (rebuilds are rare — a superseded gate costs one stale
+        // applier entry, and resizing a closed gate is harmless)
+        {
+            let gate = gate.clone();
+            self.knobs
+                .register_applier(Box::new(move |k| gate.set_credit(k.credit())));
+        }
         let planner = Arc::new(Planner::new(
             self.dataset.clone(),
             self.cfg.clone(),
             sink,
+            self.knobs.clone(),
             self.recorder.clone(),
         ));
         Arc::new(PipeCore {
@@ -908,11 +1046,30 @@ impl Dataloader {
     /// it must be rebuilt (poisoned, mid-epoch consumer still out, or
     /// an epoch-sequence mismatch with a pre-published plan).
     fn try_attach(&self, core: &Arc<PipeCore>, epoch: usize) -> Option<EpochIter> {
-        let consumer = core.ctl.lock().unwrap().consumer.take()?;
+        let mut consumer = core.ctl.lock().unwrap().consumer.take()?;
         let Some(meta) = core.planner.attach(epoch) else {
             core.ctl.lock().unwrap().consumer = Some(consumer);
             return None;
         };
+        if meta.base > consumer.next_seq {
+            // a revocation burned the seqs in between: fast-forward the
+            // in-order cursor over the gap. Buffered stragglers from
+            // the revoked range are recycled here; still-in-flight ones
+            // are discarded on arrival (EpochIter::next).
+            let stale: Vec<usize> = consumer
+                .pending
+                .keys()
+                .copied()
+                .filter(|&s| s < meta.base)
+                .collect();
+            for s in stale {
+                if let Some((_, Some(b))) = consumer.pending.remove(&s) {
+                    b.recycle();
+                }
+            }
+            consumer.next_seq = meta.base;
+            core.gate.advance(meta.base);
+        }
         if !self.cfg.lazy_init {
             self.start_workers_blocking(core);
         }
@@ -953,6 +1110,11 @@ impl Dataloader {
         let seam = self.recorder.now();
         self.recorder
             .record_tagged(names::EPOCH_SEAM, 0, -1, epoch as i64, -1, seam, seam);
+
+        // the one place staged knob values go live: anything the
+        // Governor staged since the last seam commits here, before the
+        // epoch's plan publishes — never mid-epoch
+        self.knobs.commit();
 
         if self.cfg.num_workers == 0 {
             // torch num_workers=0: load inline in the consumer
@@ -1265,10 +1427,20 @@ impl Iterator for EpochIter {
             }
             match consumer.rx.recv() {
                 Ok(WorkerMsg::Batch { seq, batch }) => {
+                    if seq < consumer.next_seq {
+                        // straggler from a revoked plan (the cursor
+                        // fast-forwarded over its burned seq range):
+                        // return the slab and move on
+                        batch.recycle();
+                        continue;
+                    }
                     consumer.pending.insert(seq, (self.recorder.now(), Some(batch)));
                     self.reorder_hwm = self.reorder_hwm.max(consumer.pending.len());
                 }
                 Ok(WorkerMsg::Failed { seq }) => {
+                    if seq < consumer.next_seq {
+                        continue; // revoked-plan straggler tombstone
+                    }
                     consumer.pending.insert(seq, (self.recorder.now(), None));
                     self.reorder_hwm = self.reorder_hwm.max(consumer.pending.len());
                 }

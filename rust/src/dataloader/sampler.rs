@@ -20,7 +20,7 @@
 //!   buffer at O(credit) instead of O(epoch) behind a straggler.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -136,7 +136,10 @@ struct GateState {
 /// of O(epoch) behind one straggling batch. `credit = 0` disables the
 /// gate (legacy unbounded behavior).
 pub struct CreditGate {
-    credit: usize,
+    /// live credit (0 = unbounded); resizable at epoch seams via
+    /// [`set_credit`](CreditGate::set_credit) — workers re-read it on
+    /// every admission check, so a seam-time store is all it takes
+    credit: AtomicUsize,
     state: Mutex<GateState>,
     cv: Condvar,
     /// total time workers spent blocked on the credit window (the
@@ -151,7 +154,7 @@ pub struct CreditGate {
 impl CreditGate {
     pub fn new(credit: usize) -> Arc<CreditGate> {
         Arc::new(CreditGate {
-            credit,
+            credit: AtomicUsize::new(credit),
             state: Mutex::new(GateState { cursor: 0, closed: false }),
             cv: Condvar::new(),
             blocked_ns: AtomicU64::new(0),
@@ -159,9 +162,19 @@ impl CreditGate {
         })
     }
 
-    /// The configured credit (0 = unbounded).
+    /// The live credit (0 = unbounded).
     pub fn credit(&self) -> usize {
-        self.credit
+        self.credit.load(Ordering::Relaxed)
+    }
+
+    /// Resize the credit window (Governor seam application). Widening —
+    /// or opening the gate entirely (`0`) — admits batches that were
+    /// blocked a moment ago, so parked workers are woken.
+    pub fn set_credit(&self, credit: usize) {
+        let old = self.credit.swap(credit, Ordering::Relaxed);
+        if credit == 0 || (old != 0 && credit > old) {
+            self.wake();
+        }
     }
 
     /// Install the extra wake hook (setup-time only).
@@ -191,7 +204,8 @@ impl CreditGate {
     }
 
     fn admits_locked(&self, st: &GateState, id: usize) -> bool {
-        self.credit == 0 || st.closed || id < st.cursor + self.credit
+        let credit = self.credit.load(Ordering::Relaxed);
+        credit == 0 || st.closed || id < st.cursor + credit
     }
 
     /// May batch `id` be started right now?
@@ -577,6 +591,24 @@ impl BatchInjector {
         self.queue.lock().unwrap().len()
     }
 
+    /// Plan revocation: drop every unclaimed ticket with `seq >=
+    /// min_seq` (a mispredicted speculative epoch being unpublished).
+    /// Tickets a worker already claimed cannot be recalled — they run
+    /// to completion and the consumer discards their stale seqs, which
+    /// is still far cheaper than a full pipeline teardown. Returns how
+    /// many tickets were withdrawn.
+    pub fn revoke(&self, min_seq: usize) -> usize {
+        let mut q = self.queue.lock().unwrap();
+        let before = q.len();
+        q.retain(|t| t.seq < min_seq);
+        let dropped = before - q.len();
+        drop(q);
+        if dropped > 0 {
+            self.bump();
+        }
+        dropped
+    }
+
     /// Publish an in-progress batch for item-level stealing.
     pub fn register(&self, task: Arc<ItemTask>) {
         self.active.lock().unwrap().push(task);
@@ -764,6 +796,38 @@ mod tests {
         let gate = CreditGate::new(0);
         assert!(gate.admits(usize::MAX - 1));
         assert!(gate.wait_admit_timeout(10_000, Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn credit_gate_resizes_live() {
+        let gate = CreditGate::new(2);
+        assert!(!gate.admits(2));
+        gate.set_credit(4); // widen: admits more without a cursor move
+        assert!(gate.admits(3));
+        assert!(!gate.admits(4));
+        gate.set_credit(1); // narrow: takes effect immediately
+        assert!(!gate.admits(1));
+        assert!(gate.admits(0));
+        gate.set_credit(0); // open entirely
+        assert!(gate.admits(usize::MAX - 1));
+    }
+
+    #[test]
+    fn injector_revoke_drops_only_the_unclaimed_suffix() {
+        let inj = published(0, 0, 8, 4); // seqs 0..2
+        inj.publish(BatchTicket::plan(
+            1,
+            2,
+            batches(&(0..8).collect::<Vec<_>>(), 4, false),
+        )); // seqs 2..4
+        let first = inj.steal().unwrap();
+        assert_eq!(first.seq, 0);
+        // unpublish the speculative epoch 1 (seqs >= 2)
+        assert_eq!(inj.revoke(2), 2);
+        let rest = inj.steal_group(10);
+        assert_eq!(rest.iter().map(|t| t.seq).collect::<Vec<_>>(), vec![1]);
+        // revoking an empty range is a no-op
+        assert_eq!(inj.revoke(2), 0);
     }
 
     #[test]

@@ -200,15 +200,37 @@ fn run_worker(
     };
     // item-level stealing needs both the shared injector (to find
     // siblings' in-progress batches) and the arena (whose per-slot claim
-    // bits make concurrent in-place fill safe)
-    let steal_items = cfg.steal_items && arena.is_some() && source.injector().is_some();
+    // bits make concurrent in-place fill safe); whether a *capable*
+    // worker actually steals is a live knob, re-read each acquisition
+    let steal_capable = arena.is_some() && source.injector().is_some();
+    let knobs = planner.as_ref().map(|p| p.knobs().clone());
     // publications this worker has observed (see Planner::wait_for_work)
     let mut seen_plans = 0usize;
     // recycled (key, buf) pairs for ring waves — grows to the largest
     // wave once, then the submission path is allocation-free
     let mut ring_scratch: Vec<(String, Vec<u8>)> = Vec::new();
+    // throttle poll when this worker is parked out of the active set
+    const THROTTLE_PARK: Duration = Duration::from_millis(2);
 
     loop {
+        // the Governor benches effective parallelism by shrinking the
+        // active set: a worker past the committed count parks (injector
+        // dispatch only — a static queue would strand its share). It
+        // keeps polling so a seam that re-widens the set revives it.
+        if let Some(knobs) = &knobs {
+            if source.injector().is_some()
+                && (worker_id as usize) >= knobs.active_workers()
+            {
+                if planner.as_ref().is_some_and(|p| p.is_shutdown()) {
+                    return;
+                }
+                std::thread::sleep(THROTTLE_PARK);
+                knobs.note_throttled(THROTTLE_PARK);
+                continue;
+            }
+        }
+        let steal_items = steal_capable
+            && knobs.as_ref().map_or(cfg.steal_items, |k| k.steal_items());
         let work = match source.next_group(group, &gate) {
             Claimed::Work(work) => work,
             Claimed::Blocked(head) => {
@@ -774,6 +796,7 @@ mod tests {
                 None,
                 tx,
                 std::time::Duration::ZERO,
+                None,
             );
             let msgs: Vec<WorkerMsg> = rx.iter().collect();
             h.join().unwrap();

@@ -1,0 +1,271 @@
+//! Staged/live knob cells — the seam-only application mechanism.
+//!
+//! The Governor may *stage* a new value for any tunable knob at any
+//! time (it runs between epochs on the consumer thread, but nothing
+//! here assumes that); the staged values only become *live* when the
+//! consumer crosses an epoch seam and [`TunedKnobs::commit`] runs.
+//! Every reader on the hot path (workers, planner, credit gate, ring,
+//! prefetch engine) sees exclusively the live cells, so a mid-epoch
+//! stage can never perturb byte identity or the zero-alloc steady
+//! state: the knob set is constant for the duration of an epoch by
+//! construction.
+//!
+//! Components that hold their own tunable state (the [`CreditGate`]'s
+//! credit window, the [`IoRing`]'s permit budget, the prefetch
+//! engine's readahead depth) register *appliers* — closures invoked on
+//! commit with the fresh live values. Workers and the planner instead
+//! read the live atomics directly each loop iteration, which keeps the
+//! read side lock-free and allocation-free.
+//!
+//! [`CreditGate`]: crate::dataloader::sampler::CreditGate
+//! [`IoRing`]: crate::storage::IoRing
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::dataloader::DataloaderConfig;
+
+/// One staged/live pair. Stages are written by the Governor, commits
+/// copy staged → live, and the hot path loads live with relaxed
+/// ordering (knob values are advisory rates/bounds, never used for
+/// cross-thread happens-before).
+struct Cell {
+    staged: AtomicUsize,
+    live: AtomicUsize,
+}
+
+impl Cell {
+    fn new(v: usize) -> Cell {
+        Cell { staged: AtomicUsize::new(v), live: AtomicUsize::new(v) }
+    }
+
+    fn stage(&self, v: usize) {
+        self.staged.store(v, Ordering::Relaxed);
+    }
+
+    fn staged(&self) -> usize {
+        self.staged.load(Ordering::Relaxed)
+    }
+
+    fn live(&self) -> usize {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    /// Returns true when the live value changed.
+    fn commit(&self) -> bool {
+        let v = self.staged.load(Ordering::Relaxed);
+        self.live.swap(v, Ordering::Relaxed) != v
+    }
+}
+
+/// The set of knobs the Governor may move at epoch seams, with their
+/// staged (pending) and live (hot-path-visible) values.
+pub struct TunedKnobs {
+    /// consumer-credit window in batches (0 = unbounded)
+    credit: Cell,
+    /// prefetch engine readahead depth in items (0 = never speculate)
+    prefetch_depth: Cell,
+    /// I/O-ring in-flight read budget
+    io_depth: Cell,
+    /// workers allowed to pull new batches (injector mode only; the
+    /// rest park and lend their arena slabs to the credit window)
+    active_workers: Cell,
+    /// item-granular stealing toggle (0/1)
+    steal_items: Cell,
+    /// cross-epoch plan publication depth
+    epoch_pipeline: Cell,
+    /// commit generation counter (one per epoch seam with the Governor
+    /// attached; lets tests pin "knobs changed only at seams")
+    commits: AtomicU64,
+    /// ns workers spent parked because `active_workers` benched them
+    throttled_ns: AtomicU64,
+    /// seam appliers for components that keep their own tunable state
+    appliers: Mutex<Vec<Box<dyn Fn(&TunedKnobs) + Send + Sync>>>,
+    /// set once a Governor is steering; purely informational
+    governed: AtomicBool,
+}
+
+impl TunedKnobs {
+    /// Seed every knob from the loader configuration: live == staged ==
+    /// the configured value, so an un-governed loader behaves exactly
+    /// as before.
+    pub fn from_config(cfg: &DataloaderConfig) -> Arc<TunedKnobs> {
+        Arc::new(TunedKnobs {
+            credit: Cell::new(cfg.consumer_credit),
+            prefetch_depth: Cell::new(cfg.prefetch_depth),
+            io_depth: Cell::new(cfg.io_depth),
+            active_workers: Cell::new(cfg.num_workers),
+            steal_items: Cell::new(cfg.steal_items as usize),
+            epoch_pipeline: Cell::new(cfg.epoch_pipeline),
+            commits: AtomicU64::new(0),
+            throttled_ns: AtomicU64::new(0),
+            appliers: Mutex::new(Vec::new()),
+            governed: AtomicBool::new(false),
+        })
+    }
+
+    // --- live reads (hot path) ---
+
+    pub fn credit(&self) -> usize {
+        self.credit.live()
+    }
+
+    pub fn prefetch_depth(&self) -> usize {
+        self.prefetch_depth.live()
+    }
+
+    pub fn io_depth(&self) -> usize {
+        self.io_depth.live()
+    }
+
+    pub fn active_workers(&self) -> usize {
+        self.active_workers.live()
+    }
+
+    pub fn steal_items(&self) -> bool {
+        self.steal_items.live() != 0
+    }
+
+    pub fn epoch_pipeline(&self) -> usize {
+        self.epoch_pipeline.live()
+    }
+
+    // --- staged reads (the Governor's view of its own pending state) ---
+
+    pub fn staged_credit(&self) -> usize {
+        self.credit.staged()
+    }
+
+    pub fn staged_prefetch_depth(&self) -> usize {
+        self.prefetch_depth.staged()
+    }
+
+    pub fn staged_io_depth(&self) -> usize {
+        self.io_depth.staged()
+    }
+
+    pub fn staged_active_workers(&self) -> usize {
+        self.active_workers.staged()
+    }
+
+    pub fn staged_steal_items(&self) -> bool {
+        self.steal_items.staged() != 0
+    }
+
+    pub fn staged_epoch_pipeline(&self) -> usize {
+        self.epoch_pipeline.staged()
+    }
+
+    // --- stages (Governor / stack assembler) ---
+
+    pub fn stage_credit(&self, v: usize) {
+        self.credit.stage(v);
+    }
+
+    pub fn stage_prefetch_depth(&self, v: usize) {
+        self.prefetch_depth.stage(v);
+    }
+
+    pub fn stage_io_depth(&self, v: usize) {
+        self.io_depth.stage(v);
+    }
+
+    pub fn stage_active_workers(&self, v: usize) {
+        self.active_workers.stage(v);
+    }
+
+    pub fn stage_steal_items(&self, v: bool) {
+        self.steal_items.stage(v as usize);
+    }
+
+    pub fn stage_epoch_pipeline(&self, v: usize) {
+        self.epoch_pipeline.stage(v);
+    }
+
+    /// Register a seam applier: called (with the appliers lock held)
+    /// after every commit that changed at least one live value, and
+    /// once immediately so late-registered components sync up.
+    pub fn register_applier(&self, f: Box<dyn Fn(&TunedKnobs) + Send + Sync>) {
+        f(self);
+        self.appliers.lock().unwrap().push(f);
+    }
+
+    /// Epoch-seam commit: copy every staged value into its live cell
+    /// and run the appliers when anything moved. Called by
+    /// `Dataloader::epoch` before the plan attach, so the whole next
+    /// epoch — plan publication included — runs under the new values.
+    /// Returns true when any live value changed.
+    pub fn commit(&self) -> bool {
+        self.commits.fetch_add(1, Ordering::Relaxed);
+        let mut changed = self.credit.commit();
+        changed |= self.prefetch_depth.commit();
+        changed |= self.io_depth.commit();
+        changed |= self.active_workers.commit();
+        changed |= self.steal_items.commit();
+        changed |= self.epoch_pipeline.commit();
+        if changed {
+            for f in self.appliers.lock().unwrap().iter() {
+                f(self);
+            }
+        }
+        changed
+    }
+
+    /// Seam commits performed so far.
+    pub fn commit_count(&self) -> u64 {
+        self.commits.load(Ordering::Relaxed)
+    }
+
+    /// Mark/query Governor attachment (informational; gates nothing).
+    pub fn set_governed(&self) {
+        self.governed.store(true, Ordering::Relaxed);
+    }
+
+    pub fn governed(&self) -> bool {
+        self.governed.load(Ordering::Relaxed)
+    }
+
+    /// Book time a worker spent benched by `active_workers`.
+    pub fn note_throttled(&self, d: std::time::Duration) {
+        self.throttled_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn throttled(&self) -> std::time::Duration {
+        std::time::Duration::from_nanos(self.throttled_ns.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stages_are_invisible_until_commit() {
+        let cfg = DataloaderConfig { consumer_credit: 4, ..Default::default() };
+        let k = TunedKnobs::from_config(&cfg);
+        k.stage_credit(8);
+        k.stage_steal_items(true);
+        assert_eq!(k.credit(), 4);
+        assert!(!k.steal_items());
+        assert!(k.commit());
+        assert_eq!(k.credit(), 8);
+        assert!(k.steal_items());
+        // idempotent: nothing staged since the last commit
+        assert!(!k.commit());
+    }
+
+    #[test]
+    fn appliers_run_on_registration_and_on_changing_commits() {
+        let k = TunedKnobs::from_config(&DataloaderConfig::default());
+        let seen = Arc::new(AtomicUsize::new(0));
+        let s = seen.clone();
+        k.register_applier(Box::new(move |knobs| {
+            s.store(knobs.io_depth() + 1, Ordering::Relaxed);
+        }));
+        assert_eq!(seen.load(Ordering::Relaxed), 1); // sync-on-register
+        k.stage_io_depth(32);
+        assert!(k.commit());
+        assert_eq!(seen.load(Ordering::Relaxed), 33);
+        assert!(!k.commit()); // no change → appliers not re-run
+    }
+}

@@ -1,0 +1,820 @@
+//! Closed-loop autotuning: the Governor.
+//!
+//! The observability plane (PR 6) already measures where every epoch's
+//! time goes — credit-blocked workers, seam idle, storage-wait vs
+//! decode lane split, reorder high-water, ring queue depths, prefetch
+//! tier hits. The Governor closes the loop: an online, hysteretic
+//! hill-climber that reads those signals once per epoch and moves the
+//! pipeline's tunable knobs (`consumer_credit`, `prefetch_depth`,
+//! `io_depth`, effective worker parallelism, the steal/pipeline
+//! toggles) in bounded steps, so the loader converges to a
+//! per-storage-profile configuration nobody had to hand-sweep.
+//!
+//! ## Control loop
+//!
+//! ```text
+//!  signals (per epoch)          decision               application
+//!  ───────────────────          ────────               ───────────
+//!  batches/s  ─┐                probe: stall attribution picks ONE
+//!  p99 batch  ─┤  end_epoch →   knob + direction, stages a bounded
+//!  stall lanes ┘                step (×2 / ÷2 along its ladder)
+//!                               measure: the next epoch runs with the
+//!                               staged value (committed at the seam)
+//!                               keep/revert: keep only if batches/s
+//!                               improved past the hysteresis margin
+//!                               AND the p99 guard held; a revert puts
+//!                               the knob on cooldown
+//! ```
+//!
+//! Every stage only becomes visible at an epoch seam through
+//! [`TunedKnobs::commit`] (called by `Dataloader::epoch` before the
+//! plan attach), so mid-epoch byte identity and the zero-alloc steady
+//! state are never disturbed — the knob set is constant within an
+//! epoch by construction. The Governor itself is allocation-free after
+//! construction: the decision log is a preallocated ring, metric
+//! handles are pre-registered, and spans go through the lock-free
+//! recorder.
+//!
+//! Stall attribution (rule order = priority):
+//! 1. credit-blocked time dominates      → widen `consumer_credit`
+//! 2. ring in-flight HWM at the budget   → raise `io_depth`
+//! 3. prefetch tier missing demand       → deepen `prefetch_depth`
+//! 4. seam idle with drained boundaries  → enable `epoch_pipeline`
+//! 5. straggler tail (p99 ≫ mean, deep
+//!    reorder buffer)                    → enable `steal_items`
+//! 6. decode-bound with storage quiet    → bench workers
+//!    (`active_workers` down: less contention on the decode lanes)
+//! 7. otherwise                          → round-robin exploration
+//!
+//! Hard bounds come from [`KnobBounds`]: the credit window is capped by
+//! the arena/slab budget (a wider window than the pool has slabs just
+//! converts credit-blocked time into allocation fallbacks), pipelining
+//! is locked for datasets without epoch-tagged loads, and the
+//! worker-bench knob only exists under work-stealing dispatch (benched
+//! round-robin queues would strand their batches).
+
+pub mod knob;
+
+pub use knob::TunedKnobs;
+
+use std::sync::Arc;
+
+use crate::dataloader::DataloaderConfig;
+use crate::telemetry::{names, Metric, Recorder, GOVERNOR_WORKER};
+
+/// The tunable knobs, as the Governor names them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Knob {
+    Credit,
+    PrefetchDepth,
+    IoDepth,
+    ActiveWorkers,
+    StealItems,
+    EpochPipeline,
+}
+
+impl Knob {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Knob::Credit => "consumer_credit",
+            Knob::PrefetchDepth => "prefetch_depth",
+            Knob::IoDepth => "io_depth",
+            Knob::ActiveWorkers => "active_workers",
+            Knob::StealItems => "steal_items",
+            Knob::EpochPipeline => "epoch_pipeline",
+        }
+    }
+}
+
+/// Hard per-knob bounds. `None` locks a knob (the layer it steers is
+/// not attached, or moving it is structurally unsafe). Bounds are
+/// inclusive `(min, max)` in the knob's own unit.
+#[derive(Debug, Clone, Copy)]
+pub struct KnobBounds {
+    pub credit: Option<(usize, usize)>,
+    pub prefetch_depth: Option<(usize, usize)>,
+    pub io_depth: Option<(usize, usize)>,
+    pub active_workers: Option<(usize, usize)>,
+    pub steal_items: bool,
+    /// max publication depth (min is always 0 = drained)
+    pub epoch_pipeline: Option<usize>,
+}
+
+impl KnobBounds {
+    /// Everything locked — a Governor with these bounds observes but
+    /// never probes.
+    pub fn locked() -> KnobBounds {
+        KnobBounds {
+            credit: None,
+            prefetch_depth: None,
+            io_depth: None,
+            active_workers: None,
+            steal_items: false,
+            epoch_pipeline: None,
+        }
+    }
+
+    /// Derive bounds from the loader configuration and the attached
+    /// stack layers. The credit cap comes from the arena budget:
+    /// `arena_slabs − num_workers` (each worker can hold one slab in
+    /// flight outside the reorder window); without an arena the
+    /// reorder buffer is heap-backed and capped at `4 × workers`.
+    pub fn derive(
+        cfg: &DataloaderConfig,
+        has_ring: bool,
+        has_prefetch: bool,
+        epoch_tagged: bool,
+    ) -> KnobBounds {
+        let w = cfg.num_workers;
+        let credit = if w > 0 {
+            let max = if cfg.arena_slabs > 0 {
+                cfg.arena_slabs.saturating_sub(w).max(2)
+            } else {
+                (4 * w).max(2)
+            };
+            Some((2, max))
+        } else {
+            None
+        };
+        KnobBounds {
+            credit,
+            prefetch_depth: if has_prefetch {
+                Some((4, cfg.prefetch_depth.max(256)))
+            } else {
+                None
+            },
+            io_depth: if has_ring {
+                Some((4, cfg.io_depth.max(256)))
+            } else {
+                None
+            },
+            active_workers: if cfg.work_stealing && w > 1 {
+                Some((1, w))
+            } else {
+                None
+            },
+            steal_items: cfg.work_stealing && cfg.arena_slabs > 0 && w > 0,
+            epoch_pipeline: if epoch_tagged && w > 0 { Some(1) } else { None },
+        }
+    }
+}
+
+/// Per-epoch measurement fed to [`Governor::end_epoch`]. All values
+/// are this epoch's deltas, not cumulative counters. `Copy` and
+/// heap-free by design: building one in the epoch-end hook costs no
+/// allocation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Signals {
+    pub epoch: usize,
+    /// batches delivered this epoch
+    pub batches: usize,
+    /// wall time of the epoch (s)
+    pub epoch_s: f64,
+    /// p99 per-batch delivery time (s); 0 = not measured (guard off)
+    pub p99_batch_s: f64,
+    /// worker time blocked on the credit window (s)
+    pub credit_blocked_s: f64,
+    /// worker time parked at the epoch seam (s)
+    pub seam_idle_s: f64,
+    /// reorder-buffer high-water mark (batches)
+    pub reorder_hwm: usize,
+    /// items filled by non-owner workers
+    pub item_steals: u64,
+    /// storage lane time (s, summed over workers)
+    pub storage_wait_s: f64,
+    /// decode lane time (s, summed over workers)
+    pub decode_s: f64,
+    /// prefetch tier hit ratio in [0, 1]; negative = no prefetch layer
+    pub prefetch_hit_ratio: f64,
+    /// ring in-flight high-water mark this epoch
+    pub ring_inflight_hwm: usize,
+    /// ring ops still queued behind the permit budget at epoch end
+    pub ring_queued: usize,
+    /// heap allocations on the consumer thread this epoch
+    pub allocs: u64,
+}
+
+/// Hysteresis/settle parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GovernorConfig {
+    /// epochs to observe before the first probe (baseline formation)
+    pub warmup_epochs: usize,
+    /// epochs a staged probe runs before the keep/revert verdict
+    pub settle_epochs: usize,
+    /// keep only if batches/s improves by more than this fraction
+    pub keep_margin: f64,
+    /// revert if p99 batch time degrades by more than this fraction
+    pub p99_guard: f64,
+    /// epochs a reverted knob sits out before it may probe again
+    pub cooldown_epochs: usize,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig {
+            warmup_epochs: 1,
+            settle_epochs: 1,
+            keep_margin: 0.03,
+            p99_guard: 0.25,
+            cooldown_epochs: 2,
+        }
+    }
+}
+
+/// What a control-loop step did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// staged a trial value (takes effect at the next seam)
+    Probe,
+    /// trial beat the baseline past the margin with the p99 guard held
+    Keep,
+    /// trial failed; previous value restored, knob on cooldown
+    Revert,
+}
+
+impl Action {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Action::Probe => "probe",
+            Action::Keep => "keep",
+            Action::Revert => "revert",
+        }
+    }
+}
+
+/// One entry of the decision log (preallocated ring; `Copy`).
+#[derive(Debug, Clone, Copy)]
+pub struct Decision {
+    pub epoch: usize,
+    pub knob: Knob,
+    pub action: Action,
+    pub from: usize,
+    pub to: usize,
+    /// objective at decision time (batches/s)
+    pub bps: f64,
+    /// p99 batch time at decision time (s)
+    pub p99_s: f64,
+}
+
+/// Probe direction along a knob's value ladder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dir {
+    Up,
+    Down,
+}
+
+/// Per-knob hill-climb state: a bounded ladder of candidate values and
+/// the current rung. `consumer_credit`'s ladder ends with 0
+/// (unbounded) — the most permissive rung, one step past the arena
+/// cap.
+struct KnobState {
+    kind: Knob,
+    values: Vec<usize>,
+    idx: usize,
+    cooldown: usize,
+}
+
+impl KnobState {
+    fn can(&self, dir: Dir) -> bool {
+        self.cooldown == 0
+            && match dir {
+                Dir::Up => self.idx + 1 < self.values.len(),
+                Dir::Down => self.idx > 0,
+            }
+    }
+
+    fn value(&self) -> usize {
+        self.values[self.idx]
+    }
+}
+
+/// Geometric ladder `min, 2·min, … ≤ max` (max always included), with
+/// `init` spliced in so the configured value is always a rung.
+fn ladder(init: usize, min: usize, max: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut x = min.max(1);
+    while x < max {
+        v.push(x);
+        x = x.saturating_mul(2);
+    }
+    v.push(max);
+    if init >= min && init <= max && !v.contains(&init) {
+        v.push(init);
+    }
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+fn nearest_idx(values: &[usize], init: usize) -> usize {
+    values
+        .iter()
+        .position(|&v| v >= init)
+        .unwrap_or(values.len().saturating_sub(1))
+}
+
+#[derive(Clone, Copy)]
+enum Phase {
+    Warmup { left: usize },
+    Idle,
+    Probe { state: usize, prev_idx: usize, settle_left: usize },
+}
+
+/// Pre-registered metric handles (`governor.*` in the hub) — cached
+/// `Arc<Metric>`s so the per-epoch step touches no hub lock.
+struct Gauges {
+    steps: Arc<Metric>,
+    probes: Arc<Metric>,
+    keeps: Arc<Metric>,
+    reverts: Arc<Metric>,
+    bps_x1000: Arc<Metric>,
+    baseline_bps_x1000: Arc<Metric>,
+    credit: Arc<Metric>,
+    prefetch_depth: Arc<Metric>,
+    io_depth: Arc<Metric>,
+    active_workers: Arc<Metric>,
+    steal_items: Arc<Metric>,
+    epoch_pipeline: Arc<Metric>,
+}
+
+const DECISION_LOG_CAP: usize = 256;
+
+/// The online autotuner. One per pipeline; drive it with
+/// [`Governor::end_epoch`] once per finished epoch (the rig and
+/// `cdl run --autotune` wire this into the trainer's epoch-end hook).
+pub struct Governor {
+    cfg: GovernorConfig,
+    knobs: Arc<TunedKnobs>,
+    states: Vec<KnobState>,
+    phase: Phase,
+    baseline_bps: f64,
+    baseline_p99: f64,
+    rr_cursor: usize,
+    epochs_seen: u64,
+    probes: u64,
+    keeps: u64,
+    reverts: u64,
+    /// decision ring: preallocated, overwrites oldest past the cap
+    decisions: Vec<Decision>,
+    decision_head: usize,
+    decisions_total: u64,
+    recorder: Option<Arc<Recorder>>,
+    gauges: Option<Gauges>,
+}
+
+impl Governor {
+    pub fn new(
+        cfg: GovernorConfig,
+        knobs: Arc<TunedKnobs>,
+        bounds: KnobBounds,
+    ) -> Governor {
+        knobs.set_governed();
+        let mut states = Vec::new();
+        if let Some((min, max)) = bounds.credit {
+            // most permissive rung last: 0 = unbounded window
+            let mut values = ladder(knobs.credit(), min, max);
+            values.push(0);
+            let init = knobs.credit();
+            let idx = if init == 0 {
+                values.len() - 1
+            } else {
+                nearest_idx(&values[..values.len() - 1], init)
+            };
+            states.push(KnobState { kind: Knob::Credit, values, idx, cooldown: 0 });
+        }
+        if let Some((min, max)) = bounds.prefetch_depth {
+            let values = ladder(knobs.prefetch_depth(), min, max);
+            let idx = nearest_idx(&values, knobs.prefetch_depth());
+            states.push(KnobState {
+                kind: Knob::PrefetchDepth,
+                values,
+                idx,
+                cooldown: 0,
+            });
+        }
+        if let Some((min, max)) = bounds.io_depth {
+            let values = ladder(knobs.io_depth(), min, max);
+            let idx = nearest_idx(&values, knobs.io_depth());
+            states.push(KnobState { kind: Knob::IoDepth, values, idx, cooldown: 0 });
+        }
+        if let Some((min, max)) = bounds.active_workers {
+            let values: Vec<usize> = (min..=max).collect();
+            let idx = nearest_idx(&values, knobs.active_workers());
+            states.push(KnobState {
+                kind: Knob::ActiveWorkers,
+                values,
+                idx,
+                cooldown: 0,
+            });
+        }
+        if bounds.steal_items {
+            let idx = knobs.steal_items() as usize;
+            states.push(KnobState {
+                kind: Knob::StealItems,
+                values: vec![0, 1],
+                idx,
+                cooldown: 0,
+            });
+        }
+        if let Some(max) = bounds.epoch_pipeline {
+            let values: Vec<usize> = (0..=max.max(1)).collect();
+            let idx = nearest_idx(&values, knobs.epoch_pipeline());
+            states.push(KnobState {
+                kind: Knob::EpochPipeline,
+                values,
+                idx,
+                cooldown: 0,
+            });
+        }
+        Governor {
+            cfg,
+            knobs,
+            states,
+            phase: Phase::Warmup { left: cfg.warmup_epochs.max(1) },
+            baseline_bps: 0.0,
+            baseline_p99: 0.0,
+            rr_cursor: 0,
+            epochs_seen: 0,
+            probes: 0,
+            keeps: 0,
+            reverts: 0,
+            decisions: Vec::with_capacity(DECISION_LOG_CAP),
+            decision_head: 0,
+            decisions_total: 0,
+            recorder: None,
+            gauges: None,
+        }
+    }
+
+    /// Attach the telemetry plane: decision spans on the Governor track
+    /// of the Chrome trace, `governor.*` counters/gauges in the hub
+    /// (handles pre-registered here so the step path stays
+    /// allocation-free).
+    pub fn with_recorder(mut self, rec: Arc<Recorder>) -> Governor {
+        let hub = rec.metrics();
+        self.gauges = Some(Gauges {
+            steps: hub.metric("governor.steps"),
+            probes: hub.metric("governor.probes"),
+            keeps: hub.metric("governor.keeps"),
+            reverts: hub.metric("governor.reverts"),
+            bps_x1000: hub.metric("governor.bps_x1000"),
+            baseline_bps_x1000: hub.metric("governor.baseline_bps_x1000"),
+            credit: hub.metric("governor.knob.consumer_credit"),
+            prefetch_depth: hub.metric("governor.knob.prefetch_depth"),
+            io_depth: hub.metric("governor.knob.io_depth"),
+            active_workers: hub.metric("governor.knob.active_workers"),
+            steal_items: hub.metric("governor.knob.steal_items"),
+            epoch_pipeline: hub.metric("governor.knob.epoch_pipeline"),
+        });
+        self.recorder = Some(rec);
+        self
+    }
+
+    pub fn knobs(&self) -> &Arc<TunedKnobs> {
+        &self.knobs
+    }
+
+    /// `(baseline batches/s, baseline p99 s)` of the current plateau.
+    pub fn baseline(&self) -> (f64, f64) {
+        (self.baseline_bps, self.baseline_p99)
+    }
+
+    pub fn counts(&self) -> (u64, u64, u64) {
+        (self.probes, self.keeps, self.reverts)
+    }
+
+    pub fn phase_label(&self) -> &'static str {
+        match self.phase {
+            Phase::Warmup { .. } => "warmup",
+            Phase::Idle => "idle",
+            Phase::Probe { .. } => "probe",
+        }
+    }
+
+    /// Decision log in chronological order (allocates; snapshot path
+    /// only — the hot loop never calls this).
+    pub fn decisions(&self) -> Vec<Decision> {
+        let n = self.decisions.len();
+        let mut out = Vec::with_capacity(n);
+        if n == DECISION_LOG_CAP {
+            out.extend_from_slice(&self.decisions[self.decision_head..]);
+            out.extend_from_slice(&self.decisions[..self.decision_head]);
+        } else {
+            out.extend_from_slice(&self.decisions);
+        }
+        out
+    }
+
+    fn log(&mut self, d: Decision) {
+        if self.decisions.len() < DECISION_LOG_CAP {
+            self.decisions.push(d);
+        } else {
+            self.decisions[self.decision_head] = d;
+            self.decision_head = (self.decision_head + 1) % DECISION_LOG_CAP;
+        }
+        self.decisions_total += 1;
+    }
+
+    fn stage(knobs: &TunedKnobs, kind: Knob, v: usize) {
+        match kind {
+            Knob::Credit => knobs.stage_credit(v),
+            Knob::PrefetchDepth => knobs.stage_prefetch_depth(v),
+            Knob::IoDepth => knobs.stage_io_depth(v),
+            Knob::ActiveWorkers => knobs.stage_active_workers(v),
+            Knob::StealItems => knobs.stage_steal_items(v != 0),
+            Knob::EpochPipeline => knobs.stage_epoch_pipeline(v),
+        }
+    }
+
+    /// Stall attribution: pick the knob and direction the signals blame
+    /// most. Falls back to round-robin exploration (up preferred) so
+    /// plateaus still get probed.
+    fn pick(&mut self, sig: &Signals) -> Option<(usize, Dir)> {
+        let epoch_s = sig.epoch_s.max(1e-9);
+        let mean_batch = epoch_s / sig.batches.max(1) as f64;
+        let find = |states: &[KnobState], kind: Knob, dir: Dir| -> Option<usize> {
+            states
+                .iter()
+                .position(|s| s.kind == kind)
+                .filter(|&i| states[i].can(dir))
+        };
+        // 1. credit-blocked → widen the window
+        if sig.credit_blocked_s > 0.05 * epoch_s {
+            if let Some(i) = find(&self.states, Knob::Credit, Dir::Up) {
+                return Some((i, Dir::Up));
+            }
+        }
+        // 2. ring budget saturated → deepen it
+        if sig.ring_inflight_hwm * 10 >= self.knobs.io_depth().max(1) * 9
+            || sig.ring_queued > 0
+        {
+            if let Some(i) = find(&self.states, Knob::IoDepth, Dir::Up) {
+                return Some((i, Dir::Up));
+            }
+        }
+        // 3. prefetch tier missing demand → deepen the horizon
+        if sig.prefetch_hit_ratio >= 0.0 && sig.prefetch_hit_ratio < 0.85 {
+            if let Some(i) = find(&self.states, Knob::PrefetchDepth, Dir::Up) {
+                return Some((i, Dir::Up));
+            }
+        }
+        // 4. workers idle at drained seams → pipeline the boundary
+        if sig.seam_idle_s > 0.03 * epoch_s && self.knobs.epoch_pipeline() == 0 {
+            if let Some(i) = find(&self.states, Knob::EpochPipeline, Dir::Up) {
+                return Some((i, Dir::Up));
+            }
+        }
+        // 5. straggler tail → item-granular stealing
+        if !self.knobs.steal_items()
+            && (sig.p99_batch_s > 3.0 * mean_batch || sig.reorder_hwm >= 4)
+        {
+            if let Some(i) = find(&self.states, Knob::StealItems, Dir::Up) {
+                return Some((i, Dir::Up));
+            }
+        }
+        // 6. decode-bound, storage quiet → bench a worker
+        if sig.decode_s > 4.0 * sig.storage_wait_s && sig.decode_s > 0.0 {
+            if let Some(i) = find(&self.states, Knob::ActiveWorkers, Dir::Down) {
+                return Some((i, Dir::Down));
+            }
+        }
+        // 7. exploration: round-robin over whatever can still move
+        for off in 0..self.states.len() {
+            let i = (self.rr_cursor + off) % self.states.len();
+            for dir in [Dir::Up, Dir::Down] {
+                if self.states[i].can(dir) {
+                    self.rr_cursor = (i + 1) % self.states.len();
+                    return Some((i, dir));
+                }
+            }
+        }
+        None
+    }
+
+    fn start_probe(&mut self, sig: &Signals, bps: f64) {
+        let Some((i, dir)) = self.pick(sig) else {
+            self.phase = Phase::Idle;
+            return;
+        };
+        let st = &mut self.states[i];
+        let prev_idx = st.idx;
+        st.idx = match dir {
+            Dir::Up => st.idx + 1,
+            Dir::Down => st.idx - 1,
+        };
+        let (kind, from, to) = (st.kind, st.values[prev_idx], st.value());
+        Self::stage(&self.knobs, kind, to);
+        self.probes += 1;
+        self.log(Decision {
+            epoch: sig.epoch,
+            knob: kind,
+            action: Action::Probe,
+            from,
+            to,
+            bps,
+            p99_s: sig.p99_batch_s,
+        });
+        self.phase = Phase::Probe {
+            state: i,
+            prev_idx,
+            settle_left: self.cfg.settle_epochs.max(1),
+        };
+    }
+
+    /// One control-loop step: feed the finished epoch's signals,
+    /// receive (via the staged knob cells) at most one bounded change
+    /// for the next epoch. Allocation-free after construction.
+    pub fn end_epoch(&mut self, sig: &Signals) {
+        let t0 = self.recorder.as_ref().map(|r| r.now());
+        self.epochs_seen += 1;
+        let bps = sig.batches as f64 / sig.epoch_s.max(1e-9);
+        for st in &mut self.states {
+            st.cooldown = st.cooldown.saturating_sub(1);
+        }
+        match self.phase {
+            Phase::Warmup { left } => {
+                self.baseline_bps = bps;
+                self.baseline_p99 = sig.p99_batch_s;
+                if left > 1 {
+                    self.phase = Phase::Warmup { left: left - 1 };
+                } else {
+                    self.start_probe(sig, bps);
+                }
+            }
+            Phase::Idle => {
+                // drift the baseline with the plateau
+                self.baseline_bps = 0.5 * self.baseline_bps + 0.5 * bps;
+                if sig.p99_batch_s > 0.0 {
+                    self.baseline_p99 = 0.5 * self.baseline_p99 + 0.5 * sig.p99_batch_s;
+                }
+                self.start_probe(sig, bps);
+            }
+            Phase::Probe { state, prev_idx, settle_left } => {
+                if settle_left > 1 {
+                    self.phase = Phase::Probe {
+                        state,
+                        prev_idx,
+                        settle_left: settle_left - 1,
+                    };
+                } else {
+                    let improved = bps > self.baseline_bps * (1.0 + self.cfg.keep_margin);
+                    let p99_ok = self.baseline_p99 <= 0.0
+                        || sig.p99_batch_s <= 0.0
+                        || sig.p99_batch_s
+                            <= self.baseline_p99 * (1.0 + self.cfg.p99_guard);
+                    let st = &mut self.states[state];
+                    if improved && p99_ok {
+                        let (kind, from, to) =
+                            (st.kind, st.values[prev_idx], st.value());
+                        self.baseline_bps = bps;
+                        if sig.p99_batch_s > 0.0 {
+                            self.baseline_p99 = sig.p99_batch_s;
+                        }
+                        self.keeps += 1;
+                        self.log(Decision {
+                            epoch: sig.epoch,
+                            knob: kind,
+                            action: Action::Keep,
+                            from,
+                            to,
+                            bps,
+                            p99_s: sig.p99_batch_s,
+                        });
+                    } else {
+                        let (kind, from) = (st.kind, st.value());
+                        st.idx = prev_idx;
+                        st.cooldown = self.cfg.cooldown_epochs;
+                        let to = st.value();
+                        Self::stage(&self.knobs, kind, to);
+                        self.reverts += 1;
+                        self.log(Decision {
+                            epoch: sig.epoch,
+                            knob: kind,
+                            action: Action::Revert,
+                            from,
+                            to,
+                            bps,
+                            p99_s: sig.p99_batch_s,
+                        });
+                    }
+                    self.start_probe(sig, bps);
+                }
+            }
+        }
+        if let Some(g) = &self.gauges {
+            g.steps.inc();
+            g.probes.set(self.probes);
+            g.keeps.set(self.keeps);
+            g.reverts.set(self.reverts);
+            g.bps_x1000.set((bps * 1000.0) as u64);
+            g.baseline_bps_x1000.set((self.baseline_bps * 1000.0) as u64);
+            g.credit.set(self.knobs.staged_credit() as u64);
+            g.prefetch_depth.set(self.knobs.staged_prefetch_depth() as u64);
+            g.io_depth.set(self.knobs.staged_io_depth() as u64);
+            g.active_workers.set(self.knobs.staged_active_workers() as u64);
+            g.steal_items.set(self.knobs.staged_steal_items() as u64);
+            g.epoch_pipeline.set(self.knobs.staged_epoch_pipeline() as u64);
+        }
+        if let (Some(rec), Some(t0)) = (&self.recorder, t0) {
+            rec.record_tagged(
+                names::GOVERNOR_STEP,
+                GOVERNOR_WORKER,
+                self.decisions_total as i64,
+                sig.epoch as i64,
+                (bps * 1000.0) as i64,
+                t0,
+                rec.now(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn knobs() -> Arc<TunedKnobs> {
+        TunedKnobs::from_config(&DataloaderConfig {
+            num_workers: 4,
+            arena_slabs: 16,
+            work_stealing: true,
+            consumer_credit: 4,
+            io_depth: 8,
+            prefetch_depth: 8,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn ladder_includes_bounds_and_init() {
+        assert_eq!(ladder(6, 2, 16), vec![2, 4, 6, 8, 16]);
+        assert_eq!(ladder(2, 2, 2), vec![2]);
+        assert_eq!(ladder(0, 4, 64), vec![4, 8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn probe_stages_but_live_waits_for_commit() {
+        let k = knobs();
+        let mut gov = Governor::new(
+            GovernorConfig::default(),
+            k.clone(),
+            KnobBounds {
+                credit: Some((2, 12)),
+                prefetch_depth: None,
+                io_depth: None,
+                active_workers: None,
+                steal_items: false,
+                epoch_pipeline: None,
+            },
+        );
+        // warmup epoch, then a credit-blocked epoch attributes to credit
+        let sig = Signals {
+            batches: 10,
+            epoch_s: 1.0,
+            credit_blocked_s: 0.5,
+            ..Default::default()
+        };
+        gov.end_epoch(&sig); // warmup → probes immediately after baseline
+        assert_eq!(gov.counts().0, 1, "one probe staged");
+        assert_eq!(k.staged_credit(), 8, "credit widened 4 → 8");
+        assert_eq!(k.credit(), 4, "live untouched until the seam commit");
+        k.commit();
+        assert_eq!(k.credit(), 8);
+    }
+
+    #[test]
+    fn keep_and_revert_move_the_baseline_and_cooldown() {
+        let k = knobs();
+        let mut gov = Governor::new(
+            GovernorConfig { cooldown_epochs: 3, ..Default::default() },
+            k.clone(),
+            KnobBounds {
+                credit: Some((2, 12)),
+                prefetch_depth: None,
+                io_depth: None,
+                active_workers: None,
+                steal_items: false,
+                epoch_pipeline: None,
+            },
+        );
+        let blocked = |bps: f64| Signals {
+            batches: 100,
+            epoch_s: 100.0 / bps,
+            credit_blocked_s: 0.5 * 100.0 / bps,
+            ..Default::default()
+        };
+        gov.end_epoch(&blocked(10.0)); // warmup + probe 4→8
+        k.commit();
+        gov.end_epoch(&blocked(12.0)); // +20% → keep, probe 8→12
+        assert_eq!(gov.counts().1, 1, "kept");
+        k.commit();
+        gov.end_epoch(&blocked(12.1)); // < margin → revert to 8
+        assert_eq!(gov.counts().2, 1, "reverted");
+        assert_eq!(k.staged_credit(), 8);
+        // knob on cooldown: the next pick finds nothing else to move
+        // (only credit is tunable), so no probe starts
+        let before = gov.counts().0;
+        gov.end_epoch(&blocked(12.0));
+        assert_eq!(gov.counts().0, before, "cooldown blocks re-probe");
+    }
+}

@@ -39,6 +39,7 @@ pub mod dataloader;
 pub mod dataset;
 pub mod device;
 pub mod gil;
+pub mod governor;
 pub mod prefetch;
 pub mod runtime;
 pub mod shards;

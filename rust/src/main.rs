@@ -104,6 +104,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         .opt("set", "", "comma-separated overrides k=v,k=v")
         .opt("trace", "", "write a Chrome trace_event JSON (Perfetto-loadable)")
         .opt("metrics", "", "write per-epoch metrics snapshots (JSONL)")
+        .flag("autotune", "enable the Governor: hill-climb loader knobs at epoch seams")
         .parse(argv)?;
     let mut cfg = if p.get("config").is_empty() {
         ExperimentConfig::default()
@@ -155,23 +156,38 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         epochs: cfg.trainer.epochs,
         seed: cfg.seed,
         span_capacity: cfg.span_capacity,
+        autotune: cfg.autotune || p.flag("autotune"),
     };
     let rig = cdl::bench::rig::build(&spec)?;
     let metrics_path = p.get("metrics").to_string();
+    let want_hook = !metrics_path.is_empty() || rig.autotune.is_some();
     let mut metric_lines: Vec<String> = Vec::new();
-    let mut on_epoch_end =
-        |epoch: usize| {
+    let mut on_epoch_end = |epoch: usize| {
+        // tick first so the snapshot sees this epoch's decision
+        cdl::bench::rig::autotune_tick(&rig, epoch);
+        if !metrics_path.is_empty() {
             metric_lines
                 .push(cdl::bench::rig::metrics_snapshot(&rig, epoch).to_string());
-        };
+        }
+    };
     let report = trainer::train_observed(
         &rig.dataloader,
         &rig.device,
         &rig.trainer_cfg,
         rig.recorder.clone(),
-        if metrics_path.is_empty() { None } else { Some(&mut on_epoch_end) },
+        if want_hook { Some(&mut on_epoch_end) } else { None },
     )?;
     println!("{}", report.summary());
+    if let Some(h) = &rig.autotune {
+        let h = h.lock().unwrap();
+        let (probes, keeps, reverts) = h.governor.counts();
+        let (bps, _) = h.governor.baseline();
+        println!(
+            "governor: {probes} probes ({keeps} kept, {reverts} reverted), \
+             baseline {bps:.1} batches/s, phase {}",
+            h.governor.phase_label()
+        );
+    }
     if let Some(a) = rig.dataloader.arena() {
         let s = a.stats();
         println!(
@@ -307,6 +323,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         epochs: 1,
         seed: 7,
         span_capacity: 0,
+        autotune: false,
     };
     let store = cdl::bench::rig::build_store(&spec)?.store;
     let ds: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(

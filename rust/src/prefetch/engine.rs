@@ -21,7 +21,7 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -157,6 +157,10 @@ pub(super) struct Shared {
     pub cv: Condvar,
     pub counters: Counters,
     pub cfg: PrefetchConfig,
+    /// live readahead depth in items — seeded from `cfg.depth`,
+    /// resizable at epoch seams (the Governor's `prefetch_depth`
+    /// applier); every windowing decision reads this, never `cfg.depth`
+    pub depth: AtomicUsize,
     pub recorder: Mutex<Option<Arc<Recorder>>>,
     /// when set, speculative fetches ride the shared [`IoRing`] — its
     /// executor, `io_depth` semaphore and in-flight gauges — instead of
@@ -168,6 +172,10 @@ pub(super) struct Shared {
 impl Shared {
     pub fn recorder(&self) -> Option<Arc<Recorder>> {
         self.recorder.lock().unwrap().clone()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
     }
 }
 
@@ -196,7 +204,7 @@ fn pick_next(st: &mut State, shared: &Shared, aged: bool) -> Pick {
             shared.counters.stale.fetch_add(1, Ordering::Relaxed);
             continue;
         }
-        if pos >= st.cursor + shared.cfg.depth {
+        if pos >= st.cursor + shared.depth() {
             return Pick::Idle; // beyond the readahead window
         }
         st.queue.pop();
@@ -308,6 +316,7 @@ mod tests {
             state: Mutex::new(State::new(&cfg)),
             cv: Condvar::new(),
             counters: Counters::default(),
+            depth: AtomicUsize::new(cfg.depth),
             cfg,
             recorder: Mutex::new(None),
             ring: Mutex::new(None),

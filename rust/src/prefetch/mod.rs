@@ -114,6 +114,7 @@ impl PrefetchStore {
             state: Mutex::new(engine::State::new(&cfg)),
             cv: std::sync::Condvar::new(),
             counters: engine::Counters::default(),
+            depth: std::sync::atomic::AtomicUsize::new(cfg.depth),
             cfg: cfg.clone(),
             recorder: Mutex::new(None),
             ring: Mutex::new(None),
@@ -142,6 +143,21 @@ impl PrefetchStore {
 
     pub fn config(&self) -> &PrefetchConfig {
         &self.shared.cfg
+    }
+
+    /// Live readahead depth (items). Seeded from `cfg.depth`.
+    pub fn depth(&self) -> usize {
+        self.shared.depth()
+    }
+
+    /// Resize the readahead window live (the Governor's epoch-seam
+    /// `prefetch_depth` applier). Deepening lets the scheduler issue
+    /// further ahead on its next pass; narrowing just stops new issues
+    /// past the tighter horizon — in-flight fetches are unaffected.
+    pub fn set_depth(&self, depth: usize) {
+        self.shared.depth.store(depth, std::sync::atomic::Ordering::Relaxed);
+        // the scheduler may be parked Idle against the old horizon
+        self.shared.cv.notify_all();
     }
 
     /// Engine counter snapshot (cheap; atomics).
@@ -276,7 +292,7 @@ impl ObjectStore for PrefetchStore {
         let recorder = sh.recorder();
 
         let mut st = sh.state.lock().unwrap();
-        Self::advance_cursor(&mut st, key, sh.cfg.depth);
+        Self::advance_cursor(&mut st, key, sh.depth());
         if let Some(hit) = st.hot.get(key) {
             sh.counters.hot_hits.fetch_add(1, Ordering::Relaxed);
             drop(st);
@@ -327,7 +343,7 @@ impl ObjectStore for PrefetchStore {
             sh.counters.gets.fetch_add(1, Ordering::Relaxed);
             {
                 let mut st = sh.state.lock().unwrap();
-                Self::advance_cursor(&mut st, key, sh.cfg.depth);
+                Self::advance_cursor(&mut st, key, sh.depth());
             }
             sh.cv.notify_all();
 
@@ -395,7 +411,7 @@ impl ObjectStore for PrefetchStore {
         sh.counters.gets.fetch_add(1, Ordering::Relaxed);
 
         let mut st = sh.state.lock().unwrap();
-        Self::advance_cursor(&mut st, key, sh.cfg.depth);
+        Self::advance_cursor(&mut st, key, sh.depth());
         // hot hit (or an in-flight speculative fetch about to become
         // one): serve by copy-out of the tier's shared Bytes
         let hit = if let Some(hit) = st.hot.get(key) {
@@ -455,7 +471,7 @@ impl ObjectStore for PrefetchStore {
         let sh = &self.shared;
         sh.counters.gets.fetch_add(1, Ordering::Relaxed);
         let mut st = sh.state.lock().unwrap();
-        Self::advance_cursor(&mut st, key, sh.cfg.depth);
+        Self::advance_cursor(&mut st, key, sh.depth());
         let hit = if let Some(hit) = st.hot.get(key) {
             sh.counters.hot_hits.fetch_add(1, Ordering::Relaxed);
             Some(hit)
@@ -517,7 +533,7 @@ impl ObjectStore for PrefetchStore {
             sh.counters.gets.fetch_add(1, Ordering::Relaxed);
             let hit = {
                 let mut st = sh.state.lock().unwrap();
-                Self::advance_cursor(&mut st, &op.key, sh.cfg.depth);
+                Self::advance_cursor(&mut st, &op.key, sh.depth());
                 moved = true;
                 st.hot.get(&op.key)
             };

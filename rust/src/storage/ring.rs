@@ -26,7 +26,7 @@
 //! of how many reads the wave carries (`tests/test_alloc.rs` pins this).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
@@ -237,7 +237,7 @@ pub struct IoRing {
     store: Arc<dyn ObjectStore>,
     rt: Arc<Runtime>,
     depth: Arc<Semaphore>,
-    io_depth: usize,
+    io_depth: AtomicUsize,
     stats: Arc<RingStats>,
     recorder: Mutex<Option<Arc<Recorder>>>,
 }
@@ -250,7 +250,7 @@ impl IoRing {
             store,
             rt: Runtime::new(1),
             depth: Semaphore::new(io_depth),
-            io_depth,
+            io_depth: AtomicUsize::new(io_depth),
             stats: Arc::new(RingStats::default()),
             recorder: Mutex::new(None),
         })
@@ -261,7 +261,21 @@ impl IoRing {
     }
 
     pub fn io_depth(&self) -> usize {
-        self.io_depth
+        self.io_depth.load(Ordering::Relaxed)
+    }
+
+    /// Resize the in-flight budget live (the Governor's epoch-seam
+    /// `io_depth` applier). Growing frees permits immediately; shrinking
+    /// books the shortfall as semaphore debt that in-flight ops repay
+    /// as they land — submissions already past the gate are unaffected.
+    pub fn set_depth(&self, depth: usize) {
+        let depth = depth.max(1);
+        let prev = self.io_depth.swap(depth, Ordering::Relaxed);
+        if depth > prev {
+            self.depth.add_permits(depth - prev);
+        } else if depth < prev {
+            self.depth.remove_permits(prev - depth);
+        }
     }
 
     pub fn store(&self) -> &Arc<dyn ObjectStore> {

@@ -54,10 +54,15 @@ pub mod names {
     pub const PREFETCH_WAIT: &str = "prefetch_wait";
     /// planner computed + published one epoch plan
     pub const PLAN_PUBLISH: &str = "plan_publish";
+    /// planner unpublished mispredicted speculative plans (value =
+    /// tickets withdrawn from the sink)
+    pub const PLAN_REVOKE: &str = "plan_revoke";
     /// one submitted I/O batch, submit → last completion reaped
     pub const RING_BATCH: &str = "ring_batch";
     /// instant marker: the consumer crossed an epoch boundary
     pub const EPOCH_SEAM: &str = "epoch_seam";
+    /// one Governor control-loop step: signals in → probe/keep/revert out
+    pub const GOVERNOR_STEP: &str = "governor_step";
     // Lightning lanes (Fig 17)
     pub const ADVANCE: &str = "advance";
     pub const PRERUN: &str = "prerun";
@@ -75,6 +80,11 @@ pub const PLANNER_WORKER: u32 = u32::MAX - 1;
 /// submissions come from many worker threads but multiplex through one
 /// ring executor, so they share one named track.
 pub const RING_WORKER: u32 = u32::MAX - 2;
+
+/// Synthetic worker id for Governor decision spans
+/// (`names::GOVERNOR_STEP`): the autotuner runs at epoch seams on the
+/// consumer thread but its control-loop steps get their own track.
+pub const GOVERNOR_WORKER: u32 = u32::MAX - 3;
 
 // ---------------------------------------------------------------------------
 // GPU utilization sampling (Table 3 metrics)

@@ -228,6 +228,60 @@ fn span_recording_and_metric_updates_are_zero_alloc() {
     assert!(rec.len() <= rec.capacity());
 }
 
+#[test]
+fn governor_step_and_seam_commit_are_zero_alloc_in_steady_state() {
+    // the Governor rides inside the zero-alloc steady state: one
+    // end_epoch is stall attribution over a Copy Signals struct, a
+    // push into the preallocated decision ring, pre-registered metric
+    // handle updates and one lock-free span; the seam commit is six
+    // atomic swaps plus the (empty here) applier list
+    use cdl::governor::{Governor, GovernorConfig, KnobBounds, Signals, TunedKnobs};
+    let cfg = DataloaderConfig {
+        num_workers: 4,
+        arena_slabs: 16,
+        work_stealing: true,
+        consumer_credit: 4,
+        prefetch_depth: 8,
+        io_depth: 8,
+        ..Default::default()
+    };
+    let knobs = TunedKnobs::from_config(&cfg);
+    let bounds = KnobBounds::derive(&cfg, true, true, true);
+    let mut gov = Governor::new(GovernorConfig::default(), knobs.clone(), bounds)
+        .with_recorder(cdl::telemetry::Recorder::new());
+    let sig = |epoch: usize| Signals {
+        epoch,
+        batches: 100,
+        // alternating objective: keeps AND reverts both exercised
+        epoch_s: if epoch % 2 == 0 { 10.0 } else { 8.0 },
+        credit_blocked_s: 0.4,
+        prefetch_hit_ratio: 0.5,
+        ring_queued: 1,
+        ..Default::default()
+    };
+    // warm-up: baseline formation, first probes
+    for epoch in 0..4 {
+        gov.end_epoch(&sig(epoch));
+        knobs.commit();
+    }
+    let before = alloc::thread_counters();
+    for epoch in 4..36 {
+        gov.end_epoch(&sig(epoch));
+        knobs.commit();
+    }
+    let delta = alloc::thread_counters().since(before);
+    assert_eq!(
+        delta.allocs, 0,
+        "steady-state Governor step/commit allocated: {delta:?}"
+    );
+    assert_eq!(
+        delta.frees, 0,
+        "steady-state Governor step/commit freed: {delta:?}"
+    );
+    let (probes, _, _) = gov.counts();
+    assert!(probes > 4, "the measured window really probed ({probes})");
+}
+
 #[cfg(unix)]
 #[test]
 fn dirstore_fd_cache_holds_zero_alloc_reads_past_the_handle_cap() {

@@ -1,0 +1,325 @@
+//! Governor control-loop correctness: deterministic convergence on a
+//! simulated cost model, hysteresis under a noisy objective (no
+//! keep-churn, no oscillation), hard bound enforcement along every
+//! knob ladder, byte-identity of an autotuned run against a fixed run
+//! across epoch seams, and the plan-revocation path — a
+//! non-sequential `epoch()` request unpublishes the mispredicted
+//! speculative plan instead of tearing the workers down.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cdl::data::synth::{generate_corpus, CorpusSpec};
+use cdl::data::AugmentConfig;
+use cdl::dataloader::{Batch, Dataloader, DataloaderConfig, FetchImpl};
+use cdl::dataset::{Dataset, ImageFolderDataset};
+use cdl::governor::{
+    Action, Governor, GovernorConfig, Knob, KnobBounds, Signals, TunedKnobs,
+};
+use cdl::storage::{MemStore, ObjectStore};
+use cdl::telemetry::{names, Recorder};
+
+fn locked_except_prefetch(max: usize) -> KnobBounds {
+    KnobBounds { prefetch_depth: Some((4, max)), ..KnobBounds::locked() }
+}
+
+/// Simulated cost model: batches/s rises with `prefetch_depth` up to a
+/// knee at 64 and is flat past it. The Governor must climb the ladder
+/// to the knee, then hold there (probing past it reverts).
+#[test]
+fn governor_converges_on_a_simulated_cost_model() {
+    let cfg = DataloaderConfig { prefetch_depth: 8, ..Default::default() };
+    let knobs = TunedKnobs::from_config(&cfg);
+    let mut gov = Governor::new(
+        GovernorConfig::default(),
+        knobs.clone(),
+        locked_except_prefetch(128),
+    );
+    let model_bps = |pf: usize| 10.0 + 5.0 * ((pf.min(64) as f64 / 8.0).log2());
+    for epoch in 0..8 {
+        knobs.commit(); // the epoch seam
+        let pf = knobs.prefetch_depth();
+        let bps = model_bps(pf);
+        gov.end_epoch(&Signals {
+            epoch,
+            batches: 100,
+            epoch_s: 100.0 / bps,
+            // tier hit ratio saturates at the knee, directing probes
+            prefetch_hit_ratio: (pf as f64 / 64.0).min(1.0),
+            ..Default::default()
+        });
+    }
+    knobs.commit();
+    assert_eq!(knobs.prefetch_depth(), 64, "converged to the knee");
+    let (probes, keeps, reverts) = gov.counts();
+    assert_eq!(keeps, 3, "8 → 16 → 32 → 64 all kept");
+    assert!(reverts >= 1, "the probe past the knee reverted");
+    assert!(probes >= 4);
+    let (bps, _) = gov.baseline();
+    assert!(bps > 24.0, "baseline tracked the optimum, got {bps}");
+}
+
+/// A flat objective with deterministic ±2% noise (inside the 3% keep
+/// margin) must never produce a keep: every probe reverts back to the
+/// starting value, so the pipeline does not churn on noise.
+#[test]
+fn noisy_plateau_never_keeps_and_never_drifts() {
+    let cfg = DataloaderConfig {
+        num_workers: 4,
+        arena_slabs: 16,
+        consumer_credit: 4,
+        ..Default::default()
+    };
+    let knobs = TunedKnobs::from_config(&cfg);
+    let mut gov = Governor::new(
+        GovernorConfig::default(),
+        knobs.clone(),
+        KnobBounds { credit: Some((2, 12)), ..KnobBounds::locked() },
+    );
+    // 17 epochs: probes fire every 3rd epoch (revert → 2-epoch
+    // cooldown), so the last step is a decided revert, not an
+    // in-flight probe
+    for epoch in 0..17 {
+        knobs.commit();
+        let noise = if epoch % 2 == 0 { 1.02 } else { 0.98 };
+        let bps = 20.0 * noise;
+        gov.end_epoch(&Signals {
+            epoch,
+            batches: 100,
+            epoch_s: 100.0 / bps,
+            ..Default::default()
+        });
+    }
+    let (probes, keeps, reverts) = gov.counts();
+    assert_eq!(keeps, 0, "noise below the margin must not be kept");
+    assert!(probes >= 2, "cooldown still lets the plateau be re-probed");
+    assert_eq!(probes, reverts, "every probe reverted");
+    for d in gov.decisions() {
+        assert_ne!(d.action, Action::Keep);
+        if d.action == Action::Revert {
+            assert_eq!(d.to, 4, "reverts restore the starting credit");
+        }
+    }
+    knobs.commit();
+    assert_eq!(knobs.credit(), 4, "live value never drifted");
+}
+
+/// Staged values must stay inside the derived bounds on every epoch,
+/// whatever the signals claim — the arena-budget credit cap, the
+/// ladder ends, the worker count, the pipeline depth cap.
+#[test]
+fn staged_values_stay_within_bounds_under_adversarial_signals() {
+    let cfg = DataloaderConfig {
+        num_workers: 4,
+        arena_slabs: 16,
+        work_stealing: true,
+        consumer_credit: 4,
+        prefetch_depth: 8,
+        io_depth: 8,
+        ..Default::default()
+    };
+    let knobs = TunedKnobs::from_config(&cfg);
+    let bounds = KnobBounds::derive(&cfg, true, true, true);
+    let (cmin, cmax) = bounds.credit.unwrap();
+    let mut gov = Governor::new(GovernorConfig::default(), knobs.clone(), bounds);
+    for epoch in 0..40 {
+        knobs.commit();
+        // rising objective → every probe keeps, walking each ladder to
+        // its end; signals rotate through every attribution rule
+        let bps = 10.0 + epoch as f64;
+        let epoch_s = 100.0 / bps;
+        let mut sig = Signals {
+            epoch,
+            batches: 100,
+            epoch_s,
+            p99_batch_s: 0.0,
+            ..Default::default()
+        };
+        match epoch % 6 {
+            0 => sig.credit_blocked_s = 0.5 * epoch_s,
+            1 => sig.ring_queued = 3,
+            2 => sig.prefetch_hit_ratio = 0.1,
+            3 => sig.seam_idle_s = 0.5 * epoch_s,
+            4 => {
+                sig.reorder_hwm = 6;
+                sig.p99_batch_s = epoch_s; // ≫ mean batch
+            }
+            _ => {
+                sig.decode_s = 10.0;
+                sig.storage_wait_s = 0.1;
+            }
+        }
+        gov.end_epoch(&sig);
+        let credit = knobs.staged_credit();
+        assert!(
+            credit == 0 || (cmin..=cmax).contains(&credit),
+            "epoch {epoch}: staged credit {credit} outside [{cmin}, {cmax}] ∪ {{0}}"
+        );
+        let pf = knobs.staged_prefetch_depth();
+        assert!((4..=256).contains(&pf), "epoch {epoch}: prefetch {pf}");
+        let io = knobs.staged_io_depth();
+        assert!((4..=256).contains(&io), "epoch {epoch}: io_depth {io}");
+        let aw = knobs.staged_active_workers();
+        assert!((1..=4).contains(&aw), "epoch {epoch}: active_workers {aw}");
+        assert!(knobs.staged_epoch_pipeline() <= 1, "epoch {epoch}: pipeline");
+    }
+    let (probes, keeps, _) = gov.counts();
+    assert!(probes >= 10, "adversarial signals kept probing, got {probes}");
+    assert!(keeps >= 5, "rising objective kept most probes, got {keeps}");
+}
+
+const ITEMS: usize = 33;
+const BATCH: usize = 8;
+
+fn dataset() -> Arc<dyn Dataset> {
+    let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::new("m"));
+    generate_corpus(&mem, &CorpusSpec::tiny(ITEMS)).unwrap();
+    Arc::new(ImageFolderDataset::new(
+        mem,
+        AugmentConfig { crop: 16, ..Default::default() },
+    ))
+}
+
+fn loader(ds: &Arc<dyn Dataset>, epoch_pipeline: usize) -> Dataloader {
+    Dataloader::new(
+        ds.clone(),
+        DataloaderConfig {
+            batch_size: BATCH,
+            num_workers: 3,
+            fetch_impl: FetchImpl::Threaded,
+            num_fetch_workers: 4,
+            arena_slabs: 12,
+            work_stealing: true,
+            steal_items: false,
+            consumer_credit: 4,
+            epoch_pipeline,
+            spawn_cost_override: Some(Duration::ZERO),
+            ..Default::default()
+        },
+        Recorder::new(),
+    )
+}
+
+fn assert_batches_identical(fixed: &[Batch], tuned: &[Batch], ctx: &str) {
+    assert_eq!(fixed.len(), tuned.len(), "{ctx}: batch count");
+    for (a, b) in fixed.iter().zip(tuned.iter()) {
+        assert_eq!(a.id, b.id, "{ctx}");
+        assert_eq!(a.images.data, b.images.data, "{ctx}: batch {} bytes", a.id);
+        assert_eq!(a.labels, b.labels, "{ctx}: batch {}", a.id);
+        assert_eq!(a.indices, b.indices, "{ctx}: batch {}", a.id);
+    }
+}
+
+/// The autotuned loader — with the Governor widening credit, enabling
+/// item stealing, and turning on epoch pipelining across successive
+/// seams — must deliver byte-identical batches to a loader whose knobs
+/// never move. Knob changes apply only at seams, so the epoch's
+/// content and order cannot depend on them.
+#[test]
+fn autotuned_run_is_byte_identical_to_fixed_across_seams() {
+    let ds = dataset();
+    let fixed = loader(&ds, 0);
+    let tuned = loader(&ds, 0);
+    let knobs = tuned.knobs().clone();
+    let mut gov = Governor::new(
+        GovernorConfig::default(),
+        knobs.clone(),
+        KnobBounds {
+            credit: Some((2, 9)),
+            steal_items: true,
+            epoch_pipeline: Some(1),
+            ..KnobBounds::locked()
+        },
+    );
+    for epoch in 0..5 {
+        let a: Vec<Batch> = fixed.epoch(epoch).collect();
+        let b: Vec<Batch> = tuned.epoch(epoch).collect();
+        assert_batches_identical(&a, &b, &format!("epoch {epoch}"));
+        for batch in a.into_iter().chain(b) {
+            batch.recycle();
+        }
+        // hand-crafted signals with a rising objective: every probe is
+        // kept, so the tuned loader's knob set really changes between
+        // consecutive epochs
+        let bps = 10.0 + 2.0 * epoch as f64;
+        let epoch_s = 100.0 / bps;
+        let mut sig =
+            Signals { epoch, batches: 100, epoch_s, ..Default::default() };
+        match epoch {
+            0 => sig.credit_blocked_s = 0.5 * epoch_s,
+            1 => sig.reorder_hwm = 6,
+            _ => sig.seam_idle_s = 0.5 * epoch_s,
+        }
+        gov.end_epoch(&sig);
+    }
+    let (_, keeps, _) = gov.counts();
+    assert!(keeps >= 2, "the tuned run must actually have moved knobs");
+    let moved = knobs.credit() != 4
+        || knobs.steal_items()
+        || knobs.epoch_pipeline() != 0;
+    assert!(moved, "at least one live knob changed across the seams");
+    assert!(
+        gov.decisions().iter().any(|d| d.action == Action::Keep
+            && (d.knob == Knob::Credit
+                || d.knob == Knob::StealItems
+                || d.knob == Knob::EpochPipeline)),
+        "kept decisions recorded in the log"
+    );
+}
+
+/// Non-sequential `epoch()` under pipelining: the mispredicted
+/// speculative plan is revoked in place — no worker teardown/respawn —
+/// and the requested epoch's batches are byte-identical to a fresh
+/// loader asked for the same epoch.
+#[test]
+fn nonsequential_epoch_revokes_plans_without_respawning_workers() {
+    let ds = dataset();
+    let dl = loader(&ds, 1);
+    for epoch in 0..2 {
+        for b in dl.epoch(epoch) {
+            b.recycle();
+        }
+    }
+    // wait for a worker to pre-publish the predicted epoch 2
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while dl.plans_published() <= 2 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(dl.plans_published() > 2, "pipelining never engaged");
+    let spawns = || {
+        dl.recorder()
+            .snapshot()
+            .iter()
+            .filter(|s| s.name == names::WORKER_SPAWN)
+            .count()
+    };
+    let spawned_before = spawns();
+    assert!(spawned_before > 0, "workers spawned during epochs 0-1");
+    assert_eq!(dl.plans_revoked(), 0);
+
+    // jump: the pre-published plan predicted epoch 2, the consumer
+    // asks for epoch 5
+    let jumped: Vec<Batch> = dl.epoch(5).collect();
+    assert!(dl.plans_revoked() > 0, "the mispredicted plan was revoked");
+    assert_eq!(
+        spawns(),
+        spawned_before,
+        "revocation must not tear workers down"
+    );
+    assert!(
+        dl.recorder().snapshot().iter().any(|s| s.name == names::PLAN_REVOKE),
+        "revocation recorded as a span"
+    );
+
+    // the jumped epoch is byte-identical to a fresh loader's epoch 5
+    let fresh = loader(&ds, 1);
+    let reference: Vec<Batch> = fresh.epoch(5).collect();
+    assert_batches_identical(&reference, &jumped, "epoch 5 after jump");
+    for batch in jumped.into_iter().chain(reference) {
+        batch.recycle();
+    }
+
+    // the pipeline still works sequentially after the jump
+    let n = dl.epoch(6).map(|b| b.recycle()).count();
+    assert_eq!(n, ITEMS.div_ceil(BATCH), "epoch 6 drains normally");
+}
