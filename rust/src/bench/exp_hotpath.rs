@@ -57,6 +57,13 @@
 //!   strictly beat the defaults on s3 or lands below 0.85× hand-tuned
 //!   batches/s on any profile — the table that keeps the control loop
 //!   honest.
+//! * **Chaos gate** — the same s3 rig fault-free, under seeded `flaky`
+//!   faults behind the resilience layer (retry budget 4), and under
+//!   the identical faults bare. Delivered batches are digest-compared:
+//!   the resilient arm must match the clean arm byte for byte with
+//!   zero exhausted ops and a nonzero retry count, and the bare arm
+//!   must demonstrably degrade (lost batches or a worse p99 than the
+//!   resilient arm) — the run *fails* otherwise.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -111,6 +118,7 @@ const HIGHER_IS_BETTER: &[&str] = &[
     "autotune.s3.autotuned_bps",
     "autotune.s3.speedup",
     "autotune.min_vs_hand",
+    "fault.s3.resilient_batches",
 ];
 /// Default relative tolerance for a freshly written baseline: the gate
 /// exists to catch order-of-magnitude breakage, not runner jitter.
@@ -1103,6 +1111,169 @@ pub fn autotune_table(scale: Scale) -> Result<(Table, f64, f64, f64)> {
     Ok((t, s3_defaults_bps, s3_autotuned_bps, min_vs_hand))
 }
 
+/// One chaos-gate arm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ChaosArm {
+    /// no faults, no resilience — the byte/batch-count reference
+    Clean,
+    /// flaky faults behind the resilience layer (retry budget 4)
+    Resilient,
+    /// the same flaky faults with nothing between them and the loader
+    Bare,
+}
+
+impl ChaosArm {
+    fn label(&self) -> &'static str {
+        match self {
+            ChaosArm::Clean => "clean",
+            ChaosArm::Resilient => "resilient",
+            ChaosArm::Bare => "bare",
+        }
+    }
+}
+
+/// Retry budget of the chaos gate's resilient arm: flaky's
+/// `max_consecutive = 2` cap means any budget ≥ 3 attempts drains.
+pub const CHAOS_RETRY_MAX: u32 = 4;
+
+fn fault_spec(scale: Scale) -> RigSpec {
+    let mut spec = RigSpec::quick("s3", scale.latency);
+    spec.items = scale.items(96);
+    spec.batch_size = STEAL_BATCH;
+    spec.num_workers = 4;
+    spec.fetch_impl = FetchImpl::Threaded;
+    spec.num_fetch_workers = STEAL_BATCH;
+    spec.runtime = crate::gil::Runtime::Native;
+    spec
+}
+
+/// The chaos gate: fault-free vs resilient-under-flaky vs
+/// bare-under-flaky on the s3 profile, two epochs each, delivered
+/// batches folded into a digest. The resilient arm must deliver
+/// exactly the clean arm's batches, byte for byte, with zero
+/// exhausted ops and a nonzero retry count; the bare arm must
+/// demonstrably degrade — fewer batches than clean, or a worse p99
+/// than the resilient arm — and the run **fails** on any violation.
+/// Returns the table plus (clean batches, bare batches, resilient
+/// retries).
+pub fn fault_table(scale: Scale) -> Result<(Table, usize, usize, u64)> {
+    let mut t = Table::new(
+        "Hot path — chaos gate: fault-free vs resilient vs bare under \
+         seeded flaky faults (s3, threaded fetcher, 2 epochs)",
+        &[
+            "mode",
+            "batches",
+            "batches/s",
+            "p99 batch ms",
+            "retries",
+            "injected",
+            "exhausted",
+        ],
+    );
+    let mut clean = (0usize, 0u64); // (batches, digest)
+    let mut bare_batches = 0usize;
+    let mut bare_p99 = f64::NAN;
+    let mut resilient_p99 = f64::NAN;
+    let mut resilient_retries = 0u64;
+    for arm in [ChaosArm::Clean, ChaosArm::Resilient, ChaosArm::Bare] {
+        let mut spec = fault_spec(scale);
+        if arm != ChaosArm::Clean {
+            spec.fault_profile = "flaky";
+        }
+        if arm == ChaosArm::Resilient {
+            spec.retry_max = CHAOS_RETRY_MAX;
+        }
+        let rig = rig::build(&spec)?;
+        let t0 = Instant::now();
+        let mut digest = 0xcbf2_9ce4_8422_2325u64;
+        let mut lats: Vec<f64> = Vec::new();
+        let mut batches = 0usize;
+        for epoch in 0..2 {
+            let mut it = rig.dataloader.epoch(epoch);
+            loop {
+                let tb = Instant::now();
+                let Some(b) = it.next() else { break };
+                lats.push(tb.elapsed().as_secs_f64());
+                fnv(&mut digest, &b.images.data);
+                for &l in &b.labels {
+                    fnv(&mut digest, &l.to_le_bytes());
+                }
+                batches += 1;
+                b.recycle();
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let p99 = if lats.is_empty() {
+            f64::NAN
+        } else {
+            stats::Summary::of(&lats).p99
+        };
+        let (retries, exhausted) = rig.resilient.as_ref().map_or((0, 0), |r| {
+            let s = r.snapshot();
+            (s.retries, s.exhausted)
+        });
+        let injected = rig.faults.as_ref().map_or(0, |f| f.counters().injected());
+        match arm {
+            ChaosArm::Clean => {
+                if batches == 0 {
+                    anyhow::bail!("chaos gate clean arm delivered no batches");
+                }
+                clean = (batches, digest);
+            }
+            ChaosArm::Resilient => {
+                if batches != clean.0 || digest != clean.1 {
+                    anyhow::bail!(
+                        "resilient arm is not fault-transparent: {batches} \
+                         batches / digest {digest:016x} vs the clean arm's \
+                         {} / {:016x}",
+                        clean.0,
+                        clean.1
+                    );
+                }
+                if retries == 0 {
+                    anyhow::bail!(
+                        "chaos gate vacuous: flaky faults forced no retries"
+                    );
+                }
+                if exhausted != 0 {
+                    anyhow::bail!(
+                        "resilient arm exhausted {exhausted} op(s) under \
+                         flaky faults with retry_max={CHAOS_RETRY_MAX}"
+                    );
+                }
+                resilient_p99 = p99;
+                resilient_retries = retries;
+            }
+            ChaosArm::Bare => {
+                bare_batches = batches;
+                bare_p99 = p99;
+            }
+        }
+        t.row(&[
+            arm.label().to_string(),
+            batches.to_string(),
+            num(batches as f64 / wall, 1),
+            num(p99 * 1e3, 1),
+            retries.to_string(),
+            injected.to_string(),
+            exhausted.to_string(),
+        ]);
+    }
+    // the bare arm must show why the layer exists: lost batches, or a
+    // fatter tail than the resilient arm under identical faults
+    // (NaN-safe: an empty bare arm lost batches, so it passes there)
+    if !(bare_batches < clean.0 || bare_p99 > resilient_p99) {
+        anyhow::bail!(
+            "bare arm did not degrade under flaky faults: {bare_batches}/{} \
+             batches, p99 {:.1} ms vs resilient {:.1} ms",
+            clean.0,
+            bare_p99 * 1e3,
+            resilient_p99 * 1e3,
+        );
+    }
+    Ok((t, clean.0, bare_batches, resilient_retries))
+}
+
 /// Insert a gate metric, skipping non-finite values (a NaN would both
 /// corrupt the JSON baseline and be meaningless to band-check).
 fn put(m: &mut BTreeMap<String, f64>, name: &str, v: f64) {
@@ -1172,6 +1343,13 @@ pub fn collect(scale: Scale) -> Result<BTreeMap<String, f64>> {
          {min_vs_hand:.2}x hand-tuned)",
         autotuned_bps / defaults_bps
     );
+    let (chaos, clean_batches, bare_batches, chaos_retries) = fault_table(scale)?;
+    emit("hotpath", &chaos)?;
+    println!(
+        "  s3 chaos gate: resilient arm delivered all {clean_batches} \
+         batches byte-identical under flaky faults ({chaos_retries} \
+         retries); the bare arm delivered {bare_batches}"
+    );
     let mut m = BTreeMap::new();
     put(&mut m, "assembly.vanilla.speedup", vanilla_speedup);
     put(&mut m, "tail.ceph_os.batch_steal_p99_ms", batch_p99 * 1e3);
@@ -1192,6 +1370,9 @@ pub fn collect(scale: Scale) -> Result<BTreeMap<String, f64>> {
     put(&mut m, "autotune.s3.autotuned_bps", autotuned_bps);
     put(&mut m, "autotune.s3.speedup", autotuned_bps / defaults_bps);
     put(&mut m, "autotune.min_vs_hand", min_vs_hand);
+    put(&mut m, "fault.s3.resilient_batches", clean_batches as f64);
+    put(&mut m, "fault.s3.bare_batches", bare_batches as f64);
+    put(&mut m, "fault.s3.retries", chaos_retries as f64);
     Ok(m)
 }
 
@@ -1199,7 +1380,8 @@ pub fn collect(scale: Scale) -> Result<BTreeMap<String, f64>> {
 /// dispatch-tail comparison, epoch-boundary seams, stall attribution,
 /// pinned-slab transfer delta, the DirStore zero-copy read path, the
 /// per-file vs shard-window streaming gate, the per-call vs
-/// batched-submission ring gate, and the closed-loop autotuning gate.
+/// batched-submission ring gate, the closed-loop autotuning gate, and
+/// the chaos gate (fault injection vs the resilience layer).
 pub fn hotpath(scale: Scale) -> Result<()> {
     collect(scale).map(|_| ())
 }

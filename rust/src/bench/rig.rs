@@ -16,7 +16,8 @@ use crate::governor::{Governor, GovernorConfig, KnobBounds, Signals};
 use crate::prefetch::{CachePolicy, PrefetchConfig, PrefetchStore};
 use crate::shards::{pack_shards, ShardManifest, ShardStore};
 use crate::storage::{
-    IoRing, MemStore, ObjectStore, RemoteProfile, SimRemoteStore, VarnishCache,
+    FaultInjector, FaultProfile, IoRing, MemStore, ObjectStore, RemoteProfile,
+    ResilienceConfig, ResilientStore, SimRemoteStore, VarnishCache,
 };
 use crate::telemetry::Recorder;
 use crate::trainer::{self, TrainReport, TrainerConfig, TrainerKind};
@@ -84,6 +85,18 @@ pub struct RigSpec {
     /// (consumer_credit, prefetch_depth, io_depth, active_workers,
     /// steal/pipeline toggles) at epoch seams
     pub autotune: bool,
+    /// chaos profile injected into the simulated remote (none | flaky |
+    /// outage), deterministic under `seed` — every read shape of the
+    /// remote rolls it, batched submission included
+    pub fault_profile: &'static str,
+    /// resilience: extra read attempts after the first (0 = no retry)
+    pub retry_max: u32,
+    /// resilience: per-request deadline bounding the retry budget in
+    /// ms (0 = unbounded)
+    pub request_deadline_ms: u64,
+    /// resilience: hedge a ring read once it outlives this multiple of
+    /// the online p95 estimate (0 = hedging off)
+    pub hedge_after: f64,
 }
 
 impl RigSpec {
@@ -121,6 +134,10 @@ impl RigSpec {
             seed: 7,
             span_capacity: 0,
             autotune: false,
+            fault_profile: "none",
+            retry_max: 0,
+            request_deadline_ms: 0,
+            hedge_after: 0.0,
         }
     }
 
@@ -152,6 +169,12 @@ pub struct Rig {
     pub recorder: Arc<Recorder>,
     pub store: Arc<dyn ObjectStore>,
     pub remote: Option<Arc<SimRemoteStore>>,
+    /// the chaos plane attached to the remote (`fault_profile != none`)
+    pub faults: Option<Arc<FaultInjector>>,
+    /// the resilience layer (`retry_max`/`request_deadline_ms`/
+    /// `hedge_after` any nonzero), mounted between the cache/prefetch
+    /// stack and the remote
+    pub resilient: Option<Arc<ResilientStore>>,
     pub cache: Option<Arc<VarnishCache>>,
     pub prefetch: Option<Arc<PrefetchStore>>,
     pub shards: Option<Arc<ShardStore>>,
@@ -184,6 +207,8 @@ struct AutotuneBase {
     prefetch_gets: u64,
     prefetch_hits: u64,
     allocs: u64,
+    resilience_ops: u64,
+    resilience_retries: u64,
 }
 
 fn autotune_base(rig: &Rig) -> AutotuneBase {
@@ -196,6 +221,10 @@ fn autotune_base(rig: &Rig) -> AutotuneBase {
         let c = p.counters();
         (c.gets, c.hot_hits + c.inflight_hits)
     });
+    let (resilience_ops, resilience_retries) = rig.resilient.as_ref().map_or((0, 0), |r| {
+        let s = r.snapshot();
+        (s.ops, s.retries)
+    });
     AutotuneBase {
         credit_blocked_s: dl.credit_blocked().as_secs_f64(),
         seam_idle_s: dl.seam_idle().as_secs_f64(),
@@ -205,6 +234,8 @@ fn autotune_base(rig: &Rig) -> AutotuneBase {
         prefetch_gets,
         prefetch_hits,
         allocs: crate::util::alloc::counters().allocs,
+        resilience_ops,
+        resilience_retries,
     }
 }
 
@@ -239,6 +270,9 @@ pub fn autotune_tick_p99(rig: &Rig, epoch: usize, p99_batch_s: f64) {
         let s = r.stats();
         (s.inflight_hwm as usize, s.queued as usize)
     });
+    let dops = cur.resilience_ops - prev.resilience_ops;
+    let dretries = cur.resilience_retries - prev.resilience_retries;
+    let retry_rate = if dops == 0 { 0.0 } else { dretries as f64 / dops as f64 };
     let sig = Signals {
         epoch,
         batches: rig.dataloader.batches_per_epoch(),
@@ -254,6 +288,7 @@ pub fn autotune_tick_p99(rig: &Rig, epoch: usize, p99_batch_s: f64) {
         ring_inflight_hwm,
         ring_queued,
         allocs: cur.allocs - prev.allocs,
+        retry_rate,
     };
     h.governor.end_epoch(&sig);
 }
@@ -264,6 +299,10 @@ pub fn autotune_tick_p99(rig: &Rig, epoch: usize, p99_batch_s: f64) {
 pub struct StorageStack {
     pub store: Arc<dyn ObjectStore>,
     pub remote: Option<Arc<SimRemoteStore>>,
+    /// seeded fault injector rolled by every remote read shape
+    pub faults: Option<Arc<FaultInjector>>,
+    /// deadlines/retries/hedges/breaker between cache stack and remote
+    pub resilient: Option<Arc<ResilientStore>>,
     pub cache: Option<Arc<VarnishCache>>,
     pub prefetch: Option<Arc<PrefetchStore>>,
     /// shard-window facade at the top of the stack (`shard_size > 0`)
@@ -311,6 +350,32 @@ pub fn build_store(spec: &RigSpec) -> Result<StorageStack> {
                 spec.seed ^ 0x5EED,
             );
             (r.clone() as Arc<dyn ObjectStore>, Some(r))
+        };
+    // chaos plane: a seeded injector every remote read shape rolls —
+    // attached even when the resilience layer is off, so the bare arm
+    // of the fault_table degrades honestly
+    let faults = match (&remote, spec.fault_profile) {
+        (Some(r), name) if name != "none" => {
+            let Some(profile) = FaultProfile::by_name(name) else {
+                bail!("unknown fault_profile {name} (none|flaky|outage)")
+            };
+            let inj = FaultInjector::new(profile, spec.seed ^ 0xFA17);
+            r.set_faults(inj.clone());
+            Some(inj)
+        }
+        _ => None,
+    };
+    // resilience layer between the remote and the cache/prefetch stack:
+    // retries/deadlines on every read shape, hedges + breaker-gated
+    // degradation on the batched-submission path
+    let rcfg =
+        ResilienceConfig::new(spec.retry_max, spec.request_deadline_ms, spec.hedge_after);
+    let (store, resilient): (Arc<dyn ObjectStore>, Option<Arc<ResilientStore>>) =
+        if rcfg.enabled() {
+            let rs = ResilientStore::new(store, rcfg, spec.seed);
+            (rs.clone() as Arc<dyn ObjectStore>, Some(rs))
+        } else {
+            (store, None)
         };
     let (store, cache): (Arc<dyn ObjectStore>, Option<Arc<VarnishCache>>) =
         if spec.cache_bytes > 0 {
@@ -366,7 +431,17 @@ pub fn build_store(spec: &RigSpec) -> Result<StorageStack> {
     } else {
         (store, None, None)
     };
-    Ok(StorageStack { store, remote, cache, prefetch, shards, ring, corpus_bytes: total })
+    Ok(StorageStack {
+        store,
+        remote,
+        faults,
+        resilient,
+        cache,
+        prefetch,
+        shards,
+        ring,
+        corpus_bytes: total,
+    })
 }
 
 /// Build the full rig.
@@ -376,13 +451,25 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
     } else {
         Recorder::new()
     };
-    let StorageStack { store, remote, cache, prefetch, shards, ring, corpus_bytes } =
-        build_store(spec)?;
+    let StorageStack {
+        store,
+        remote,
+        faults,
+        resilient,
+        cache,
+        prefetch,
+        shards,
+        ring,
+        corpus_bytes,
+    } = build_store(spec)?;
     if let Some(p) = &prefetch {
         p.set_recorder(recorder.clone());
     }
     if let Some(r) = &ring {
         r.set_recorder(recorder.clone());
+    }
+    if let Some(rs) = &resilient {
+        rs.set_recorder(recorder.clone());
     }
     let augment_cfg =
         AugmentConfig { crop: spec.crop, seed: spec.seed, ..Default::default() };
@@ -485,6 +572,8 @@ pub fn build(spec: &RigSpec) -> Result<Rig> {
         recorder,
         store,
         remote,
+        faults,
+        resilient,
         cache,
         prefetch,
         shards,
@@ -585,6 +674,31 @@ pub fn metrics_snapshot(rig: &Rig, epoch: usize) -> Json {
         hub.set("ring.inflight", s.inflight);
         hub.set("ring.inflight_hwm", s.inflight_hwm);
         hub.set("ring.errors", s.errors);
+    }
+    if let Some(rs) = &rig.resilient {
+        let s = rs.snapshot();
+        hub.set("resilience.ops", s.ops);
+        hub.set("resilience.attempts", s.attempts);
+        hub.set("resilience.retries", s.retries);
+        hub.set("resilience.hedges", s.hedges);
+        hub.set("resilience.hedge_wins", s.hedge_wins);
+        hub.set("resilience.hedge_wasted", s.hedge_wasted);
+        hub.set("resilience.exhausted", s.exhausted);
+        hub.set("resilience.deadline_hits", s.deadline_hits);
+        hub.set("resilience.breaker_fastfail", s.breaker_fastfail);
+        hub.set("resilience.breaker_opens", s.breaker_opens);
+        hub.set("resilience.breaker_state", s.breaker_state);
+        hub.set("resilience.p95_us", (s.p95_ms * 1e3) as u64);
+    }
+    if let Some(f) = &rig.faults {
+        let c = f.counters();
+        hub.set("faults.decisions", c.decisions);
+        hub.set("faults.injected", c.injected());
+        hub.set("faults.transient", c.transient);
+        hub.set("faults.stalls", c.stalls);
+        hub.set("faults.resets", c.resets);
+        hub.set("faults.short_reads", c.short_reads);
+        hub.set("faults.forced_ok", c.forced_ok);
     }
     if let Some(cache) = &rig.cache {
         let s = cache.tier_stats();
@@ -868,6 +982,63 @@ mod tests {
                 .unwrap_or(0.0)
                 >= 4.0
         );
+    }
+
+    #[test]
+    fn resilient_rig_drains_identically_under_flaky_faults() {
+        // same spec ± chaos: flaky faults behind the resilience layer
+        // must deliver the exact bytes of the fault-free rig
+        let mut clean = RigSpec::quick("s3", 0.02);
+        clean.items = 24;
+        clean.batch_size = 8;
+        let mut chaos = clean.clone();
+        chaos.fault_profile = "flaky";
+        chaos.retry_max = 4;
+        let baseline = build(&clean).unwrap();
+        let rig = build(&chaos).unwrap();
+        assert!(rig.faults.is_some());
+        assert!(rig.resilient.is_some());
+        assert!(rig.store.label().starts_with("resilient(s3"));
+        let mut batches = Vec::new();
+        for b in baseline.dataloader.epoch(0) {
+            batches.push((b.images.data.clone(), b.labels.clone()));
+            b.recycle();
+        }
+        assert_eq!(batches.len(), 3);
+        let mut n = 0;
+        for (i, b) in rig.dataloader.epoch(0).enumerate() {
+            assert_eq!(b.images.data, batches[i].0, "batch {i}");
+            assert_eq!(b.labels, batches[i].1);
+            n += 1;
+            b.recycle();
+        }
+        assert_eq!(n, 3, "no batch may be lost behind the retry budget");
+        let s = rig.resilient.as_ref().unwrap().snapshot();
+        assert!(s.retries > 0, "flaky must have forced retries: {s:?}");
+        assert_eq!(s.exhausted, 0, "{s:?}");
+        let f = rig.faults.as_ref().unwrap().counters();
+        assert!(f.injected() > 0, "{f:?}");
+    }
+
+    #[test]
+    fn outage_rig_degrades_gracefully() {
+        // hard outage with a thin retry budget: every batch tombstones,
+        // the breaker opens, nothing panics or hangs
+        let mut spec = RigSpec::quick("s3", 0.02);
+        spec.items = 24;
+        spec.batch_size = 8;
+        spec.fault_profile = "outage";
+        spec.retry_max = 1;
+        let rig = build(&spec).unwrap();
+        let (_, _, n) = drain_epoch(&rig);
+        assert_eq!(n, 0, "an outage can deliver nothing");
+        let s = rig.resilient.as_ref().unwrap().snapshot();
+        assert!(s.exhausted > 0, "{s:?}");
+        assert!(s.breaker_opens >= 1, "{s:?}");
+        let snap = metrics_snapshot(&rig, 0);
+        let m = |k: &str| snap.at(&["metrics", k]).and_then(|j| j.as_f64());
+        assert!(m("resilience.exhausted").unwrap_or(0.0) > 0.0);
+        assert!(m("faults.injected").unwrap_or(0.0) > 0.0);
     }
 
     #[test]

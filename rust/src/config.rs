@@ -20,6 +20,10 @@
 //! epoch_pipeline = 1        # epochs published ahead of the consumer (0 = drain)
 //! io_depth = 256            # in-flight reads of the submission ring (0 = per-item)
 //! autotune = true           # Governor hill-climbs the knobs above at epoch seams
+//! fault_profile = flaky     # seeded chaos on the remote: none | flaky | outage
+//! retry_max = 4             # resilience: extra attempts per read (0 = off)
+//! request_deadline_ms = 2000 # resilience: per-request budget (0 = unbounded)
+//! hedge_after = 1.5         # resilience: hedge past this multiple of online p95
 //! cache_bytes = 2147483648  # varnish cache capacity (0 = no cache)
 //! cache_policy = lru        # varnish eviction policy: lru | 2q | s3fifo
 //! trainer = torch
@@ -73,6 +77,17 @@ pub struct ExperimentConfig {
     /// (prefetch/io depth, credit, steal, pipeline, active workers)
     /// at epoch seams from live telemetry
     pub autotune: bool,
+    /// chaos profile injected into the simulated remote
+    /// (none | flaky | outage); deterministic under `seed`
+    pub fault_profile: String,
+    /// resilience: extra read attempts after the first (0 = no retry)
+    pub retry_max: u32,
+    /// resilience: per-request deadline in ms bounding the retry
+    /// budget (0 = unbounded)
+    pub request_deadline_ms: u64,
+    /// resilience: hedge a ring read once it outlives this multiple of
+    /// the online p95 (0 = hedging off)
+    pub hedge_after: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -95,6 +110,10 @@ impl Default for ExperimentConfig {
             artifacts_dir: "artifacts".into(),
             span_capacity: 0,
             autotune: false,
+            fault_profile: "none".into(),
+            retry_max: 0,
+            request_deadline_ms: 0,
+            hedge_after: 0.0,
         }
     }
 }
@@ -214,6 +233,15 @@ impl ExperimentConfig {
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "span_capacity" => self.span_capacity = value.parse()?,
             "autotune" => self.autotune = value.parse()?,
+            "fault_profile" => {
+                if crate::storage::FaultProfile::by_name(value).is_none() {
+                    bail!("unknown fault_profile {value} (none|flaky|outage)");
+                }
+                self.fault_profile = value.to_string();
+            }
+            "retry_max" => self.retry_max = value.parse()?,
+            "request_deadline_ms" => self.request_deadline_ms = value.parse()?,
+            "hedge_after" => self.hedge_after = value.parse()?,
             _ => bail!("unknown config key {key}"),
         }
         Ok(())
@@ -345,6 +373,27 @@ mod tests {
         cfg.apply_text("autotune = true\n").unwrap();
         assert!(cfg.autotune);
         assert!(cfg.set("autotune", "yes").is_err());
+    }
+
+    #[test]
+    fn resilience_knobs_parse() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.fault_profile, "none");
+        assert_eq!(cfg.retry_max, 0);
+        assert_eq!(cfg.request_deadline_ms, 0);
+        assert_eq!(cfg.hedge_after, 0.0);
+        cfg.apply_text(
+            "fault_profile = flaky\nretry_max = 4\n\
+             request_deadline_ms = 2000\nhedge_after = 1.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.fault_profile, "flaky");
+        assert_eq!(cfg.retry_max, 4);
+        assert_eq!(cfg.request_deadline_ms, 2000);
+        assert_eq!(cfg.hedge_after, 1.5);
+        assert!(cfg.set("fault_profile", "sunny").is_err());
+        assert!(cfg.set("retry_max", "lots").is_err());
+        assert!(cfg.set("hedge_after", "soon").is_err());
     }
 
     #[test]

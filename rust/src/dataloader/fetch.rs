@@ -333,12 +333,23 @@ pub fn fill_wave_ring(
         let key = comp.key;
         let buf = comp.buf;
         let t0 = ctx.recorder.now();
-        let res = comp.result.and_then(|n| {
-            builders[b].fill(pos, index, |out| {
+        let res = match comp.result {
+            Ok(n) => builders[b].fill(pos, index, |out| {
                 ctx.dataset
                     .process_raw_into_at(index, t.epoch, &buf[..n], &ctx.gil, out)
-            })
-        });
+            }),
+            // an isolated I/O failure tombstones this item, not the
+            // wave: one blocking per-item attempt down the legacy path,
+            // and only its failure marks the batch — sibling slots in
+            // the wave still deliver
+            Err(ring_err) => builders[b]
+                .fill(pos, index, |out| {
+                    ctx.dataset.get_item_into_at(index, t.epoch, &ctx.gil, out)
+                })
+                .map_err(|e| {
+                    e.context(format!("after ring read failed: {ring_err:#}"))
+                }),
+        };
         ctx.recorder.record_tagged(
             names::GET_ITEM,
             ctx.worker_id,

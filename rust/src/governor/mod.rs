@@ -192,6 +192,11 @@ pub struct Signals {
     pub ring_queued: usize,
     /// heap allocations on the consumer thread this epoch
     pub allocs: u64,
+    /// resilience-layer retries per logical storage op this epoch
+    /// (retries / ops); 0 = no resilience layer or a quiet backend. A
+    /// rising retry rate tells the hill-climber that widening `io_depth`
+    /// or worker parallelism is amplifying pressure on a sick store.
+    pub retry_rate: f64,
 }
 
 /// Hysteresis/settle parameters.

@@ -157,6 +157,10 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         seed: cfg.seed,
         span_capacity: cfg.span_capacity,
         autotune: cfg.autotune || p.flag("autotune"),
+        fault_profile: Box::leak(cfg.fault_profile.clone().into_boxed_str()),
+        retry_max: cfg.retry_max,
+        request_deadline_ms: cfg.request_deadline_ms,
+        hedge_after: cfg.hedge_after,
     };
     let rig = cdl::bench::rig::build(&spec)?;
     let metrics_path = p.get("metrics").to_string();
@@ -324,6 +328,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         seed: 7,
         span_capacity: 0,
         autotune: false,
+        fault_profile: "none",
+        retry_max: 0,
+        request_deadline_ms: 0,
+        hedge_after: 0.0,
     };
     let store = cdl::bench::rig::build_store(&spec)?.store;
     let ds: Arc<dyn Dataset> = Arc::new(ImageFolderDataset::new(

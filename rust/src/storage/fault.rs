@@ -1,0 +1,481 @@
+//! Deterministic fault injection for the storage plane.
+//!
+//! Real object stores don't just add latency — they throw transient
+//! 5xx/timeouts, stall connections, reset them mid-transfer, and return
+//! short reads. [`FaultProfile`] describes a seeded mixture of those
+//! behaviors; [`FaultInjector`] turns it into per-request decisions, and
+//! [`FaultStore`] wraps any [`ObjectStore`] with them for unit-level
+//! chaos. [`super::SimRemoteStore`] carries an optional injector of its
+//! own so the simulated remotes misbehave on *both* the blocking and
+//! async paths (including the batched-submission ring).
+//!
+//! Two invariants make chaos runs reproducible and digest-comparable:
+//!
+//! * **Faults never corrupt bytes.** Every fault either delays a request
+//!   (a stall, which then succeeds) or fails it outright (transient /
+//!   reset / short read — a detected truncation is an error, not silent
+//!   bad data). A run that completes therefore delivers exactly the
+//!   bytes a fault-free run would.
+//! * **Forward progress is bounded.** With `max_consecutive = n > 0`, a
+//!   key that has faulted `n` times in a row is forced to succeed on the
+//!   next attempt — so any retry budget above `n` is guaranteed to
+//!   drain the epoch. `max_consecutive = 0` disables the cap
+//!   (persistent-outage profiles, for exercising breaker trips and
+//!   retry-budget exhaustion).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::{BoxFut, Bytes, ObjectStore, StoreStats};
+use crate::util::rng::Rng;
+
+/// One injected fault decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// transient service error (5xx-shaped): fails without transferring
+    Transient,
+    /// connection stalls for the given extra delay, then succeeds
+    /// (p_slow→∞-shaped tail)
+    Stall(Duration),
+    /// connection reset mid-transfer: fails after work was started
+    Reset,
+    /// truncated transfer, *detected* — surfaces as an error, never as
+    /// silently short bytes
+    ShortRead,
+}
+
+/// Seeded fault mixture. Rates are per-request probabilities, drawn in
+/// order transient → stall → reset → short-read from one roll.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultProfile {
+    pub error_rate: f64,
+    pub stall_rate: f64,
+    /// extra delay charged by a stall fault
+    pub stall_ms: u64,
+    pub reset_rate: f64,
+    pub short_read_rate: f64,
+    /// after this many consecutive faults on one key the next attempt is
+    /// forced to succeed (0 = never force — persistent outage)
+    pub max_consecutive: u32,
+}
+
+impl FaultProfile {
+    /// No faults at all (the inert default).
+    pub fn none() -> FaultProfile {
+        FaultProfile {
+            error_rate: 0.0,
+            stall_rate: 0.0,
+            stall_ms: 0,
+            reset_rate: 0.0,
+            short_read_rate: 0.0,
+            max_consecutive: 2,
+        }
+    }
+
+    /// A misbehaving-but-alive service: ~25% of requests fault, split
+    /// across all four kinds, but no key faults more than twice in a
+    /// row — any retry budget ≥ 3 attempts completes the run.
+    pub fn flaky() -> FaultProfile {
+        FaultProfile {
+            error_rate: 0.10,
+            stall_rate: 0.05,
+            stall_ms: 40,
+            reset_rate: 0.05,
+            short_read_rate: 0.05,
+            max_consecutive: 2,
+        }
+    }
+
+    /// Hard outage: every request fails, forever (`max_consecutive = 0`
+    /// disables forced success). Exercises retry-budget exhaustion and
+    /// circuit-breaker trips.
+    pub fn outage() -> FaultProfile {
+        FaultProfile {
+            error_rate: 1.0,
+            stall_rate: 0.0,
+            stall_ms: 0,
+            reset_rate: 0.0,
+            short_read_rate: 0.0,
+            max_consecutive: 0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<FaultProfile> {
+        Some(match name {
+            "none" => Self::none(),
+            "flaky" => Self::flaky(),
+            "outage" => Self::outage(),
+            _ => return None,
+        })
+    }
+
+    /// Total per-request fault probability.
+    pub fn fault_rate(&self) -> f64 {
+        self.error_rate + self.stall_rate + self.reset_rate + self.short_read_rate
+    }
+
+    fn is_inert(&self) -> bool {
+        self.fault_rate() <= 0.0
+    }
+}
+
+/// Cumulative injection counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    pub decisions: u64,
+    pub transient: u64,
+    pub stalls: u64,
+    pub resets: u64,
+    pub short_reads: u64,
+    /// faults suppressed by the per-key `max_consecutive` cap
+    pub forced_ok: u64,
+}
+
+impl FaultCounters {
+    pub fn injected(&self) -> u64 {
+        self.transient + self.stalls + self.resets + self.short_reads
+    }
+}
+
+/// Seeded per-request fault decider with the per-key consecutive cap.
+pub struct FaultInjector {
+    profile: Mutex<FaultProfile>,
+    rng: Mutex<Rng>,
+    /// consecutive fault count per key (bounded by the key space)
+    streaks: Mutex<HashMap<String, u32>>,
+    decisions: AtomicU64,
+    transient: AtomicU64,
+    stalls: AtomicU64,
+    resets: AtomicU64,
+    short_reads: AtomicU64,
+    forced_ok: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(profile: FaultProfile, seed: u64) -> Arc<FaultInjector> {
+        Arc::new(FaultInjector {
+            profile: Mutex::new(profile),
+            rng: Mutex::new(Rng::new(seed)),
+            streaks: Mutex::new(HashMap::new()),
+            decisions: AtomicU64::new(0),
+            transient: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            resets: AtomicU64::new(0),
+            short_reads: AtomicU64::new(0),
+            forced_ok: AtomicU64::new(0),
+        })
+    }
+
+    pub fn profile(&self) -> FaultProfile {
+        *self.profile.lock().unwrap()
+    }
+
+    /// Swap the active profile live (chaos tests script outages healing
+    /// mid-run to drive breaker half-open → closed transitions).
+    pub fn set_profile(&self, profile: FaultProfile) {
+        *self.profile.lock().unwrap() = profile;
+    }
+
+    /// Decide the fate of one request attempt on `key`.
+    pub fn decide(&self, key: &str) -> Option<Fault> {
+        let p = *self.profile.lock().unwrap();
+        if p.is_inert() {
+            return None;
+        }
+        self.decisions.fetch_add(1, Ordering::Relaxed);
+        let roll = self.rng.lock().unwrap().f64();
+        let fault = if roll < p.error_rate {
+            Some(Fault::Transient)
+        } else if roll < p.error_rate + p.stall_rate {
+            Some(Fault::Stall(Duration::from_millis(p.stall_ms)))
+        } else if roll < p.error_rate + p.stall_rate + p.reset_rate {
+            Some(Fault::Reset)
+        } else if roll < p.fault_rate() {
+            Some(Fault::ShortRead)
+        } else {
+            None
+        };
+        let mut streaks = self.streaks.lock().unwrap();
+        match fault {
+            // stalls succeed, so they end a failure streak
+            Some(Fault::Stall(d)) => {
+                streaks.remove(key);
+                self.stalls.fetch_add(1, Ordering::Relaxed);
+                Some(Fault::Stall(d))
+            }
+            Some(f) => {
+                let streak = streaks.entry(key.to_string()).or_insert(0);
+                if p.max_consecutive > 0 && *streak >= p.max_consecutive {
+                    // cap reached: force success so retry budgets above
+                    // the cap always drain
+                    *streak = 0;
+                    self.forced_ok.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+                *streak += 1;
+                match f {
+                    Fault::Transient => self.transient.fetch_add(1, Ordering::Relaxed),
+                    Fault::Reset => self.resets.fetch_add(1, Ordering::Relaxed),
+                    Fault::ShortRead => {
+                        self.short_reads.fetch_add(1, Ordering::Relaxed)
+                    }
+                    Fault::Stall(_) => unreachable!(),
+                };
+                Some(f)
+            }
+            None => {
+                streaks.remove(key);
+                None
+            }
+        }
+    }
+
+    /// [`FaultInjector::decide`] folded into a `Result`: error-kind
+    /// faults become `Err`, returning any stall delay to charge.
+    pub fn roll(&self, key: &str) -> Result<Option<Duration>> {
+        match self.decide(key) {
+            None => Ok(None),
+            Some(Fault::Stall(d)) => Ok(Some(d)),
+            Some(Fault::Transient) => {
+                bail!("injected transient error on {key} (simulated 5xx)")
+            }
+            Some(Fault::Reset) => {
+                bail!("injected connection reset on {key}")
+            }
+            Some(Fault::ShortRead) => {
+                bail!("injected short read on {key} (truncated transfer detected)")
+            }
+        }
+    }
+
+    pub fn counters(&self) -> FaultCounters {
+        FaultCounters {
+            decisions: self.decisions.load(Ordering::Relaxed),
+            transient: self.transient.load(Ordering::Relaxed),
+            stalls: self.stalls.load(Ordering::Relaxed),
+            resets: self.resets.load(Ordering::Relaxed),
+            short_reads: self.short_reads.load(Ordering::Relaxed),
+            forced_ok: self.forced_ok.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Chaos wrapper over any [`ObjectStore`]: every read shape rolls the
+/// injector first (stalls sleep, error faults fail), writes and
+/// metadata pass through untouched. The default `submit_batch` loops
+/// the blocking paths, so ring submissions inject too.
+pub struct FaultStore {
+    inner: Arc<dyn ObjectStore>,
+    injector: Arc<FaultInjector>,
+}
+
+impl FaultStore {
+    pub fn new(
+        inner: Arc<dyn ObjectStore>,
+        profile: FaultProfile,
+        seed: u64,
+    ) -> Arc<FaultStore> {
+        Arc::new(FaultStore { inner, injector: FaultInjector::new(profile, seed) })
+    }
+
+    pub fn injector(&self) -> &Arc<FaultInjector> {
+        &self.injector
+    }
+}
+
+impl ObjectStore for FaultStore {
+    fn get(&self, key: &str) -> Result<Bytes> {
+        if let Some(stall) = self.injector.roll(key)? {
+            std::thread::sleep(stall);
+        }
+        self.inner.get(key)
+    }
+
+    fn get_async<'a>(&'a self, key: &'a str) -> BoxFut<'a, Result<Bytes>> {
+        Box::pin(async move {
+            if let Some(stall) = self.injector.roll(key)? {
+                crate::asyncrt::sleep(stall).await;
+            }
+            self.inner.get_async(key).await
+        })
+    }
+
+    fn get_into(&self, key: &str, out: &mut [u8]) -> Result<usize> {
+        if let Some(stall) = self.injector.roll(key)? {
+            std::thread::sleep(stall);
+        }
+        self.inner.get_into(key, out)
+    }
+
+    fn get_range_into(&self, key: &str, offset: u64, out: &mut [u8]) -> Result<usize> {
+        if let Some(stall) = self.injector.roll(key)? {
+            std::thread::sleep(stall);
+        }
+        self.inner.get_range_into(key, offset, out)
+    }
+
+    fn native_get_into(&self) -> bool {
+        self.inner.native_get_into()
+    }
+
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        self.inner.put(key, data)
+    }
+
+    fn keys(&self) -> Vec<String> {
+        self.inner.keys()
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.inner.contains(key)
+    }
+
+    fn hint_order(&self, epoch: usize, keys: &[String]) {
+        self.inner.hint_order(epoch, keys)
+    }
+
+    fn hint_order_append(&self, epoch: usize, keys: &[String]) {
+        self.inner.hint_order_append(epoch, keys)
+    }
+
+    fn label(&self) -> String {
+        format!("fault({})", self.inner.label())
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+
+    fn backing() -> Arc<dyn ObjectStore> {
+        let m = MemStore::new("m");
+        for i in 0..8 {
+            m.put(&format!("k{i}"), vec![i as u8; 64]).unwrap();
+        }
+        Arc::new(m)
+    }
+
+    #[test]
+    fn profiles_by_name() {
+        assert_eq!(FaultProfile::by_name("none"), Some(FaultProfile::none()));
+        assert_eq!(FaultProfile::by_name("flaky"), Some(FaultProfile::flaky()));
+        assert_eq!(FaultProfile::by_name("outage"), Some(FaultProfile::outage()));
+        assert!(FaultProfile::by_name("sunny").is_none());
+        assert!(FaultProfile::none().is_inert());
+        assert!(!FaultProfile::flaky().is_inert());
+    }
+
+    #[test]
+    fn inert_profile_never_faults_or_counts() {
+        let inj = FaultInjector::new(FaultProfile::none(), 1);
+        for _ in 0..200 {
+            assert_eq!(inj.decide("k"), None);
+        }
+        assert_eq!(inj.counters(), FaultCounters::default());
+    }
+
+    #[test]
+    fn injection_is_seed_deterministic() {
+        let a = FaultInjector::new(FaultProfile::flaky(), 9);
+        let b = FaultInjector::new(FaultProfile::flaky(), 9);
+        let seq_a: Vec<_> = (0..100).map(|i| a.decide(&format!("k{}", i % 4))).collect();
+        let seq_b: Vec<_> = (0..100).map(|i| b.decide(&format!("k{}", i % 4))).collect();
+        assert_eq!(seq_a, seq_b);
+        assert!(a.counters().injected() > 0, "{:?}", a.counters());
+        let c = FaultInjector::new(FaultProfile::flaky(), 10);
+        let seq_c: Vec<_> = (0..100).map(|i| c.decide(&format!("k{}", i % 4))).collect();
+        assert_ne!(seq_a, seq_c, "different seed, same decisions");
+    }
+
+    #[test]
+    fn consecutive_cap_forces_success() {
+        // guaranteed faulting, cap 2: every third attempt on a key is
+        // forced to succeed
+        let p = FaultProfile { max_consecutive: 2, ..FaultProfile::outage() };
+        let inj = FaultInjector::new(p, 3);
+        let fates: Vec<bool> =
+            (0..9).map(|_| inj.decide("k").is_some()).collect();
+        assert_eq!(
+            fates,
+            vec![true, true, false, true, true, false, true, true, false]
+        );
+        assert_eq!(inj.counters().forced_ok, 3);
+    }
+
+    #[test]
+    fn outage_profile_never_relents() {
+        let inj = FaultInjector::new(FaultProfile::outage(), 3);
+        for _ in 0..50 {
+            assert!(inj.roll("k").is_err());
+        }
+        assert_eq!(inj.counters().forced_ok, 0);
+    }
+
+    #[test]
+    fn fault_store_fails_and_recovers_without_corruption() {
+        let fs = FaultStore::new(backing(), FaultProfile::flaky(), 11);
+        let mut oks = 0usize;
+        let mut errs = 0usize;
+        for i in 0..120 {
+            let key = format!("k{}", i % 8);
+            match fs.get(&key) {
+                Ok(data) => {
+                    oks += 1;
+                    // bytes are never corrupted, only delayed or denied
+                    assert!(data.iter().all(|&b| b == (i % 8) as u8));
+                }
+                Err(_) => errs += 1,
+            }
+        }
+        assert!(oks > 0 && errs > 0, "oks {oks} errs {errs}");
+        assert_eq!(fs.injector().counters().injected() - fs.injector().counters().stalls, errs as u64);
+        assert!(fs.label().starts_with("fault("));
+    }
+
+    #[test]
+    fn fault_store_injects_on_every_read_shape() {
+        let fs = FaultStore::new(backing(), FaultProfile::outage(), 5);
+        let mut out = vec![0u8; 64];
+        assert!(fs.get("k0").is_err());
+        assert!(fs.get_into("k0", &mut out).is_err());
+        assert!(fs.get_range_into("k0", 0, &mut out).is_err());
+        assert!(crate::asyncrt::block_on(fs.get_async("k0")).is_err());
+        assert_eq!(fs.injector().counters().injected(), 4);
+        // off the data path: no injection
+        assert!(fs.contains("k0"));
+        fs.set_profile_for_test();
+    }
+
+    impl FaultStore {
+        fn set_profile_for_test(&self) {
+            self.injector.set_profile(FaultProfile::none());
+            assert!(self.get("k1").is_ok());
+        }
+    }
+
+    #[test]
+    fn stall_fault_delays_then_succeeds() {
+        let p = FaultProfile {
+            error_rate: 0.0,
+            stall_rate: 1.0,
+            stall_ms: 25,
+            reset_rate: 0.0,
+            short_read_rate: 0.0,
+            max_consecutive: 2,
+        };
+        let fs = FaultStore::new(backing(), p, 7);
+        let t0 = std::time::Instant::now();
+        assert_eq!(fs.get("k1").unwrap().len(), 64);
+        assert!(t0.elapsed() >= Duration::from_millis(20), "{:?}", t0.elapsed());
+        assert_eq!(fs.injector().counters().stalls, 1);
+    }
+}

@@ -28,17 +28,24 @@
 pub mod cache;
 pub mod dir;
 pub mod evict;
+pub mod fault;
 pub mod mem;
 pub mod remote;
+pub mod resilient;
 pub mod ring;
 
 pub use cache::VarnishCache;
 pub use dir::DirStore;
 pub use evict::{CachePolicy, CoreStats, EvictCore};
+pub use fault::{FaultCounters, FaultInjector, FaultProfile, FaultStore};
 pub use mem::MemStore;
 pub use remote::{RemoteProfile, SimRemoteStore};
+pub use resilient::{
+    BreakerState, CircuitBreaker, ResilienceConfig, ResilienceSnapshot, ResilientStore,
+};
 pub use ring::{
-    Completion, InflightGuard, IoRing, ReadOp, RingCtx, RingSnapshot, Submission,
+    Completion, CompletionSink, InflightGuard, IoRing, ReadOp, RingCtx, RingSnapshot,
+    Submission,
 };
 
 use std::future::Future;

@@ -12,11 +12,12 @@
 //! (DESIGN.md §4): `s3`, `scratch`, `ceph_os`, `ceph_fs`, `gluster_fs`,
 //! plus `colab_s3` for the §A.2 sanity check.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
 use anyhow::Result;
 
+use super::fault::FaultInjector;
 use super::{BoxFut, Bytes, ObjectStore, ReadOp, RingCtx, StatCounters, StoreStats};
 use crate::asyncrt;
 use crate::simnet::{Link, LatencyModel};
@@ -150,6 +151,10 @@ pub struct SimRemoteStore {
     stats: StatCounters,
     /// recorded per-request service times (seconds) for report medians
     request_times: Mutex<Vec<f64>>,
+    /// optional chaos plane: every read shape (blocking, async, and the
+    /// batched-submission path) rolls this injector after taking its
+    /// connection slot — exactly where a real remote would fail
+    faults: OnceLock<Arc<FaultInjector>>,
 }
 
 impl SimRemoteStore {
@@ -167,11 +172,43 @@ impl SimRemoteStore {
             rng: Mutex::new(Rng::new(seed)),
             stats: StatCounters::default(),
             request_times: Mutex::new(Vec::new()),
+            faults: OnceLock::new(),
         })
     }
 
     pub fn profile(&self) -> &RemoteProfile {
         &self.profile
+    }
+
+    /// Attach a fault injector (set once at rig build time; an inert
+    /// `FaultProfile::none()` injector costs one `OnceLock` load).
+    pub fn set_faults(&self, injector: Arc<FaultInjector>) {
+        let _ = self.faults.set(injector);
+    }
+
+    pub fn faults(&self) -> Option<&Arc<FaultInjector>> {
+        self.faults.get()
+    }
+
+    /// Roll the chaos plane for one request on the blocking path:
+    /// error-kind faults bail, stalls sleep on the calling thread.
+    fn inject_blocking(&self, key: &str) -> Result<()> {
+        if let Some(inj) = self.faults.get() {
+            if let Some(stall) = inj.roll(key)? {
+                std::thread::sleep(stall);
+            }
+        }
+        Ok(())
+    }
+
+    /// Async twin of [`Self::inject_blocking`]: returns any stall delay
+    /// for the caller to `asyncrt::sleep` (so the executor thread is
+    /// never blocked).
+    fn inject_planned(&self, key: &str) -> Result<Option<Duration>> {
+        match self.faults.get() {
+            Some(inj) => inj.roll(key),
+            None => Ok(None),
+        }
     }
 
     /// Compute this request's service time (latency draw + bandwidth
@@ -206,6 +243,7 @@ impl ObjectStore for SimRemoteStore {
     fn get(&self, key: &str) -> Result<Bytes> {
         // connection slot (blocking acquire via block_on)
         let _permit = asyncrt::block_on(self.conns.acquire());
+        self.inject_blocking(key)?;
         let data = self.inner.get(key)?;
         let service = self.plan(data.len() as u64);
         std::thread::sleep(service);
@@ -216,6 +254,9 @@ impl ObjectStore for SimRemoteStore {
     fn get_async<'a>(&'a self, key: &'a str) -> BoxFut<'a, Result<Bytes>> {
         Box::pin(async move {
             let _permit = self.conns.acquire().await;
+            if let Some(stall) = self.inject_planned(key)? {
+                asyncrt::sleep(stall).await;
+            }
             let data = self.inner.get(key)?;
             let service = self.plan(data.len() as u64);
             asyncrt::sleep(service).await;
@@ -226,6 +267,7 @@ impl ObjectStore for SimRemoteStore {
 
     fn get_into(&self, key: &str, out: &mut [u8]) -> Result<usize> {
         let _permit = asyncrt::block_on(self.conns.acquire());
+        self.inject_blocking(key)?;
         let n = self.inner.get_into(key, out)?;
         if n > out.len() {
             // size probe (buffer too small, nothing transferred): no
@@ -245,6 +287,7 @@ impl ObjectStore for SimRemoteStore {
         // read amortize the round trip over hundreds of samples instead
         // of paying it once per image
         let _permit = asyncrt::block_on(self.conns.acquire());
+        self.inject_blocking(key)?;
         let n = self.inner.get_range_into(key, offset, out)?;
         let service = self.plan(n as u64);
         std::thread::sleep(service);
@@ -269,6 +312,14 @@ impl ObjectStore for SimRemoteStore {
                 let _depth = c.depth().acquire().await;
                 let _conn = this.conns.acquire().await;
                 c.begin();
+                match this.inject_planned(&op.key) {
+                    Ok(None) => {}
+                    Ok(Some(stall)) => asyncrt::sleep(stall).await,
+                    Err(e) => {
+                        c.complete(op.slot, op.key, op.buf, Err(e));
+                        return;
+                    }
+                }
                 let res = if op.len > 0 {
                     op.buf.resize(op.len, 0);
                     this.inner.get_range_into(&op.key, op.offset, &mut op.buf)
@@ -410,6 +461,30 @@ mod tests {
         );
         assert_eq!(s.stats().gets, 0);
         assert_eq!(s.stats().bytes, 0);
+    }
+
+    #[test]
+    fn fault_injection_rides_every_remote_path() {
+        use crate::storage::fault::{FaultInjector, FaultProfile};
+        use crate::storage::{IoRing, ReadOp};
+        let s = mk(RemoteProfile::scratch());
+        let inj = FaultInjector::new(FaultProfile::outage(), 7);
+        s.set_faults(inj.clone());
+        let mut out = vec![0u8; 100 * 1024];
+        assert!(s.get("k").is_err());
+        assert!(s.get_into("k", &mut out).is_err());
+        assert!(s.get_range_into("k", 0, &mut out[..1024]).is_err());
+        assert!(asyncrt::block_on(s.get_async("k")).is_err());
+        // batched-submission path injects per op too
+        let ring = IoRing::new(s.clone(), 4);
+        let mut sub = ring.submit(vec![ReadOp::whole(0, "k".into(), Vec::new())]);
+        assert!(sub.next().unwrap().result.is_err());
+        assert_eq!(inj.counters().injected(), 5);
+        // healing the profile heals the store (and nothing was recorded
+        // for the failed requests)
+        assert_eq!(s.stats().gets, 0);
+        inj.set_profile(FaultProfile::none());
+        assert_eq!(s.get("k").unwrap().len(), 100 * 1024);
     }
 
     #[test]

@@ -1,0 +1,1048 @@
+//! `ResilientStore` — the resilience layer of the chaos-ready storage
+//! plane.
+//!
+//! Mounted between the cache/prefetch stack and the (faulty) backing
+//! store, it turns raw storage failures into the paper's operational
+//! reality on S3-like backends: transient errors are retried with
+//! exponential backoff + decorrelated jitter, every logical request
+//! carries an optional deadline that bounds its retry budget, slow
+//! requests on the batched-submission path grow a *hedge* (a
+//! speculative duplicate launched once the op outlives the online p95
+//! estimate — first winner delivers, the loser's bytes are discarded),
+//! and a per-backend circuit breaker converts a persistent outage into
+//! fast per-item failures instead of a pile-up of doomed retries.
+//!
+//! Semantics that keep chaos runs digest-comparable:
+//!
+//! * Retries and hedges are *transparent*: the layer never reorders,
+//!   duplicates, or truncates what the submitter observes — exactly one
+//!   final verdict per logical op, byte-identical to a fault-free run.
+//! * On the ring path the layer interposes via [`RingCtx::sub`] /
+//!   [`RingCtx::deliver`], so every physical attempt (including hedges)
+//!   rides the same `io_depth` permit budget and in-flight gauge as
+//!   first-class traffic.
+//! * The breaker counts *exhausted* logical ops (post-retry failures),
+//!   not raw attempt noise — a flaky-but-alive backend keeps the
+//!   breaker closed, a dead one opens it after
+//!   [`ResilienceConfig::breaker_threshold`] consecutive exhaustions.
+//!   Open-state fast-fails surface as per-item errors that the wave
+//!   layer tombstones item-by-item (graceful degradation), while
+//!   cache/prefetch tiers above keep serving hits untouched.
+//!
+//! The fault-free blocking hot path (`get_into` under `DirStore`) stays
+//! allocation-free: one breaker load, the inner call, one latency
+//! sample — `tests/test_alloc.rs` pins this.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::asyncrt;
+use crate::telemetry::{names, Recorder, RESILIENCE_WORKER};
+use crate::util::rng::Rng;
+
+use super::ring::{Completion, CompletionSink, ReadOp, RingCtx};
+use super::{BoxFut, Bytes, ObjectStore, StoreStats};
+
+/// Knobs for the resilience layer. The config-file surface is
+/// `retry_max` / `request_deadline_ms` / `hedge_after`; the rest are
+/// engineering constants with sane defaults.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResilienceConfig {
+    /// extra attempts after the first (0 = no retry)
+    pub retry_max: u32,
+    /// budget for one logical request, retries included; checked
+    /// between attempts (a blocking attempt in flight cannot be
+    /// cancelled mid-read). `None` = unbounded.
+    pub deadline: Option<Duration>,
+    /// hedge a ring op once it outlives `hedge_after × online-p95`
+    /// (0.0 = hedging off; hedging applies to the batched-submission
+    /// path, where a duplicate is one more future, not one more thread)
+    pub hedge_after: f64,
+    /// decorrelated-jitter floor
+    pub backoff_base: Duration,
+    /// decorrelated-jitter ceiling
+    pub backoff_cap: Duration,
+    /// consecutive *exhausted* ops before the breaker opens
+    pub breaker_threshold: u32,
+    /// open-state dwell before a half-open probe is let through
+    pub breaker_cooldown: Duration,
+}
+
+impl ResilienceConfig {
+    pub fn new(retry_max: u32, request_deadline_ms: u64, hedge_after: f64) -> ResilienceConfig {
+        ResilienceConfig {
+            retry_max,
+            deadline: (request_deadline_ms > 0)
+                .then(|| Duration::from_millis(request_deadline_ms)),
+            hedge_after,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(100),
+            breaker_threshold: 4,
+            breaker_cooldown: Duration::from_millis(250),
+        }
+    }
+
+    /// Whether any resilience behavior is switched on (the rig only
+    /// mounts the layer when this is true).
+    pub fn enabled(&self) -> bool {
+        self.retry_max > 0 || self.deadline.is_some() || self.hedge_after > 0.0
+    }
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> ResilienceConfig {
+        ResilienceConfig::new(0, 0, 0.0)
+    }
+}
+
+/// Circuit-breaker state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+const CLOSED: u8 = 0;
+const OPEN: u8 = 1;
+const HALF_OPEN: u8 = 2;
+
+/// Per-backend circuit breaker over *exhausted* logical requests.
+///
+/// Closed → (threshold consecutive exhaustions) → Open → (cooldown
+/// elapses, one probe admitted) → HalfOpen → probe success → Closed /
+/// probe failure → Open again. Public so `tests/test_fault.rs` can
+/// drive the state machine directly.
+pub struct CircuitBreaker {
+    state: AtomicU8,
+    consecutive: AtomicU32,
+    opened_at: Mutex<Option<Instant>>,
+    threshold: u32,
+    cooldown: Duration,
+    opens: AtomicU64,
+}
+
+impl CircuitBreaker {
+    pub fn new(threshold: u32, cooldown: Duration) -> CircuitBreaker {
+        CircuitBreaker {
+            state: AtomicU8::new(CLOSED),
+            consecutive: AtomicU32::new(0),
+            opened_at: Mutex::new(None),
+            threshold: threshold.max(1),
+            cooldown,
+            opens: AtomicU64::new(0),
+        }
+    }
+
+    /// May a request proceed? In the open state this admits exactly one
+    /// probe per cooldown window (the caller that flips open→half-open).
+    pub fn allow(&self) -> bool {
+        match self.state.load(Ordering::Acquire) {
+            CLOSED => true,
+            HALF_OPEN => false, // a probe is already in flight
+            _ => {
+                let elapsed = self
+                    .opened_at
+                    .lock()
+                    .unwrap()
+                    .map(|t| t.elapsed() >= self.cooldown)
+                    .unwrap_or(true);
+                elapsed
+                    && self
+                        .state
+                        .compare_exchange(OPEN, HALF_OPEN, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+            }
+        }
+    }
+
+    /// A logical request succeeded: close the breaker, clear the streak.
+    pub fn on_success(&self) {
+        self.consecutive.store(0, Ordering::Relaxed);
+        self.state.store(CLOSED, Ordering::Release);
+    }
+
+    /// A logical request exhausted its budget. A half-open probe failing
+    /// re-opens immediately; otherwise the streak grows toward the
+    /// threshold.
+    pub fn on_failure(&self) {
+        let st = self.state.load(Ordering::Acquire);
+        if st == HALF_OPEN {
+            self.trip();
+            return;
+        }
+        let streak = self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        if st == CLOSED && streak >= self.threshold {
+            self.trip();
+        }
+    }
+
+    fn trip(&self) {
+        *self.opened_at.lock().unwrap() = Some(Instant::now());
+        self.state.store(OPEN, Ordering::Release);
+        self.opens.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn state(&self) -> BreakerState {
+        match self.state.load(Ordering::Acquire) {
+            CLOSED => BreakerState::Closed,
+            OPEN => BreakerState::Open,
+            _ => BreakerState::HalfOpen,
+        }
+    }
+
+    pub fn opens(&self) -> u64 {
+        self.opens.load(Ordering::Relaxed)
+    }
+}
+
+/// Online p95 estimator: a 256-sample ring recomputed every 32 samples
+/// on a stack copy (no steady-state allocation), armed once 64 samples
+/// have landed. Feeds the hedge trigger.
+struct LatencyEstimator {
+    samples: Mutex<[f64; 256]>,
+    count: AtomicU64,
+    /// cached p95 in seconds, as f64 bits (0 = not armed yet)
+    p95_bits: AtomicU64,
+}
+
+impl LatencyEstimator {
+    fn new() -> LatencyEstimator {
+        LatencyEstimator {
+            samples: Mutex::new([0.0; 256]),
+            count: AtomicU64::new(0),
+            p95_bits: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, d: Duration) {
+        let mut ring = self.samples.lock().unwrap();
+        let n = self.count.fetch_add(1, Ordering::Relaxed);
+        ring[(n % 256) as usize] = d.as_secs_f64();
+        let filled = (n + 1).min(256) as usize;
+        if (n + 1) % 32 == 0 && n + 1 >= 64 {
+            let mut scratch = *ring;
+            drop(ring);
+            let window = &mut scratch[..filled];
+            window.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            let idx = ((window.len() as f64 * 0.95) as usize).min(window.len() - 1);
+            self.p95_bits.store(window[idx].to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// `None` until armed (≥64 samples and one recompute).
+    fn p95(&self) -> Option<Duration> {
+        let bits = self.p95_bits.load(Ordering::Relaxed);
+        (bits != 0).then(|| Duration::from_secs_f64(f64::from_bits(bits)))
+    }
+}
+
+/// Cumulative resilience counters, exported as `resilience.*` metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResilienceSnapshot {
+    /// logical requests seen
+    pub ops: u64,
+    /// physical attempts launched (retries + hedges included)
+    pub attempts: u64,
+    /// backoff-retried attempts
+    pub retries: u64,
+    /// hedged logical ops
+    pub hedges: u64,
+    /// hedged ops that ultimately succeeded
+    pub hedge_wins: u64,
+    /// duplicate completions discarded after the winner delivered
+    pub hedge_wasted: u64,
+    /// logical ops that failed after the full retry budget
+    pub exhausted: u64,
+    /// ops whose retry budget was cut short by the deadline
+    pub deadline_hits: u64,
+    /// ops fast-failed by an open breaker
+    pub breaker_fastfail: u64,
+    /// breaker open transitions
+    pub breaker_opens: u64,
+    /// 0 closed / 1 open / 2 half-open
+    pub breaker_state: u64,
+    /// online p95 estimate in milliseconds (0 until armed)
+    pub p95_ms: f64,
+}
+
+#[derive(Default)]
+struct Counters {
+    ops: AtomicU64,
+    attempts: AtomicU64,
+    retries: AtomicU64,
+    hedges: AtomicU64,
+    hedge_wins: AtomicU64,
+    hedge_wasted: AtomicU64,
+    exhausted: AtomicU64,
+    deadline_hits: AtomicU64,
+    breaker_fastfail: AtomicU64,
+}
+
+/// The resilience layer. See the module docs for semantics.
+pub struct ResilientStore {
+    inner: Arc<dyn ObjectStore>,
+    cfg: ResilienceConfig,
+    breaker: CircuitBreaker,
+    latency: LatencyEstimator,
+    rng: Mutex<Rng>,
+    counters: Counters,
+    recorder: Mutex<Option<Arc<Recorder>>>,
+}
+
+impl ResilientStore {
+    pub fn new(
+        inner: Arc<dyn ObjectStore>,
+        cfg: ResilienceConfig,
+        seed: u64,
+    ) -> Arc<ResilientStore> {
+        Arc::new(ResilientStore {
+            inner,
+            breaker: CircuitBreaker::new(cfg.breaker_threshold, cfg.breaker_cooldown),
+            cfg,
+            latency: LatencyEstimator::new(),
+            rng: Mutex::new(Rng::new(seed ^ 0x7E51_11E7)),
+            counters: Counters::default(),
+            recorder: Mutex::new(None),
+        })
+    }
+
+    pub fn set_recorder(&self, rec: Arc<Recorder>) {
+        *self.recorder.lock().unwrap() = Some(rec);
+    }
+
+    pub fn config(&self) -> &ResilienceConfig {
+        &self.cfg
+    }
+
+    pub fn breaker(&self) -> &CircuitBreaker {
+        &self.breaker
+    }
+
+    pub fn inner(&self) -> &Arc<dyn ObjectStore> {
+        &self.inner
+    }
+
+    pub fn snapshot(&self) -> ResilienceSnapshot {
+        let c = &self.counters;
+        ResilienceSnapshot {
+            ops: c.ops.load(Ordering::Relaxed),
+            attempts: c.attempts.load(Ordering::Relaxed),
+            retries: c.retries.load(Ordering::Relaxed),
+            hedges: c.hedges.load(Ordering::Relaxed),
+            hedge_wins: c.hedge_wins.load(Ordering::Relaxed),
+            hedge_wasted: c.hedge_wasted.load(Ordering::Relaxed),
+            exhausted: c.exhausted.load(Ordering::Relaxed),
+            deadline_hits: c.deadline_hits.load(Ordering::Relaxed),
+            breaker_fastfail: c.breaker_fastfail.load(Ordering::Relaxed),
+            breaker_opens: self.breaker.opens(),
+            breaker_state: match self.breaker.state() {
+                BreakerState::Closed => 0,
+                BreakerState::Open => 1,
+                BreakerState::HalfOpen => 2,
+            },
+            p95_ms: self
+                .latency
+                .p95()
+                .map(|d| d.as_secs_f64() * 1e3)
+                .unwrap_or(0.0),
+        }
+    }
+
+    /// Decorrelated jitter (the AWS architecture-blog variant):
+    /// `sleep = min(cap, uniform(base, prev × 3))`, feeding each draw
+    /// back in as the next `prev`.
+    fn backoff(&self, prev: &mut Duration) -> Duration {
+        let base = self.cfg.backoff_base.as_secs_f64();
+        let cap = self.cfg.backoff_cap.as_secs_f64();
+        let hi = (prev.as_secs_f64() * 3.0).max(base);
+        let draw = {
+            let mut rng = self.rng.lock().unwrap();
+            base + rng.f64() * (hi - base)
+        };
+        let next = Duration::from_secs_f64(draw.min(cap));
+        *prev = next;
+        next
+    }
+
+    fn recorder(&self) -> Option<Arc<Recorder>> {
+        self.recorder.lock().unwrap().clone()
+    }
+
+    fn span(&self, name: &'static str, value: i64, t0: Option<f64>) {
+        if let Some(r) = self.recorder() {
+            let t1 = r.now();
+            r.record(name, RESILIENCE_WORKER, value, t0.unwrap_or(t1), t1);
+        }
+    }
+
+    /// The blocking retry driver behind `get` / `get_into` /
+    /// `get_range_into` / the async path's twin. Happy path:
+    /// one breaker load, the attempt, one latency sample — no
+    /// allocation.
+    fn with_retries<T>(&self, key: &str, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+        self.counters.ops.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let mut attempt = 0u32;
+        let mut prev = self.cfg.backoff_base;
+        loop {
+            if !self.breaker.allow() {
+                self.counters.breaker_fastfail.fetch_add(1, Ordering::Relaxed);
+                self.span(names::BREAKER, 1, None);
+                return Err(anyhow!(
+                    "circuit breaker open: fast-failing {key} on {}",
+                    self.inner.label()
+                ));
+            }
+            self.counters.attempts.fetch_add(1, Ordering::Relaxed);
+            let at0 = Instant::now();
+            match f() {
+                Ok(v) => {
+                    if attempt == 0 {
+                        self.latency.record(at0.elapsed());
+                    }
+                    self.breaker.on_success();
+                    return Ok(v);
+                }
+                Err(e) => {
+                    attempt += 1;
+                    let deadline_hit =
+                        self.cfg.deadline.is_some_and(|d| t0.elapsed() >= d);
+                    if attempt > self.cfg.retry_max || deadline_hit {
+                        if deadline_hit {
+                            self.counters.deadline_hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                        self.counters.exhausted.fetch_add(1, Ordering::Relaxed);
+                        self.breaker.on_failure();
+                        if self.breaker.state() == BreakerState::Open {
+                            self.span(names::BREAKER, 1, None);
+                        }
+                        return Err(e).with_context(|| {
+                            format!(
+                                "{key}: retry budget exhausted after {attempt} attempt(s)"
+                            )
+                        });
+                    }
+                    self.counters.retries.fetch_add(1, Ordering::Relaxed);
+                    let wait = self.backoff(&mut prev);
+                    let rt0 = self.recorder().map(|r| r.now());
+                    std::thread::sleep(wait);
+                    self.span(names::RETRY, attempt as i64, rt0);
+                }
+            }
+        }
+    }
+}
+
+impl ObjectStore for ResilientStore {
+    fn get(&self, key: &str) -> Result<Bytes> {
+        self.with_retries(key, || self.inner.get(key))
+    }
+
+    fn get_async<'a>(&'a self, key: &'a str) -> BoxFut<'a, Result<Bytes>> {
+        Box::pin(async move {
+            self.counters.ops.fetch_add(1, Ordering::Relaxed);
+            let t0 = Instant::now();
+            let mut attempt = 0u32;
+            let mut prev = self.cfg.backoff_base;
+            loop {
+                if !self.breaker.allow() {
+                    self.counters.breaker_fastfail.fetch_add(1, Ordering::Relaxed);
+                    self.span(names::BREAKER, 1, None);
+                    return Err(anyhow!(
+                        "circuit breaker open: fast-failing {key} on {}",
+                        self.inner.label()
+                    ));
+                }
+                self.counters.attempts.fetch_add(1, Ordering::Relaxed);
+                let at0 = Instant::now();
+                match self.inner.get_async(key).await {
+                    Ok(v) => {
+                        if attempt == 0 {
+                            self.latency.record(at0.elapsed());
+                        }
+                        self.breaker.on_success();
+                        return Ok(v);
+                    }
+                    Err(e) => {
+                        attempt += 1;
+                        let deadline_hit =
+                            self.cfg.deadline.is_some_and(|d| t0.elapsed() >= d);
+                        if attempt > self.cfg.retry_max || deadline_hit {
+                            if deadline_hit {
+                                self.counters
+                                    .deadline_hits
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
+                            self.counters.exhausted.fetch_add(1, Ordering::Relaxed);
+                            self.breaker.on_failure();
+                            return Err(e).with_context(|| {
+                                format!(
+                                    "{key}: retry budget exhausted after {attempt} attempt(s)"
+                                )
+                            });
+                        }
+                        self.counters.retries.fetch_add(1, Ordering::Relaxed);
+                        let wait = self.backoff(&mut prev);
+                        let rt0 = self.recorder().map(|r| r.now());
+                        asyncrt::sleep(wait).await;
+                        self.span(names::RETRY, attempt as i64, rt0);
+                    }
+                }
+            }
+        })
+    }
+
+    fn get_into(&self, key: &str, out: &mut [u8]) -> Result<usize> {
+        self.with_retries(key, || self.inner.get_into(key, out))
+    }
+
+    fn get_range_into(&self, key: &str, offset: u64, out: &mut [u8]) -> Result<usize> {
+        self.with_retries(key, || self.inner.get_range_into(key, offset, out))
+    }
+
+    fn native_get_into(&self) -> bool {
+        self.inner.native_get_into()
+    }
+
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        self.inner.put(key, data)
+    }
+
+    fn keys(&self) -> Vec<String> {
+        self.inner.keys()
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.inner.contains(key)
+    }
+
+    fn hint_order(&self, epoch: usize, keys: &[String]) {
+        self.inner.hint_order(epoch, keys)
+    }
+
+    fn hint_order_append(&self, epoch: usize, keys: &[String]) {
+        self.inner.hint_order_append(epoch, keys)
+    }
+
+    fn submit_batch(self: Arc<Self>, ops: Vec<ReadOp>, ctx: RingCtx) {
+        if ops.is_empty() {
+            return;
+        }
+        orchestrate_batch(self, ops, ctx);
+    }
+
+    fn label(&self) -> String {
+        format!("resilient({})", self.inner.label())
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.inner.stats()
+    }
+}
+
+/// Raw attempt results funnel through this sink back to the batch
+/// reaper (never full: capacity covers the worst case of one primary +
+/// one concurrent hedge per op).
+struct AttemptSink {
+    tx: asyncrt::Sender<Completion>,
+}
+
+impl CompletionSink for AttemptSink {
+    fn push(&self, c: Completion) {
+        // capacity is sized so this cannot fail; a dropped receiver
+        // (reaper already exited) only loses late hedge losers
+        let _ = self.tx.try_send(c);
+    }
+}
+
+/// Per-logical-op bookkeeping inside one batch.
+struct OpState {
+    offset: u64,
+    len: usize,
+    started: Instant,
+    /// failed attempts so far
+    attempts_done: u32,
+    /// physical attempts currently in flight
+    inflight: u32,
+    prev_backoff: Duration,
+    hedged: bool,
+    done: bool,
+}
+
+/// Ring-path orchestration: primary attempts go down as ONE
+/// `submit_batch` on an attempt context (cheap, preserves the inner
+/// store's fan-out), retries and hedges are re-driven as singleton
+/// submissions, and exactly one [`RingCtx::deliver`] per logical op
+/// reports the final verdict to the submitter.
+fn orchestrate_batch(store: Arc<ResilientStore>, ops: Vec<ReadOp>, ctx: RingCtx) {
+    let n = ops.len();
+    store.counters.ops.fetch_add(n as u64, Ordering::Relaxed);
+
+    // worst case per op: primary + one concurrent hedge
+    let (tx, rx) = asyncrt::channel::<Completion>(2 * n + 2);
+    let sink: Arc<dyn CompletionSink> = Arc::new(AttemptSink { tx });
+    let attempt_ctx = ctx.sub(sink);
+
+    // slot → state; slots are caller-chosen and unique within a batch
+    let mut states: Vec<(usize, OpState)> = Vec::with_capacity(n);
+    let mut primaries: Vec<ReadOp> = Vec::with_capacity(n);
+    let hedge_delay = (store.cfg.hedge_after > 0.0)
+        .then(|| store.latency.p95())
+        .flatten()
+        .map(|p95| p95.mul_f64(store.cfg.hedge_after).max(Duration::from_millis(1)));
+
+    for op in ops {
+        if !store.breaker.allow() {
+            // open breaker: degrade fast, one tombstone per item
+            store.counters.breaker_fastfail.fetch_add(1, Ordering::Relaxed);
+            store.span(names::BREAKER, 1, None);
+            let err = anyhow!(
+                "circuit breaker open: fast-failing {} on {}",
+                op.key,
+                store.inner.label()
+            );
+            ctx.deliver(op.slot, op.key, op.buf, Err(err));
+            continue;
+        }
+        states.push((
+            op.slot,
+            OpState {
+                offset: op.offset,
+                len: op.len,
+                started: Instant::now(),
+                attempts_done: 0,
+                inflight: 1,
+                prev_backoff: store.cfg.backoff_base,
+                hedged: false,
+                done: false,
+            },
+        ));
+        primaries.push(op);
+    }
+    let live = primaries.len();
+    if live == 0 {
+        return;
+    }
+    store.counters.attempts.fetch_add(live as u64, Ordering::Relaxed);
+
+    let states = Arc::new(Mutex::new(states));
+    // physical attempts beyond the primaries (hedges + retries);
+    // incremented under the states lock so the reaper's exit condition
+    // can never miss an attempt it still has to drain
+    let extra = Arc::new(AtomicU64::new(0));
+
+    // hedge watchdogs: one sleeper per op, armed only when the p95
+    // estimator is warm — fires a speculative duplicate if the primary
+    // is still sole-in-flight and unfailed when the timer lands
+    if let Some(delay) = hedge_delay {
+        let slots: Vec<(usize, String)> = {
+            let st = states.lock().unwrap();
+            st.iter()
+                .zip(primaries.iter())
+                .map(|((slot, _), op)| (*slot, op.key.clone()))
+                .collect()
+        };
+        for (slot, key) in slots {
+            let store = store.clone();
+            let states = states.clone();
+            let extra = extra.clone();
+            let attempt_ctx = attempt_ctx.clone();
+            drop(ctx.rt().spawn(async move {
+                asyncrt::sleep(delay).await;
+                let launch = {
+                    let mut st = states.lock().unwrap();
+                    match st.iter_mut().find(|(s, _)| *s == slot) {
+                        Some((_, op)) if !op.done && !op.hedged && op.inflight == 1
+                            && op.attempts_done == 0 =>
+                        {
+                            op.hedged = true;
+                            op.inflight += 1;
+                            extra.fetch_add(1, Ordering::Relaxed);
+                            Some((op.offset, op.len))
+                        }
+                        _ => None,
+                    }
+                };
+                if let Some((offset, len)) = launch {
+                    store.counters.hedges.fetch_add(1, Ordering::Relaxed);
+                    store.counters.attempts.fetch_add(1, Ordering::Relaxed);
+                    store.span(names::HEDGE, slot as i64, None);
+                    store
+                        .inner
+                        .clone()
+                        .submit_batch(
+                            vec![ReadOp { slot, key, offset, len, buf: Vec::new() }],
+                            attempt_ctx,
+                        );
+                }
+            }));
+        }
+    }
+
+    // primary wave: one batch down the stack, preserving the inner
+    // store's native fan-out
+    store.inner.clone().submit_batch(primaries, attempt_ctx.clone());
+
+    // the reaper: consumes raw attempt completions, re-drives retries
+    // after backoff, delivers exactly one verdict per logical op, and
+    // stays alive until every physical attempt is accounted for (so
+    // losing hedges are counted, not leaked)
+    drop(ctx.rt().spawn(async move {
+        let mut delivered = 0usize;
+        let mut consumed = 0usize;
+        while delivered < live
+            || consumed < live + extra.load(Ordering::Relaxed) as usize
+        {
+            let Some(c) = rx.recv().await else { break };
+            consumed += 1;
+            let verdict = {
+                let mut st = states.lock().unwrap();
+                let Some((_, op)) = st.iter_mut().find(|(s, _)| *s == c.slot) else {
+                    continue;
+                };
+                op.inflight -= 1;
+                if op.done {
+                    // the hedge race's loser: discard, count
+                    store.counters.hedge_wasted.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                match c.result {
+                    Ok(nbytes) => {
+                        op.done = true;
+                        if op.hedged {
+                            store.counters.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                        } else if op.attempts_done == 0 {
+                            store.latency.record(op.started.elapsed());
+                        }
+                        store.breaker.on_success();
+                        Some((c.key, c.buf, Ok(nbytes)))
+                    }
+                    Err(e) => {
+                        op.attempts_done += 1;
+                        if op.inflight > 0 {
+                            // a hedge twin is still running: let it race
+                            None
+                        } else {
+                            let deadline_hit = store
+                                .cfg
+                                .deadline
+                                .is_some_and(|d| op.started.elapsed() >= d);
+                            let budget_gone = op.attempts_done > store.cfg.retry_max;
+                            if budget_gone || deadline_hit || !store.breaker.allow() {
+                                if deadline_hit {
+                                    store
+                                        .counters
+                                        .deadline_hits
+                                        .fetch_add(1, Ordering::Relaxed);
+                                }
+                                store.counters.exhausted.fetch_add(1, Ordering::Relaxed);
+                                store.breaker.on_failure();
+                                op.done = true;
+                                let attempts = op.attempts_done;
+                                Some((
+                                    c.key,
+                                    c.buf,
+                                    Err(e).with_context(|| {
+                                        format!(
+                                            "retry budget exhausted after {attempts} attempt(s)"
+                                        )
+                                    }),
+                                ))
+                            } else {
+                                // schedule a backoff retry
+                                store.counters.retries.fetch_add(1, Ordering::Relaxed);
+                                store.counters.attempts.fetch_add(1, Ordering::Relaxed);
+                                op.inflight += 1;
+                                extra.fetch_add(1, Ordering::Relaxed);
+                                let wait = store.backoff(&mut op.prev_backoff);
+                                let resub = ReadOp {
+                                    slot: c.slot,
+                                    key: c.key,
+                                    offset: op.offset,
+                                    len: op.len,
+                                    buf: c.buf,
+                                };
+                                let store = store.clone();
+                                let attempt_ctx = attempt_ctx.clone();
+                                drop(attempt_ctx.rt().spawn(async move {
+                                    let rt0 = store.recorder().map(|r| r.now());
+                                    asyncrt::sleep(wait).await;
+                                    store.span(names::RETRY, resub.slot as i64, rt0);
+                                    store
+                                        .inner
+                                        .clone()
+                                        .submit_batch(vec![resub], attempt_ctx);
+                                }));
+                                None
+                            }
+                        }
+                    }
+                }
+            };
+            if let Some((key, buf, result)) = verdict {
+                ctx.deliver(c.slot, key, buf, result);
+                delivered += 1;
+            }
+        }
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::fault::{FaultProfile, FaultStore};
+    use crate::storage::{IoRing, MemStore};
+
+    fn backing(n: usize) -> Arc<dyn ObjectStore> {
+        let m = MemStore::new("m");
+        for i in 0..n {
+            m.put(&format!("k{i}"), vec![i as u8; 128]).unwrap();
+        }
+        Arc::new(m)
+    }
+
+    fn flaky(n: usize, seed: u64) -> Arc<FaultStore> {
+        FaultStore::new(backing(n), FaultProfile::flaky(), seed)
+    }
+
+    #[test]
+    fn config_enabled_gating() {
+        assert!(!ResilienceConfig::new(0, 0, 0.0).enabled());
+        assert!(ResilienceConfig::new(4, 0, 0.0).enabled());
+        assert!(ResilienceConfig::new(0, 500, 0.0).enabled());
+        assert!(ResilienceConfig::new(0, 0, 2.0).enabled());
+    }
+
+    #[test]
+    fn retries_hide_flaky_faults_on_every_blocking_shape() {
+        let rs = ResilientStore::new(flaky(8, 21), ResilienceConfig::new(4, 0, 0.0), 1);
+        let mut out = vec![0u8; 128];
+        for round in 0..40 {
+            let key = format!("k{}", round % 8);
+            let want = vec![(round % 8) as u8; 128];
+            assert_eq!(&rs.get(&key).unwrap()[..], &want[..]);
+            assert_eq!(rs.get_into(&key, &mut out).unwrap(), 128);
+            assert_eq!(&out[..], &want[..]);
+            assert_eq!(rs.get_range_into(&key, 64, &mut out[..32]).unwrap(), 32);
+            assert_eq!(&out[..32], &want[..32]);
+        }
+        let s = rs.snapshot();
+        assert!(s.retries > 0, "{s:?}");
+        assert_eq!(s.exhausted, 0, "{s:?}");
+        assert_eq!(s.breaker_opens, 0, "{s:?}");
+        assert!(s.attempts > s.ops, "{s:?}");
+    }
+
+    #[test]
+    fn async_path_retries_too() {
+        let rs = ResilientStore::new(flaky(4, 33), ResilienceConfig::new(4, 0, 0.0), 2);
+        for round in 0..40 {
+            let key = format!("k{}", round % 4);
+            let got = asyncrt::block_on(rs.get_async(&key)).unwrap();
+            assert_eq!(&got[..], &vec![(round % 4) as u8; 128][..]);
+        }
+        assert!(rs.snapshot().retries > 0);
+        assert_eq!(rs.snapshot().exhausted, 0);
+    }
+
+    #[test]
+    fn outage_exhausts_budget_then_opens_breaker() {
+        let store = FaultStore::new(backing(4), FaultProfile::outage(), 9);
+        let rs = ResilientStore::new(store, ResilienceConfig::new(2, 0, 0.0), 3);
+        let mut errs = 0;
+        for i in 0..8 {
+            if rs.get(&format!("k{}", i % 4)).is_err() {
+                errs += 1;
+            }
+        }
+        assert_eq!(errs, 8);
+        let s = rs.snapshot();
+        assert!(s.exhausted >= 4, "{s:?}");
+        assert!(s.breaker_opens >= 1, "{s:?}");
+        assert!(s.breaker_fastfail > 0, "breaker never fast-failed: {s:?}");
+        // exhausted ops each burned the full budget before the trip
+        assert_eq!(s.breaker_state, 1, "{s:?}");
+    }
+
+    #[test]
+    fn breaker_state_machine_closes_after_heal() {
+        let b = CircuitBreaker::new(2, Duration::from_millis(20));
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow());
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.opens(), 1);
+        assert!(!b.allow(), "no probe before cooldown");
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(b.allow(), "cooldown elapsed: one probe admitted");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.allow(), "second probe rejected while half-open");
+        // probe fails: straight back to open
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.opens(), 2);
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(b.allow());
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow());
+    }
+
+    #[test]
+    fn deadline_bounds_the_retry_budget() {
+        let p = FaultProfile {
+            error_rate: 1.0,
+            stall_rate: 0.0,
+            stall_ms: 0,
+            reset_rate: 0.0,
+            short_read_rate: 0.0,
+            max_consecutive: 0,
+        };
+        let store = FaultStore::new(backing(1), p, 5);
+        // huge retry budget but a 30ms deadline: the deadline wins
+        let mut cfg = ResilienceConfig::new(1_000, 30, 0.0);
+        cfg.backoff_base = Duration::from_millis(10);
+        cfg.backoff_cap = Duration::from_millis(10);
+        let rs = ResilientStore::new(store, cfg, 7);
+        let t0 = Instant::now();
+        assert!(rs.get("k0").is_err());
+        assert!(t0.elapsed() < Duration::from_secs(2), "{:?}", t0.elapsed());
+        let s = rs.snapshot();
+        assert_eq!(s.deadline_hits, 1, "{s:?}");
+        assert_eq!(s.exhausted, 1, "{s:?}");
+    }
+
+    #[test]
+    fn ring_batches_survive_flaky_faults_byte_identical() {
+        let backing = backing(16);
+        let faulty = FaultStore::new(backing.clone(), FaultProfile::flaky(), 17);
+        let rs = ResilientStore::new(faulty, ResilienceConfig::new(4, 0, 0.0), 4);
+        let ring = IoRing::new(rs.clone(), 32);
+        for _wave in 0..6 {
+            let ops = (0..16)
+                .map(|i| ReadOp::whole(i, format!("k{i}"), Vec::new()))
+                .collect();
+            let mut sub = ring.submit(ops);
+            let mut seen = 0;
+            while let Some(c) = sub.next() {
+                let n = c.result.unwrap();
+                assert_eq!(&c.buf[..n], &backing.get(&c.key).unwrap()[..]);
+                seen += 1;
+            }
+            assert_eq!(seen, 16);
+        }
+        let s = rs.snapshot();
+        assert!(s.retries > 0, "{s:?}");
+        assert_eq!(s.exhausted, 0, "{s:?}");
+        let rsnap = ring.stats();
+        assert_eq!(rsnap.submitted, 96);
+        assert_eq!(rsnap.completed, 96);
+        assert_eq!(rsnap.errors, 0);
+        assert_eq!(rsnap.inflight, 0, "attempt accounting leaked the gauge");
+    }
+
+    #[test]
+    fn ring_outage_degrades_per_item_not_per_wave() {
+        let faulty = FaultStore::new(backing(8), FaultProfile::outage(), 19);
+        let rs = ResilientStore::new(faulty, ResilienceConfig::new(1, 0, 0.0), 6);
+        let ring = IoRing::new(rs.clone(), 16);
+        let mut errors = 0;
+        for _wave in 0..4 {
+            let ops = (0..8)
+                .map(|i| ReadOp::whole(i, format!("k{i}"), Vec::new()))
+                .collect();
+            let mut sub = ring.submit(ops);
+            let mut reaped = 0;
+            while let Some(c) = sub.next() {
+                assert!(c.result.is_err());
+                errors += 1;
+                reaped += 1;
+            }
+            // every op gets its own verdict — the wave never wedges
+            assert_eq!(reaped, 8);
+        }
+        assert_eq!(errors, 32);
+        let s = rs.snapshot();
+        assert!(s.exhausted > 0, "{s:?}");
+        assert!(s.breaker_opens >= 1, "{s:?}");
+        assert!(s.breaker_fastfail > 0, "later waves should fast-fail: {s:?}");
+        assert_eq!(ring.stats().inflight, 0);
+    }
+
+    #[test]
+    fn hedges_fire_on_stalls_and_account_cleanly() {
+        use crate::storage::fault::FaultInjector;
+        use crate::storage::{RemoteProfile, SimRemoteStore};
+        // stall-only profile: ops never fail, some just take +150ms —
+        // exactly the tail a hedge tames
+        let p = FaultProfile {
+            error_rate: 0.0,
+            stall_rate: 0.25,
+            stall_ms: 150,
+            reset_rate: 0.0,
+            short_read_rate: 0.0,
+            max_consecutive: 2,
+        };
+        let backing = backing(16);
+        let remote =
+            SimRemoteStore::new(backing.clone(), RemoteProfile::s3().scaled(0.02), 23);
+        let injector = FaultInjector::new(FaultProfile::none(), 23);
+        remote.set_faults(injector.clone());
+        let rs = ResilientStore::new(remote, ResilienceConfig::new(2, 0, 1.0), 8);
+        // warm the p95 estimator on the clean store, then turn the
+        // stalls on — the hedge threshold must reflect *healthy* tails
+        let mut out = vec![0u8; 128];
+        for i in 0..96 {
+            let _ = rs.get_into(&format!("k{}", i % 16), &mut out);
+        }
+        assert!(rs.snapshot().p95_ms > 0.0, "estimator never armed");
+        injector.set_profile(p);
+        let ring = IoRing::new(rs.clone(), 64);
+        for _wave in 0..4 {
+            let ops = (0..16)
+                .map(|i| ReadOp::whole(i, format!("k{i}"), Vec::new()))
+                .collect();
+            let mut sub = ring.submit(ops);
+            while let Some(c) = sub.next() {
+                let n = c.result.unwrap();
+                assert_eq!(&c.buf[..n], &backing.get(&c.key).unwrap()[..]);
+            }
+        }
+        let s = rs.snapshot();
+        assert!(s.hedges > 0, "no hedges fired: {s:?}");
+        // every hedged op resolved exactly once; duplicate completions
+        // were discarded, never double-delivered
+        assert!(s.hedge_wins <= s.hedges, "{s:?}");
+        assert_eq!(s.exhausted, 0, "{s:?}");
+        assert_eq!(ring.stats().inflight, 0, "hedge attempt leaked the gauge");
+        assert_eq!(ring.stats().completed, 64);
+    }
+
+    #[test]
+    fn fault_free_ring_path_is_transparent() {
+        let rs = ResilientStore::new(backing(8), ResilienceConfig::new(4, 0, 2.0), 5);
+        let ring = IoRing::new(rs.clone(), 8);
+        let ops = (0..8)
+            .map(|i| ReadOp::range(i, format!("k{i}"), 8, 32, Vec::new()))
+            .collect();
+        let mut sub = ring.submit(ops);
+        let mut n = 0;
+        while let Some(c) = sub.next() {
+            assert_eq!(c.result.unwrap(), 32);
+            n += 1;
+        }
+        assert_eq!(n, 8);
+        let s = rs.snapshot();
+        assert_eq!(s.retries, 0);
+        assert_eq!(s.hedges, 0, "p95 unarmed: no hedges on a cold start");
+        assert_eq!(s.exhausted, 0);
+        assert_eq!(s.ops, 8);
+        assert_eq!(s.attempts, 8);
+    }
+}

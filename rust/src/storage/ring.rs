@@ -91,6 +91,21 @@ pub struct CompletionQueue {
     cv: Condvar,
 }
 
+/// Anything a [`RingCtx`] can push completions into. The ring's own
+/// [`CompletionQueue`] is the normal sink; interposing layers (the
+/// resilience layer re-drives retries and hedges) substitute their own
+/// sink via [`RingCtx::sub`] to observe raw attempt results before
+/// deciding what the submitter finally sees.
+pub trait CompletionSink: Send + Sync {
+    fn push(&self, c: Completion);
+}
+
+impl CompletionSink for CompletionQueue {
+    fn push(&self, c: Completion) {
+        CompletionQueue::push(self, c)
+    }
+}
+
 impl CompletionQueue {
     fn new(outstanding: usize) -> Arc<CompletionQueue> {
         Arc::new(CompletionQueue {
@@ -182,12 +197,23 @@ pub struct RingSnapshot {
 /// Contract per op: call [`RingCtx::begin`] exactly once when the op
 /// enters service (past any permit gates), then [`RingCtx::complete`]
 /// exactly once with the op's slot, recycled key/buf, and result.
+///
+/// Interposing layers split one logical op into several physical
+/// *attempts* (retries, hedges): they hand the backing store an attempt
+/// context from [`RingCtx::sub`] — whose `complete` reports into the
+/// layer's own sink without counting the logical op done — and call
+/// [`RingCtx::deliver`] exactly once per logical op with the final
+/// verdict. The in-flight gauge then counts physical attempts while
+/// `submitted`/`completed`/`errors` stay logical.
 #[derive(Clone)]
 pub struct RingCtx {
-    sink: Arc<CompletionQueue>,
+    sink: Arc<dyn CompletionSink>,
     stats: Arc<RingStats>,
     rt: Arc<Runtime>,
     depth: Arc<Semaphore>,
+    /// true for contexts minted by [`RingCtx::sub`]: completions are
+    /// raw attempt results, not logical-op verdicts
+    attempt: bool,
 }
 
 impl RingCtx {
@@ -207,9 +233,40 @@ impl RingCtx {
         self.stats.enter();
     }
 
-    /// Deliver one op's completion (releases its in-service slot).
+    /// Deliver one op's completion (releases its in-service slot). On an
+    /// attempt context (see [`RingCtx::sub`]) this only reports the raw
+    /// attempt — the logical counters move when the interposing layer
+    /// calls [`RingCtx::deliver`].
     pub fn complete(&self, slot: usize, key: String, buf: Vec<u8>, result: Result<usize>) {
         self.stats.exit();
+        if !self.attempt {
+            self.stats.completed.fetch_add(1, Ordering::Relaxed);
+            if result.is_err() {
+                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.sink.push(Completion { slot, key, buf, result });
+    }
+
+    /// Derive an *attempt* context that reports into `sink` instead of
+    /// the submitter's completion queue. Shares the executor, the
+    /// `io_depth` budget, and the in-flight gauge — a retry or hedge is
+    /// a real in-service op competing for the same permits.
+    pub fn sub(&self, sink: Arc<dyn CompletionSink>) -> RingCtx {
+        RingCtx {
+            sink,
+            stats: self.stats.clone(),
+            rt: self.rt.clone(),
+            depth: self.depth.clone(),
+            attempt: true,
+        }
+    }
+
+    /// Final verdict for one logical op, pushed to the original sink.
+    /// Counterpart of [`RingCtx::sub`]: the interposing layer's attempts
+    /// each paid their own [`RingCtx::begin`]/[`RingCtx::complete`], so
+    /// this moves only the logical `completed`/`errors` counters.
+    pub fn deliver(&self, slot: usize, key: String, buf: Vec<u8>, result: Result<usize>) {
         self.stats.completed.fetch_add(1, Ordering::Relaxed);
         if result.is_err() {
             self.stats.errors.fetch_add(1, Ordering::Relaxed);
@@ -313,10 +370,11 @@ impl IoRing {
         let t0 = recorder.as_ref().map(|r| r.now());
         if n > 0 {
             let ctx = RingCtx {
-                sink: sink.clone(),
+                sink: sink.clone() as Arc<dyn CompletionSink>,
                 stats: self.stats.clone(),
                 rt: self.rt.clone(),
                 depth: self.depth.clone(),
+                attempt: false,
             };
             let store = self.store.clone();
             // one detached dispatch task; native submit_batch impls fan
@@ -498,6 +556,54 @@ mod tests {
         let s = ring.stats();
         assert!(s.inflight_hwm > 8, "no decoupling: hwm {}", s.inflight_hwm);
         assert_eq!(s.inflight, 0);
+    }
+
+    #[test]
+    fn attempt_ctx_counts_physical_deliver_counts_logical() {
+        struct Trap(Mutex<Vec<Completion>>);
+        impl CompletionSink for Trap {
+            fn push(&self, c: Completion) {
+                self.0.lock().unwrap().push(c);
+            }
+        }
+        let ring = IoRing::new(mem(2), 4);
+        // drive submit_batch by hand through an interposing sink: two
+        // attempts for one logical op, then one final deliver
+        let mut sub = ring.submit(vec![ReadOp::whole(0, "k0".into(), Vec::new())]);
+        let c = sub.next().unwrap();
+        c.result.unwrap();
+        assert!(sub.next().is_none());
+        let base = ring.stats();
+        assert_eq!((base.submitted, base.completed, base.errors), (1, 1, 0));
+
+        let trap = Arc::new(Trap(Mutex::new(Vec::new())));
+        let mut outer = ring.submit(vec![ReadOp::whole(0, "k1".into(), Vec::new())]);
+        // steal the logical ctx shape: build attempt ctx off a fresh
+        // submission's dispatch is internal, so emulate via sub() from a
+        // hand-rolled parent — reap the completion the normal path
+        // produced first, then check sub()/deliver() arithmetic directly.
+        let c = outer.next().unwrap();
+        let parent = RingCtx {
+            sink: trap.clone() as Arc<dyn CompletionSink>,
+            stats: ring.stats.clone(),
+            rt: ring.rt.clone(),
+            depth: ring.depth.clone(),
+            attempt: false,
+        };
+        let attempt = parent.sub(trap.clone());
+        let before = ring.stats();
+        attempt.begin();
+        attempt.complete(0, "k1".into(), Vec::new(), Err(anyhow::anyhow!("boom")));
+        let mid = ring.stats();
+        // a failed attempt moves neither completed nor errors
+        assert_eq!(mid.completed, before.completed);
+        assert_eq!(mid.errors, before.errors);
+        assert_eq!(mid.inflight, before.inflight);
+        parent.deliver(0, c.key, c.buf, c.result);
+        let after = ring.stats();
+        assert_eq!(after.completed, before.completed + 1);
+        assert_eq!(after.errors, before.errors);
+        assert_eq!(trap.0.lock().unwrap().len(), 2);
     }
 
     #[test]

@@ -49,7 +49,14 @@ fn track_name(tid: u64) -> String {
         TID_CONSUMER => "consumer".to_string(),
         TID_PLANNER => "planner".to_string(),
         TID_PREFETCH => "prefetch".to_string(),
-        t => format!("worker {}", t - TID_WORKER_BASE),
+        // synthetic workers get their own readable tracks
+        t => match (t - TID_WORKER_BASE) as u32 {
+            super::PLANNER_WORKER => "planner aux".to_string(),
+            super::RING_WORKER => "io_ring".to_string(),
+            super::GOVERNOR_WORKER => "governor".to_string(),
+            super::RESILIENCE_WORKER => "resilience".to_string(),
+            w => format!("worker {w}"),
+        },
     }
 }
 

@@ -63,6 +63,13 @@ pub mod names {
     pub const EPOCH_SEAM: &str = "epoch_seam";
     /// one Governor control-loop step: signals in → probe/keep/revert out
     pub const GOVERNOR_STEP: &str = "governor_step";
+    // resilience plane (chaos-ready storage)
+    /// one backoff-retry wait before re-driving a failed read
+    pub const RETRY: &str = "retry";
+    /// a speculative duplicate read launched past the online p95
+    pub const HEDGE: &str = "hedge";
+    /// circuit-breaker event: a trip or an open-state fast-fail
+    pub const BREAKER: &str = "breaker";
     // Lightning lanes (Fig 17)
     pub const ADVANCE: &str = "advance";
     pub const PRERUN: &str = "prerun";
@@ -85,6 +92,12 @@ pub const RING_WORKER: u32 = u32::MAX - 2;
 /// (`names::GOVERNOR_STEP`): the autotuner runs at epoch seams on the
 /// consumer thread but its control-loop steps get their own track.
 pub const GOVERNOR_WORKER: u32 = u32::MAX - 3;
+
+/// Synthetic worker id for resilience-layer spans (`names::RETRY`,
+/// `names::HEDGE`, `names::BREAKER`): retries and hedges fire from ring
+/// executor tasks and blocking fetch threads alike, so they share one
+/// named track.
+pub const RESILIENCE_WORKER: u32 = u32::MAX - 4;
 
 // ---------------------------------------------------------------------------
 // GPU utilization sampling (Table 3 metrics)

@@ -6,6 +6,8 @@
 //! into a reused scratch, decode straight into the slot). The batched
 //! submission ring holds a related bar: the submitting thread's wave
 //! cost is constant, independent of how many reads the wave carries.
+//! The resilience layer holds it too: mounted fault-free over the same
+//! DirStore, its breaker check + latency sample add zero allocations.
 //!
 //! The assertions read the *per-thread* counters of the crate's
 //! counting global allocator, so each test measures only its own
@@ -343,6 +345,57 @@ fn dirstore_fd_cache_holds_zero_alloc_reads_past_the_handle_cap() {
         cold_opens,
         "evictions not one-per-cold-open"
     );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[cfg(unix)]
+#[test]
+fn resilient_layer_fault_free_get_into_is_zero_alloc_in_steady_state() {
+    // the resilience layer mounted over a fault-free DirStore must not
+    // tax the blocking hot path: one breaker load, the inner pread, one
+    // latency sample into the preallocated estimator ring (its periodic
+    // p95 recompute sorts a stack copy) — no heap traffic at all
+    use cdl::storage::{ResilienceConfig, ResilientStore};
+    const N: usize = 8;
+    let root = std::env::temp_dir().join(format!(
+        "cdl-alloc-resilient-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let store: Arc<dyn ObjectStore> = Arc::new(DirStore::open(&root).unwrap());
+    generate_corpus(&store, &CorpusSpec::tiny(N)).unwrap();
+    let keys = store.keys();
+    // retries + deadline armed (the layer is really on), hedging off
+    let rs = ResilientStore::new(store, ResilienceConfig::new(3, 250, 0.0), 7);
+    let mut buf = vec![0u8; 1 << 20];
+
+    // warm-up: handle cache, estimator ring, breaker fast path
+    for _ in 0..2 {
+        for k in &keys {
+            rs.get_into(k, &mut buf).unwrap();
+        }
+    }
+
+    let before = alloc::thread_counters();
+    for _ in 0..8 {
+        for k in &keys {
+            // 64 samples: crosses the estimator's periodic p95 recompute
+            rs.get_into(k, &mut buf).unwrap();
+        }
+    }
+    let delta = alloc::thread_counters().since(before);
+    assert_eq!(
+        delta.allocs, 0,
+        "fault-free resilient get_into allocated: {delta:?}"
+    );
+    assert_eq!(
+        delta.frees, 0,
+        "fault-free resilient get_into freed: {delta:?}"
+    );
+    let s = rs.snapshot();
+    assert_eq!(s.retries, 0, "{s:?}");
+    assert_eq!(s.exhausted, 0, "{s:?}");
+    assert!(s.ops >= 80, "{s:?}");
     let _ = std::fs::remove_dir_all(&root);
 }
 
